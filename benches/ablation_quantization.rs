@@ -1,0 +1,139 @@
+//! Ablation for §4.1.3 / Prop. 1–2 and §6.1.1: PQ distortion vs bit rate,
+//! whitening's effect, the LUT16 u8-quantization error, and the residual
+//! scalar quantizer's accuracy ("unnoticeable for our tasks").
+//!
+//!     cargo bench --bench ablation_quantization
+
+use hybrid_ip::benchkit::{self, Table};
+use hybrid_ip::dense::lut::{QuantizedLut, QueryLut};
+use hybrid_ip::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
+use hybrid_ip::dense::whitening::Whitening;
+use hybrid_ip::types::dense::DenseMatrix;
+use hybrid_ip::util::rng::Rng;
+
+fn correlated_data(rng: &mut Rng, n: usize, dim: usize) -> DenseMatrix {
+    // anisotropic: few strong directions + noise (realistic embeddings)
+    let k = dim / 4;
+    let dirs: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..dim).map(|_| rng.gauss_f32()).collect())
+        .collect();
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut row = vec![0.0f32; dim];
+            for d in &dirs {
+                let w = 2.0 * rng.gauss_f32();
+                for (r, &dv) in row.iter_mut().zip(d) {
+                    *r += w * dv;
+                }
+            }
+            for r in &mut row {
+                *r += 0.3 * rng.gauss_f32();
+            }
+            row
+        })
+        .collect();
+    DenseMatrix::from_rows(&rows)
+}
+
+fn pq_mse(data: &DenseMatrix, k: usize, iters: usize, seed: u64) -> f64 {
+    let cb = PqCodebooks::train(data, k, 16, iters, seed);
+    let pq = PqIndex::build(data, cb);
+    let mut err = 0.0f64;
+    let mut total = 0.0f64;
+    for i in 0..data.n_rows() {
+        let rec = pq.decode_row(i);
+        for (a, b) in data.row(i).iter().zip(&rec) {
+            err += ((a - b) as f64).powi(2);
+            total += (*a as f64).powi(2);
+        }
+    }
+    err / total
+}
+
+fn main() {
+    benchkit::preamble("ablation_quantization", "n=4096 dim=64");
+    let mut rng = Rng::new(0xAB1A);
+    let n = 4096;
+    let dim = 64;
+    let data = correlated_data(&mut rng, n, dim);
+
+    // --- distortion vs bits (Prop. 1: MSE ~ 2^{-2b/d})
+    let mut t = Table::new(
+        "PQ relative MSE vs bit rate (l=16)",
+        &["K (subspaces)", "bits/dim", "rel MSE"],
+    );
+    for &k in &[4usize, 8, 16, 32] {
+        let mse = pq_mse(&data, k, 10, 7);
+        t.row(&[
+            k.to_string(),
+            format!("{:.2}", 4.0 * k as f64 / dim as f64),
+            format!("{:.4}", mse),
+        ]);
+    }
+    t.print();
+
+    // --- whitening effect (§4.1.3)
+    let w = Whitening::fit(&data);
+    let white = w.transform_matrix(&data);
+    let mse_raw = pq_mse(&data, 16, 10, 7);
+    let mse_white = pq_mse(&white, 16, 10, 7);
+    println!(
+        "whitening: rel MSE raw={mse_raw:.4} whitened={mse_white:.4} \
+         (whitening equalizes subspace variances; §4.1.3)"
+    );
+
+    // --- LUT16 u8 quantization error vs exact f32 ADC
+    let cb = PqCodebooks::train(&data, 32, 16, 10, 9);
+    let pq = PqIndex::build(&data, cb.clone());
+    let mut max_rel = 0.0f64;
+    let mut mean_rel = 0.0f64;
+    let trials = 20;
+    for _ in 0..trials {
+        let q: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+        let lut = QueryLut::build(&cb, &q);
+        let qlut = QuantizedLut::build(&lut);
+        let mut worst = 0.0f64;
+        let mut acc_err = 0.0f64;
+        for i in 0..200 {
+            let exact = lut.score_codes(&pq.row_codes(i)) as f64;
+            let accu: u32 = pq
+                .row_codes(i)
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| qlut.table[k * 16 + c as usize] as u32)
+                .sum();
+            let approx = qlut.dequantize(accu) as f64;
+            let rel = (exact - approx).abs() / (1.0 + exact.abs());
+            worst = worst.max(rel);
+            acc_err += rel;
+        }
+        max_rel = max_rel.max(worst);
+        mean_rel += acc_err / 200.0;
+    }
+    println!(
+        "LUT16 u8 table quantization: mean rel err {:.4}, max {:.4}",
+        mean_rel / trials as f64,
+        max_rel
+    );
+
+    // --- residual scalar quantizer (§6.1.1: "error ... unnoticeable")
+    let sq = ScalarQuantizedResiduals::build(&data);
+    let mut rel = 0.0f64;
+    for _ in 0..trials {
+        let q: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+        for i in 0..100 {
+            let exact: f64 = q
+                .iter()
+                .zip(data.row(i))
+                .map(|(a, b)| (a * b) as f64)
+                .sum();
+            let approx = sq.dot(i, &q) as f64;
+            rel += (exact - approx).abs() / (1.0 + exact.abs());
+        }
+    }
+    println!(
+        "residual u8 scalar quantizer: mean rel err {:.5} \
+         (1/4 original size; paper: distortion ≤ 1/256 dynamic range)",
+        rel / (trials * 100) as f64
+    );
+}

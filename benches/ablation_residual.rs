@@ -1,0 +1,120 @@
+//! Ablation for §5 (residual reordering) and §5.1 (recall vs α):
+//!   * recall@20 as a function of the overfetch factor α (paper: α ≤ 10
+//!     reaches ≥ 90%);
+//!   * stage-time breakdown — residual reordering must stay a small
+//!     fraction of query time (paper: < 10%);
+//!   * with/without each residual stage.
+//!
+//!     cargo bench --bench ablation_residual
+
+use hybrid_ip::benchkit::{self, Table};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::eval::ground_truth::ground_truth;
+use hybrid_ip::eval::recall::mean_recall;
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::search::{search_with, SearchScratch, SearchStats};
+
+fn main() {
+    let n: usize = std::env::var("BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50_000);
+    benchkit::preamble("ablation_residual", &format!("n={n} h=20"));
+    let cfg = QuerySimConfig::scaled(n);
+    let data = cfg.generate(0xAB1);
+    let queries = cfg.related_queries(&data, 0xAB2, 40);
+    let h = 20;
+    let truth = ground_truth(&data, &queries, h);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let mut scratch = SearchScratch::new(&index);
+
+    // --- recall vs alpha (§5.1)
+    let mut t = Table::new(
+        "recall@20 and latency vs overfetch α (β = α/3)",
+        &["alpha", "recall@20", "ms/query", "reorder frac"],
+    );
+    for &alpha in &[1.0f32, 2.0, 5.0, 10.0, 20.0, 50.0] {
+        let params = SearchParams::new(h)
+            .with_alpha(alpha)
+            .with_beta((alpha / 3.0).max(1.0));
+        let mut retrieved = Vec::new();
+        let mut stats = SearchStats::default();
+        let t0 = std::time::Instant::now();
+        for q in &queries {
+            let (hits, st) = search_with(&index, q, &params, &mut scratch);
+            retrieved.push(hits.iter().map(|x| x.id).collect::<Vec<u32>>());
+            stats.stage1_scan_us += st.stage1_scan_us;
+            stats.stage1_select_us += st.stage1_select_us;
+            stats.stage2_us += st.stage2_us;
+            stats.stage3_us += st.stage3_us;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / queries.len() as f64;
+        let r = mean_recall(&truth, &retrieved, h);
+        t.row(&[
+            format!("{alpha}"),
+            format!("{:.1}%", r * 100.0),
+            format!("{ms:.2}"),
+            format!("{:.1}%", 100.0 * stats.reorder_fraction()),
+        ]);
+    }
+    t.print();
+    println!("paper §5.1: α ≤ 10 empirically reaches ≥ 90% recall");
+
+    // --- stage ablation
+    let mut t = Table::new(
+        "stage ablation (α=10, β=3)",
+        &["configuration", "recall@20"],
+    );
+    let params = SearchParams::new(h);
+    let run = |idx: &HybridIndex| -> f64 {
+        let mut scratch = SearchScratch::new(idx);
+        let mut retrieved = Vec::new();
+        for q in &queries {
+            let (hits, _) = search_with(idx, q, &params, &mut scratch);
+            retrieved.push(hits.iter().map(|x| x.id).collect::<Vec<u32>>());
+        }
+        mean_recall(&truth, &retrieved, h)
+    };
+    t.row(&[
+        "full (dense+sparse residual)".into(),
+        format!("{:.1}%", 100.0 * run(&index)),
+    ]);
+    let no_dense_resid = HybridIndex::build(
+        &data,
+        &IndexConfig { dense_residual: false, ..Default::default() },
+    );
+    t.row(&[
+        "no dense residual".into(),
+        format!("{:.1}%", 100.0 * run(&no_dense_resid)),
+    ]);
+    let heavy_prune = HybridIndex::build(
+        &data,
+        &IndexConfig { sparse_keep_top: 32, ..Default::default() },
+    );
+    t.row(&[
+        "keep_top=32 (hyper-sparse index)".into(),
+        format!("{:.1}%", 100.0 * run(&heavy_prune)),
+    ]);
+    let eps_prune = HybridIndex::build(
+        &data,
+        &IndexConfig {
+            sparse_keep_top: 32,
+            epsilon_frac: 0.5,
+            ..Default::default()
+        },
+    );
+    t.row(&[
+        "keep_top=32 + ε=0.5η (lossy residual)".into(),
+        format!("{:.1}%", 100.0 * run(&eps_prune)),
+    ]);
+    let no_sort = HybridIndex::build(
+        &data,
+        &IndexConfig::default().with_cache_sort(false),
+    );
+    t.row(&[
+        "no cache sorting (same recall, slower scan)".into(),
+        format!("{:.1}%", 100.0 * run(&no_sort)),
+    ]);
+    t.print();
+}

@@ -1,0 +1,105 @@
+//! Regenerates the paper's **Scalability** paragraph: extrapolate the
+//! measured per-core throughput of each method to the 1B×1B all-pairs
+//! QuerySim workload on 10⁴ cores (paper: sparse BF ≈ 9 years, inverted
+//! index ≈ 3 months, hybrid < 1 week).
+//!
+//!     cargo bench --bench scalability
+
+use hybrid_ip::baselines::inverted_exact::SparseInvertedExact;
+use hybrid_ip::baselines::sparse_bf::SparseBruteForce;
+use hybrid_ip::baselines::Baseline;
+use hybrid_ip::benchkit::{self, Table};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::search::{search_with, SearchScratch};
+
+fn main() {
+    let n: usize = std::env::var("BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50_000);
+    benchkit::preamble("scalability", &format!("n={n}, extrapolating to 1B x 1B"));
+    let cfg = QuerySimConfig::scaled(n);
+    let data = cfg.generate(0x5CA1E);
+    let queries = cfg.related_queries(&data, 0x5CA1F, 20);
+    let h = 20;
+
+    // measure ms/query for the three paragraph methods (single core —
+    // Baseline::search already parallelizes BF internally, so use one
+    // thread-equivalent by scaling with the thread count).
+    let threads = hybrid_ip::util::threadpool::default_threads() as f64;
+
+    let bf = SparseBruteForce::build(&data);
+    let t0 = std::time::Instant::now();
+    for q in &queries {
+        std::hint::black_box(bf.search(q, h));
+    }
+    // core-ms per query: wall-ms * threads (BF uses all threads)
+    let bf_core_ms =
+        t0.elapsed().as_secs_f64() * 1e3 / queries.len() as f64 * threads;
+
+    let inv = SparseInvertedExact::build(&data);
+    let t0 = std::time::Instant::now();
+    for q in &queries {
+        std::hint::black_box(inv.search(q, h));
+    }
+    let inv_core_ms = t0.elapsed().as_secs_f64() * 1e3 / queries.len() as f64;
+
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let params = SearchParams::new(h);
+    let mut scratch = SearchScratch::new(&index);
+    let t0 = std::time::Instant::now();
+    for q in &queries {
+        let (hits, _) = search_with(&index, q, &params, &mut scratch);
+        std::hint::black_box(hits);
+    }
+    let hyb_core_ms = t0.elapsed().as_secs_f64() * 1e3 / queries.len() as f64;
+
+    // extrapolation: per-query cost scales ~linearly with N for the scan
+    // methods; 1B points / n gives the size factor, 1B queries total,
+    // 1e4 cores.
+    let size_factor = 1e9 / n as f64;
+    let n_queries = 1e9;
+    let cores = 1e4;
+    let years = |core_ms: f64| -> f64 {
+        core_ms * size_factor * n_queries / cores / 1e3 / 86400.0 / 365.0
+    };
+    let fmt_t = |y: f64| -> String {
+        if y >= 1.0 {
+            format!("{y:.1} years")
+        } else if y * 12.0 >= 1.0 {
+            format!("{:.1} months", y * 12.0)
+        } else if y * 365.0 >= 1.0 {
+            format!("{:.1} days", y * 365.0)
+        } else {
+            format!("{:.1} hours", y * 365.0 * 24.0)
+        }
+    };
+    let mut t = Table::new(
+        "1B x 1B all-pairs extrapolation on 1e4 cores (paper: 9 yr / 3 mo / <1 wk)",
+        &["method", "core-ms/query @n", "extrapolated"],
+    );
+    t.row(&[
+        "Sparse Brute Force".into(),
+        format!("{bf_core_ms:.1}"),
+        fmt_t(years(bf_core_ms)),
+    ]);
+    t.row(&[
+        "Sparse Inverted Index".into(),
+        format!("{inv_core_ms:.2}"),
+        fmt_t(years(inv_core_ms)),
+    ]);
+    t.row(&[
+        "Hybrid (ours)".into(),
+        format!("{hyb_core_ms:.2}"),
+        fmt_t(years(hyb_core_ms)),
+    ]);
+    t.print();
+    println!(
+        "ordering check: BF {:.1}x inverted, inverted {:.1}x hybrid",
+        bf_core_ms / inv_core_ms,
+        inv_core_ms / hyb_core_ms
+    );
+    assert!(bf_core_ms > inv_core_ms && inv_core_ms > hyb_core_ms);
+}

@@ -1,0 +1,69 @@
+//! Regenerates paper **Table 3**: the QuerySim benchmark (sampled), all 8
+//! algorithms. Paper (5M sample): Dense BF OOM; Sparse BF 9655 ms 100%;
+//! Inverted 406 ms 100%; Hamming 59.5 ms 0%; DensePQ+10k 39.8 ms 45%;
+//! SparseInv-no-reorder 58.6 ms 0%; SparseInv+20k 102 ms 30%; Hybrid
+//! 20.0 ms 91%.
+//!
+//!     cargo bench --bench table3_querysim           # n=50k default
+//!     BENCH_N=1000000 cargo bench --bench table3_querysim
+
+use hybrid_ip::benchkit;
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::eval::tables::{render, run_table, TableSpec};
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+
+fn main() {
+    let n: usize = std::env::var("BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50_000);
+    benchkit::preamble(
+        "table3_querysim",
+        &format!("n={n} (paper: 5M sample of 1B; BENCH_N to change)"),
+    );
+    let cfg = QuerySimConfig::scaled(n);
+    println!(
+        "[table3] generating n={} sparse_dims={} dense_dims={}",
+        cfg.n, cfg.sparse_dims, cfg.dense_dims
+    );
+    let data = cfg.generate(0x7AB3);
+    let queries = cfg.related_queries(&data, 0x7AB4, 30);
+    // Dense BF on QuerySim dims must OOM exactly like the paper: the
+    // default budget is half the host's available memory, and the padded
+    // matrix (n x (ds + dd) f32) far exceeds it at QuerySim dims.
+    let spec = TableSpec::default();
+    let rows = run_table(
+        &data,
+        &queries,
+        20,
+        &spec,
+        &IndexConfig::default(),
+        &SearchParams::new(20),
+    );
+    render("Table 3 — QuerySim-sim", &rows).print();
+
+    let hybrid = rows.iter().find(|r| r.name.contains("Hybrid")).unwrap();
+    let inverted = rows
+        .iter()
+        .find(|r| r.name == "Sparse Inverted Index")
+        .unwrap();
+    let dense_bf = rows
+        .iter()
+        .find(|r| r.name == "Dense Brute Force")
+        .unwrap();
+    println!(
+        "\n[table3] shape checks: dense-BF OOM={} | hybrid {:.2} ms @ \
+         {:.0}% | exact inverted {:.2} ms | speedup {:.1}x",
+        dense_bf.oom,
+        hybrid.mean_ms,
+        hybrid.recall * 100.0,
+        inverted.mean_ms,
+        inverted.mean_ms / hybrid.mean_ms
+    );
+    assert!(dense_bf.oom, "QuerySim dims must trip the OOM guard");
+    assert!(hybrid.recall >= 0.85, "hybrid recall {}", hybrid.recall);
+    assert!(
+        hybrid.mean_ms < inverted.mean_ms,
+        "hybrid must beat the exact inverted index"
+    );
+}

@@ -1,0 +1,182 @@
+//! End-to-end driver (the repo's full-system proof): generate a
+//! QuerySim-like hybrid workload at real (scaled) size, build the complete
+//! §6 index, run the paper's headline comparison — hybrid vs the exact
+//! inverted-index baseline — through both dense backends:
+//!
+//!   * the native LUT16 AVX2 scan (the paper's CPU contribution), and
+//!   * the AOT XLA artifact (JAX L2 + Pallas L1 compiled to HLO, executed
+//!     via PJRT from rust) — proving all three layers compose.
+//!
+//! Reports recall@20 + latency for each, cross-checks the two backends'
+//! numerics, and prints EXPERIMENTS.md-ready rows.
+//!
+//!     make artifacts && cargo run --release --example querysim_e2e [n]
+
+use std::time::Instant;
+
+use hybrid_ip::data::stats;
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::dense::lut::{QuantizedLut, QueryLut};
+use hybrid_ip::dense::adc_lut16;
+use hybrid_ip::eval::ground_truth::ground_truth;
+use hybrid_ip::eval::recall::{mean_recall, recall_at};
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::search::{search_with, SearchScratch};
+use hybrid_ip::baselines::inverted_exact::SparseInvertedExact;
+use hybrid_ip::baselines::Baseline;
+use hybrid_ip::runtime::{default_artifacts_dir, XlaRuntime};
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let n_queries = 100;
+    let h = 20;
+
+    // --- dataset at the artifact's dense dims (dD=200 ≈ paper's 203)
+    let mut cfg = QuerySimConfig::scaled(n);
+    cfg.dense_dims = 200;
+    println!("[e2e] generating {n} points ...");
+    let t = Instant::now();
+    let data = cfg.generate(2026);
+    let card = stats::scale_card(&data);
+    println!(
+        "[e2e] n={} active_sparse_dims={} avg_nnz={:.1} gen={:.1}s",
+        card.n,
+        card.active_sparse_dims,
+        card.avg_sparse_nnz,
+        t.elapsed().as_secs_f64()
+    );
+    let queries = cfg.related_queries(&data, 7, n_queries);
+    println!("[e2e] computing exact ground truth ...");
+    let truth = ground_truth(&data, &queries, h);
+
+    // --- hybrid index (native path)
+    let t = Instant::now();
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    println!(
+        "[e2e] hybrid index built in {:.1}s ({} MB)",
+        t.elapsed().as_secs_f64(),
+        index.memory_bytes() >> 20
+    );
+    let params = SearchParams::new(h);
+    let mut scratch = SearchScratch::new(&index);
+    let mut retrieved = Vec::new();
+    let t = Instant::now();
+    for q in &queries {
+        let (hits, _) = search_with(&index, q, &params, &mut scratch);
+        retrieved.push(hits.iter().map(|x| x.id).collect::<Vec<u32>>());
+    }
+    let hybrid_ms = t.elapsed().as_secs_f64() * 1e3 / n_queries as f64;
+    let hybrid_recall = mean_recall(&truth, &retrieved, h);
+
+    // --- exact inverted-index baseline (the paper's closest exact rival)
+    let t = Instant::now();
+    let exact = SparseInvertedExact::build(&data);
+    println!(
+        "[e2e] exact inverted index built in {:.1}s",
+        t.elapsed().as_secs_f64()
+    );
+    let mut exact_recall = 0.0;
+    let t = Instant::now();
+    for (q, tr) in queries.iter().zip(&truth) {
+        let ids: Vec<u32> =
+            exact.search(q, h).into_iter().map(|(i, _)| i).collect();
+        exact_recall += recall_at(tr, &ids, h);
+    }
+    let exact_ms = t.elapsed().as_secs_f64() * 1e3 / n_queries as f64;
+    exact_recall /= n_queries as f64;
+
+    println!("\n== E2E headline (paper Table 3 shape) ==");
+    println!("{:<28} {:>10} {:>10}", "Algorithm", "ms/query", "recall@20");
+    println!(
+        "{:<28} {:>10.2} {:>9.0}%",
+        "Sparse Inverted Index", exact_ms, 100.0 * exact_recall
+    );
+    println!(
+        "{:<28} {:>10.2} {:>9.0}%",
+        "Hybrid (ours)", hybrid_ms, 100.0 * hybrid_recall
+    );
+    println!(
+        "speedup: {:.1}x at {:.0}% recall",
+        exact_ms / hybrid_ms,
+        100.0 * hybrid_recall
+    );
+
+    // --- XLA backend cross-check: score one query's dense component on
+    // both paths over the first code block and compare.
+    let dir = default_artifacts_dir();
+    match XlaRuntime::load(&dir) {
+        Ok(rt) => {
+            let acfg = rt.manifest.config.clone();
+            let block = acfg.block_n.min(index.n);
+            let q0 = index.query_dense(&queries[0]);
+            // native: f32 LUT scores (exact ADC, no u8 quantization)
+            let lut = QueryLut::build(&index.codebooks, &q0);
+            let native: Vec<f32> = (0..block)
+                .map(|i| lut.score_codes(&index.pq_index.row_codes(i)))
+                .collect();
+            // XLA: dense_score artifact over the same codes
+            let codes_rows: Vec<Vec<u8>> =
+                (0..block).map(|i| index.pq_index.row_codes(i)).collect();
+            let cb = &index.codebooks;
+            assert_eq!(cb.k, acfg.subspaces, "artifact/config K mismatch");
+            let xla_scores = rt
+                .dense_score_block(
+                    &[q0.clone()],
+                    &cb.codewords,
+                    &codes_rows,
+                )
+                .expect("xla dense_score");
+            let max_err = native
+                .iter()
+                .zip(&xla_scores[0])
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            println!(
+                "\n[e2e] XLA backend cross-check over {block} codes: \
+                 max |native - xla| = {max_err:.2e}"
+            );
+            assert!(max_err < 1e-3, "backend numerics diverge");
+            // timing: XLA block scoring
+            let t = Instant::now();
+            let reps = 10;
+            for _ in 0..reps {
+                let _ = rt
+                    .dense_score_block(&[q0.clone()], &cb.codewords, &codes_rows)
+                    .unwrap();
+            }
+            let xla_us =
+                t.elapsed().as_secs_f64() * 1e6 / reps as f64;
+            // native LUT16 over the same block
+            let qlut = QuantizedLut::build(&lut);
+            let mut out = vec![0.0f32; index.n];
+            let t = Instant::now();
+            let reps = 50;
+            for _ in 0..reps {
+                adc_lut16::scan(&index.dense_codes, &qlut, &mut out);
+            }
+            let native_full_us =
+                t.elapsed().as_secs_f64() * 1e6 / reps as f64;
+            println!(
+                "[e2e] dense scoring: XLA {:.0} µs/{}-block vs native \
+                 LUT16 {:.0} µs/full-{}-scan",
+                xla_us, block, native_full_us, index.n
+            );
+        }
+        Err(e) => {
+            println!(
+                "\n[e2e] XLA artifacts not available ({e}); run \
+                 `make artifacts` for the three-layer cross-check"
+            );
+        }
+    }
+    assert!(hybrid_recall >= 0.8, "e2e recall regressed: {hybrid_recall}");
+    assert!(
+        hybrid_ms < exact_ms,
+        "hybrid slower than exact baseline: {hybrid_ms} vs {exact_ms}"
+    );
+    println!("\nE2E OK — record these rows in EXPERIMENTS.md");
+}

@@ -1,0 +1,56 @@
+//! Quickstart: build a hybrid index over a small synthetic dataset and
+//! run a few queries, comparing against exact search.
+//!
+//!     cargo run --release --example quickstart
+
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::eval::ground_truth::exact_top_k;
+use hybrid_ip::eval::recall::recall_at;
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::search::search;
+
+fn main() {
+    // 1. A hybrid dataset: sparse power-law component ⊕ dense embeddings.
+    let mut cfg = QuerySimConfig::tiny();
+    cfg.n = 5_000;
+    cfg.sparse_dims = 1 << 14;
+    cfg.dense_dims = 64;
+    let data = cfg.generate(42);
+    println!(
+        "dataset: {} points, {} sparse dims, {} dense dims",
+        data.len(),
+        data.sparse_dim(),
+        data.dense_dim()
+    );
+
+    // 2. Build the paper's index: cache-sorted pruned inverted index +
+    //    LUT16 product quantization, each with a residual index.
+    let t = std::time::Instant::now();
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    println!(
+        "index built in {:.2}s ({} KB resident)",
+        t.elapsed().as_secs_f64(),
+        index.memory_bytes() >> 10
+    );
+
+    // 3. Search with the three-stage residual-reordering pipeline.
+    let queries = cfg.related_queries(&data, 7, 20);
+    let params = SearchParams::new(10); // h=10, α=10, β=3 (§5.1 defaults)
+    let mut mean_recall = 0.0;
+    let t = std::time::Instant::now();
+    for q in &queries {
+        let hits = search(&index, q, &params);
+        let ids: Vec<u32> = hits.iter().map(|h| h.id).collect();
+        mean_recall += recall_at(&exact_top_k(&data, q, 10), &ids, 10);
+    }
+    mean_recall /= queries.len() as f64;
+    println!(
+        "searched {} queries: recall@10 = {:.1}%, {:.2} ms/query",
+        queries.len(),
+        100.0 * mean_recall,
+        t.elapsed().as_secs_f64() * 1e3 / queries.len() as f64
+    );
+    assert!(mean_recall > 0.8, "quickstart recall regressed");
+    println!("OK");
+}

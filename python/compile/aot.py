@@ -1,0 +1,135 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects (`proto.id() <=
+INT_MAX`). The HLO text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/gen_hlo.py and its README.
+
+Run once via `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits artifacts/<name>.hlo.txt per entry point plus artifacts/manifest.json
+describing argument shapes/dtypes and output arity, which the rust
+runtime/ module reads to validate its Literals before execution.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Canonical artifact shapes (DESIGN.md §6). dD=200 is QuerySim's 203
+# rounded to the even paper default K=dD/2; B is the serving batch; N is
+# the per-call code block (rust zero-pads tail blocks).
+B = 8  # query batch
+DD = 200  # dense dims
+K = DD // 2  # PQ subspaces (paper §6.1.1: K_U = dD/2)
+L = 16  # codewords per subspace (LUT16)
+SUB = DD // K  # dims per subspace
+N_BLOCK = 4096  # datapoints scored per call
+KM_N = 16384  # k-means training block
+KM_SUB = SUB
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+ENTRY_POINTS = {
+    "lut_build": (
+        model.lut_build_fn,
+        [_spec((B, DD), jnp.float32), _spec((K, L, SUB), jnp.float32)],
+    ),
+    "adc_score": (
+        model.adc_score_fn,
+        [_spec((B, K, L), jnp.float32), _spec((N_BLOCK, K), jnp.int32)],
+    ),
+    "dense_score": (
+        model.dense_score,
+        [
+            _spec((B, DD), jnp.float32),
+            _spec((K, L, SUB), jnp.float32),
+            _spec((N_BLOCK, K), jnp.int32),
+        ],
+    ),
+    "kmeans_step": (
+        model.kmeans_step,
+        [_spec((KM_N, KM_SUB), jnp.float32), _spec((L, KM_SUB), jnp.float32)],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str):
+    fn, specs = ENTRY_POINTS[name]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered), specs
+
+
+def out_arity(name: str) -> int:
+    fn, specs = ENTRY_POINTS[name]
+    outs = jax.eval_shape(fn, *specs)
+    return len(outs) if isinstance(outs, (tuple, list)) else 1
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", nargs="*", default=None, help="subset of entry points"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "config": {
+            "batch": B,
+            "dense_dims": DD,
+            "subspaces": K,
+            "codebook_size": L,
+            "sub_dims": SUB,
+            "block_n": N_BLOCK,
+            "kmeans_n": KM_N,
+        },
+        "modules": {},
+    }
+    names = args.only or list(ENTRY_POINTS)
+    for name in names:
+        text, specs = lower_entry(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["modules"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": s.dtype.name} for s in specs
+            ],
+            "outputs": out_arity(name),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(names)} modules")
+
+
+if __name__ == "__main__":
+    main()

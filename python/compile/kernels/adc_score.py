@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: ADC scan — the paper's dense hot spot (§4.1.2).
+
+Given per-query lookup tables and a block of PQ codes, accumulates
+score[b, n] = sum_k lut[b, k, codes[n, k]].
+
+The paper implements this on x86 with AVX2 PSHUFB: 32 parallel in-register
+16-way lookups per instruction (LUT16). TPU has no in-register shuffle, so
+per DESIGN.md §Hardware-Adaptation the 16-way lookup becomes a one-hot
+contraction executed on the MXU:
+
+    onehot(codes)[n, k, c] . lut[b, k, c]  ->  score[b, n]
+
+* the K x 16 LUT (<= 6.4 KB at K=100) is mapped whole into VMEM on every
+  grid step — the analogue of the LUT living in a ymm register;
+* the N x K code matrix streams through VMEM in BLOCK_N-row tiles
+  (BlockSpec over the grid), the analogue of streaming packed codes from
+  main memory at bandwidth;
+* accumulation is fp32 in VMEM, so the paper's unsigned-bias overflow
+  trick is unnecessary here (it lives in the rust AVX2 path instead).
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls; interpret mode
+keeps the artifact executable on the rust CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the code matrix resident in VMEM per grid step. 512 x K=100 i32
+# = 200 KB; with the one-hot expansion fp32 [512, 100, 16] materialized in
+# tiles this stays well inside a TPU core's ~16 MB VMEM.
+DEFAULT_BLOCK_N = 512
+
+
+def _adc_kernel(n_codes: int, lut_ref, codes_ref, out_ref):
+    """Grid step over datapoint blocks.
+
+    lut_ref:   f32[B, K, L]   whole table, resident every step
+    codes_ref: i32[BLOCK_N, K]
+    out_ref:   f32[B, BLOCK_N]
+    """
+    lut = lut_ref[...]  # [B, K, L]
+    codes = codes_ref[...]  # [BN, K]
+    # one-hot on the code axis; contraction over (K, L) pairs the MXU can
+    # execute as a matmul of [BN, K*L] x [K*L, B].
+    onehot = jax.nn.one_hot(codes, n_codes, dtype=jnp.float32)  # [BN, K, L]
+    bn = onehot.shape[0]
+    bsz = lut.shape[0]
+    scores = jnp.dot(
+        onehot.reshape(bn, -1),
+        lut.reshape(bsz, -1).T,
+        preferred_element_type=jnp.float32,
+    )  # [BN, B]
+    out_ref[...] = scores.T
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def adc_score(
+    lut: jnp.ndarray, codes: jnp.ndarray, *, block_n: int = DEFAULT_BLOCK_N
+) -> jnp.ndarray:
+    """Pallas-backed ADC scan.
+
+    Args:
+      lut:   f32[B, K, L] per-query tables (from lut_build).
+      codes: i32[N, K]; N must be a multiple of block_n (rust pads tails).
+    Returns:
+      f32[B, N] approximate dense inner products.
+    """
+    bsz, n_sub, n_codes = lut.shape
+    n, k2 = codes.shape
+    assert k2 == n_sub, (lut.shape, codes.shape)
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+
+    kernel = functools.partial(_adc_kernel, n_codes)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((bsz, n_sub, n_codes), lambda i: (0, 0, 0)),
+            pl.BlockSpec((block_n, n_sub), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bsz, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+        interpret=True,
+    )(lut, codes)

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: nearest-centroid assignment for PQ training (§2.3).
+
+One Lloyd iteration's assignment step over a block-streamed point set:
+argmin_l ||p_n - c_l||^2, returning both the winning index and the squared
+distance (for distortion tracking / Prop. 1 validation).
+
+TPU mapping: centroids [L, sub] are tiny and stay whole in VMEM; points
+stream in BLOCK_N tiles; the distance cross-term is a [BN, sub] x [sub, L]
+MXU matmul. interpret=True for CPU-PJRT executability.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 1024
+
+
+def _assign_kernel(points_ref, cent_ref, assign_ref, dist_ref):
+    """points f32[BN, sub], cent f32[L, sub] -> assign i32[BN], d2 f32[BN]."""
+    p = points_ref[...]
+    c = cent_ref[...]
+    p_sq = jnp.sum(p * p, axis=1, keepdims=True)  # [BN, 1]
+    c_sq = jnp.sum(c * c, axis=1)  # [L]
+    cross = jnp.dot(p, c.T, preferred_element_type=jnp.float32)  # [BN, L]
+    d2 = p_sq - 2.0 * cross + c_sq[None, :]
+    assign_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist_ref[...] = jnp.maximum(jnp.min(d2, axis=1), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def kmeans_assign(
+    points: jnp.ndarray,
+    centroids: jnp.ndarray,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+):
+    """Pallas-backed assignment.
+
+    Args:
+      points:    f32[N, sub]; N must be a multiple of block_n (pad tails).
+      centroids: f32[L, sub].
+    Returns:
+      (i32[N], f32[N]): assignment and squared distance per point.
+    """
+    n, sub_dim = points.shape
+    n_codes, sub2 = centroids.shape
+    assert sub_dim == sub2, (points.shape, centroids.shape)
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, sub_dim), lambda i: (i, 0)),
+            pl.BlockSpec((n_codes, sub_dim), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, centroids)

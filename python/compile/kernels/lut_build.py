@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: build per-query ADC lookup tables (paper §4.1.1).
+
+Computes out[b, k, l] = <q_sub[b, k, :], codebooks[k, l, :]> for a batch of
+queries against the PQ codebooks — the table T(q, k) that the ADC scan then
+indexes with 4-bit codes.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over
+subspaces; each step keeps the query slab [B, sub] and one codebook
+[L, sub] in VMEM and issues a [B, sub] x [sub, L] matmul — MXU-shaped work,
+while the CPU paper builds the same table with scalar FMAs since it is off
+the hot path there.
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the artifact runs on
+the rust PJRT CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_build_kernel(q_ref, cb_ref, out_ref):
+    """Grid step k: out[:, 0, :] = q_blk @ cb[0].T.
+
+    q_ref:   f32[B, sub]      query slice for subspace k
+    cb_ref:  f32[1, L, sub]   codebook of subspace k
+    out_ref: f32[B, 1, L]
+    """
+    q_blk = q_ref[...]  # [B, sub]
+    cb = cb_ref[0]  # [L, sub]
+    out_ref[:, 0, :] = jnp.dot(
+        q_blk, cb.T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lut_build(q: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Pallas-backed LUT construction.
+
+    Args:
+      q:         f32[B, dD]
+      codebooks: f32[K, L, sub] with dD == K * sub
+    Returns:
+      f32[B, K, L]
+    """
+    bsz, d_dense = q.shape
+    n_sub, n_codes, sub_dim = codebooks.shape
+    assert d_dense == n_sub * sub_dim, (q.shape, codebooks.shape)
+
+    return pl.pallas_call(
+        _lut_build_kernel,
+        grid=(n_sub,),
+        in_specs=[
+            # kth step sees the kth contiguous sub_dim-wide slice of q.
+            pl.BlockSpec((bsz, sub_dim), lambda k: (0, k)),
+            pl.BlockSpec((1, n_codes, sub_dim), lambda k: (k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bsz, 1, n_codes), lambda k: (0, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_sub, n_codes), jnp.float32),
+        interpret=True,
+    )(q, codebooks)

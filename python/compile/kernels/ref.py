@@ -1,0 +1,134 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness spec).
+
+Every Pallas kernel in this package has an exact counterpart here written
+with plain jax.numpy ops. pytest (python/tests/) sweeps shapes/dtypes with
+hypothesis and asserts allclose between kernel and oracle. These oracles
+are also the spec for the rust-native implementations (rust/src/dense/),
+which are cross-checked through the AOT artifacts in integration tests.
+
+Conventions (mirrors the paper's notation, §2.3/§4.1):
+  B    number of queries in a batch
+  dD   dense dimensionality, split into K contiguous subspaces
+  K    number of PQ subspaces (paper default: dD/2)
+  L    codebook size per subspace (paper: l=16 -> LUT16)
+  sub  dims per subspace = dD // K
+  N    number of datapoints in a code block
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_lut_build(q: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Per-query ADC lookup tables T(q, k) (paper §4.1.1).
+
+    Args:
+      q:         f32[B, dD] unquantized query dense components.
+      codebooks: f32[K, L, sub] PQ codebooks U^(k).
+    Returns:
+      f32[B, K, L] where out[b, k, l] = q^{D(k)}_b . U^(k)_l.
+    """
+    bsz, d_dense = q.shape
+    n_sub, n_codes, sub_dim = codebooks.shape
+    assert d_dense == n_sub * sub_dim, (q.shape, codebooks.shape)
+    q_sub = q.reshape(bsz, n_sub, sub_dim)
+    return jnp.einsum("bks,kls->bkl", q_sub, codebooks)
+
+
+def ref_adc_score(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Asymmetric distance computation: sum of per-subspace LUT entries.
+
+    Args:
+      lut:   f32[B, K, L] per-query lookup tables.
+      codes: i32[N, K] PQ code of each datapoint.
+    Returns:
+      f32[B, N] approximate inner products q^D . phi_PQ(x^D).
+    """
+    # lut[b, k, codes[n, k]] summed over k.
+    gathered = jnp.take_along_axis(
+        lut[:, None, :, :],  # [B, 1, K, L]
+        codes[None, :, :, None],  # [1, N, K, 1]
+        axis=3,
+    )  # [B, N, K, 1]
+    return gathered[..., 0].sum(axis=2)
+
+
+def ref_dense_score(
+    q: jnp.ndarray, codebooks: jnp.ndarray, codes: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused lut_build + adc_score (Eq. 3)."""
+    return ref_adc_score(ref_lut_build(q, codebooks), codes)
+
+
+def ref_kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray):
+    """Nearest-centroid assignment (the phi_VQ argmin, §2.3).
+
+    Args:
+      points:    f32[N, sub].
+      centroids: f32[L, sub].
+    Returns:
+      (i32[N] assignments, f32[N] squared distance to the winner).
+    """
+    # ||p - c||^2 = ||p||^2 - 2 p.c + ||c||^2 ; ||p||^2 constant in argmin
+    # but needed for the returned distortion.
+    p_sq = jnp.sum(points * points, axis=1, keepdims=True)  # [N, 1]
+    c_sq = jnp.sum(centroids * centroids, axis=1)  # [L]
+    cross = points @ centroids.T  # [N, L]
+    d2 = p_sq - 2.0 * cross + c_sq[None, :]
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    best = jnp.min(d2, axis=1)
+    return assign, jnp.maximum(best, 0.0)
+
+
+def ref_pq_encode(x: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Product-quantize dense vectors (Eq. 2): per-subspace argmin code.
+
+    Args:
+      x:         f32[N, dD].
+      codebooks: f32[K, L, sub].
+    Returns:
+      i32[N, K].
+    """
+    n, d_dense = x.shape
+    n_sub, n_codes, sub_dim = codebooks.shape
+    assert d_dense == n_sub * sub_dim
+    x_sub = x.reshape(n, n_sub, sub_dim)
+    # d2[n, k, l] = ||x_sub[n,k] - codebooks[k,l]||^2
+    x_sq = jnp.sum(x_sub * x_sub, axis=2, keepdims=True)  # [N, K, 1]
+    c_sq = jnp.sum(codebooks * codebooks, axis=2)  # [K, L]
+    cross = jnp.einsum("nks,kls->nkl", x_sub, codebooks)
+    d2 = x_sq - 2.0 * cross + c_sq[None, :, :]
+    return jnp.argmin(d2, axis=2).astype(jnp.int32)
+
+
+def ref_pq_decode(codes: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct phi_PQ(x) from codes: concat of selected codewords."""
+    n, n_sub = codes.shape
+    k_sub, n_codes, sub_dim = codebooks.shape
+    assert n_sub == k_sub
+    # codebooks[k, codes[n, k], :] -> [N, K, sub]
+    picked = jnp.take_along_axis(
+        codebooks[None, :, :, :], codes[:, :, None, None], axis=2
+    )[:, :, 0, :]
+    return picked.reshape(n, n_sub * sub_dim)
+
+
+def ref_kmeans_step(points: jnp.ndarray, centroids: jnp.ndarray):
+    """One Lloyd iteration: assign, then recompute means.
+
+    Empty clusters keep their previous centroid (rust k-means++ reseeding
+    handles splits; the XLA artifact only performs the dense update).
+    Returns (new_centroids f32[L, sub], assignments i32[N], distortion f32).
+    """
+    n_codes = centroids.shape[0]
+    assign, best = ref_kmeans_assign(points, centroids)
+    one_hot = (assign[:, None] == jnp.arange(n_codes)[None, :]).astype(
+        points.dtype
+    )  # [N, L]
+    counts = one_hot.sum(axis=0)  # [L]
+    sums = one_hot.T @ points  # [L, sub]
+    new_centroids = jnp.where(
+        counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centroids
+    )
+    return new_centroids, assign, jnp.mean(best)

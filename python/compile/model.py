@@ -1,0 +1,71 @@
+"""L2: the JAX compute graph for dense-component scoring (build-time only).
+
+Composes the L1 Pallas kernels into the jit-able functions that aot.py
+lowers to HLO text for the rust runtime:
+
+  * dense_score      — fused T(q,k) build + ADC scan (Eq. 3), the function
+                       the rust L3 calls per code block on the XLA backend;
+  * lut_build_fn     — table build alone (rust reuses the table across many
+                       code blocks, so this is the cross-block hoist);
+  * adc_score_fn     — scan alone, consuming a prebuilt table;
+  * kmeans_step      — one Lloyd iteration (assignment kernel + segment-sum
+                       centroid update) used by rust-driven PQ training on
+                       the XLA backend.
+
+Python never runs at serving time: these are lowered once by
+`make artifacts` and executed from rust via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.adc_score import adc_score
+from compile.kernels.kmeans import kmeans_assign
+from compile.kernels.lut_build import lut_build
+
+
+def lut_build_fn(q: jnp.ndarray, codebooks: jnp.ndarray):
+    """f32[B,dD], f32[K,L,sub] -> (f32[B,K,L],)."""
+    return (lut_build(q, codebooks),)
+
+
+def adc_score_fn(lut: jnp.ndarray, codes: jnp.ndarray):
+    """f32[B,K,L], i32[N,K] -> (f32[B,N],)."""
+    return (adc_score(lut, codes),)
+
+
+def dense_score(q: jnp.ndarray, codebooks: jnp.ndarray, codes: jnp.ndarray):
+    """Fused Eq. 3 for one code block: (f32[B,N],).
+
+    XLA fuses the tiny table build into the scan; rust uses this variant
+    when a query batch touches a single block (e.g. residual reordering of
+    an overfetched candidate set gathered into one block).
+    """
+    lut = lut_build(q, codebooks)
+    return (adc_score(lut, codes),)
+
+
+def kmeans_step(points: jnp.ndarray, centroids: jnp.ndarray):
+    """One Lloyd iteration for PQ training (§2.3).
+
+    Assignment runs in the Pallas kernel; the centroid update is a
+    segment-sum expressed as a one-hot matmul (MXU-friendly, and exactly
+    ref.ref_kmeans_step's semantics: empty clusters keep their centroid).
+
+    Returns (new_centroids f32[L,sub], assignments i32[N], distortion f32[]).
+    """
+    n_codes = centroids.shape[0]
+    assign, best = kmeans_assign(points, centroids)
+    one_hot = (
+        assign[:, None] == jnp.arange(n_codes, dtype=jnp.int32)[None, :]
+    ).astype(points.dtype)
+    counts = one_hot.sum(axis=0)
+    sums = one_hot.T @ points
+    new_centroids = jnp.where(
+        counts[:, None] > 0,
+        sums / jnp.maximum(counts[:, None], 1.0),
+        centroids,
+    )
+    return new_centroids, assign, jnp.mean(best)

@@ -1,0 +1,77 @@
+"""AOT lowering gate: every entry point lowers to parseable HLO text with
+the manifest-declared signature. This is what `make artifacts` runs at full
+shapes; here we verify structure cheaply (lowering only, full shapes only
+for the smallest module) so CI stays fast."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot
+
+
+def test_entry_point_table_complete():
+    assert set(aot.ENTRY_POINTS) == {
+        "lut_build",
+        "adc_score",
+        "dense_score",
+        "kmeans_step",
+    }
+
+
+def test_lut_build_lowers_to_hlo_text():
+    text, specs = aot.lower_entry("lut_build")
+    assert text.startswith("HloModule"), text[:80]
+    # return_tuple=True: root must be a tuple for rust's to_tuple().
+    assert "tuple(" in text
+    assert len(specs) == 2
+
+
+def test_kmeans_step_lowers_and_declares_three_outputs():
+    text, _ = aot.lower_entry("kmeans_step")
+    assert text.startswith("HloModule")
+    assert aot.out_arity("kmeans_step") == 3
+
+
+def test_config_invariants():
+    """Paper §6.1.1 parameter relations hold in the artifact config."""
+    assert aot.K == aot.DD // 2  # K_U = dD / 2
+    assert aot.L == 16  # LUT16
+    assert aot.SUB * aot.K == aot.DD
+    assert aot.N_BLOCK % 512 == 0  # kernel block divides
+
+
+@pytest.mark.slow
+def test_cli_writes_manifest_and_modules():
+    """End-to-end `python -m compile.aot` into a temp dir (subset)."""
+    with tempfile.TemporaryDirectory() as td:
+        env = dict(os.environ)
+        repo_py = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        subprocess.run(
+            [
+                sys.executable,
+                "-m",
+                "compile.aot",
+                "--out-dir",
+                td,
+                "--only",
+                "lut_build",
+            ],
+            check=True,
+            cwd=repo_py,
+            env=env,
+        )
+        with open(os.path.join(td, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["format"] == "hlo-text"
+        mod = manifest["modules"]["lut_build"]
+        assert mod["outputs"] == 1
+        assert mod["inputs"][0]["shape"] == [aot.B, aot.DD]
+        with open(os.path.join(td, mod["file"])) as f:
+            assert f.read().startswith("HloModule")

@@ -1,0 +1,182 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes; numpy.testing.assert_allclose is the pass bar.
+These tests are the build-time gate that `make artifacts` quality rests on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.adc_score import adc_score
+from compile.kernels.kmeans import kmeans_assign
+from compile.kernels.lut_build import lut_build
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Keep hypothesis deadlines off: interpret-mode pallas + jit compile is slow
+# on first example.
+COMMON = dict(deadline=None, max_examples=20)
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def _mk_lut_inputs(rng, bsz, n_sub, n_codes, sub_dim):
+    q = rng.standard_normal((bsz, n_sub * sub_dim), dtype=np.float32)
+    cb = rng.standard_normal((n_sub, n_codes, sub_dim), dtype=np.float32)
+    return jnp.asarray(q), jnp.asarray(cb)
+
+
+# ---------------------------------------------------------------- lut_build
+@settings(**COMMON)
+@given(
+    bsz=st.integers(1, 8),
+    n_sub=st.integers(1, 12),
+    n_codes=st.sampled_from([4, 16, 32]),
+    sub_dim=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lut_build_matches_ref(bsz, n_sub, n_codes, sub_dim, seed):
+    q, cb = _mk_lut_inputs(_rng(seed), bsz, n_sub, n_codes, sub_dim)
+    got = lut_build(q, cb)
+    want = ref.ref_lut_build(q, cb)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_lut_build_shape_contract():
+    q, cb = _mk_lut_inputs(_rng(0), 8, 100, 16, 2)
+    out = lut_build(q, cb)
+    assert out.shape == (8, 100, 16)
+    assert out.dtype == jnp.float32
+
+
+def test_lut_build_rejects_dim_mismatch():
+    q = jnp.zeros((2, 10), jnp.float32)
+    cb = jnp.zeros((4, 16, 3), jnp.float32)  # 4*3 != 10
+    with pytest.raises(AssertionError):
+        lut_build(q, cb)
+
+
+# ---------------------------------------------------------------- adc_score
+@settings(**COMMON)
+@given(
+    bsz=st.integers(1, 6),
+    n_sub=st.integers(1, 10),
+    n_codes=st.sampled_from([4, 16]),
+    blocks=st.integers(1, 3),
+    block_n=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adc_score_matches_ref(bsz, n_sub, n_codes, blocks, block_n, seed):
+    rng = _rng(seed)
+    n = blocks * block_n
+    lut = jnp.asarray(
+        rng.standard_normal((bsz, n_sub, n_codes), dtype=np.float32)
+    )
+    codes = jnp.asarray(
+        rng.integers(0, n_codes, size=(n, n_sub), dtype=np.int32)
+    )
+    got = adc_score(lut, codes, block_n=block_n)
+    want = ref.ref_adc_score(lut, codes)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_adc_score_extreme_codes():
+    """Codes at 0 and L-1 boundaries pick the right table entries."""
+    bsz, n_sub, n_codes, n = 2, 3, 16, 8
+    lut = jnp.arange(bsz * n_sub * n_codes, dtype=jnp.float32).reshape(
+        bsz, n_sub, n_codes
+    )
+    codes = jnp.concatenate(
+        [
+            jnp.zeros((n // 2, n_sub), jnp.int32),
+            jnp.full((n // 2, n_sub), n_codes - 1, jnp.int32),
+        ]
+    )
+    got = adc_score(lut, codes, block_n=4)
+    want = ref.ref_adc_score(lut, codes)
+    np.testing.assert_allclose(got, want)
+
+
+def test_adc_score_canonical_artifact_shape():
+    """The exact shape the AOT artifact is lowered at."""
+    rng = _rng(7)
+    bsz, n_sub, n_codes, n = 8, 100, 16, 4096
+    lut = jnp.asarray(
+        rng.standard_normal((bsz, n_sub, n_codes), dtype=np.float32)
+    )
+    codes = jnp.asarray(
+        rng.integers(0, n_codes, size=(n, n_sub), dtype=np.int32)
+    )
+    got = adc_score(lut, codes)
+    want = ref.ref_adc_score(lut, codes)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ kmeans_assign
+@settings(**COMMON)
+@given(
+    blocks=st.integers(1, 3),
+    block_n=st.sampled_from([16, 64]),
+    n_codes=st.sampled_from([2, 16]),
+    sub_dim=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_assign_matches_ref(blocks, block_n, n_codes, sub_dim, seed):
+    rng = _rng(seed)
+    n = blocks * block_n
+    pts = jnp.asarray(rng.standard_normal((n, sub_dim), dtype=np.float32))
+    cent = jnp.asarray(
+        rng.standard_normal((n_codes, sub_dim), dtype=np.float32)
+    )
+    got_a, got_d = kmeans_assign(pts, cent, block_n=block_n)
+    want_a, want_d = ref.ref_kmeans_assign(pts, cent)
+    # Distances must match tightly; assignment may differ only on exact ties
+    # (measure-zero with continuous data).
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_assign_exact_centroid_hit():
+    """A point equal to a centroid has distance ~0 and picks it."""
+    cent = jnp.asarray(
+        [[0.0, 0.0], [10.0, 10.0], [-5.0, 5.0], [3.0, -3.0]], jnp.float32
+    )
+    pts = jnp.tile(cent, (4, 1))  # 16 points, each sitting on a centroid
+    a, d = kmeans_assign(pts, cent, block_n=16)
+    np.testing.assert_array_equal(
+        np.asarray(a), np.tile(np.arange(4, dtype=np.int32), 4)
+    )
+    np.testing.assert_allclose(d, np.zeros(16), atol=1e-6)
+
+
+# ----------------------------------------------------- oracle self-checks
+def test_ref_pq_roundtrip_consistency():
+    """encode->decode is a projection: re-encoding is a fixed point."""
+    rng = _rng(3)
+    cb = jnp.asarray(rng.standard_normal((5, 16, 2), dtype=np.float32))
+    x = jnp.asarray(rng.standard_normal((64, 10), dtype=np.float32))
+    codes = ref.ref_pq_encode(x, cb)
+    recon = ref.ref_pq_decode(codes, cb)
+    codes2 = ref.ref_pq_encode(recon, cb)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes2))
+
+
+def test_ref_adc_equals_decoded_dot():
+    """ADC(lut, codes) == q . decode(codes): the Eq.-3 identity."""
+    rng = _rng(11)
+    cb = jnp.asarray(rng.standard_normal((6, 16, 3), dtype=np.float32))
+    x = jnp.asarray(rng.standard_normal((40, 18), dtype=np.float32))
+    q = jnp.asarray(rng.standard_normal((4, 18), dtype=np.float32))
+    codes = ref.ref_pq_encode(x, cb)
+    lut = ref.ref_lut_build(q, cb)
+    adc = ref.ref_adc_score(lut, codes)
+    recon = ref.ref_pq_decode(codes, cb)
+    np.testing.assert_allclose(adc, q @ recon.T, rtol=1e-4, atol=1e-4)

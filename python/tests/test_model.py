@@ -1,0 +1,101 @@
+"""L2 correctness: model.py compositions vs the oracle, plus kmeans_step
+semantics (monotone distortion, empty-cluster preservation)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+COMMON = dict(deadline=None, max_examples=15)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@settings(**COMMON)
+@given(
+    bsz=st.integers(1, 4),
+    n_sub=st.integers(1, 8),
+    sub_dim=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_score_matches_ref(bsz, n_sub, sub_dim, seed):
+    rng = _rng(seed)
+    n, n_codes = 64, 16
+    q = jnp.asarray(
+        rng.standard_normal((bsz, n_sub * sub_dim), dtype=np.float32)
+    )
+    cb = jnp.asarray(
+        rng.standard_normal((n_sub, n_codes, sub_dim), dtype=np.float32)
+    )
+    codes = jnp.asarray(
+        rng.integers(0, n_codes, size=(n, n_sub), dtype=np.int32)
+    )
+    (got,) = model.dense_score(q, cb, codes)
+    want = ref.ref_dense_score(q, cb, codes)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_split_pipeline_equals_fused():
+    """lut_build_fn |> adc_score_fn == dense_score (the rust hoist)."""
+    rng = _rng(5)
+    bsz, n_sub, sub_dim, n_codes, n = 3, 10, 2, 16, 128
+    q = jnp.asarray(
+        rng.standard_normal((bsz, n_sub * sub_dim), dtype=np.float32)
+    )
+    cb = jnp.asarray(
+        rng.standard_normal((n_sub, n_codes, sub_dim), dtype=np.float32)
+    )
+    codes = jnp.asarray(
+        rng.integers(0, n_codes, size=(n, n_sub), dtype=np.int32)
+    )
+    (lut,) = model.lut_build_fn(q, cb)
+    (split,) = model.adc_score_fn(lut, codes)
+    (fused,) = model.dense_score(q, cb, codes)
+    np.testing.assert_allclose(split, fused, rtol=1e-5, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kmeans_step_matches_ref(seed):
+    rng = _rng(seed)
+    n, sub_dim, n_codes = 256, 2, 16
+    pts = jnp.asarray(rng.standard_normal((n, sub_dim), dtype=np.float32))
+    cent = jnp.asarray(
+        rng.standard_normal((n_codes, sub_dim), dtype=np.float32)
+    )
+    got_c, got_a, got_d = model.kmeans_step(pts, cent)
+    want_c, want_a, want_d = ref.ref_kmeans_step(pts, cent)
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_step_distortion_monotone():
+    """Lloyd iterations never increase mean distortion."""
+    rng = _rng(9)
+    pts = jnp.asarray(rng.standard_normal((512, 2), dtype=np.float32))
+    cent = jnp.asarray(pts[:16])
+    prev = np.inf
+    for _ in range(6):
+        cent, _, dist = model.kmeans_step(pts, cent)
+        d = float(dist)
+        assert d <= prev + 1e-5, (d, prev)
+        prev = d
+
+
+def test_kmeans_step_preserves_empty_clusters():
+    """A centroid far from all data keeps its position (no NaNs)."""
+    rng = _rng(2)
+    pts = jnp.asarray(rng.standard_normal((128, 2), dtype=np.float32))
+    cent = np.asarray(rng.standard_normal((16, 2)), dtype=np.float32)
+    cent[7] = [1e6, 1e6]  # unreachable centroid
+    new_c, assign, _ = model.kmeans_step(pts, jnp.asarray(cent))
+    assert not np.any(np.asarray(assign) == 7)
+    np.testing.assert_allclose(np.asarray(new_c)[7], cent[7])
+    assert np.all(np.isfinite(np.asarray(new_c)))

@@ -1,0 +1,134 @@
+//! Dense Brute Force (§7.2): "pad 0's to the sparse component to make the
+//! dataset completely dense". Exact but O(N·(dˢ+dᴰ)) per query — and OOM
+//! at QuerySim scale (Table 3 reports OOM), which we reproduce with a
+//! memory-budget guard instead of actually dying.
+
+use crate::baselines::Baseline;
+use crate::hybrid::topk::TopK;
+use crate::types::dense::{dot, DenseMatrix};
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+
+/// Fallback budget when /proc/meminfo is unavailable (bytes).
+pub const FALLBACK_BUDGET: usize = 4 << 30;
+
+/// Budget for materializing the padded matrix: half of the host's
+/// currently available memory (so the guard trips *before* the allocator
+/// aborts — the paper's Table 3 "OOM" row, reproduced safely).
+pub fn default_budget() -> usize {
+    if let Ok(s) = std::fs::read_to_string("/proc/meminfo") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("MemAvailable:") {
+                if let Some(kb) = rest
+                    .trim()
+                    .split_whitespace()
+                    .next()
+                    .and_then(|v| v.parse::<usize>().ok())
+                {
+                    return kb * 1024 / 2;
+                }
+            }
+        }
+    }
+    FALLBACK_BUDGET
+}
+
+/// Kept for API compatibility with the table harness.
+pub const DEFAULT_BUDGET: usize = usize::MAX; // resolved via default_budget()
+
+pub enum DenseBruteForce {
+    Ready {
+        matrix: DenseMatrix,
+        sparse_dim: usize,
+    },
+    /// Materialization would exceed the budget (Table 3's "OOM").
+    Oom {
+        required: usize,
+        budget: usize,
+    },
+}
+
+impl DenseBruteForce {
+    pub fn build(data: &HybridDataset, budget: usize) -> Self {
+        let budget =
+            if budget == usize::MAX { default_budget() } else { budget };
+        let full_dim = data.sparse_dim() + data.dense_dim();
+        let required = data.len() * full_dim * 4;
+        if required > budget {
+            return DenseBruteForce::Oom { required, budget };
+        }
+        let mut matrix = DenseMatrix::zeros(data.len(), full_dim);
+        for i in 0..data.len() {
+            let row = matrix.row_mut(i);
+            let (dims, vals) = data.sparse.row(i);
+            for (&d, &v) in dims.iter().zip(vals) {
+                row[d as usize] = v;
+            }
+            row[data.sparse_dim()..].copy_from_slice(data.dense.row(i));
+        }
+        DenseBruteForce::Ready { matrix, sparse_dim: data.sparse_dim() }
+    }
+
+    pub fn is_oom(&self) -> bool {
+        matches!(self, DenseBruteForce::Oom { .. })
+    }
+}
+
+impl Baseline for DenseBruteForce {
+    fn name(&self) -> &str {
+        "Dense Brute Force"
+    }
+
+    fn search(&self, q: &HybridQuery, h: usize) -> Vec<(u32, f32)> {
+        match self {
+            DenseBruteForce::Oom { .. } => Vec::new(),
+            DenseBruteForce::Ready { matrix, sparse_dim } => {
+                let mut full_q = vec![0.0f32; matrix.dim];
+                for (d, v) in q.sparse.iter() {
+                    full_q[d as usize] = v;
+                }
+                full_q[*sparse_dim..].copy_from_slice(&q.dense);
+                let mut t = TopK::new(h);
+                for i in 0..matrix.n_rows() {
+                    t.push(i as u32, dot(matrix.row(i), &full_q));
+                }
+                t.into_sorted()
+            }
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        match self {
+            DenseBruteForce::Ready { matrix, .. } => matrix.data.len() * 4,
+            DenseBruteForce::Oom { required, .. } => *required,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+    use crate::eval::ground_truth::exact_top_k;
+
+    #[test]
+    fn exact_on_small_data() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(1);
+        let q = cfg.generate_queries(2, 1).remove(0);
+        let bf = DenseBruteForce::build(&data, DEFAULT_BUDGET);
+        assert!(!bf.is_oom());
+        let got: Vec<u32> =
+            bf.search(&q, 10).into_iter().map(|(i, _)| i).collect();
+        assert_eq!(got, exact_top_k(&data, &q, 10));
+    }
+
+    #[test]
+    fn oom_guard_trips() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(3);
+        let bf = DenseBruteForce::build(&data, 1024);
+        assert!(bf.is_oom());
+        let q = cfg.generate_queries(4, 1).remove(0);
+        assert!(bf.search(&q, 5).is_empty());
+    }
+}

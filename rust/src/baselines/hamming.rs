@@ -1,0 +1,189 @@
+//! Hamming (512 bits) baseline (§7.2): project each hybrid vector onto
+//! 512 Rademacher (±1) vectors, binarize at the per-bit median, search by
+//! Hamming distance, overfetch 5k candidates, exact-reorder to top h.
+//!
+//! The Rademacher matrix over the (potentially billion-dimensional)
+//! sparse part is never materialized: sign(dim, bit) is a hash.
+
+use crate::baselines::Baseline;
+use crate::hybrid::topk::TopK;
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+use crate::util::rng::Rng;
+
+pub const BITS: usize = 512;
+const WORDS: usize = BITS / 64;
+/// Paper: "retrieve top 5K points, from which the required 20 are
+/// retrieved via exact search".
+pub const OVERFETCH: usize = 5000;
+
+/// Deterministic ±1 from (dim, bit) — the implicit sparse projection.
+#[inline]
+fn rademacher_sign(dim: u32, bit: usize, salt: u64) -> f32 {
+    let mut x = (dim as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(bit as u64)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ salt;
+    x ^= x >> 31;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    if (x >> 63) & 1 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+pub struct Hamming512 {
+    /// N × 8 u64 binary codes.
+    codes: Vec<u64>,
+    /// Per-bit median thresholds.
+    thresholds: Vec<f32>,
+    /// Dense part of the projection matrix, BITS × dᴰ.
+    dense_proj: Vec<f32>,
+    dense_dim: usize,
+    salt: u64,
+    /// Retained for the exact reordering step.
+    data: HybridDataset,
+}
+
+impl Hamming512 {
+    fn project(&self, sparse: &crate::types::sparse::SparseVector, dense: &[f32]) -> Vec<f32> {
+        let mut p = vec![0.0f32; BITS];
+        for (d, v) in sparse.iter() {
+            for (b, pb) in p.iter_mut().enumerate() {
+                *pb += v * rademacher_sign(d, b, self.salt);
+            }
+        }
+        for (b, pb) in p.iter_mut().enumerate() {
+            let row = &self.dense_proj[b * self.dense_dim..(b + 1) * self.dense_dim];
+            let mut acc = 0.0f32;
+            for (x, r) in dense.iter().zip(row) {
+                acc += x * r;
+            }
+            *pb += acc;
+        }
+        p
+    }
+
+    fn binarize(&self, proj: &[f32]) -> [u64; WORDS] {
+        let mut code = [0u64; WORDS];
+        for (b, (&p, &t)) in proj.iter().zip(&self.thresholds).enumerate() {
+            if p > t {
+                code[b / 64] |= 1 << (b % 64);
+            }
+        }
+        code
+    }
+
+    pub fn build(data: &HybridDataset, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x4A5);
+        let dense_dim = data.dense_dim();
+        let dense_proj: Vec<f32> =
+            (0..BITS * dense_dim).map(|_| rng.rademacher()).collect();
+        let mut h = Hamming512 {
+            codes: Vec::new(),
+            thresholds: vec![0.0; BITS],
+            dense_proj,
+            dense_dim,
+            salt: seed,
+            data: data.clone(),
+        };
+        // project all points, then median-threshold per bit
+        let n = data.len();
+        let mut projections = vec![0.0f32; n * BITS];
+        for i in 0..n {
+            let p = h.project(&data.sparse.row_vec(i), data.dense.row(i));
+            projections[i * BITS..(i + 1) * BITS].copy_from_slice(&p);
+        }
+        for b in 0..BITS {
+            let mut col: Vec<f32> =
+                (0..n).map(|i| projections[i * BITS + b]).collect();
+            col.sort_by(|a, x| a.partial_cmp(x).unwrap());
+            h.thresholds[b] = col[n / 2];
+        }
+        let mut codes = vec![0u64; n * WORDS];
+        for i in 0..n {
+            let code =
+                h.binarize(&projections[i * BITS..(i + 1) * BITS]);
+            codes[i * WORDS..(i + 1) * WORDS].copy_from_slice(&code);
+        }
+        h.codes = codes;
+        h
+    }
+}
+
+impl Baseline for Hamming512 {
+    fn name(&self) -> &str {
+        "Hamming (512 bits)"
+    }
+
+    fn search(&self, q: &HybridQuery, h: usize) -> Vec<(u32, f32)> {
+        let proj = self.project(&q.sparse, &q.dense);
+        let qcode = self.binarize(&proj);
+        // Hamming scan: score = -distance
+        let n = self.data.len();
+        let mut top = TopK::new(OVERFETCH.min(n));
+        for i in 0..n {
+            let mut dist = 0u32;
+            for w in 0..WORDS {
+                dist += (self.codes[i * WORDS + w] ^ qcode[w]).count_ones();
+            }
+            top.push(i as u32, -(dist as f32));
+        }
+        // exact reorder of the overfetched candidates
+        let mut t = TopK::new(h);
+        for (id, _) in top.into_sorted() {
+            t.push(id, self.data.dot(id as usize, q));
+        }
+        t.into_sorted()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.codes.len() * 8 + self.dense_proj.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+
+    #[test]
+    fn codes_balanced_by_median_threshold() {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 300;
+        let data = cfg.generate(1);
+        let h = Hamming512::build(&data, 7);
+        // each bit should be ~half set (median split)
+        for b in 0..8 {
+            let set: usize = (0..data.len())
+                .filter(|&i| h.codes[i * WORDS + b / 64] >> (b % 64) & 1 == 1)
+                .count();
+            let frac = set as f64 / data.len() as f64;
+            assert!((0.3..=0.7).contains(&frac), "bit {b}: {frac}");
+        }
+    }
+
+    #[test]
+    fn self_query_found_when_overfetch_covers() {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 200; // < OVERFETCH, so exact reorder sees everything
+        let data = cfg.generate(2);
+        let ham = Hamming512::build(&data, 3);
+        let q = HybridQuery {
+            sparse: data.sparse.row_vec(17),
+            dense: data.dense.row(17).to_vec(),
+        };
+        let hits = ham.search(&q, 5);
+        assert_eq!(hits[0].0, 17, "self must rank first: {hits:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(4);
+        let a = Hamming512::build(&data, 9);
+        let b = Hamming512::build(&data, 9);
+        assert_eq!(a.codes, b.codes);
+    }
+}

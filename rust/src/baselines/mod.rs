@@ -1,0 +1,86 @@
+//! The paper's comparison baselines (§7.2): exact methods (dense/sparse
+//! brute force, exact inverted index), Hamming-512 hashing, dense-only PQ
+//! with reordering, and sparse-only inverted index with/without
+//! reordering. Each implements [`Baseline`] so the Table 2/3 harness can
+//! run them uniformly.
+
+pub mod dense_bf;
+pub mod dense_pq_reorder;
+pub mod hamming;
+pub mod inverted_exact;
+pub mod sparse_bf;
+pub mod sparse_only;
+
+use crate::types::hybrid::HybridQuery;
+
+/// A search algorithm under benchmark.
+pub trait Baseline: Send + Sync {
+    fn name(&self) -> &str;
+    /// Top-h (id, score) pairs, best first.
+    fn search(&self, q: &HybridQuery, h: usize) -> Vec<(u32, f32)>;
+    /// Approximate resident memory (reported in EXPERIMENTS.md).
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Convert a hybrid dataset view to all-sparse rows (paper: "append the
+/// sparse representation of the dense component to the end of the sparse
+/// component") — dense dim j becomes sparse dim dˢ + j.
+pub fn hybrid_as_sparse_rows(
+    data: &crate::types::hybrid::HybridDataset,
+) -> crate::types::csr::CsrMatrix {
+    let ds = data.sparse_dim();
+    let dd = data.dense_dim();
+    let rows: Vec<crate::types::sparse::SparseVector> = (0..data.len())
+        .map(|i| {
+            let (dims, vals) = data.sparse.row(i);
+            let mut d: Vec<u32> = dims.to_vec();
+            let mut v: Vec<f32> = vals.to_vec();
+            for (j, &x) in data.dense.row(i).iter().enumerate() {
+                if x != 0.0 {
+                    d.push((ds + j) as u32);
+                    v.push(x);
+                }
+            }
+            crate::types::sparse::SparseVector::new(d, v)
+        })
+        .collect();
+    crate::types::csr::CsrMatrix::from_rows(&rows, ds + dd)
+}
+
+/// The matching query conversion.
+pub fn query_as_sparse(
+    q: &HybridQuery,
+    sparse_dim: usize,
+) -> crate::types::sparse::SparseVector {
+    let mut d: Vec<u32> = q.sparse.dims.clone();
+    let mut v: Vec<f32> = q.sparse.vals.clone();
+    for (j, &x) in q.dense.iter().enumerate() {
+        if x != 0.0 {
+            d.push((sparse_dim + j) as u32);
+            v.push(x);
+        }
+    }
+    crate::types::sparse::SparseVector::new(d, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+
+    #[test]
+    fn sparse_conversion_preserves_dots() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(1);
+        let q = cfg.generate_queries(2, 1).remove(0);
+        let all_sparse = hybrid_as_sparse_rows(&data);
+        let qs = query_as_sparse(&q, data.sparse_dim());
+        for i in 0..data.len() {
+            let exact = data.dot(i, &q);
+            let conv = all_sparse.row_dot(i, &qs);
+            assert!((exact - conv).abs() < 1e-4, "row {i}");
+        }
+    }
+}

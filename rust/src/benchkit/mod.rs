@@ -1,0 +1,240 @@
+//! Benchmark harness (offline substitute for criterion).
+//!
+//! Every `benches/*.rs` target (`harness = false`) uses this: calibrated
+//! warmup, wall-clock sampling, robust stats (median / p95), throughput
+//! derivation, and a fixed-width table printer that mirrors the paper's
+//! Table 2/3 layout so EXPERIMENTS.md rows can be pasted directly.
+
+use std::time::{Duration, Instant};
+
+use crate::util::timer::fmt_duration;
+
+/// Robust summary of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    /// items/second given items processed per sample.
+    pub fn throughput(&self, items_per_sample: f64) -> f64 {
+        items_per_sample / self.median.as_secs_f64()
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} med {:>10}  p95 {:>10}  min {:>10}  (n={})",
+            self.name,
+            fmt_duration(self.median),
+            fmt_duration(self.p95),
+            fmt_duration(self.min),
+            self.samples
+        )
+    }
+}
+
+/// Benchmark configuration. `quick()` is used when BENCH_QUICK=1 (CI).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if std::env::var("BENCH_QUICK").as_deref() == Ok("1") {
+            Self::quick()
+        } else {
+            BenchConfig {
+                warmup: Duration::from_millis(300),
+                target_time: Duration::from_secs(2),
+                min_samples: 10,
+                max_samples: 2000,
+            }
+        }
+    }
+}
+
+impl BenchConfig {
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            target_time: Duration::from_millis(200),
+            min_samples: 3,
+            max_samples: 200,
+        }
+    }
+}
+
+/// Time `f` repeatedly per the config; each call is one sample.
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> Stats {
+    // Warmup.
+    let w0 = Instant::now();
+    while w0.elapsed() < cfg.warmup {
+        f();
+    }
+    // Sample.
+    let mut samples: Vec<Duration> = Vec::new();
+    let t0 = Instant::now();
+    while (t0.elapsed() < cfg.target_time || samples.len() < cfg.min_samples)
+        && samples.len() < cfg.max_samples
+    {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed());
+    }
+    summarize(name, samples)
+}
+
+/// Build Stats from raw samples (used when the caller times itself, e.g.
+/// per-query latencies from the coordinator).
+pub fn summarize(name: &str, mut samples: Vec<Duration>) -> Stats {
+    assert!(!samples.is_empty(), "no samples for {name}");
+    samples.sort_unstable();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+    Stats {
+        name: name.to_string(),
+        samples: n,
+        min: samples[0],
+        median: pct(0.5),
+        mean: total / n as u32,
+        p95: pct(0.95),
+        max: samples[n - 1],
+    }
+}
+
+/// Fixed-width results table in the paper's Table 2/3 shape.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(
+            &widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("-+-"),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Standard bench preamble: prints host capabilities + config scale.
+pub fn preamble(bench_name: &str, scale_note: &str) {
+    println!(
+        "[{bench_name}] {} | {}",
+        crate::util::simd::capability_string(),
+        scale_note
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let cfg = BenchConfig::quick();
+        let mut x = 0u64;
+        let s = bench("spin", cfg, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(s.samples >= 3);
+        assert!(s.min <= s.median && s.median <= s.p95 && s.p95 <= s.max);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn summarize_percentiles() {
+        let samples: Vec<Duration> =
+            (1..=100).map(Duration::from_micros).collect();
+        let s = summarize("x", samples);
+        assert_eq!(s.min, Duration::from_micros(1));
+        assert_eq!(s.median, Duration::from_micros(51));
+        assert_eq!(s.p95, Duration::from_micros(96));
+        assert_eq!(s.max, Duration::from_micros(100));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Algorithm", "Time", "Recall"]);
+        t.row(&["Hybrid (ours)".into(), "18.8".into(), "91%".into()]);
+        t.row(&["Sparse BF".into(), "905".into(), "100%".into()]);
+        let r = t.render();
+        assert!(r.contains("== Demo =="));
+        assert!(r.contains("Hybrid (ours)"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

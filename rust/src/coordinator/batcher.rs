@@ -1,0 +1,130 @@
+//! Request batcher: accumulate incoming queries until `max_batch` or
+//! `max_delay`, then flush as one unit. Amortizes router dispatch and —
+//! per §4.1.2 — LUT16 sustains its peak lookup rate "when operating on
+//! batches of 3 or more queries", so serving batches matter.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Incrementally built batch with deadline tracking.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: Vec::new(), oldest: None }
+    }
+
+    /// Add an item; returns a full batch if the size trigger fired.
+    pub fn push(&mut self, item: T) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.policy.max_batch {
+            self.take()
+        } else {
+            None
+        }
+    }
+
+    /// Flush if the delay trigger fired.
+    pub fn poll(&mut self) -> Option<Vec<T>> {
+        match self.oldest {
+            Some(t) if t.elapsed() >= self.policy.max_delay => self.take(),
+            _ => None,
+        }
+    }
+
+    /// Time until the current batch must flush (for select timeouts).
+    pub fn deadline(&self) -> Option<Duration> {
+        self.oldest.map(|t| {
+            self.policy.max_delay.saturating_sub(t.elapsed())
+        })
+    }
+
+    pub fn take(&mut self) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.oldest = None;
+        Some(std::mem::take(&mut self.pending))
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_trigger() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_delay: Duration::from_secs(10),
+        });
+        assert!(b.push(1).is_none());
+        assert!(b.push(2).is_none());
+        let batch = b.push(3).unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn delay_trigger() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::from_millis(5),
+        });
+        b.push(7);
+        assert!(b.poll().is_none());
+        std::thread::sleep(Duration::from_millis(7));
+        assert_eq!(b.poll().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn take_empties() {
+        let mut b: Batcher<i32> = Batcher::new(BatchPolicy::default());
+        assert!(b.take().is_none());
+        b.push(1);
+        assert_eq!(b.take().unwrap(), vec![1]);
+        assert!(b.take().is_none());
+    }
+
+    #[test]
+    fn deadline_counts_down() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 10,
+            max_delay: Duration::from_millis(50),
+        });
+        assert!(b.deadline().is_none());
+        b.push(1);
+        let d = b.deadline().unwrap();
+        assert!(d <= Duration::from_millis(50));
+    }
+}

@@ -1,0 +1,122 @@
+//! Serving metrics: latency reservoir with percentiles, throughput
+//! counters — what the paper's "90% recall@20 at an average latency of
+//! 79ms" row is measured with.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Thread-safe latency recorder.
+pub struct LatencyRecorder {
+    samples: Mutex<Vec<Duration>>,
+    started: Instant,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        LatencyRecorder {
+            samples: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.samples.lock().unwrap().push(d);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut s = self.samples.lock().unwrap().clone();
+        s.sort_unstable();
+        let n = s.len();
+        let pct = |p: f64| -> Duration {
+            if n == 0 {
+                Duration::ZERO
+            } else {
+                s[((n as f64 * p) as usize).min(n - 1)]
+            }
+        };
+        let total: Duration = s.iter().sum();
+        MetricsSnapshot {
+            count: n,
+            mean: if n == 0 { Duration::ZERO } else { total / n as u32 },
+            p50: pct(0.5),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            max: s.last().copied().unwrap_or(Duration::ZERO),
+            qps: n as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub count: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+    pub qps: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn line(&self) -> String {
+        use crate::util::timer::fmt_duration;
+        format!(
+            "n={} mean={} p50={} p95={} p99={} max={} qps={:.1}",
+            self.count,
+            fmt_duration(self.mean),
+            fmt_duration(self.p50),
+            fmt_duration(self.p95),
+            fmt_duration(self.p99),
+            fmt_duration(self.max),
+            self.qps
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(Duration::from_micros(i));
+        }
+        let s = r.snapshot();
+        assert_eq!(s.count, 100);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(s.max, Duration::from_micros(100));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let r = LatencyRecorder::new();
+        let s = r.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, Duration::ZERO);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let r = std::sync::Arc::new(LatencyRecorder::new());
+        std::thread::scope(|sc| {
+            for _ in 0..4 {
+                let r = std::sync::Arc::clone(&r);
+                sc.spawn(move || {
+                    for i in 0..250 {
+                        r.record(Duration::from_nanos(i));
+                    }
+                });
+            }
+        });
+        assert_eq!(r.snapshot().count, 1000);
+    }
+}

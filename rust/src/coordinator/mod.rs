@@ -1,0 +1,16 @@
+//! Distributed serving coordinator (paper §7.2 "Online Search": 200
+//! shards, scatter-gather, 90% recall@20 at 79 ms).
+//!
+//! The paper's 200-server cluster is reproduced in-process: one worker
+//! thread per shard, each owning a `HybridIndex` over its slice of the
+//! dataset; a router broadcasts queries, gathers per-shard top-h lists
+//! and merges them; a batcher amortizes dispatch overhead (max-batch /
+//! max-delay policy); metrics track latency percentiles and QPS.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod shard;
+
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,95 @@
+//! Scatter-gather router: broadcast a query to every shard, gather the
+//! per-shard top-h lists, merge to the global top-h (ids are global, so
+//! the merge is a pure top-k).
+
+use std::sync::mpsc::channel;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::shard::{ShardHandle, ShardRequest};
+use crate::hybrid::config::SearchParams;
+use crate::hybrid::topk::merge_topk;
+use crate::types::hybrid::HybridQuery;
+
+pub struct Router {
+    shards: Vec<ShardHandle>,
+    next_tag: AtomicU64,
+}
+
+impl Router {
+    pub fn new(shards: Vec<ShardHandle>) -> Self {
+        assert!(!shards.is_empty());
+        Router { shards, next_tag: AtomicU64::new(0) }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Broadcast + gather + merge. Each shard returns its local top-h;
+    /// their union contains the global top-h (inner product decomposes
+    /// per-datapoint, so shard-local ranking is globally consistent).
+    pub fn search(
+        &self,
+        q: &HybridQuery,
+        params: &SearchParams,
+    ) -> Vec<(u32, f32)> {
+        let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = channel();
+        for shard in &self.shards {
+            shard.submit(ShardRequest {
+                query: q.clone(),
+                params: *params,
+                reply: reply_tx.clone(),
+                tag,
+            });
+        }
+        drop(reply_tx);
+        let mut lists = Vec::with_capacity(self.shards.len());
+        while let Ok(reply) = reply_rx.recv() {
+            debug_assert_eq!(reply.tag, tag);
+            lists.push(reply.hits);
+        }
+        merge_topk(&lists, params.h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::shard::ShardHandle;
+    use crate::data::synthetic::QuerySimConfig;
+    use crate::eval::ground_truth::exact_top_k;
+    use crate::eval::recall::recall_at;
+    use crate::hybrid::config::IndexConfig;
+
+    #[test]
+    fn sharded_search_matches_single_index_recall() {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 400;
+        let data = cfg.generate(1);
+        let queries = cfg.related_queries(&data, 2, 5);
+        let shards: Vec<ShardHandle> = data
+            .shard(4)
+            .into_iter()
+            .enumerate()
+            .map(|(i, (base, slice))| {
+                ShardHandle::spawn(i, base, slice, &IndexConfig::default())
+            })
+            .collect();
+        let router = Router::new(shards);
+        let params = SearchParams::new(10).with_alpha(20.0).with_beta(5.0);
+        let mut recall = 0.0;
+        for q in &queries {
+            let truth = exact_top_k(&data, q, 10);
+            let hits: Vec<u32> = router
+                .search(q, &params)
+                .into_iter()
+                .map(|(id, _)| id)
+                .collect();
+            assert_eq!(hits.len(), 10);
+            recall += recall_at(&truth, &hits, 10);
+        }
+        recall /= queries.len() as f64;
+        assert!(recall >= 0.8, "sharded recall {recall}");
+    }
+}

@@ -1,0 +1,145 @@
+//! The serving engine: shard workers + router + batcher + metrics wired
+//! together (the in-process analogue of the paper's 200-server online
+//! system).
+
+use std::time::Instant;
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::metrics::{LatencyRecorder, MetricsSnapshot};
+use crate::coordinator::router::Router;
+use crate::coordinator::shard::ShardHandle;
+use crate::hybrid::config::{IndexConfig, SearchParams};
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub n_shards: usize,
+    pub index: IndexConfig,
+    pub batch: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            n_shards: 4,
+            index: IndexConfig::default(),
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+pub struct Server {
+    router: Router,
+    pub metrics: LatencyRecorder,
+    n: usize,
+}
+
+impl Server {
+    /// Shard the dataset, build per-shard indices (parallel via the shard
+    /// spawn threads themselves), start workers.
+    pub fn start(data: &HybridDataset, config: &ServerConfig) -> Self {
+        let n = data.len();
+        let slices = data.shard(config.n_shards);
+        // Build shard indices in parallel threads, preserving order.
+        let shards: Vec<ShardHandle> = std::thread::scope(|sc| {
+            let handles: Vec<_> = slices
+                .into_iter()
+                .enumerate()
+                .map(|(i, (base, slice))| {
+                    let cfg = config.index.clone();
+                    sc.spawn(move || ShardHandle::spawn(i, base, slice, &cfg))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        Server {
+            router: Router::new(shards),
+            metrics: LatencyRecorder::new(),
+            n,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.router.n_shards()
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Serve a single query (latency recorded).
+    pub fn search(
+        &self,
+        q: &HybridQuery,
+        params: &SearchParams,
+    ) -> Vec<(u32, f32)> {
+        let t = Instant::now();
+        let hits = self.router.search(q, params);
+        self.metrics.record(t.elapsed());
+        hits
+    }
+
+    /// Serve a batch (the batcher's flush path).
+    pub fn search_batch(
+        &self,
+        batch: &[HybridQuery],
+        params: &SearchParams,
+    ) -> Vec<Vec<(u32, f32)>> {
+        batch.iter().map(|q| self.search(q, params)).collect()
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+    use crate::eval::ground_truth::exact_top_k;
+    use crate::eval::recall::recall_at;
+
+    #[test]
+    fn end_to_end_serving_with_metrics() {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 300;
+        let data = cfg.generate(1);
+        let server = Server::start(
+            &data,
+            &ServerConfig { n_shards: 3, ..Default::default() },
+        );
+        assert_eq!(server.n_shards(), 3);
+        let queries = cfg.related_queries(&data, 2, 6);
+        let params = SearchParams::new(10).with_alpha(20.0).with_beta(5.0);
+        let mut recall = 0.0;
+        for q in &queries {
+            let hits = server.search(q, &params);
+            let ids: Vec<u32> = hits.iter().map(|&(i, _)| i).collect();
+            recall += recall_at(&exact_top_k(&data, q, 10), &ids, 10);
+        }
+        recall /= queries.len() as f64;
+        assert!(recall >= 0.8, "served recall {recall}");
+        let m = server.snapshot();
+        assert_eq!(m.count, 6);
+        assert!(m.p50 > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn more_shards_than_points_is_fine() {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 5;
+        let data = cfg.generate(3);
+        let server = Server::start(
+            &data,
+            &ServerConfig { n_shards: 16, ..Default::default() },
+        );
+        let q = cfg.generate_queries(4, 1).remove(0);
+        let hits = server.search(&q, &SearchParams::new(3));
+        assert!(!hits.is_empty());
+    }
+}

@@ -1,0 +1,127 @@
+//! Shard worker: a thread owning one `HybridIndex` slice, serving search
+//! requests over an mpsc channel (the in-process analogue of the paper's
+//! per-server shard).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::hybrid::config::{IndexConfig, SearchParams};
+use crate::hybrid::index::HybridIndex;
+use crate::hybrid::search::{search_with, SearchScratch};
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+
+/// A search request routed to one shard.
+pub struct ShardRequest {
+    pub query: HybridQuery,
+    pub params: SearchParams,
+    /// Where to send (query_tag, shard hits with *global* ids).
+    pub reply: Sender<ShardReply>,
+    pub tag: u64,
+}
+
+pub struct ShardReply {
+    pub tag: u64,
+    pub shard_id: usize,
+    /// (global id, score), best first.
+    pub hits: Vec<(u32, f32)>,
+}
+
+/// Owning handle to a running shard worker.
+pub struct ShardHandle {
+    pub shard_id: usize,
+    pub base: usize,
+    pub len: usize,
+    tx: Sender<ShardRequest>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ShardHandle {
+    /// Build the shard index (synchronously) and start its worker thread.
+    pub fn spawn(
+        shard_id: usize,
+        base: usize,
+        data: HybridDataset,
+        config: &IndexConfig,
+    ) -> Self {
+        let len = data.len();
+        let index = HybridIndex::build(&data, config);
+        let (tx, rx): (Sender<ShardRequest>, Receiver<ShardRequest>) =
+            channel();
+        let join = std::thread::Builder::new()
+            .name(format!("shard-{shard_id}"))
+            .spawn(move || {
+                let mut scratch = SearchScratch::new(&index);
+                while let Ok(req) = rx.recv() {
+                    let (hits, _stats) = search_with(
+                        &index,
+                        &req.query,
+                        &req.params,
+                        &mut scratch,
+                    );
+                    let global: Vec<(u32, f32)> = hits
+                        .into_iter()
+                        .map(|h| (base as u32 + h.id, h.score))
+                        .collect();
+                    // receiver may have hung up on shutdown: ignore
+                    let _ = req.reply.send(ShardReply {
+                        tag: req.tag,
+                        shard_id,
+                        hits: global,
+                    });
+                }
+            })
+            .expect("spawn shard worker");
+        ShardHandle { shard_id, base, len, tx, join: Some(join) }
+    }
+
+    pub fn submit(&self, req: ShardRequest) {
+        self.tx.send(req).expect("shard worker gone");
+    }
+}
+
+impl Drop for ShardHandle {
+    fn drop(&mut self) {
+        // Closing the channel stops the worker loop.
+        let (dead_tx, _) = channel();
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+
+    #[test]
+    fn shard_serves_requests_with_global_ids() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(1);
+        let base = 1000usize;
+        let shard = ShardHandle::spawn(
+            3,
+            base,
+            data.clone(),
+            &IndexConfig::default(),
+        );
+        let (reply_tx, reply_rx) = channel();
+        let q = cfg.related_queries(&data, 2, 1).remove(0);
+        shard.submit(ShardRequest {
+            query: q,
+            params: SearchParams::new(5),
+            reply: reply_tx,
+            tag: 42,
+        });
+        let reply = reply_rx.recv().unwrap();
+        assert_eq!(reply.tag, 42);
+        assert_eq!(reply.shard_id, 3);
+        assert_eq!(reply.hits.len(), 5);
+        assert!(reply
+            .hits
+            .iter()
+            .all(|&(id, _)| (id as usize) >= base
+                && (id as usize) < base + data.len()));
+    }
+}

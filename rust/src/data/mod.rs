@@ -1,0 +1,13 @@
+//! Dataset construction: the QuerySim-like synthetic generator (§7.1.2),
+//! the Netflix/MovieLens-style ratings generator with SVD dense components
+//! (§7.1.1), and dataset statistics for Figure 5 / Table 1.
+//!
+//! Substitutions (DESIGN.md §5): the paper's proprietary QuerySim corpus
+//! and the Netflix/MovieLens downloads are replaced by generative models
+//! fit to the distributions the paper itself reports (Fig. 5a power law,
+//! Fig. 5b value histogram, Table 1/2 scale cards).
+
+pub mod movielens;
+pub mod stats;
+pub mod svd;
+pub mod synthetic;

@@ -1,0 +1,229 @@
+//! Netflix/MovieLens-style hybrid datasets (paper §7.1.1).
+//!
+//! The paper builds its public-dataset hybrids as `(λU | M)`: the sparse
+//! component is each user's rating row from the user×movie matrix M, and
+//! the dense component is the user's row of U from M ≈ USVᵀ (classic CF),
+//! weighted by λ and fixed at 300 dims.
+//!
+//! Substitution (DESIGN.md §5): the raw Netflix/MovieLens triplets are not
+//! downloadable here, so M itself comes from a latent-factor generative
+//! model — movies get Zipf popularity, users get Gamma activity, and the
+//! rating value is a noisy affinity of user/movie latent vectors, clipped
+//! to 1..5. Everything downstream (SVD, λ-weighting, hybrid assembly) is
+//! the paper's own pipeline run on this M.
+
+use crate::data::svd::truncated_svd;
+use crate::types::csr::CsrMatrix;
+use crate::types::dense::DenseMatrix;
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+use crate::types::sparse::SparseVector;
+use crate::util::rng::Rng;
+
+/// Ratings generative-model + hybrid-assembly parameters.
+#[derive(Clone, Debug)]
+pub struct RatingsConfig {
+    /// Users (datapoints). Paper: Netflix 5e5, MovieLens 1.4e5.
+    pub n_users: usize,
+    /// Movies (sparse dims). Paper: Netflix 1.8e4, MovieLens 2.7e4.
+    pub n_movies: usize,
+    /// Mean ratings per user.
+    pub avg_ratings: usize,
+    /// Zipf exponent of movie popularity.
+    pub popularity_alpha: f64,
+    /// Latent dimensionality of the generative affinity model.
+    pub gen_rank: usize,
+    /// Dense (SVD) dimensionality of the hybrid. Paper: 300.
+    pub svd_rank: usize,
+    /// SVD power iterations.
+    pub svd_power: usize,
+    /// λ: relative weight of the dense component.
+    pub lambda: f32,
+}
+
+impl RatingsConfig {
+    /// Netflix-shaped, scaled by `scale` (1.0 = paper size).
+    pub fn netflix_sim(scale: f64) -> Self {
+        RatingsConfig {
+            n_users: ((5e5 * scale) as usize).max(64),
+            n_movies: ((1.8e4 * scale.sqrt()) as usize).max(32),
+            avg_ratings: 100,
+            popularity_alpha: 1.1,
+            gen_rank: 12,
+            svd_rank: 300,
+            svd_power: 1,
+            lambda: 1.0,
+        }
+    }
+
+    /// MovieLens-shaped, scaled.
+    pub fn movielens_sim(scale: f64) -> Self {
+        RatingsConfig {
+            n_users: ((1.4e5 * scale) as usize).max(64),
+            n_movies: ((2.7e4 * scale.sqrt()) as usize).max(32),
+            avg_ratings: 120,
+            popularity_alpha: 1.05,
+            gen_rank: 12,
+            svd_rank: 300,
+            svd_power: 1,
+            lambda: 1.0,
+        }
+    }
+
+    /// Tiny config for tests.
+    pub fn tiny() -> Self {
+        RatingsConfig {
+            n_users: 150,
+            n_movies: 60,
+            avg_ratings: 10,
+            popularity_alpha: 1.1,
+            gen_rank: 4,
+            svd_rank: 8,
+            svd_power: 1,
+            lambda: 1.0,
+        }
+    }
+
+    /// Generate the ratings matrix M (users × movies, values 1..5).
+    pub fn generate_ratings(&self, seed: u64) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        // latent vectors
+        let user_lat: Vec<Vec<f32>> = (0..self.n_users)
+            .map(|_| (0..self.gen_rank).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let movie_lat: Vec<Vec<f32>> = (0..self.n_movies)
+            .map(|_| (0..self.gen_rank).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let norm = (self.gen_rank as f32).sqrt();
+        let rows: Vec<SparseVector> = (0..self.n_users)
+            .map(|u| {
+                // Gamma-distributed activity (heavy-tailed user habits).
+                let k = (self.avg_ratings as f64 * rng.gamma(2.0, 0.5))
+                    .round()
+                    .clamp(1.0, self.n_movies as f64)
+                    as usize;
+                let mut seen = std::collections::BTreeMap::new();
+                for _ in 0..k {
+                    let m = rng.zipf(self.n_movies, self.popularity_alpha);
+                    seen.entry(m as u32).or_insert_with(|| {
+                        let affinity: f32 = user_lat[u]
+                            .iter()
+                            .zip(&movie_lat[m])
+                            .map(|(a, b)| a * b)
+                            .sum::<f32>()
+                            / norm;
+                        // map affinity (≈N(0,1)) to 1..5 stars
+                        (3.0 + 1.4 * affinity + 0.5 * rng.gauss_f32())
+                            .round()
+                            .clamp(1.0, 5.0)
+                    });
+                }
+                let (dims, vals): (Vec<u32>, Vec<f32>) =
+                    seen.into_iter().unzip();
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        CsrMatrix::from_rows(&rows, self.n_movies)
+    }
+
+    /// Full paper pipeline: M → SVD → hybrid (λU | M).
+    pub fn generate(&self, seed: u64) -> HybridDataset {
+        let ratings = self.generate_ratings(seed);
+        let rank = self.svd_rank.min(self.n_movies).min(self.n_users);
+        let svd = truncated_svd(&ratings, rank, self.svd_power, seed ^ 0xDA7A);
+        let mut dense = DenseMatrix::zeros(self.n_users, rank);
+        for i in 0..self.n_users {
+            let ur = svd.u.row(i);
+            let out = dense.row_mut(i);
+            for j in 0..rank {
+                // λ · U · S (scale columns by singular values so the dense
+                // IP approximates the rating-space similarity).
+                out[j] = self.lambda * ur[j] * svd.s[j];
+            }
+        }
+        HybridDataset::new(ratings, dense)
+    }
+
+    /// Queries = held-out users from the same process (the paper samples
+    /// 10k embeddings as the query set).
+    pub fn generate_queries(
+        &self,
+        data: &HybridDataset,
+        seed: u64,
+        count: usize,
+    ) -> Vec<HybridQuery> {
+        let mut rng = Rng::new(seed ^ 0x0FFE);
+        (0..count)
+            .map(|_| {
+                let i = rng.below(data.len());
+                HybridQuery {
+                    sparse: data.sparse.row_vec(i),
+                    dense: data.dense.row(i).to_vec(),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratings_are_valid_stars() {
+        let m = RatingsConfig::tiny().generate_ratings(1);
+        assert!(m
+            .values
+            .iter()
+            .all(|&v| (1.0..=5.0).contains(&v) && v.fract() == 0.0));
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let mut cfg = RatingsConfig::tiny();
+        cfg.n_users = 500;
+        let m = cfg.generate_ratings(2);
+        let mut nnz = m.col_nnz();
+        nnz.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(nnz[0] > 2 * nnz[10].max(1));
+    }
+
+    #[test]
+    fn hybrid_shapes() {
+        let cfg = RatingsConfig::tiny();
+        let d = cfg.generate(3);
+        assert_eq!(d.len(), cfg.n_users);
+        assert_eq!(d.sparse_dim(), cfg.n_movies);
+        assert_eq!(d.dense_dim(), cfg.svd_rank);
+    }
+
+    #[test]
+    fn dense_ip_approximates_rating_space_similarity() {
+        // (US)(US)ᵀ ≈ MMᵀ when rank captures the generative rank: the
+        // dense IP must track the exact rating-row IP.
+        let cfg = RatingsConfig::tiny();
+        let d = cfg.generate(4);
+        let mut rng = Rng::new(11);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for _ in 0..100 {
+            let i = rng.below(d.len());
+            let j = rng.below(d.len());
+            let exact = d.sparse.row_dot(i, &d.sparse.row_vec(j));
+            let dense_ip =
+                crate::types::dense::dot(d.dense.row(i), d.dense.row(j));
+            num += ((exact - dense_ip) as f64).powi(2);
+            den += (exact as f64).powi(2);
+        }
+        let rel = (num / den.max(1e-12)).sqrt();
+        assert!(rel < 0.5, "relative rating-space error {rel}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = RatingsConfig::tiny();
+        let a = cfg.generate(9);
+        let b = cfg.generate(9);
+        assert_eq!(a.sparse, b.sparse);
+        assert_eq!(a.dense, b.dense);
+    }
+}

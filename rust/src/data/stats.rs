@@ -1,0 +1,155 @@
+//! Dataset statistics: the Figure 5 panels (nnz-per-dimension power law,
+//! nonzero-value histogram/quantiles) and the Table 1 scale card.
+
+use crate::types::csr::CsrMatrix;
+use crate::types::hybrid::HybridDataset;
+
+/// Figure 5a: nnz per dimension, sorted descending (log-log power law).
+pub fn sorted_dim_nnz(sparse: &CsrMatrix) -> Vec<u64> {
+    let mut nnz = sparse.col_nnz();
+    nnz.sort_unstable_by(|a, b| b.cmp(a));
+    while nnz.last() == Some(&0) {
+        nnz.pop();
+    }
+    nnz
+}
+
+/// Fit the power-law exponent α of P_j ∝ j^-α by least squares on the
+/// log-log rank/frequency curve (head only: ranks with nnz ≥ 5).
+pub fn fit_power_law(sorted_nnz: &[u64]) -> f64 {
+    let pts: Vec<(f64, f64)> = sorted_nnz
+        .iter()
+        .enumerate()
+        .filter(|&(_, &c)| c >= 5)
+        .map(|(j, &c)| (((j + 1) as f64).ln(), (c as f64).ln()))
+        .collect();
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    -slope
+}
+
+/// Quantiles of the nonzero magnitudes (Figure 5b's median/p75/p99).
+pub fn value_quantiles(sparse: &CsrMatrix, qs: &[f64]) -> Vec<f32> {
+    let mut vals: Vec<f32> =
+        sparse.values.iter().map(|v| v.abs()).collect();
+    if vals.is_empty() {
+        return qs.iter().map(|_| 0.0).collect();
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qs.iter()
+        .map(|&q| {
+            let i = ((vals.len() as f64 - 1.0) * q).round() as usize;
+            vals[i]
+        })
+        .collect()
+}
+
+/// Histogram of nonzero magnitudes over `bins` equal-width bins in
+/// [0, max]. Returns (bin_edges, counts).
+pub fn value_histogram(
+    sparse: &CsrMatrix,
+    bins: usize,
+) -> (Vec<f32>, Vec<u64>) {
+    let max = sparse
+        .values
+        .iter()
+        .fold(0.0f32, |m, v| m.max(v.abs()))
+        .max(1e-9);
+    let mut counts = vec![0u64; bins];
+    for v in &sparse.values {
+        let b = ((v.abs() / max) * bins as f32) as usize;
+        counts[b.min(bins - 1)] += 1;
+    }
+    let edges = (0..=bins)
+        .map(|i| max * i as f32 / bins as f32)
+        .collect();
+    (edges, counts)
+}
+
+/// Table 1 scale card for any hybrid dataset.
+pub struct ScaleCard {
+    pub n: usize,
+    pub dense_dims: usize,
+    pub active_sparse_dims: usize,
+    pub avg_sparse_nnz: f64,
+    pub approx_bytes: usize,
+}
+
+pub fn scale_card(data: &HybridDataset) -> ScaleCard {
+    let active = data
+        .sparse
+        .col_nnz()
+        .iter()
+        .filter(|&&c| c > 0)
+        .count();
+    ScaleCard {
+        n: data.len(),
+        dense_dims: data.dense_dim(),
+        active_sparse_dims: active,
+        avg_sparse_nnz: data.sparse.nnz() as f64 / data.len().max(1) as f64,
+        approx_bytes: data.sparse.nnz() * 8
+            + data.dense.data.len() * 4
+            + data.sparse.indptr.len() * 8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+
+    #[test]
+    fn power_law_fit_recovers_exponent() {
+        // Construct exact power-law counts: c_j = 1e6 (j+1)^-2.
+        let counts: Vec<u64> = (0..1000)
+            .map(|j| (1e6 * ((j + 1) as f64).powf(-2.0)) as u64)
+            .collect();
+        let alpha = fit_power_law(&counts);
+        assert!((alpha - 2.0).abs() < 0.1, "alpha={alpha}");
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 1000;
+        let d = cfg.generate(1);
+        let q = value_quantiles(&d.sparse, &[0.5, 0.75, 0.99]);
+        assert!(q[0] <= q[1] && q[1] <= q[2]);
+        assert!(q[0] > 0.0);
+    }
+
+    #[test]
+    fn histogram_total_equals_nnz() {
+        let d = QuerySimConfig::tiny().generate(2);
+        let (edges, counts) = value_histogram(&d.sparse, 32);
+        assert_eq!(edges.len(), 33);
+        assert_eq!(
+            counts.iter().sum::<u64>() as usize,
+            d.sparse.nnz()
+        );
+    }
+
+    #[test]
+    fn scale_card_sane() {
+        let d = QuerySimConfig::tiny().generate(3);
+        let c = scale_card(&d);
+        assert_eq!(c.n, d.len());
+        assert!(c.active_sparse_dims <= d.sparse_dim());
+        assert!(c.avg_sparse_nnz > 0.0);
+    }
+
+    #[test]
+    fn sorted_nnz_descending_no_zeros() {
+        let d = QuerySimConfig::tiny().generate(4);
+        let s = sorted_dim_nnz(&d.sparse);
+        assert!(s.windows(2).all(|w| w[0] >= w[1]));
+        assert!(s.iter().all(|&c| c > 0));
+    }
+}

@@ -1,0 +1,329 @@
+//! Randomized truncated SVD of a sparse ratings matrix (paper §7.1.1:
+//! "perform Singular Value Decomposition on the sparse matrix M ≈ USVᵀ";
+//! the dense components are λU).
+//!
+//! Algorithm: randomized range finder with power iterations
+//! (Halko–Martinsson–Tropp): Y = (M Mᵀ)^p M Ω, QR(Y) → Q, then an
+//! eigendecomposition of the small matrix B Bᵀ (B = Qᵀ M) via cyclic
+//! Jacobi gives the top-r singular structure. Everything is built on the
+//! CSR type — no external linear algebra.
+
+use crate::types::csr::CsrMatrix;
+use crate::types::dense::DenseMatrix;
+use crate::util::rng::Rng;
+use crate::util::threadpool::{default_threads, parallel_for_chunks};
+
+/// y = M x (CSR × dense col-block, parallel over rows).
+fn mat_mul(m: &CsrMatrix, x: &DenseMatrix) -> DenseMatrix {
+    let n = m.n_rows();
+    let r = x.dim;
+    let mut y = DenseMatrix::zeros(n, r);
+    let ptr =
+        crate::util::threadpool::SharedMutPtr::new(y.data.as_mut_ptr());
+    parallel_for_chunks(n, default_threads(), 256, |s, e| {
+        for i in s..e {
+            let (dims, vals) = m.row(i);
+            let out = unsafe {
+                std::slice::from_raw_parts_mut(ptr.add(i * r), r)
+            };
+            for (&d, &v) in dims.iter().zip(vals) {
+                let xr = x.row(d as usize);
+                for (o, &xv) in out.iter_mut().zip(xr) {
+                    *o += v * xv;
+                }
+            }
+        }
+    });
+    y
+}
+
+/// y = Mᵀ x  (d × r). Serial accumulation per column block to avoid races.
+fn mat_t_mul(m: &CsrMatrix, x: &DenseMatrix) -> DenseMatrix {
+    let r = x.dim;
+    let mut y = DenseMatrix::zeros(m.n_cols, r);
+    for i in 0..m.n_rows() {
+        let (dims, vals) = m.row(i);
+        let xr = x.row(i);
+        for (&d, &v) in dims.iter().zip(vals) {
+            let out = y.row_mut(d as usize);
+            for (o, &xv) in out.iter_mut().zip(xr) {
+                *o += v * xv;
+            }
+        }
+    }
+    y
+}
+
+/// In-place modified Gram–Schmidt orthonormalization of columns.
+fn orthonormalize(q: &mut DenseMatrix) {
+    let n = q.n_rows();
+    let r = q.dim;
+    for j in 0..r {
+        // Subtract projections onto previous columns. Two passes
+        // ("twice is enough", Kahan): power-iterated inputs are
+        // ill-conditioned and one f32 MGS pass leaves O(1e-1) residue.
+        for _pass in 0..2 {
+            for k in 0..j {
+                let mut dot = 0.0f64;
+                for i in 0..n {
+                    dot += (q.row(i)[j] * q.row(i)[k]) as f64;
+                }
+                let dot = dot as f32;
+                for i in 0..n {
+                    let v = q.row(i)[k];
+                    q.row_mut(i)[j] -= dot * v;
+                }
+            }
+        }
+        let mut norm = 0.0f64;
+        for i in 0..n {
+            norm += (q.row(i)[j] as f64).powi(2);
+        }
+        let norm = norm.sqrt() as f32;
+        if norm < 1e-6 {
+            // Degenerate direction (input rank < requested): zero the
+            // column instead of amplifying numerical noise.
+            for i in 0..n {
+                q.row_mut(i)[j] = 0.0;
+            }
+        } else {
+            for i in 0..n {
+                q.row_mut(i)[j] /= norm;
+            }
+        }
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a small symmetric matrix (r × r,
+/// row-major). Returns (eigenvalues desc, eigenvectors as columns).
+pub fn jacobi_eigen(a: &mut Vec<f64>, r: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut v = vec![0.0f64; r * r];
+    for i in 0..r {
+        v[i * r + i] = 1.0;
+    }
+    for _sweep in 0..60 {
+        let mut off = 0.0;
+        for p in 0..r {
+            for q in (p + 1)..r {
+                off += a[p * r + q] * a[p * r + q];
+            }
+        }
+        if off < 1e-20 {
+            break;
+        }
+        for p in 0..r {
+            for q in (p + 1)..r {
+                let apq = a[p * r + q];
+                if apq.abs() < 1e-18 {
+                    continue;
+                }
+                let app = a[p * r + p];
+                let aqq = a[q * r + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum()
+                    / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..r {
+                    let akp = a[k * r + p];
+                    let akq = a[k * r + q];
+                    a[k * r + p] = c * akp - s * akq;
+                    a[k * r + q] = s * akp + c * akq;
+                }
+                for k in 0..r {
+                    let apk = a[p * r + k];
+                    let aqk = a[q * r + k];
+                    a[p * r + k] = c * apk - s * aqk;
+                    a[q * r + k] = s * apk + c * aqk;
+                }
+                for k in 0..r {
+                    let vkp = v[k * r + p];
+                    let vkq = v[k * r + q];
+                    v[k * r + p] = c * vkp - s * vkq;
+                    v[k * r + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..r).collect();
+    order.sort_by(|&i, &j| {
+        a[j * r + j].partial_cmp(&a[i * r + i]).unwrap()
+    });
+    let evals: Vec<f64> = order.iter().map(|&i| a[i * r + i]).collect();
+    let mut evecs = vec![0.0f64; r * r];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..r {
+            evecs[i * r + new_j] = v[i * r + old_j];
+        }
+    }
+    (evals, evecs)
+}
+
+/// Result of the truncated SVD: M ≈ U diag(S) Vᵀ.
+pub struct TruncatedSvd {
+    /// n × rank left singular vectors.
+    pub u: DenseMatrix,
+    /// Singular values, descending.
+    pub s: Vec<f32>,
+}
+
+/// Randomized truncated SVD with `power` subspace iterations.
+pub fn truncated_svd(
+    m: &CsrMatrix,
+    rank: usize,
+    power: usize,
+    seed: u64,
+) -> TruncatedSvd {
+    let n = m.n_rows();
+    let rank = rank.min(n.max(1)).min(m.n_cols.max(1));
+    let oversample = (rank / 4).clamp(4, 16);
+    let r = (rank + oversample).min(n.max(1));
+    // Ω: d × r gaussian
+    let mut rng = Rng::new(seed ^ 0x51D0);
+    let mut omega = DenseMatrix::zeros(m.n_cols, r);
+    for v in &mut omega.data {
+        *v = rng.gauss_f32();
+    }
+    // Y = M Ω ; power iterations Y = M (Mᵀ Y) with re-orthonormalization
+    let mut y = mat_mul(m, &omega);
+    orthonormalize(&mut y);
+    for _ in 0..power {
+        let z = mat_t_mul(m, &y);
+        y = mat_mul(m, &z);
+        orthonormalize(&mut y);
+    }
+    // B = Yᵀ M  (r × d) computed as (Mᵀ Y)ᵀ — we only need B Bᵀ (r × r).
+    let mt_y = mat_t_mul(m, &y); // d × r
+    let mut bbt = vec![0.0f64; r * r];
+    for row in 0..m.n_cols {
+        let x = mt_y.row(row);
+        for i in 0..r {
+            let xi = x[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            for j in i..r {
+                bbt[i * r + j] += xi * x[j] as f64;
+            }
+        }
+    }
+    for i in 0..r {
+        for j in 0..i {
+            bbt[i * r + j] = bbt[j * r + i];
+        }
+    }
+    let (evals, evecs) = jacobi_eigen(&mut bbt, r);
+    // U = Y W (first `rank` eigenvectors), S = sqrt(eigenvalues).
+    let mut u = DenseMatrix::zeros(n, rank);
+    for i in 0..n {
+        let yr = y.row(i);
+        let ur = u.row_mut(i);
+        for (j, uv) in ur.iter_mut().enumerate().take(rank) {
+            let mut acc = 0.0f64;
+            for k in 0..r {
+                acc += yr[k] as f64 * evecs[k * r + j];
+            }
+            *uv = acc as f32;
+        }
+    }
+    let s = evals
+        .iter()
+        .take(rank)
+        .map(|&e| (e.max(0.0)).sqrt() as f32)
+        .collect();
+    TruncatedSvd { u, s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::sparse::SparseVector;
+
+    /// Build a random low-rank sparse-ish matrix and check recovery.
+    fn low_rank_matrix(
+        seed: u64,
+        n: usize,
+        d: usize,
+        true_rank: usize,
+    ) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let u: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..true_rank).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let v: Vec<Vec<f32>> = (0..d)
+            .map(|_| (0..true_rank).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let rows: Vec<SparseVector> = (0..n)
+            .map(|i| {
+                let pairs: Vec<(u32, f32)> = (0..d)
+                    .map(|j| {
+                        let val: f32 = (0..true_rank)
+                            .map(|k| u[i][k] * v[j][k])
+                            .sum();
+                        (j as u32, val)
+                    })
+                    .collect();
+                SparseVector::from_pairs(pairs)
+            })
+            .collect();
+        CsrMatrix::from_rows(&rows, d)
+    }
+
+    #[test]
+    fn jacobi_diagonalizes_known_matrix() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1
+        let mut a = vec![2.0, 1.0, 1.0, 2.0];
+        let (evals, evecs) = jacobi_eigen(&mut a, 2);
+        assert!((evals[0] - 3.0).abs() < 1e-9);
+        assert!((evals[1] - 1.0).abs() < 1e-9);
+        // eigenvector for 3 is [1,1]/sqrt(2)
+        let (x, y) = (evecs[0], evecs[2]);
+        assert!((x.abs() - 0.7071).abs() < 1e-3);
+        assert!((x - y).abs() < 1e-6);
+    }
+
+    #[test]
+    fn svd_recovers_low_rank_energy() {
+        let m = low_rank_matrix(1, 80, 40, 3);
+        let svd = truncated_svd(&m, 6, 2, 7);
+        // singular values 4..6 should be ~0 relative to 1..3
+        assert!(svd.s[0] > 0.0);
+        assert!(
+            svd.s[3] < 0.05 * svd.s[0],
+            "s = {:?}",
+            &svd.s[..6.min(svd.s.len())]
+        );
+    }
+
+    #[test]
+    fn u_columns_orthonormal() {
+        // true rank 8 > requested rank 5 so no degenerate directions.
+        let m = low_rank_matrix(2, 60, 30, 8);
+        let svd = truncated_svd(&m, 5, 2, 3);
+        let n = svd.u.n_rows();
+        for a in 0..5 {
+            for b in a..5 {
+                let dot: f64 = (0..n)
+                    .map(|i| {
+                        svd.u.row(i)[a] as f64 * svd.u.row(i)[b] as f64
+                    })
+                    .sum();
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!(
+                    (dot - want).abs() < 1e-2,
+                    "u[:,{a}].u[:,{b}] = {dot}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn singular_values_descending() {
+        let m = low_rank_matrix(3, 50, 25, 4);
+        let svd = truncated_svd(&m, 8, 1, 9);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+    }
+}
+

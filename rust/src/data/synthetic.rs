@@ -1,0 +1,375 @@
+//! QuerySimSim: a synthetic stand-in for the paper's QuerySim dataset
+//! (§7.1.2, Table 1) built from the distributions the paper publishes:
+//!
+//! * dimension activity follows a power law, P_j ∝ j^-α (Fig. 5a);
+//! * nonzero values are lognormal with median 0.054, p75 0.12, p99 0.69
+//!   (Fig. 5b) — we fit: median = e^μ → μ = ln 0.054 ≈ -2.92; p75/median
+//!   = e^{0.674σ} → σ ≈ ln(0.12/0.054)/0.674 ≈ 1.18 (p99 check:
+//!   e^{μ+2.326σ} ≈ 0.84, same order as 0.69);
+//! * ~134 sparse nonzeros per point on average (Table 1);
+//! * a 203-dimensional dense component; we plant soft cluster structure
+//!   (mixture of Gaussians) so that quantization/recall behave like real
+//!   embeddings rather than white noise.
+//!
+//! Queries are drawn from the same process (§3.3 assumes Q_j = P_j), with
+//! a configurable "related query" mode that perturbs a datapoint — giving
+//! queries realistic high-IP neighbors.
+
+use crate::types::csr::CsrMatrix;
+use crate::types::dense::DenseMatrix;
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+use crate::types::sparse::SparseVector;
+use crate::util::rng::Rng;
+use crate::util::threadpool::{default_threads, parallel_for_chunks};
+
+/// Generator parameters (defaults mirror Table 1 at reduced N/dˢ).
+#[derive(Clone, Debug)]
+pub struct QuerySimConfig {
+    pub n: usize,
+    /// Sparse dimensionality dˢ (paper: 10⁹; default scaled).
+    pub sparse_dims: usize,
+    /// Dense dimensionality dᴰ (paper: 203).
+    pub dense_dims: usize,
+    /// Power-law exponent α for dimension activity (Fig. 5a).
+    pub alpha: f64,
+    /// Mean sparse nonzeros per point (paper: 134).
+    pub avg_nnz: usize,
+    /// Lognormal value parameters (Fig. 5b fit).
+    pub val_mu: f64,
+    pub val_sigma: f64,
+    /// Number of planted dense clusters.
+    pub clusters: usize,
+    /// Relative weight of the dense component (the paper's learned
+    /// sparse-vs-dense weighting, §7.1.2).
+    pub dense_weight: f32,
+}
+
+impl QuerySimConfig {
+    /// Table-1-shaped defaults at benchmark scale.
+    pub fn scaled(n: usize) -> Self {
+        QuerySimConfig {
+            n,
+            // keep dˢ >> avg_nnz with a power-law head; dˢ scales mildly
+            // with n to mimic vocabulary growth.
+            sparse_dims: (n * 4).clamp(1 << 12, 1 << 22),
+            dense_dims: 203,
+            alpha: 2.0,
+            avg_nnz: 134,
+            val_mu: -2.92,
+            val_sigma: 1.18,
+            clusters: 64,
+            dense_weight: 1.0,
+        }
+    }
+
+    /// Tiny config for unit tests / doctests.
+    pub fn tiny() -> Self {
+        QuerySimConfig {
+            n: 200,
+            sparse_dims: 512,
+            dense_dims: 16,
+            alpha: 1.8,
+            avg_nnz: 12,
+            val_mu: -2.92,
+            val_sigma: 1.18,
+            clusters: 4,
+            dense_weight: 1.0,
+        }
+    }
+
+    fn cluster_centers(&self, seed: u64) -> DenseMatrix {
+        let mut rng = Rng::new(seed ^ 0xC1A5_7E25);
+        let mut centers = DenseMatrix::zeros(self.clusters, self.dense_dims);
+        for c in 0..self.clusters {
+            for v in centers.row_mut(c) {
+                *v = rng.gauss_f32();
+            }
+        }
+        centers
+    }
+
+    /// Solve for c such that Σ_j min(1, c·(j+1)^-α) = avg_nnz — the §3.3
+    /// generative model's normalization (entries independent Bernoulli
+    /// with P_j ∝ j^-α, capped at 1).
+    fn bernoulli_scale(&self) -> f64 {
+        let d = self.sparse_dims as f64;
+        let target = self.avg_nnz as f64;
+        let expected = |c: f64| -> f64 {
+            // head: dims with c(j+1)^-α ≥ 1 -> j+1 ≤ c^{1/α}
+            let head = c.powf(1.0 / self.alpha).floor().min(d);
+            // tail: integral of c x^-α from head+1 to d+1
+            let a = head + 1.0;
+            let b = d + 1.0;
+            let tail = if (self.alpha - 1.0).abs() < 1e-9 {
+                c * (b / a).ln()
+            } else {
+                c * (b.powf(1.0 - self.alpha) - a.powf(1.0 - self.alpha))
+                    / (1.0 - self.alpha)
+            };
+            head + tail.max(0.0)
+        };
+        let (mut lo, mut hi) = (1e-6, d);
+        for _ in 0..80 {
+            let mid = (lo * hi).sqrt();
+            if expected(mid) < target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        (lo * hi).sqrt()
+    }
+
+    /// One row of the §3.3 model: each dim j independently nonzero with
+    /// P_j = min(1, c·(j+1)^-α). The head dims (P_j = 1) appear in every
+    /// row — reproducing the paper's observation that "the dense
+    /// dimensions of the dataset are active in all vectors, leading to
+    /// full inverted lists" (§1.1). Tail dims are sampled by count
+    /// (≈Poisson) + inverse-CDF power-law position.
+    fn gen_sparse_row_with(&self, c: f64, rng: &mut Rng) -> SparseVector {
+        let d = self.sparse_dims as f64;
+        let head = (c.powf(1.0 / self.alpha).floor().min(d)) as usize;
+        let lam = (self.avg_nnz as f64 - head as f64).max(0.0);
+        // tail count: Poisson via normal approximation for large λ.
+        let k = if lam <= 0.0 {
+            0
+        } else if lam < 30.0 {
+            // Knuth
+            let l = (-lam).exp();
+            let mut k = 0usize;
+            let mut p = 1.0;
+            loop {
+                p *= rng.f64();
+                if p <= l {
+                    break k;
+                }
+                k += 1;
+            }
+        } else {
+            (lam + lam.sqrt() * rng.gauss()).round().max(0.0) as usize
+        };
+        let mut dims = std::collections::BTreeSet::new();
+        for j in 0..head {
+            dims.insert(j as u32);
+        }
+        // inverse-CDF sample of x^-α over (head, d]
+        let a = (head + 1) as f64;
+        let b = d + 1.0;
+        let om = 1.0 - self.alpha;
+        let (pa, pb) = (a.powf(om), b.powf(om));
+        for _ in 0..k {
+            let u = rng.f64();
+            let x = (pa + u * (pb - pa)).powf(1.0 / om);
+            let j = (x.floor() as usize).clamp(head, self.sparse_dims - 1);
+            dims.insert(j as u32);
+        }
+        let vals = (0..dims.len())
+            .map(|_| rng.lognormal(self.val_mu, self.val_sigma) as f32)
+            .collect();
+        SparseVector::new(dims.into_iter().collect(), vals)
+    }
+
+    fn gen_sparse_row(&self, rng: &mut Rng) -> SparseVector {
+        self.gen_sparse_row_with(self.bernoulli_scale(), rng)
+    }
+
+    fn gen_dense_row(
+        &self,
+        rng: &mut Rng,
+        centers: &DenseMatrix,
+        out: &mut [f32],
+    ) {
+        let c = rng.below(self.clusters);
+        let center = centers.row(c);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = (center[j] + 0.5 * rng.gauss_f32()) * self.dense_weight;
+        }
+    }
+
+    /// Generate the dataset (deterministic in `seed`, parallel over rows).
+    pub fn generate(&self, seed: u64) -> HybridDataset {
+        debug_assert!(self.alpha > 1.0, "power-law exponent must be > 1");
+        let c_scale = self.bernoulli_scale();
+        let centers = self.cluster_centers(seed);
+        let threads = default_threads();
+        let n = self.n;
+        // Per-chunk forked rngs keep generation deterministic regardless
+        // of thread scheduling.
+        let chunk = 1024usize;
+        let n_chunks = n.div_ceil(chunk);
+        let mut rows: Vec<SparseVector> = vec![SparseVector::default(); n];
+        let mut dense = DenseMatrix::zeros(n, self.dense_dims);
+        {
+            let rows_ptr = crate::util::threadpool::SharedMutPtr::new(
+                rows.as_mut_ptr(),
+            );
+            let dense_ptr = crate::util::threadpool::SharedMutPtr::new(
+                dense.data.as_mut_ptr(),
+            );
+            let dd = self.dense_dims;
+            parallel_for_chunks(n_chunks, threads, 1, |cs, ce| {
+                for c in cs..ce {
+                    let mut rng = Rng::new(
+                        seed ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let start = c * chunk;
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        let sv = self.gen_sparse_row_with(c_scale, &mut rng);
+                        // SAFETY: row i written exactly once.
+                        unsafe { *rows_ptr.add(i) = sv };
+                        let drow = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                dense_ptr.add(i * dd),
+                                dd,
+                            )
+                        };
+                        self.gen_dense_row(&mut rng, &centers, drow);
+                    }
+                }
+            });
+        }
+        let sparse = CsrMatrix::from_rows(&rows, self.sparse_dims);
+        HybridDataset::new(sparse, dense)
+    }
+
+    /// Independent queries from the same distribution (Q_j = P_j, §3.3).
+    pub fn generate_queries(&self, seed: u64, count: usize) -> Vec<HybridQuery> {
+        let centers = self.cluster_centers(seed ^ 0x5EED);
+        let mut rng = Rng::new(seed ^ 0x5EED_0001);
+        let c_scale = self.bernoulli_scale();
+        (0..count)
+            .map(|_| {
+                let sparse = self.gen_sparse_row_with(c_scale, &mut rng);
+                let mut dense = vec![0.0f32; self.dense_dims];
+                self.gen_dense_row(&mut rng, &centers, &mut dense);
+                HybridQuery { sparse, dense }
+            })
+            .collect()
+    }
+
+    /// Queries derived from datapoints (perturb + redraw some nonzeros):
+    /// guarantees every query has strong true neighbors, matching the
+    /// paper's "identify similar queries" task.
+    pub fn related_queries(
+        &self,
+        data: &HybridDataset,
+        seed: u64,
+        count: usize,
+    ) -> Vec<HybridQuery> {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        (0..count)
+            .map(|_| {
+                let i = rng.below(data.len());
+                let base = data.sparse.row_vec(i);
+                // keep ~70% of the sparse entries, jitter values ±20%
+                let mut pairs: Vec<(u32, f32)> = Vec::new();
+                for (d, v) in base.iter() {
+                    if rng.f64() < 0.7 {
+                        pairs.push((d, v * (1.0 + 0.2 * (rng.f32() - 0.5))));
+                    }
+                }
+                // add a few fresh dims
+                for _ in 0..3 {
+                    pairs.push((
+                        rng.zipf(self.sparse_dims, self.alpha) as u32,
+                        rng.lognormal(self.val_mu, self.val_sigma) as f32,
+                    ));
+                }
+                let sparse = SparseVector::from_pairs(pairs);
+                let mut dense = data.dense.row(i).to_vec();
+                for v in &mut dense {
+                    *v += 0.2 * rng.gauss_f32();
+                }
+                HybridQuery { sparse, dense }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = QuerySimConfig::tiny();
+        let a = cfg.generate(1);
+        let b = cfg.generate(1);
+        assert_eq!(a.sparse, b.sparse);
+        assert_eq!(a.dense, b.dense);
+    }
+
+    #[test]
+    fn shape_matches_config() {
+        let cfg = QuerySimConfig::tiny();
+        let d = cfg.generate(2);
+        assert_eq!(d.len(), cfg.n);
+        assert_eq!(d.sparse_dim(), cfg.sparse_dims);
+        assert_eq!(d.dense_dim(), cfg.dense_dims);
+    }
+
+    #[test]
+    fn nnz_mean_near_target() {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 2000;
+        cfg.avg_nnz = 20;
+        cfg.sparse_dims = 1 << 14; // plenty of room: few zipf collisions
+        let d = cfg.generate(3);
+        let mean = d.sparse.nnz() as f64 / d.len() as f64;
+        assert!(
+            (mean - 20.0).abs() < 6.0,
+            "mean nnz {mean} far from target 20"
+        );
+    }
+
+    #[test]
+    fn dim_activity_is_power_law() {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 3000;
+        let d = cfg.generate(4);
+        let mut nnz = d.sparse.col_nnz();
+        nnz.sort_unstable_by(|a, b| b.cmp(a));
+        // head dominates: top dim much more active than the 50th
+        assert!(nnz[0] > 4 * nnz[50].max(1), "{} vs {}", nnz[0], nnz[50]);
+    }
+
+    #[test]
+    fn values_positive_with_long_tail() {
+        let d = QuerySimConfig::tiny().generate(5);
+        assert!(d.sparse.values.iter().all(|&v| v > 0.0));
+        let mut vals: Vec<f32> = d.sparse.values.clone();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = vals[vals.len() / 2];
+        // lognormal(μ=-2.92) median ≈ 0.054
+        assert!((0.02..0.15).contains(&median), "median={median}");
+    }
+
+    #[test]
+    fn related_queries_have_strong_neighbors() {
+        let cfg = QuerySimConfig::tiny();
+        let d = cfg.generate(6);
+        let qs = cfg.related_queries(&d, 7, 5);
+        for q in &qs {
+            let best = (0..d.len())
+                .map(|i| d.dot(i, q))
+                .fold(f32::MIN, f32::max);
+            let mean: f32 = (0..d.len())
+                .map(|i| d.dot(i, q))
+                .sum::<f32>()
+                / d.len() as f32;
+            assert!(best > mean, "best {best} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn queries_deterministic() {
+        let cfg = QuerySimConfig::tiny();
+        let a = cfg.generate_queries(9, 3);
+        let b = cfg.generate_queries(9, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sparse, y.sparse);
+            assert_eq!(x.dense, y.dense);
+        }
+    }
+}

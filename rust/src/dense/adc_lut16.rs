@@ -1,0 +1,372 @@
+//! LUT16 in-register ADC scan (§4.1.2) — the paper's dense hot path.
+//!
+//! Layout: codes are stored *blocked-transposed*: groups of 32 datapoints,
+//! and within a group one 32-byte strip per subspace *pair* (low nibble =
+//! even subspace, high nibble = odd subspace, matching the paper's 4-bit
+//! packing). Each strip is exactly one AVX2 register of shuffle indices.
+//!
+//! AVX2 kernel per strip:
+//!   1. `VPAND`/`VPSRLW` split the nibbles,
+//!   2. `VPSHUFB` performs 32 parallel 16-way lookups against the
+//!      subspace's 16-entry LUT broadcast to both 128-bit lanes,
+//!   3. accumulation uses the paper's two tricks:
+//!      * **unsigned bias**: table entries are biased to [0,255]
+//!        (`QuantizedLut`), accumulated unsigned, bias subtracted at the
+//!        end — cheaper than signed widening;
+//!      * **no-PAND width extension**: the 32×u8 shuffle result is added
+//!        *as-is* into 16×u16 lanes (`VPADDW`) — each lane accumulates
+//!        even-point values plus 256× odd-point values; a second
+//!        accumulator of `VPSRLW 8` captures the odd points. The even
+//!        sums are recovered as `acc_raw - 256·acc_hi` (wrapping u16),
+//!        exact as long as ≤ 257 strips are accumulated between flushes —
+//!        overflows during addition are "perfectly matched by a
+//!        corresponding underflow during subtraction" (§4.1.2).
+//!
+//! The same blocked layout drives a portable scalar fallback, and the
+//! fig-style micro bench (`benches/micro_adc.rs`) compares both against
+//! the LUT256 in-memory baseline (`adc_scalar`).
+
+use crate::dense::lut::QuantizedLut;
+use crate::dense::pq::PqIndex;
+use crate::util::simd::has_avx2;
+
+/// Points per block: one AVX2 register of nibble indices.
+pub const BLOCK: usize = 32;
+
+/// Blocked-transposed packed codes ready for the LUT16 scan.
+#[derive(Clone, Debug)]
+pub struct Lut16Codes {
+    /// [n_blocks][k_pairs][32] bytes.
+    pub data: Vec<u8>,
+    pub n: usize,
+    pub k: usize,
+    pub k_pairs: usize,
+    pub n_blocks: usize,
+}
+
+impl Lut16Codes {
+    /// Re-layout a row-major `PqIndex` (l = 16) into scan order.
+    pub fn from_pq_index(index: &PqIndex) -> Self {
+        assert!(index.codebooks.l == 16, "LUT16 requires l = 16");
+        let n = index.n;
+        let k = index.codebooks.k;
+        let k_pairs = k.div_ceil(2);
+        let n_blocks = n.div_ceil(BLOCK);
+        let mut data = vec![0u8; n_blocks * k_pairs * BLOCK];
+        for i in 0..n {
+            let codes = index.row_codes(i);
+            let b = i / BLOCK;
+            let slot = i % BLOCK;
+            for p in 0..k_pairs {
+                let lo = codes[2 * p] & 0x0F;
+                let hi = codes
+                    .get(2 * p + 1)
+                    .map(|&c| c & 0x0F)
+                    .unwrap_or(0);
+                data[(b * k_pairs + p) * BLOCK + slot] = lo | (hi << 4);
+            }
+        }
+        Lut16Codes { data, n, k, k_pairs, n_blocks }
+    }
+
+    #[inline]
+    pub fn block(&self, b: usize) -> &[u8] {
+        let stride = self.k_pairs * BLOCK;
+        &self.data[b * stride..(b + 1) * stride]
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Scan all points: `out[i] = dequantized ADC score of point i`.
+/// Dispatches to AVX2 when available.
+pub fn scan(codes: &Lut16Codes, qlut: &QuantizedLut, out: &mut [f32]) {
+    assert_eq!(out.len(), codes.n);
+    assert_eq!(qlut.k, codes.k);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if has_avx2() {
+            unsafe { scan_avx2(codes, qlut, out) };
+            return;
+        }
+    }
+    scan_scalar(codes, qlut, out);
+}
+
+/// Portable scalar scan over the blocked layout (also the oracle the AVX2
+/// path is tested against).
+pub fn scan_scalar(codes: &Lut16Codes, qlut: &QuantizedLut, out: &mut [f32]) {
+    assert_eq!(out.len(), codes.n);
+    let mut acc = [0u32; BLOCK];
+    for b in 0..codes.n_blocks {
+        acc.fill(0);
+        let blk = codes.block(b);
+        for p in 0..codes.k_pairs {
+            let strip = &blk[p * BLOCK..(p + 1) * BLOCK];
+            let t_even = &qlut.table[(2 * p) * 16..(2 * p) * 16 + 16];
+            let has_odd = 2 * p + 1 < codes.k;
+            if has_odd {
+                let t_odd =
+                    &qlut.table[(2 * p + 1) * 16..(2 * p + 1) * 16 + 16];
+                for (s, &byte) in strip.iter().enumerate() {
+                    acc[s] += t_even[(byte & 0x0F) as usize] as u32
+                        + t_odd[(byte >> 4) as usize] as u32;
+                }
+            } else {
+                for (s, &byte) in strip.iter().enumerate() {
+                    acc[s] += t_even[(byte & 0x0F) as usize] as u32;
+                }
+            }
+        }
+        let base = b * BLOCK;
+        for (s, &a) in acc.iter().enumerate() {
+            if base + s < codes.n {
+                out[base + s] = qlut.dequantize(a);
+            }
+        }
+    }
+}
+
+/// AVX2 kernel. SAFETY: caller must ensure AVX2 is available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn scan_avx2(
+    codes: &Lut16Codes,
+    qlut: &QuantizedLut,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+
+    let k = codes.k;
+    let k_pairs = codes.k_pairs;
+    // u16 no-PAND recovery is exact while strips-between-flushes ≤ 257;
+    // each strip contributes ≤ 2×255 per u16 lane pair, so flush every
+    // 128 pairs (256 subspaces) to stay safe.
+    const FLUSH_PAIRS: usize = 128;
+
+    let low_mask = _mm256_set1_epi8(0x0F);
+    let zero = _mm256_setzero_si256();
+
+    for b in 0..codes.n_blocks {
+        let blk = codes.block(b);
+        // u32 totals per point, filled by flushes.
+        let mut total = [0u32; BLOCK];
+        let mut p0 = 0usize;
+        while p0 < k_pairs {
+            let p1 = (p0 + FLUSH_PAIRS).min(k_pairs);
+            // acc_raw lane i (u16) = Σ even-point value + 256·odd-point
+            // acc_hi  lane i (u16) = Σ odd-point value
+            let mut acc_raw = zero;
+            let mut acc_hi = zero;
+            for p in p0..p1 {
+                let strip = _mm256_loadu_si256(
+                    blk.as_ptr().add(p * BLOCK) as *const __m256i,
+                );
+                // LUT registers: 16 bytes broadcast to both lanes.
+                let t_even = _mm256_broadcastsi128_si256(_mm_loadu_si128(
+                    qlut.table.as_ptr().add(2 * p * 16) as *const __m128i,
+                ));
+                let idx_even = _mm256_and_si256(strip, low_mask);
+                let val_even = _mm256_shuffle_epi8(t_even, idx_even);
+                // no-PAND width extension: add the 32×u8 register into
+                // 16×u16 lanes as-is, track high bytes separately.
+                acc_raw = _mm256_add_epi16(acc_raw, val_even);
+                acc_hi = _mm256_add_epi16(
+                    acc_hi,
+                    _mm256_srli_epi16(val_even, 8),
+                );
+                if 2 * p + 1 < k {
+                    let t_odd =
+                        _mm256_broadcastsi128_si256(_mm_loadu_si128(
+                            qlut.table.as_ptr().add((2 * p + 1) * 16)
+                                as *const __m128i,
+                        ));
+                    let idx_odd = _mm256_and_si256(
+                        _mm256_srli_epi16(strip, 4),
+                        low_mask,
+                    );
+                    let val_odd = _mm256_shuffle_epi8(t_odd, idx_odd);
+                    acc_raw = _mm256_add_epi16(acc_raw, val_odd);
+                    acc_hi = _mm256_add_epi16(
+                        acc_hi,
+                        _mm256_srli_epi16(val_odd, 8),
+                    );
+                }
+            }
+            // Recover per-point sums: even points = raw - 256·hi
+            // (wrapping), odd points = hi.
+            let even_sums = _mm256_sub_epi16(
+                acc_raw,
+                _mm256_slli_epi16(acc_hi, 8),
+            );
+            let mut even_buf = [0u16; 16];
+            let mut odd_buf = [0u16; 16];
+            _mm256_storeu_si256(
+                even_buf.as_mut_ptr() as *mut __m256i,
+                even_sums,
+            );
+            _mm256_storeu_si256(
+                odd_buf.as_mut_ptr() as *mut __m256i,
+                acc_hi,
+            );
+            for lane in 0..16 {
+                total[2 * lane] += even_buf[lane] as u32;
+                total[2 * lane + 1] += odd_buf[lane] as u32;
+            }
+            p0 = p1;
+        }
+        let base = b * BLOCK;
+        let live = (codes.n - base).min(BLOCK);
+        for s in 0..live {
+            out[base + s] = qlut.dequantize(total[s]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::lut::{QuantizedLut, QueryLut};
+    use crate::dense::pq::{PqCodebooks, PqIndex};
+    use crate::types::dense::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn setup(
+        seed: u64,
+        n: usize,
+        k: usize,
+    ) -> (PqIndex, QueryLut, QuantizedLut) {
+        let mut rng = Rng::new(seed);
+        let dim = k * 2;
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let data = DenseMatrix::from_rows(&rows);
+        let cb = PqCodebooks::train(&data, k, 16, 8, seed);
+        let idx = PqIndex::build(&data, cb.clone());
+        let q: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+        let lut = QueryLut::build(&cb, &q);
+        let qlut = QuantizedLut::build(&lut);
+        (idx, lut, qlut)
+    }
+
+    #[test]
+    fn blocked_layout_roundtrip() {
+        let (idx, _, _) = setup(1, 70, 6);
+        let blocked = Lut16Codes::from_pq_index(&idx);
+        assert_eq!(blocked.n_blocks, 3);
+        for i in 0..70 {
+            let codes = idx.row_codes(i);
+            let b = i / BLOCK;
+            let s = i % BLOCK;
+            for p in 0..blocked.k_pairs {
+                let byte = blocked.block(b)[p * BLOCK + s];
+                assert_eq!(byte & 0x0F, codes[2 * p]);
+                if 2 * p + 1 < 6 {
+                    assert_eq!(byte >> 4, codes[2 * p + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_scan_matches_per_row_lut_sum() {
+        let (idx, _, qlut) = setup(2, 100, 8);
+        let blocked = Lut16Codes::from_pq_index(&idx);
+        let mut out = vec![0.0f32; 100];
+        scan_scalar(&blocked, &qlut, &mut out);
+        for i in 0..100 {
+            let acc: u32 = idx
+                .row_codes(i)
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| qlut.table[k * 16 + c as usize] as u32)
+                .sum();
+            let want = qlut.dequantize(acc);
+            assert!((out[i] - want).abs() < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn avx2_matches_scalar_exactly() {
+        if !has_avx2() {
+            eprintln!("skipping: no AVX2");
+            return;
+        }
+        for &(n, k) in
+            &[(32usize, 2usize), (33, 7), (100, 8), (256, 100), (511, 129)]
+        {
+            let (idx, _, qlut) = setup(3 + n as u64 + k as u64, n, k);
+            let blocked = Lut16Codes::from_pq_index(&idx);
+            let mut scalar = vec![0.0f32; n];
+            let mut simd = vec![0.0f32; n];
+            scan_scalar(&blocked, &qlut, &mut scalar);
+            unsafe { scan_avx2(&blocked, &qlut, &mut simd) };
+            for i in 0..n {
+                assert_eq!(
+                    scalar[i].to_bits(),
+                    simd[i].to_bits(),
+                    "n={n} k={k} row {i}: {} vs {}",
+                    scalar[i],
+                    simd[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn no_pand_trick_survives_many_overflows() {
+        if !has_avx2() {
+            return;
+        }
+        // Worst case: max-value table entries force u16 lane overflow
+        // repeatedly; recovery must stay exact up to the flush boundary.
+        let (idx, _, mut qlut) = setup(4, 64, 250);
+        qlut.table.fill(255);
+        let blocked = Lut16Codes::from_pq_index(&idx);
+        let mut scalar = vec![0.0f32; 64];
+        let mut simd = vec![0.0f32; 64];
+        scan_scalar(&blocked, &qlut, &mut scalar);
+        unsafe { scan_avx2(&blocked, &qlut, &mut simd) };
+        for i in 0..64 {
+            assert_eq!(scalar[i].to_bits(), simd[i].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn scan_approximates_true_inner_product() {
+        let (idx, lut, qlut) = setup(5, 200, 32);
+        let blocked = Lut16Codes::from_pq_index(&idx);
+        let mut out = vec![0.0f32; 200];
+        scan(&blocked, &qlut, &mut out);
+        for i in 0..200 {
+            let exact_lut = lut.score_codes(&idx.row_codes(i));
+            assert!(
+                (out[i] - exact_lut).abs() <= qlut.max_error() + 1e-3,
+                "row {i}: {} vs {} (bound {})",
+                out[i],
+                exact_lut,
+                qlut.max_error()
+            );
+        }
+    }
+
+    #[test]
+    fn odd_k_last_subspace_handled() {
+        let (idx, _, qlut) = setup(6, 50, 9); // odd K
+        let blocked = Lut16Codes::from_pq_index(&idx);
+        let mut out = vec![0.0f32; 50];
+        scan(&blocked, &qlut, &mut out);
+        for i in 0..50 {
+            let acc: u32 = idx
+                .row_codes(i)
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| qlut.table[k * 16 + c as usize] as u32)
+                .sum();
+            assert!((out[i] - qlut.dequantize(acc)).abs() < 1e-4);
+        }
+    }
+}

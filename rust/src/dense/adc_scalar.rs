@@ -1,0 +1,122 @@
+//! LUT256-style in-memory ADC baselines (§4.1.2's comparison point:
+//! "a LUT256 implementation's architectural upper-bound of two scalar
+//! loads per clock-cycle").
+//!
+//! Two scans:
+//! * [`scan_f32_lut`] — classic PQ scan: one byte code per subspace,
+//!   f32 in-memory table lookups (what [14, 20, 27] do);
+//! * [`scan_unpacked_lut16`] — the same loop but over 4-bit codes, to
+//!   isolate the in-register-vs-in-memory gap from the code-width gap.
+
+use crate::dense::lut::QueryLut;
+use crate::dense::pq::PqIndex;
+
+/// Classic in-memory ADC over a row-major `PqIndex` (any l): exact f32
+/// table sums, one row at a time.
+pub fn scan_f32_lut(index: &PqIndex, lut: &QueryLut, out: &mut [f32]) {
+    assert_eq!(out.len(), index.n);
+    assert_eq!(lut.k, index.codebooks.k);
+    let l = index.codebooks.l;
+    if l <= 16 {
+        // packed: two codes per byte
+        for i in 0..index.n {
+            let raw = index.row_codes_packed(i);
+            let mut acc = 0.0f32;
+            let mut k = 0usize;
+            for &byte in raw {
+                acc += lut.table[k * 16 + (byte & 0x0F) as usize];
+                k += 1;
+                if k < lut.k {
+                    acc += lut.table[k * 16 + (byte >> 4) as usize];
+                    k += 1;
+                }
+            }
+            out[i] = acc;
+        }
+    } else {
+        for i in 0..index.n {
+            let raw = index.row_codes_packed(i);
+            let mut acc = 0.0f32;
+            for (k, &c) in raw.iter().enumerate() {
+                acc += lut.table[k * l + c as usize];
+            }
+            out[i] = acc;
+        }
+    }
+}
+
+/// In-memory lookups against the *quantized* u8 table (same table the
+/// AVX2 path uses): isolates PSHUFB's contribution in the micro bench.
+pub fn scan_unpacked_lut16(
+    index: &PqIndex,
+    table_u8: &[u8],
+    k: usize,
+    out: &mut [u32],
+) {
+    assert_eq!(out.len(), index.n);
+    for i in 0..index.n {
+        let raw = index.row_codes_packed(i);
+        let mut acc = 0u32;
+        let mut ks = 0usize;
+        for &byte in raw {
+            acc += table_u8[ks * 16 + (byte & 0x0F) as usize] as u32;
+            ks += 1;
+            if ks < k {
+                acc += table_u8[ks * 16 + (byte >> 4) as usize] as u32;
+                ks += 1;
+            }
+        }
+        out[i] = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::lut::QuantizedLut;
+    use crate::dense::pq::PqCodebooks;
+    use crate::types::dense::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, n: usize, k: usize) -> (PqIndex, QueryLut) {
+        let mut rng = Rng::new(seed);
+        let dim = k * 2;
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let data = DenseMatrix::from_rows(&rows);
+        let cb = PqCodebooks::train(&data, k, 16, 8, seed);
+        let idx = PqIndex::build(&data, cb.clone());
+        let q: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+        let lut = QueryLut::build(&cb, &q);
+        (idx, lut)
+    }
+
+    #[test]
+    fn f32_scan_matches_row_score() {
+        let (idx, lut) = setup(1, 90, 7);
+        let mut out = vec![0.0f32; 90];
+        scan_f32_lut(&idx, &lut, &mut out);
+        for i in 0..90 {
+            let want = lut.score_codes(&idx.row_codes(i));
+            assert!((out[i] - want).abs() < 1e-5, "row {i}");
+        }
+    }
+
+    #[test]
+    fn u8_scan_matches_manual_sum() {
+        let (idx, lut) = setup(2, 64, 10);
+        let qlut = QuantizedLut::build(&lut);
+        let mut out = vec![0u32; 64];
+        scan_unpacked_lut16(&idx, &qlut.table, 10, &mut out);
+        for i in 0..64 {
+            let want: u32 = idx
+                .row_codes(i)
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| qlut.table[k * 16 + c as usize] as u32)
+                .sum();
+            assert_eq!(out[i], want);
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Exact dense scoring (the "Dense Brute Force" kernel): parallel q·xᴰ
+//! over all rows. The full baseline (zero-padding the sparse part into a
+//! dense vector) lives in `baselines::dense_bf`.
+
+use crate::types::dense::{dot, DenseMatrix};
+use crate::util::threadpool::{
+    default_threads, parallel_for_chunks, SharedMutPtr,
+};
+
+/// q · row_i for every i, in parallel.
+pub fn all_dots(m: &DenseMatrix, q: &[f32]) -> Vec<f32> {
+    let n = m.n_rows();
+    let mut out = vec![0.0f32; n];
+    let ptr = SharedMutPtr::new(out.as_mut_ptr());
+    parallel_for_chunks(n, default_threads(), 512, |s, e| {
+        for i in s..e {
+            // SAFETY: disjoint indices.
+            unsafe { *ptr.add(i) = dot(m.row(i), q) };
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial() {
+        let rows: Vec<Vec<f32>> = (0..300)
+            .map(|i| (0..8).map(|j| ((i * 7 + j) % 13) as f32).collect())
+            .collect();
+        let m = DenseMatrix::from_rows(&rows);
+        let q: Vec<f32> = (0..8).map(|j| j as f32 - 4.0).collect();
+        let out = all_dots(&m, &q);
+        for i in 0..300 {
+            assert_eq!(out[i], dot(m.row(i), &q));
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Lloyd's k-means with k-means++ seeding (§2.3: "codebooks are learned
+//! using k-Means in each subspace independently").
+//!
+//! This is the rust-native trainer; the same Lloyd step also exists as an
+//! AOT XLA artifact (`kmeans_step.hlo.txt`, from the L1 Pallas assignment
+//! kernel) which `runtime::XlaKmeans` drives — integration tests check the
+//! two agree.
+
+use crate::types::dense::{dist_sq, DenseMatrix};
+use crate::util::rng::Rng;
+
+/// Result of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    /// l × dim centroids, row-major.
+    pub centroids: DenseMatrix,
+    pub assignments: Vec<u32>,
+    /// Mean squared distance to the assigned centroid.
+    pub distortion: f64,
+    pub iterations: usize,
+}
+
+/// Assign each point to its nearest centroid. Returns (assign, total d²).
+pub fn assign(
+    points: &DenseMatrix,
+    centroids: &DenseMatrix,
+) -> (Vec<u32>, f64) {
+    let n = points.n_rows();
+    let l = centroids.n_rows();
+    let mut out = vec![0u32; n];
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let p = points.row(i);
+        let mut best = f32::INFINITY;
+        let mut best_j = 0u32;
+        for j in 0..l {
+            let d = dist_sq(p, centroids.row(j));
+            if d < best {
+                best = d;
+                best_j = j as u32;
+            }
+        }
+        out[i] = best_j;
+        total += best as f64;
+    }
+    (out, total)
+}
+
+/// k-means++ seeding.
+fn seed_pp(points: &DenseMatrix, l: usize, rng: &mut Rng) -> DenseMatrix {
+    let n = points.n_rows();
+    let mut centroids = DenseMatrix::zeros(l, points.dim);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(points.row(first));
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| dist_sq(points.row(i), centroids.row(0)) as f64)
+        .collect();
+    for c in 1..l {
+        let pick = rng.weighted(&d2);
+        centroids.row_mut(c).copy_from_slice(points.row(pick));
+        for i in 0..n {
+            let d = dist_sq(points.row(i), centroids.row(c)) as f64;
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centroids
+}
+
+/// Full Lloyd's run. Empty clusters are re-seeded from the point farthest
+/// from its centroid (split heuristic).
+pub fn kmeans(
+    points: &DenseMatrix,
+    l: usize,
+    max_iters: usize,
+    seed: u64,
+) -> KmeansResult {
+    let n = points.n_rows();
+    assert!(n > 0, "kmeans on empty set");
+    let l = l.min(n);
+    let mut rng = Rng::new(seed);
+    let mut centroids = seed_pp(points, l, &mut rng);
+    let mut assignments = vec![0u32; n];
+    let mut prev = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..max_iters {
+        iters = it + 1;
+        let (a, total) = assign(points, &centroids);
+        assignments = a;
+        // update
+        let mut counts = vec![0u64; l];
+        let mut sums = vec![0.0f64; l * points.dim];
+        for (i, &c) in assignments.iter().enumerate() {
+            counts[c as usize] += 1;
+            let p = points.row(i);
+            let s = &mut sums
+                [c as usize * points.dim..(c as usize + 1) * points.dim];
+            for (sv, &pv) in s.iter_mut().zip(p) {
+                *sv += pv as f64;
+            }
+        }
+        for c in 0..l {
+            if counts[c] == 0 {
+                // re-seed from the globally worst-fit point
+                let (worst, _) = assignments
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &a)| {
+                        (i, dist_sq(points.row(i), centroids.row(a as usize)))
+                    })
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(points.row(worst));
+                continue;
+            }
+            let s = &sums[c * points.dim..(c + 1) * points.dim];
+            let row = centroids.row_mut(c);
+            for (r, &sv) in row.iter_mut().zip(s) {
+                *r = (sv / counts[c] as f64) as f32;
+            }
+        }
+        let mean = total / n as f64;
+        if (prev - mean).abs() < 1e-7 * prev.max(1e-12) {
+            break;
+        }
+        prev = mean;
+    }
+    let (a, total) = assign(points, &centroids);
+    KmeansResult {
+        centroids,
+        assignments: a,
+        distortion: total / n as f64,
+        iterations: iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_data(seed: u64, per: usize) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let centers = [[0.0f32, 0.0], [10.0, 10.0], [-10.0, 5.0], [8.0, -9.0]];
+        let mut rows = Vec::new();
+        for c in &centers {
+            for _ in 0..per {
+                rows.push(vec![
+                    c[0] + 0.3 * rng.gauss_f32(),
+                    c[1] + 0.3 * rng.gauss_f32(),
+                ]);
+            }
+        }
+        DenseMatrix::from_rows(&rows)
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let pts = blob_data(1, 50);
+        let r = kmeans(&pts, 4, 50, 7);
+        assert!(r.distortion < 0.5, "distortion={}", r.distortion);
+        // each blob maps to a single cluster
+        for b in 0..4 {
+            let a0 = r.assignments[b * 50];
+            assert!(
+                r.assignments[b * 50..(b + 1) * 50]
+                    .iter()
+                    .all(|&a| a == a0),
+                "blob {b} split"
+            );
+        }
+    }
+
+    #[test]
+    fn distortion_decreases_with_more_centroids() {
+        let pts = blob_data(2, 40);
+        let d2 = kmeans(&pts, 2, 30, 3).distortion;
+        let d8 = kmeans(&pts, 8, 30, 3).distortion;
+        assert!(d8 < d2);
+    }
+
+    #[test]
+    fn l_clamped_to_n() {
+        let pts = blob_data(3, 1); // 4 points
+        let r = kmeans(&pts, 16, 10, 1);
+        assert_eq!(r.centroids.n_rows(), 4);
+        assert!(r.distortion < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pts = blob_data(4, 30);
+        let a = kmeans(&pts, 4, 20, 5);
+        let b = kmeans(&pts, 4, 20, 5);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn assignment_is_nearest() {
+        let pts = blob_data(5, 20);
+        let r = kmeans(&pts, 4, 20, 9);
+        for i in 0..pts.n_rows() {
+            let d_assigned = dist_sq(
+                pts.row(i),
+                r.centroids.row(r.assignments[i] as usize),
+            );
+            for c in 0..4 {
+                assert!(
+                    d_assigned <= dist_sq(pts.row(i), r.centroids.row(c))
+                        + 1e-5
+                );
+            }
+        }
+    }
+}

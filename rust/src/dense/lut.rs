@@ -1,0 +1,220 @@
+//! Per-query ADC lookup tables (§4.1.1–4.1.2).
+//!
+//! * [`QueryLut`]: f32 tables T(q, k)[c] = qᴰ⁽ᵏ⁾ · U⁽ᵏ⁾_c — exact ADC.
+//! * [`QuantizedLut`]: the LUT16 u8 tables. The paper's trick: bias the
+//!   quantized lookup values from [-128, 127] to [0, 255] so accumulation
+//!   is unsigned, then subtract the net bias after the scan. The scan
+//!   accumulates u8 entries into u16 lanes; the final inner product is
+//!   `(acc_sum - K*128) * scale + q·bias_correction` where the fixed-point
+//!   scale is chosen from the table's dynamic range.
+
+use crate::dense::pq::PqCodebooks;
+
+/// Exact f32 lookup tables for one query.
+#[derive(Clone, Debug)]
+pub struct QueryLut {
+    /// Flattened [K][l].
+    pub table: Vec<f32>,
+    pub k: usize,
+    pub l: usize,
+}
+
+impl QueryLut {
+    pub fn build(codebooks: &PqCodebooks, q: &[f32]) -> Self {
+        let (k, l, sub) = (codebooks.k, codebooks.l, codebooks.sub);
+        let mut table = vec![0.0f32; k * l];
+        for ks in 0..k {
+            let lo = ks * sub;
+            for c in 0..l {
+                let cw = codebooks.codeword(ks, c);
+                let mut acc = 0.0f32;
+                for j in 0..sub {
+                    let qv = q.get(lo + j).copied().unwrap_or(0.0);
+                    acc += qv * cw[j];
+                }
+                table[ks * l + c] = acc;
+            }
+        }
+        QueryLut { table, k, l }
+    }
+
+    #[inline]
+    pub fn get(&self, k: usize, code: usize) -> f32 {
+        self.table[k * self.l + code]
+    }
+
+    /// Exact ADC score of an unpacked code row.
+    pub fn score_codes(&self, codes: &[u8]) -> f32 {
+        codes
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| self.get(k, c as usize))
+            .sum()
+    }
+}
+
+/// u8-quantized LUT16 tables with the unsigned-bias layout the AVX2 scan
+/// consumes (§4.1.2).
+#[derive(Clone, Debug)]
+pub struct QuantizedLut {
+    /// Flattened [K][16], biased-u8 entries.
+    pub table: Vec<u8>,
+    pub k: usize,
+    /// Dequantization: ip ≈ (Σ_k entry_k - 128·K) · scale + offset_sum.
+    pub scale: f32,
+    /// Σ_k offset_k where offset_k centers subspace k's table.
+    pub offset_sum: f32,
+}
+
+impl QuantizedLut {
+    /// Quantize the f32 table: per-subspace center offset (improves the
+    /// 8-bit budget when tables have different means), one global scale
+    /// from the max residual magnitude, entries biased by +128.
+    pub fn build(lut: &QueryLut) -> Self {
+        assert_eq!(lut.l, 16, "LUT16 requires l = 16");
+        let (k, l) = (lut.k, lut.l);
+        // per-subspace offsets = table mean
+        let mut offsets = vec![0.0f32; k];
+        for ks in 0..k {
+            let row = &lut.table[ks * l..(ks + 1) * l];
+            offsets[ks] = row.iter().sum::<f32>() / l as f32;
+        }
+        // global scale from max |entry - offset|
+        let mut max_abs = 0.0f32;
+        for ks in 0..k {
+            for c in 0..l {
+                let r = lut.table[ks * l + c] - offsets[ks];
+                max_abs = max_abs.max(r.abs());
+            }
+        }
+        let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+        let mut table = vec![0u8; k * l];
+        for ks in 0..k {
+            for c in 0..l {
+                let r = lut.table[ks * l + c] - offsets[ks];
+                let q = (r / scale).round().clamp(-128.0, 127.0) as i32;
+                table[ks * l + c] = (q + 128) as u8;
+            }
+        }
+        QuantizedLut {
+            table,
+            k,
+            scale,
+            offset_sum: offsets.iter().sum(),
+        }
+    }
+
+    /// Dequantize an accumulated sum of biased-u8 entries over all K
+    /// subspaces back to the approximate inner product.
+    #[inline]
+    pub fn dequantize(&self, acc: u32) -> f32 {
+        (acc as f32 - 128.0 * self.k as f32) * self.scale + self.offset_sum
+    }
+
+    /// Worst-case absolute quantization error of the dequantized score
+    /// (half-step per subspace).
+    pub fn max_error(&self) -> f32 {
+        0.5 * self.scale * self.k as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::dense::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, k: usize, sub: usize) -> (PqCodebooks, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let dim = k * sub;
+        let rows: Vec<Vec<f32>> = (0..200)
+            .map(|_| (0..dim).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let data = DenseMatrix::from_rows(&rows);
+        let cb = PqCodebooks::train(&data, k, 16, 10, seed);
+        let q: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+        (cb, q)
+    }
+
+    #[test]
+    fn lut_entries_are_subspace_dots() {
+        let (cb, q) = setup(1, 4, 3);
+        let lut = QueryLut::build(&cb, &q);
+        for ks in 0..4 {
+            for c in 0..16 {
+                let cw = cb.codeword(ks, c);
+                let manual: f32 = (0..3)
+                    .map(|j| q[ks * 3 + j] * cw[j])
+                    .sum();
+                assert!((lut.get(ks, c) - manual).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn score_codes_sums_entries() {
+        let (cb, q) = setup(2, 5, 2);
+        let lut = QueryLut::build(&cb, &q);
+        let codes = vec![3u8, 15, 0, 7, 9];
+        let manual: f32 = codes
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| lut.get(k, c as usize))
+            .sum();
+        assert_eq!(lut.score_codes(&codes), manual);
+    }
+
+    #[test]
+    fn quantized_lut_roundtrip_accuracy() {
+        let (cb, q) = setup(3, 50, 2);
+        let lut = QueryLut::build(&cb, &q);
+        let qlut = QuantizedLut::build(&lut);
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let codes: Vec<u8> =
+                (0..50).map(|_| rng.below(16) as u8).collect();
+            let exact = lut.score_codes(&codes);
+            let acc: u32 = codes
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| qlut.table[k * 16 + c as usize] as u32)
+                .sum();
+            let approx = qlut.dequantize(acc);
+            assert!(
+                (exact - approx).abs() <= qlut.max_error() + 1e-4,
+                "exact {exact} approx {approx} bound {}",
+                qlut.max_error()
+            );
+        }
+    }
+
+    #[test]
+    fn bias_makes_entries_unsigned_full_range() {
+        let (cb, q) = setup(4, 8, 2);
+        let lut = QueryLut::build(&cb, &q);
+        let qlut = QuantizedLut::build(&lut);
+        // all entries are valid u8 by construction; check they span both
+        // sides of the 128 bias (i.e. signed values existed).
+        assert!(qlut.table.iter().any(|&b| b < 128));
+        assert!(qlut.table.iter().any(|&b| b >= 128));
+    }
+
+    #[test]
+    fn query_shorter_than_padded_dim_is_zero_extended() {
+        let (cb, mut q) = setup(5, 4, 2);
+        q.truncate(7); // padded dim 8, true dim 7
+        let lut = QueryLut::build(&cb, &q);
+        assert_eq!(lut.table.len(), 4 * 16);
+        assert!(lut.table.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn constant_table_scale_safe() {
+        // zero query -> all-zero tables; dequantize must not NaN.
+        let (cb, _) = setup(6, 4, 2);
+        let lut = QueryLut::build(&cb, &vec![0.0; 8]);
+        let qlut = QuantizedLut::build(&lut);
+        let acc: u32 = (0..4).map(|k| qlut.table[k * 16] as u32).sum();
+        assert!((qlut.dequantize(acc) - 0.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense-component machinery (paper §2.3, §4.1): k-means / PQ training,
+//! packed 4-bit codes, per-query lookup tables, the LUT16 AVX2 in-register
+//! ADC scan (the paper's §4.1.2 contribution), the LUT256 in-memory
+//! baseline, scalar quantization for the residual index, and whitening.
+
+pub mod adc_lut16;
+pub mod adc_scalar;
+pub mod brute_force;
+pub mod kmeans;
+pub mod lut;
+pub mod pq;
+pub mod whitening;
+
+pub use lut::{QuantizedLut, QueryLut};
+pub use pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};

@@ -1,0 +1,411 @@
+//! Product quantization of the dense component (§2.3, §4.1, §6.1.1).
+//!
+//! * `PqCodebooks`: K subspace codebooks (k-means trained), l = 16
+//!   codewords each — the paper's 4-bits-per-2-dims configuration.
+//! * `PqIndex`: the quantized dataset — packed 4-bit codes, two per byte,
+//!   laid out row-major so the LUT16 scan streams them sequentially.
+//! * `ScalarQuantizedResiduals`: the §6.1.1 residual index — K_V = dᴰ
+//!   subspaces of 1 dim with l = 256, i.e. per-dimension u8 scalar
+//!   quantization at 1/4 the original size.
+
+use crate::dense::kmeans::kmeans;
+use crate::types::dense::{DenseMatrix, dot};
+use crate::util::rng::Rng;
+
+/// K codebooks of l codewords for contiguous subspaces of width `sub`.
+#[derive(Clone, Debug)]
+pub struct PqCodebooks {
+    /// Flattened [K][l][sub].
+    pub codewords: Vec<f32>,
+    pub k: usize,
+    pub l: usize,
+    pub sub: usize,
+}
+
+impl PqCodebooks {
+    /// Paper default: K = dᴰ/2 subspaces (sub = 2), l = 16.
+    pub fn paper_default_k(dense_dim: usize) -> usize {
+        dense_dim.div_ceil(2)
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.k * self.sub
+    }
+
+    #[inline]
+    pub fn codeword(&self, k: usize, code: usize) -> &[f32] {
+        let base = (k * self.l + code) * self.sub;
+        &self.codewords[base..base + self.sub]
+    }
+
+    /// Train with k-means per subspace on (a sample of) the data. Data
+    /// rows shorter than k*sub are implicitly zero-padded (odd dᴰ, e.g.
+    /// QuerySim's 203).
+    pub fn train(
+        data: &DenseMatrix,
+        k: usize,
+        l: usize,
+        max_iters: usize,
+        seed: u64,
+    ) -> Self {
+        let n = data.n_rows();
+        assert!(n > 0, "cannot train PQ on empty data");
+        let sub = data.dim.div_ceil(k);
+        let padded = k * sub;
+        // Sample up to 64k training points for speed.
+        let sample_n = n.min(65_536);
+        let mut rng = Rng::new(seed ^ 0x9A5E_u64);
+        let sample: Vec<usize> = if sample_n == n {
+            (0..n).collect()
+        } else {
+            rng.sample_indices(n, sample_n)
+        };
+        let mut codewords = vec![0.0f32; k * l * sub];
+        for ks in 0..k {
+            let lo = ks * sub;
+            let mut pts = DenseMatrix::zeros(sample.len(), sub);
+            for (si, &i) in sample.iter().enumerate() {
+                let row = data.row(i);
+                let dst = pts.row_mut(si);
+                for j in 0..sub {
+                    let col = lo + j;
+                    dst[j] = if col < data.dim { row[col] } else { 0.0 };
+                }
+            }
+            let result = kmeans(&pts, l, max_iters, seed ^ (ks as u64));
+            let trained_l = result.centroids.n_rows();
+            for code in 0..l {
+                let src = result.centroids.row(code.min(trained_l - 1));
+                let base = (ks * l + code) * sub;
+                codewords[base..base + sub].copy_from_slice(src);
+            }
+            let _ = padded;
+        }
+        PqCodebooks { codewords, k, l, sub }
+    }
+
+    /// φ_PQ: encode one vector to K codes (Eq. 2).
+    pub fn encode_vector(&self, x: &[f32]) -> Vec<u8> {
+        let mut codes = vec![0u8; self.k];
+        for ks in 0..self.k {
+            let lo = ks * self.sub;
+            let mut best = f32::INFINITY;
+            let mut best_c = 0u8;
+            for c in 0..self.l {
+                let cw = self.codeword(ks, c);
+                let mut d = 0.0f32;
+                for j in 0..self.sub {
+                    let xv = x.get(lo + j).copied().unwrap_or(0.0);
+                    let diff = xv - cw[j];
+                    d += diff * diff;
+                }
+                if d < best {
+                    best = d;
+                    best_c = c as u8;
+                }
+            }
+            codes[ks] = best_c;
+        }
+        codes
+    }
+
+    /// Reconstruct φ_PQ(x) from codes (truncated to the true dim).
+    pub fn decode(&self, codes: &[u8], out_dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; out_dim];
+        for ks in 0..self.k {
+            let cw = self.codeword(ks, codes[ks] as usize);
+            let lo = ks * self.sub;
+            for j in 0..self.sub {
+                if lo + j < out_dim {
+                    out[lo + j] = cw[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Quantized dataset: packed 4-bit codes (l must be 16) or byte codes.
+#[derive(Clone, Debug)]
+pub struct PqIndex {
+    pub codebooks: PqCodebooks,
+    /// Packed codes: ceil(K/2) bytes per row when l=16 (low nibble =
+    /// even subspace), K bytes per row otherwise.
+    pub codes: Vec<u8>,
+    pub row_bytes: usize,
+    pub n: usize,
+    /// True (unpadded) dense dimensionality.
+    pub dim: usize,
+}
+
+impl PqIndex {
+    pub fn build(data: &DenseMatrix, codebooks: PqCodebooks) -> Self {
+        let n = data.n_rows();
+        let k = codebooks.k;
+        let packed = codebooks.l <= 16;
+        let row_bytes = if packed { k.div_ceil(2) } else { k };
+        let mut codes = vec![0u8; n * row_bytes];
+        for i in 0..n {
+            let c = codebooks.encode_vector(data.row(i));
+            let dst = &mut codes[i * row_bytes..(i + 1) * row_bytes];
+            if packed {
+                for (ks, &code) in c.iter().enumerate() {
+                    if ks % 2 == 0 {
+                        dst[ks / 2] |= code & 0x0F;
+                    } else {
+                        dst[ks / 2] |= (code & 0x0F) << 4;
+                    }
+                }
+            } else {
+                dst.copy_from_slice(&c);
+            }
+        }
+        PqIndex { codebooks, codes, row_bytes, n, dim: data.dim }
+    }
+
+    #[inline]
+    pub fn row_codes_packed(&self, i: usize) -> &[u8] {
+        &self.codes[i * self.row_bytes..(i + 1) * self.row_bytes]
+    }
+
+    /// Unpack row i to one code per subspace.
+    pub fn row_codes(&self, i: usize) -> Vec<u8> {
+        let raw = self.row_codes_packed(i);
+        if self.codebooks.l <= 16 {
+            let mut out = Vec::with_capacity(self.codebooks.k);
+            for ks in 0..self.codebooks.k {
+                let b = raw[ks / 2];
+                out.push(if ks % 2 == 0 { b & 0x0F } else { b >> 4 });
+            }
+            out
+        } else {
+            raw.to_vec()
+        }
+    }
+
+    /// Reconstruction φ_PQ(x_i).
+    pub fn decode_row(&self, i: usize) -> Vec<f32> {
+        self.codebooks.decode(&self.row_codes(i), self.dim)
+    }
+
+    /// Residuals x - φ_PQ(x) for the residual index (§6).
+    pub fn residuals(&self, data: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(data.n_rows(), self.n);
+        let mut out = DenseMatrix::zeros(self.n, self.dim);
+        for i in 0..self.n {
+            let recon = self.decode_row(i);
+            let row = data.row(i);
+            let dst = out.row_mut(i);
+            for j in 0..self.dim {
+                dst[j] = row[j] - recon[j];
+            }
+        }
+        out
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.codes.len() + self.codebooks.codewords.len() * 4
+    }
+}
+
+/// §6.1.1 residual index: per-dimension scalar quantization to u8
+/// ("K_V = dᴰ and l = 256 ... distortion at most 1/256 of the dynamic
+/// range ... exactly 1/4 the size of the original dataset").
+#[derive(Clone, Debug)]
+pub struct ScalarQuantizedResiduals {
+    pub codes: Vec<u8>,
+    pub dim: usize,
+    /// Per-dimension affine dequantization: v = lo + code * step.
+    pub lo: Vec<f32>,
+    pub step: Vec<f32>,
+}
+
+impl ScalarQuantizedResiduals {
+    pub fn build(data: &DenseMatrix) -> Self {
+        let n = data.n_rows();
+        let dim = data.dim;
+        let mut lo = vec![f32::INFINITY; dim];
+        let mut hi = vec![f32::NEG_INFINITY; dim];
+        for i in 0..n {
+            for (j, &v) in data.row(i).iter().enumerate() {
+                lo[j] = lo[j].min(v);
+                hi[j] = hi[j].max(v);
+            }
+        }
+        let step: Vec<f32> = lo
+            .iter()
+            .zip(&hi)
+            .map(|(&l, &h)| {
+                let s = (h - l) / 255.0;
+                if s > 0.0 {
+                    s
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let mut codes = vec![0u8; n * dim];
+        for i in 0..n {
+            let row = data.row(i);
+            let dst = &mut codes[i * dim..(i + 1) * dim];
+            for j in 0..dim {
+                let q = ((row[j] - lo[j]) / step[j]).round();
+                dst[j] = q.clamp(0.0, 255.0) as u8;
+            }
+        }
+        ScalarQuantizedResiduals { codes, dim, lo, step }
+    }
+
+    /// Approximate q · residual_i without materializing the residual.
+    pub fn dot(&self, i: usize, q: &[f32]) -> f32 {
+        debug_assert_eq!(q.len(), self.dim);
+        let row = &self.codes[i * self.dim..(i + 1) * self.dim];
+        let mut acc = 0.0f32;
+        for j in 0..self.dim {
+            acc += q[j] * (self.lo[j] + row[j] as f32 * self.step[j]);
+        }
+        acc
+    }
+
+    pub fn decode_row(&self, i: usize) -> Vec<f32> {
+        (0..self.dim)
+            .map(|j| {
+                self.lo[j]
+                    + self.codes[i * self.dim + j] as f32 * self.step[j]
+            })
+            .collect()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.codes.len() + self.dim * 8
+    }
+}
+
+/// Exact ADC-style score: q · decode(codes) computed via a f32 LUT —
+/// reference implementation for the fast scans (see `adc_scalar`,
+/// `adc_lut16`).
+pub fn exact_adc(index: &PqIndex, q: &[f32], i: usize) -> f32 {
+    dot(&index.decode_row(i), &q[..index.dim])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_data(seed: u64, n: usize, dim: usize) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        DenseMatrix::from_rows(&rows)
+    }
+
+    #[test]
+    fn encode_decode_reduces_error_vs_zero() {
+        let data = random_data(1, 400, 16);
+        let cb = PqCodebooks::train(&data, 8, 16, 15, 42);
+        let idx = PqIndex::build(&data, cb);
+        let mut err = 0.0f64;
+        let mut base = 0.0f64;
+        for i in 0..data.n_rows() {
+            let recon = idx.decode_row(i);
+            let row = data.row(i);
+            for j in 0..16 {
+                err += (row[j] - recon[j]).powi(2) as f64;
+                base += row[j].powi(2) as f64;
+            }
+        }
+        assert!(err < 0.5 * base, "err={err} base={base}");
+    }
+
+    #[test]
+    fn packed_codes_roundtrip() {
+        let data = random_data(2, 50, 10);
+        let cb = PqCodebooks::train(&data, 5, 16, 10, 1);
+        let idx = PqIndex::build(&data, cb.clone());
+        assert_eq!(idx.row_bytes, 3); // ceil(5/2)
+        for i in 0..10 {
+            let codes = idx.row_codes(i);
+            let direct = cb.encode_vector(data.row(i));
+            assert_eq!(codes, direct);
+        }
+    }
+
+    #[test]
+    fn odd_dim_zero_padded() {
+        let data = random_data(3, 60, 7); // sub=2 -> padded to 8
+        let cb = PqCodebooks::train(&data, 4, 16, 10, 2);
+        assert_eq!(cb.sub, 2);
+        let idx = PqIndex::build(&data, cb);
+        let recon = idx.decode_row(0);
+        assert_eq!(recon.len(), 7);
+    }
+
+    #[test]
+    fn adc_equals_q_dot_decode() {
+        let data = random_data(4, 80, 12);
+        let cb = PqCodebooks::train(&data, 6, 16, 10, 3);
+        let idx = PqIndex::build(&data, cb);
+        let q: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) * 0.3).collect();
+        for i in 0..10 {
+            let adc = exact_adc(&idx, &q, i);
+            let direct = dot(&q, &idx.decode_row(i));
+            assert!((adc - direct).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn residuals_reconstruct_exactly() {
+        let data = random_data(5, 40, 8);
+        let cb = PqCodebooks::train(&data, 4, 16, 10, 4);
+        let idx = PqIndex::build(&data, cb);
+        let res = idx.residuals(&data);
+        for i in 0..data.n_rows() {
+            let recon = idx.decode_row(i);
+            for j in 0..8 {
+                let back = recon[j] + res.row(i)[j];
+                assert!((back - data.row(i)[j]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_quantization_error_bounded_by_step() {
+        let data = random_data(6, 100, 5);
+        let sq = ScalarQuantizedResiduals::build(&data);
+        for i in 0..data.n_rows() {
+            let recon = sq.decode_row(i);
+            for j in 0..5 {
+                let err = (recon[j] - data.row(i)[j]).abs();
+                assert!(
+                    err <= sq.step[j] * 0.5 + 1e-5,
+                    "err {err} > half-step {}",
+                    sq.step[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_dot_matches_decode_dot() {
+        let data = random_data(7, 30, 6);
+        let sq = ScalarQuantizedResiduals::build(&data);
+        let q: Vec<f32> = (0..6).map(|i| 0.5 - i as f32 * 0.2).collect();
+        for i in 0..30 {
+            let d1 = sq.dot(i, &q);
+            let d2 = dot(&q, &sq.decode_row(i));
+            assert!((d1 - d2).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn constant_dimension_handled() {
+        let rows: Vec<Vec<f32>> =
+            (0..20).map(|i| vec![3.0, i as f32]).collect();
+        let data = DenseMatrix::from_rows(&rows);
+        let sq = ScalarQuantizedResiduals::build(&data);
+        let recon = sq.decode_row(5);
+        assert!((recon[0] - 3.0).abs() < 1e-6);
+    }
+}

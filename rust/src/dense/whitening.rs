@@ -1,0 +1,179 @@
+//! Whitening P = Cov^{-1/2}(Xᴰ) (§4.1.3): multiplying the dense component
+//! by P makes its covariance identity, so Lloyd's k-means approaches the
+//! parallel-Gaussian rate-distortion bound (Prop. 1). Queries are
+//! transformed by (P⁻¹)ᵀ so inner products are preserved exactly:
+//! (Px)·((P⁻¹)ᵀ q) = x·q.
+//!
+//! Cov^{±1/2} come from a Jacobi eigendecomposition (shared with
+//! `data::svd`), with eigenvalue flooring for rank-deficient data.
+
+use crate::data::svd::jacobi_eigen;
+use crate::types::dense::DenseMatrix;
+
+/// Whitening transform and its inverse-transpose.
+#[derive(Clone, Debug)]
+pub struct Whitening {
+    /// dim × dim, row-major: applied to datapoints.
+    pub p: Vec<f64>,
+    /// dim × dim, row-major: applied to queries ((P⁻¹)ᵀ).
+    pub p_inv_t: Vec<f64>,
+    pub dim: usize,
+}
+
+impl Whitening {
+    /// Estimate covariance (after mean-centering is *not* applied — inner
+    /// products must be preserved, so we whiten around the origin) and
+    /// build P = C^{-1/2}, (P⁻¹)ᵀ = C^{1/2} (C symmetric ⇒ both symmetric).
+    pub fn fit(data: &DenseMatrix) -> Self {
+        let n = data.n_rows();
+        let d = data.dim;
+        assert!(n > 0 && d > 0);
+        let mut cov = vec![0.0f64; d * d];
+        for i in 0..n {
+            let r = data.row(i);
+            for a in 0..d {
+                let ra = r[a] as f64;
+                for b in a..d {
+                    cov[a * d + b] += ra * r[b] as f64;
+                }
+            }
+        }
+        for a in 0..d {
+            for b in 0..a {
+                cov[a * d + b] = cov[b * d + a];
+            }
+        }
+        for v in &mut cov {
+            *v /= n as f64;
+        }
+        let (evals, evecs) = jacobi_eigen(&mut cov, d);
+        // Floor tiny/negative eigenvalues at a fraction of the largest.
+        let floor = evals[0].max(1e-12) * 1e-9;
+        let lam: Vec<f64> = evals.iter().map(|&e| e.max(floor)).collect();
+        // P = V Λ^{-1/2} Vᵀ ; P^{-T} = P^{-1} = V Λ^{1/2} Vᵀ (symmetric).
+        let mut p = vec![0.0f64; d * d];
+        let mut p_inv_t = vec![0.0f64; d * d];
+        for a in 0..d {
+            for b in 0..d {
+                let mut s_m = 0.0;
+                let mut s_p = 0.0;
+                for k in 0..d {
+                    let v = evecs[a * d + k] * evecs[b * d + k];
+                    s_m += v / lam[k].sqrt();
+                    s_p += v * lam[k].sqrt();
+                }
+                p[a * d + b] = s_m;
+                p_inv_t[a * d + b] = s_p;
+            }
+        }
+        Whitening { p, p_inv_t, dim: d }
+    }
+
+    fn apply(m: &[f64], d: usize, x: &[f32]) -> Vec<f32> {
+        (0..d)
+            .map(|a| {
+                let mut acc = 0.0f64;
+                for b in 0..d {
+                    acc += m[a * d + b] * x[b] as f64;
+                }
+                acc as f32
+            })
+            .collect()
+    }
+
+    /// Transform a datapoint: x ↦ P x.
+    pub fn transform_point(&self, x: &[f32]) -> Vec<f32> {
+        Self::apply(&self.p, self.dim, x)
+    }
+
+    /// Transform a query: q ↦ (P⁻¹)ᵀ q.
+    pub fn transform_query(&self, q: &[f32]) -> Vec<f32> {
+        Self::apply(&self.p_inv_t, self.dim, q)
+    }
+
+    /// Whiten a whole matrix of datapoints.
+    pub fn transform_matrix(&self, data: &DenseMatrix) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(data.n_rows(), self.dim);
+        for i in 0..data.n_rows() {
+            let t = self.transform_point(data.row(i));
+            out.row_mut(i).copy_from_slice(&t);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::dense::dot;
+    use crate::util::rng::Rng;
+
+    fn correlated_data(seed: u64, n: usize) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let a = rng.gauss_f32();
+                let b = rng.gauss_f32();
+                let c = rng.gauss_f32();
+                // strongly correlated, anisotropic, full-rank 3-d data
+                vec![3.0 * a + 0.1 * c, a + 0.2 * b, 0.5 * b + 0.1 * c]
+            })
+            .collect();
+        DenseMatrix::from_rows(&rows)
+    }
+
+    #[test]
+    fn inner_products_preserved() {
+        let data = correlated_data(1, 500);
+        let w = Whitening::fit(&data);
+        let mut rng = Rng::new(2);
+        for i in 0..20 {
+            let q: Vec<f32> = (0..3).map(|_| rng.gauss_f32()).collect();
+            let x = data.row(i);
+            let orig = dot(x, &q);
+            let white = dot(&w.transform_point(x), &w.transform_query(&q));
+            assert!(
+                (orig - white).abs() < 1e-3 * (1.0 + orig.abs()),
+                "{orig} vs {white}"
+            );
+        }
+    }
+
+    #[test]
+    fn whitened_covariance_is_identity() {
+        let data = correlated_data(3, 2000);
+        let w = Whitening::fit(&data);
+        let t = w.transform_matrix(&data);
+        let n = t.n_rows() as f64;
+        for a in 0..3 {
+            for b in a..3 {
+                let mut c = 0.0f64;
+                for i in 0..t.n_rows() {
+                    c += t.row(i)[a] as f64 * t.row(i)[b] as f64;
+                }
+                c /= n;
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!(
+                    (c - want).abs() < 0.15,
+                    "cov[{a}][{b}] = {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_data_no_nan() {
+        // dimension 2 is an exact copy of dimension 0: singular covariance
+        let mut rng = Rng::new(4);
+        let rows: Vec<Vec<f32>> = (0..200)
+            .map(|_| {
+                let a = rng.gauss_f32();
+                vec![a, rng.gauss_f32(), a]
+            })
+            .collect();
+        let data = DenseMatrix::from_rows(&rows);
+        let w = Whitening::fit(&data);
+        let t = w.transform_point(data.row(0));
+        assert!(t.iter().all(|v| v.is_finite()));
+    }
+}

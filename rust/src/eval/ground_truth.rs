@@ -1,0 +1,77 @@
+//! Exact top-k oracle: parallel brute-force hybrid inner products.
+
+use crate::hybrid::topk::TopK;
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+use crate::util::threadpool::{default_threads, parallel_map};
+
+/// Exact top-k ids (best first) by q·x over the full dataset.
+pub fn exact_top_k(
+    data: &HybridDataset,
+    q: &HybridQuery,
+    k: usize,
+) -> Vec<u32> {
+    exact_top_k_scored(data, q, k).into_iter().map(|(id, _)| id).collect()
+}
+
+/// Exact top-k with scores.
+pub fn exact_top_k_scored(
+    data: &HybridDataset,
+    q: &HybridQuery,
+    k: usize,
+) -> Vec<(u32, f32)> {
+    let n = data.len();
+    let threads = default_threads();
+    // partition rows across threads, each returning a local TopK
+    let parts = threads.max(1);
+    let per = n.div_ceil(parts);
+    let locals: Vec<Vec<(u32, f32)>> = parallel_map(parts, threads, |p| {
+        let start = p * per;
+        let end = ((p + 1) * per).min(n);
+        let mut t = TopK::new(k);
+        for i in start..end {
+            t.push(i as u32, data.dot(i, q));
+        }
+        t.into_sorted()
+    });
+    crate::hybrid::topk::merge_topk(&locals, k)
+}
+
+/// Ground truth for a batch of queries.
+pub fn ground_truth(
+    data: &HybridDataset,
+    queries: &[HybridQuery],
+    k: usize,
+) -> Vec<Vec<u32>> {
+    queries.iter().map(|q| exact_top_k(data, q, k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+
+    #[test]
+    fn matches_serial_argmax() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(1);
+        let q = cfg.generate_queries(2, 1).remove(0);
+        let top = exact_top_k_scored(&data, &q, 5);
+        // serial check
+        let mut all: Vec<(u32, f32)> = (0..data.len())
+            .map(|i| (i as u32, data.dot(i, &q)))
+            .collect();
+        all.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+        });
+        assert_eq!(top, all[..5].to_vec());
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(3);
+        let q = cfg.generate_queries(4, 1).remove(0);
+        let top = exact_top_k(&data, &q, data.len() + 50);
+        assert_eq!(top.len(), data.len());
+    }
+}

@@ -1,0 +1,5 @@
+//! Evaluation: exact ground truth, recall@h, and the Table 2/3 harness.
+
+pub mod ground_truth;
+pub mod recall;
+pub mod tables;

@@ -1,0 +1,65 @@
+//! Recall@h — the paper's accuracy metric (Tables 2–3 report recall of
+//! the top 20 against exact search).
+
+/// |retrieved ∩ truth[..h]| / h.
+pub fn recall_at(truth: &[u32], retrieved: &[u32], h: usize) -> f64 {
+    let h = h.min(truth.len());
+    if h == 0 {
+        return 1.0;
+    }
+    let truth_set: std::collections::HashSet<u32> =
+        truth[..h].iter().copied().collect();
+    let hit = retrieved
+        .iter()
+        .take(h)
+        .filter(|id| truth_set.contains(id))
+        .count();
+    hit as f64 / h as f64
+}
+
+/// Mean recall@h over a query batch.
+pub fn mean_recall(
+    truths: &[Vec<u32>],
+    retrieved: &[Vec<u32>],
+    h: usize,
+) -> f64 {
+    assert_eq!(truths.len(), retrieved.len());
+    if truths.is_empty() {
+        return 1.0;
+    }
+    truths
+        .iter()
+        .zip(retrieved)
+        .map(|(t, r)| recall_at(t, r, h))
+        .sum::<f64>()
+        / truths.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_and_empty() {
+        assert_eq!(recall_at(&[1, 2, 3], &[3, 2, 1], 3), 1.0);
+        assert_eq!(recall_at(&[1, 2, 3], &[], 3), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap() {
+        assert_eq!(recall_at(&[1, 2, 3, 4], &[1, 9, 3, 8], 4), 0.5);
+    }
+
+    #[test]
+    fn only_first_h_count() {
+        // retrieved has truth items beyond position h: not counted
+        assert_eq!(recall_at(&[1, 2], &[9, 8, 1, 2], 2), 0.0);
+    }
+
+    #[test]
+    fn mean_over_batch() {
+        let t = vec![vec![1, 2], vec![3, 4]];
+        let r = vec![vec![1, 2], vec![9, 9]];
+        assert_eq!(mean_recall(&t, &r, 2), 0.5);
+    }
+}

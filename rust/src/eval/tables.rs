@@ -1,0 +1,275 @@
+//! The Table 2/3 harness: run every §7.2 algorithm on a hybrid dataset,
+//! measure per-query latency and recall@h against exact ground truth, and
+//! emit the paper-shaped table.
+
+use std::time::Instant;
+
+use crate::baselines::dense_bf::{DenseBruteForce, DEFAULT_BUDGET};
+use crate::baselines::dense_pq_reorder::DensePqReorder;
+use crate::baselines::hamming::Hamming512;
+use crate::baselines::inverted_exact::SparseInvertedExact;
+use crate::baselines::sparse_bf::SparseBruteForce;
+use crate::baselines::sparse_only::SparseOnly;
+use crate::baselines::Baseline;
+use crate::benchkit::Table;
+use crate::eval::ground_truth::ground_truth;
+use crate::eval::recall::recall_at;
+use crate::hybrid::config::{IndexConfig, SearchParams};
+use crate::hybrid::index::HybridIndex;
+use crate::hybrid::search::{search_with, SearchScratch};
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+
+/// One table row.
+#[derive(Clone, Debug)]
+pub struct AlgoResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub recall: f64,
+    pub build_s: f64,
+    pub memory_mb: f64,
+    pub oom: bool,
+}
+
+/// Which algorithms to include (dense BF is budget-guarded anyway, but
+/// exact baselines get slow at scale; benches toggle subsets).
+#[derive(Clone, Copy, Debug)]
+pub struct TableSpec {
+    pub include_dense_bf: bool,
+    pub include_sparse_bf: bool,
+    pub include_inverted_exact: bool,
+    pub include_hamming: bool,
+    pub dense_bf_budget: usize,
+}
+
+impl Default for TableSpec {
+    fn default() -> Self {
+        TableSpec {
+            include_dense_bf: true,
+            include_sparse_bf: true,
+            include_inverted_exact: true,
+            include_hamming: true,
+            dense_bf_budget: DEFAULT_BUDGET,
+        }
+    }
+}
+
+fn run_baseline(
+    b: &dyn Baseline,
+    queries: &[HybridQuery],
+    truth: &[Vec<u32>],
+    h: usize,
+    build_s: f64,
+    oom: bool,
+) -> AlgoResult {
+    if oom {
+        return AlgoResult {
+            name: b.name().to_string(),
+            mean_ms: f64::NAN,
+            recall: f64::NAN,
+            build_s,
+            memory_mb: b.memory_bytes() as f64 / (1 << 20) as f64,
+            oom: true,
+        };
+    }
+    let t0 = Instant::now();
+    let mut total_recall = 0.0;
+    for (q, t) in queries.iter().zip(truth) {
+        let hits = b.search(q, h);
+        let ids: Vec<u32> = hits.into_iter().map(|(i, _)| i).collect();
+        total_recall += recall_at(t, &ids, h);
+    }
+    AlgoResult {
+        name: b.name().to_string(),
+        mean_ms: t0.elapsed().as_secs_f64() * 1e3 / queries.len() as f64,
+        recall: total_recall / queries.len() as f64,
+        build_s,
+        memory_mb: b.memory_bytes() as f64 / (1 << 20) as f64,
+        oom: false,
+    }
+}
+
+/// Run the full algorithm suite; returns rows in the paper's order.
+pub fn run_table(
+    data: &HybridDataset,
+    queries: &[HybridQuery],
+    h: usize,
+    spec: &TableSpec,
+    hybrid_config: &IndexConfig,
+    hybrid_params: &SearchParams,
+) -> Vec<AlgoResult> {
+    let truth = ground_truth(data, queries, h);
+    let mut rows = Vec::new();
+
+    if spec.include_dense_bf {
+        let t = Instant::now();
+        let b = DenseBruteForce::build(data, spec.dense_bf_budget);
+        let oom = b.is_oom();
+        rows.push(run_baseline(
+            &b,
+            queries,
+            &truth,
+            h,
+            t.elapsed().as_secs_f64(),
+            oom,
+        ));
+    }
+    if spec.include_sparse_bf {
+        let t = Instant::now();
+        let b = SparseBruteForce::build(data);
+        rows.push(run_baseline(
+            &b,
+            queries,
+            &truth,
+            h,
+            t.elapsed().as_secs_f64(),
+            false,
+        ));
+    }
+    if spec.include_inverted_exact {
+        let t = Instant::now();
+        let b = SparseInvertedExact::build(data);
+        rows.push(run_baseline(
+            &b,
+            queries,
+            &truth,
+            h,
+            t.elapsed().as_secs_f64(),
+            false,
+        ));
+    }
+    if spec.include_hamming {
+        let t = Instant::now();
+        let b = Hamming512::build(data, 0xA11CE);
+        rows.push(run_baseline(
+            &b,
+            queries,
+            &truth,
+            h,
+            t.elapsed().as_secs_f64(),
+            false,
+        ));
+    }
+    {
+        let t = Instant::now();
+        let b = DensePqReorder::build(data, 0xD15E);
+        rows.push(run_baseline(
+            &b,
+            queries,
+            &truth,
+            h,
+            t.elapsed().as_secs_f64(),
+            false,
+        ));
+    }
+    {
+        let t = Instant::now();
+        let b = SparseOnly::no_reorder(data);
+        rows.push(run_baseline(
+            &b,
+            queries,
+            &truth,
+            h,
+            t.elapsed().as_secs_f64(),
+            false,
+        ));
+    }
+    {
+        let t = Instant::now();
+        let b = SparseOnly::reorder_20k(data);
+        rows.push(run_baseline(
+            &b,
+            queries,
+            &truth,
+            h,
+            t.elapsed().as_secs_f64(),
+            false,
+        ));
+    }
+    // Hybrid (ours)
+    {
+        let t = Instant::now();
+        let index = HybridIndex::build(data, hybrid_config);
+        let build_s = t.elapsed().as_secs_f64();
+        let mut scratch = SearchScratch::new(&index);
+        let t0 = Instant::now();
+        let mut total_recall = 0.0;
+        for (q, tr) in queries.iter().zip(&truth) {
+            let (hits, _) = search_with(&index, q, hybrid_params, &mut scratch);
+            let ids: Vec<u32> = hits.into_iter().map(|x| x.id).collect();
+            total_recall += recall_at(tr, &ids, h);
+        }
+        rows.push(AlgoResult {
+            name: "Hybrid (ours)".to_string(),
+            mean_ms: t0.elapsed().as_secs_f64() * 1e3
+                / queries.len() as f64,
+            recall: total_recall / queries.len() as f64,
+            build_s,
+            memory_mb: index.memory_bytes() as f64 / (1 << 20) as f64,
+            oom: false,
+        });
+    }
+    rows
+}
+
+/// Render results in the paper's Table 2/3 shape.
+pub fn render(title: &str, rows: &[AlgoResult]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["Algorithm", "Time (ms)", "Recall@h", "Build (s)", "Index (MB)"],
+    );
+    for r in rows {
+        if r.oom {
+            t.row(&[
+                r.name.clone(),
+                "OOM".into(),
+                "OOM".into(),
+                format!("{:.1}", r.build_s),
+                format!("{:.1}", r.memory_mb),
+            ]);
+        } else {
+            t.row(&[
+                r.name.clone(),
+                format!("{:.2}", r.mean_ms),
+                format!("{:.0}%", r.recall * 100.0),
+                format!("{:.1}", r.build_s),
+                format!("{:.1}", r.memory_mb),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+
+    #[test]
+    fn full_suite_runs_on_tiny_data() {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 250;
+        let data = cfg.generate(1);
+        let queries = cfg.related_queries(&data, 2, 4);
+        let rows = run_table(
+            &data,
+            &queries,
+            10,
+            &TableSpec::default(),
+            &IndexConfig::default(),
+            &SearchParams::new(10).with_alpha(20.0),
+        );
+        assert_eq!(rows.len(), 8);
+        // exact methods have 100% recall
+        for r in &rows {
+            if r.name.contains("Brute Force") && !r.oom {
+                assert!(r.recall > 0.99, "{}: {}", r.name, r.recall);
+            }
+        }
+        // hybrid is last and decent
+        let hybrid = rows.last().unwrap();
+        assert_eq!(hybrid.name, "Hybrid (ours)");
+        assert!(hybrid.recall > 0.7, "hybrid recall {}", hybrid.recall);
+        let rendered = render("t", &rows).render();
+        assert!(rendered.contains("Hybrid (ours)"));
+    }
+}

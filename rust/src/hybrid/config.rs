@@ -1,0 +1,123 @@
+//! Index + search configuration, defaulting to the paper's §6.1 parameter
+//! selection.
+
+/// How the hybrid index is built.
+#[derive(Clone, Debug)]
+pub struct IndexConfig {
+    /// Sparse data-index pruning: keep at most this many entries per
+    /// dimension (sets η_j per §6.1.2, "only top 100s of nonzero values
+    /// in dimension j are kept"). 0 = keep everything.
+    pub sparse_keep_top: usize,
+    /// Residual pruning floor ε as a *fraction of η_j* (Eq. 7); entries
+    /// with |v| < ε_j are dropped from the residual index entirely.
+    /// 0.0 keeps the full residual (exact reconstruction).
+    pub epsilon_frac: f32,
+    /// PQ subspace count; `None` = paper default K_U = dᴰ/2 (§6.1.1).
+    pub pq_subspaces: Option<usize>,
+    /// Codewords per subspace (16 ⇒ LUT16 path; fixed in this impl).
+    pub pq_codebook_size: usize,
+    /// k-means iterations for PQ training.
+    pub pq_iters: usize,
+    /// Build the dense residual index (scalar-quantized, §6.1.1).
+    pub dense_residual: bool,
+    /// Apply cache sorting (Algorithm 1) to the datapoint order.
+    pub cache_sort: bool,
+    /// Whiten the dense component before PQ (§4.1.3).
+    pub whitening: bool,
+    /// Training seed.
+    pub seed: u64,
+}
+
+impl Default for IndexConfig {
+    fn default() -> Self {
+        IndexConfig {
+            sparse_keep_top: 256,
+            epsilon_frac: 0.0,
+            pq_subspaces: None,
+            pq_codebook_size: 16,
+            pq_iters: 12,
+            dense_residual: true,
+            cache_sort: true,
+            whitening: false,
+            seed: 0x5EA5C4,
+        }
+    }
+}
+
+impl IndexConfig {
+    /// Ablation helper: everything exact/off except the named feature.
+    pub fn with_cache_sort(mut self, on: bool) -> Self {
+        self.cache_sort = on;
+        self
+    }
+
+    pub fn with_keep_top(mut self, keep: usize) -> Self {
+        self.sparse_keep_top = keep;
+        self
+    }
+
+    pub fn with_whitening(mut self, on: bool) -> Self {
+        self.whitening = on;
+        self
+    }
+}
+
+/// How a query is executed (§5's overfetch factors).
+#[derive(Clone, Copy, Debug)]
+pub struct SearchParams {
+    /// Final result count h.
+    pub h: usize,
+    /// Stage-1 overfetch: keep αh after the approximate index scan.
+    pub alpha: f32,
+    /// Stage-2 retain: keep βh after dense-residual reordering.
+    pub beta: f32,
+}
+
+impl SearchParams {
+    pub fn new(h: usize) -> Self {
+        // §5.1: "α is empirically ≤ 10 to achieve ≥ 90% recall"; β sits
+        // between α and 1.
+        SearchParams { h, alpha: 10.0, beta: 3.0 }
+    }
+
+    pub fn with_alpha(mut self, a: f32) -> Self {
+        self.alpha = a;
+        self
+    }
+
+    pub fn with_beta(mut self, b: f32) -> Self {
+        self.beta = b;
+        self
+    }
+
+    pub fn alpha_h(&self) -> usize {
+        ((self.h as f32 * self.alpha).ceil() as usize).max(self.h)
+    }
+
+    pub fn beta_h(&self) -> usize {
+        ((self.h as f32 * self.beta).ceil() as usize).max(self.h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = IndexConfig::default();
+        assert_eq!(c.pq_codebook_size, 16); // LUT16
+        assert!(c.dense_residual);
+        assert!(c.cache_sort);
+        let s = SearchParams::new(20);
+        assert_eq!(s.alpha_h(), 200);
+        assert_eq!(s.beta_h(), 60);
+    }
+
+    #[test]
+    fn overfetch_never_below_h() {
+        let s = SearchParams::new(20).with_alpha(0.1).with_beta(0.1);
+        assert_eq!(s.alpha_h(), 20);
+        assert_eq!(s.beta_h(), 20);
+    }
+}

@@ -1,0 +1,228 @@
+//! Hybrid index construction (paper §6, "Overall Indexing Algorithm").
+//!
+//! Build steps:
+//!  1. cache-sort the datapoints (Algorithm 1) so accumulator access is
+//!     block-local; keep the permutation to report original ids;
+//!  2. sparse: prune with per-dim η_j (top-`keep_top`) → inverted index on
+//!     the hyper-sparse data index; the residual (η_j > |v| ≥ ε_j) stays
+//!     row-major for per-candidate reordering (Eqs. 6–7);
+//!  3. dense: (optional whitening) → PQ (K_U = dᴰ/2, l = 16) → packed
+//!     LUT16 code layout; residual x − φ_PQ(x) scalar-quantized to u8
+//!     (K_V = dᴰ, l = 256).
+
+use crate::dense::adc_lut16::Lut16Codes;
+use crate::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
+use crate::dense::whitening::Whitening;
+use crate::hybrid::config::IndexConfig;
+use crate::sparse::cache_sort::cache_sort;
+use crate::sparse::inverted_index::InvertedIndex;
+use crate::sparse::pruning::{prune_matrix, PruneThresholds};
+use crate::types::csr::CsrMatrix;
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+
+/// The full §6 index: ready for `search::search`.
+pub struct HybridIndex {
+    /// Permutation applied at build: internal row i = original perm[i].
+    pub perm: Vec<u32>,
+    /// Inverted index over the pruned ("hyper-sparse") data index.
+    pub sparse_index: InvertedIndex,
+    /// Row-major sparse residuals for stage-3 reordering.
+    pub sparse_residual: CsrMatrix,
+    /// LUT16-ready PQ codes (data index for the dense component).
+    pub dense_codes: Lut16Codes,
+    pub codebooks: PqCodebooks,
+    /// Scalar-quantized dense residuals for stage-2 reordering.
+    pub dense_residual: Option<ScalarQuantizedResiduals>,
+    /// Whitening transform (queries must be transformed identically).
+    pub whitening: Option<Whitening>,
+    /// Row-major PQ index kept for the LUT256 baselines + XLA backend.
+    pub pq_index: PqIndex,
+    pub n: usize,
+    pub dense_dim: usize,
+    pub config: IndexConfig,
+}
+
+impl HybridIndex {
+    pub fn build(data: &HybridDataset, config: &IndexConfig) -> Self {
+        let n = data.len();
+        assert!(n > 0, "cannot index an empty dataset");
+
+        // 1. sparse pruning (thresholds are per-dimension, so pruning
+        //    commutes with any row permutation)
+        let eta = PruneThresholds::top_per_dim(
+            &data.sparse,
+            config.sparse_keep_top,
+        );
+        let epsilon = PruneThresholds {
+            eta: eta.eta.iter().map(|&e| e * config.epsilon_frac).collect(),
+        };
+        let pruned = prune_matrix(&data.sparse, &eta, &epsilon);
+
+        // 2. cache sorting — on the *pruned* data index, which is what
+        //    the accumulator actually scans (§6 builds the hyper-sparse
+        //    index first; sorting the raw matrix would optimize for the
+        //    saturated head dimensions that pruning removes).
+        let perm: Vec<u32> = if config.cache_sort {
+            cache_sort(&pruned.kept)
+        } else {
+            (0..n as u32).collect()
+        };
+        let working = data.permute(&perm);
+        let sparse_index =
+            InvertedIndex::build(&pruned.kept.permute_rows(&perm));
+        let pruned = crate::sparse::pruning::PrunedSparse {
+            kept: CsrMatrix::default(), // consumed above
+            residual: pruned.residual.permute_rows(&perm),
+            dropped: pruned.dropped,
+        };
+
+        // 3. dense index + residual
+        let whitening = if config.whitening {
+            Some(Whitening::fit(&working.dense))
+        } else {
+            None
+        };
+        let dense_mat = match &whitening {
+            Some(w) => w.transform_matrix(&working.dense),
+            None => working.dense.clone(),
+        };
+        let k = config
+            .pq_subspaces
+            .unwrap_or_else(|| PqCodebooks::paper_default_k(dense_mat.dim));
+        let codebooks = PqCodebooks::train(
+            &dense_mat,
+            k,
+            config.pq_codebook_size,
+            config.pq_iters,
+            config.seed,
+        );
+        let pq_index = PqIndex::build(&dense_mat, codebooks.clone());
+        let dense_codes = Lut16Codes::from_pq_index(&pq_index);
+        let dense_residual = if config.dense_residual {
+            Some(ScalarQuantizedResiduals::build(
+                &pq_index.residuals(&dense_mat),
+            ))
+        } else {
+            None
+        };
+
+        HybridIndex {
+            perm,
+            sparse_index,
+            sparse_residual: pruned.residual,
+            dense_codes,
+            codebooks,
+            dense_residual,
+            whitening,
+            pq_index,
+            n,
+            dense_dim: dense_mat.dim,
+            config: config.clone(),
+        }
+    }
+
+    /// Convenience search with the §5.1 default overfetch parameters.
+    /// See [`crate::hybrid::search::search`] for the full API.
+    pub fn search(
+        &self,
+        q: &HybridQuery,
+        h: usize,
+    ) -> Vec<crate::hybrid::search::SearchHit> {
+        crate::hybrid::search::search(
+            self,
+            q,
+            &crate::hybrid::config::SearchParams::new(h),
+        )
+    }
+
+    /// Transform a query's dense part to the index's dense space.
+    pub fn query_dense(&self, q: &HybridQuery) -> Vec<f32> {
+        match &self.whitening {
+            Some(w) => w.transform_query(&q.dense),
+            None => q.dense.clone(),
+        }
+    }
+
+    /// Map an internal row id back to the original dataset id.
+    #[inline]
+    pub fn original_id(&self, internal: u32) -> u32 {
+        self.perm[internal as usize]
+    }
+
+    /// Total resident bytes of the two data indices + residuals.
+    pub fn memory_bytes(&self) -> usize {
+        self.sparse_index.memory_bytes()
+            + self.sparse_residual.indices.len() * 8
+            + self.dense_codes.memory_bytes()
+            + self
+                .dense_residual
+                .as_ref()
+                .map(|r| r.memory_bytes())
+                .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+
+    #[test]
+    fn build_shapes_consistent() {
+        let data = QuerySimConfig::tiny().generate(1);
+        let idx = HybridIndex::build(&data, &IndexConfig::default());
+        assert_eq!(idx.n, data.len());
+        assert_eq!(idx.perm.len(), data.len());
+        assert_eq!(idx.dense_codes.n, data.len());
+        assert_eq!(idx.sparse_residual.n_rows(), data.len());
+        // paper default: K = ceil(dD/2)
+        assert_eq!(idx.codebooks.k, data.dense_dim().div_ceil(2));
+    }
+
+    #[test]
+    fn perm_is_identity_without_cache_sort() {
+        let data = QuerySimConfig::tiny().generate(2);
+        let cfg = IndexConfig::default().with_cache_sort(false);
+        let idx = HybridIndex::build(&data, &cfg);
+        assert!(idx.perm.iter().enumerate().all(|(i, &p)| p == i as u32));
+    }
+
+    #[test]
+    fn pruned_plus_residual_preserves_sparse_dot() {
+        let data = QuerySimConfig::tiny().generate(3);
+        let cfg = IndexConfig {
+            epsilon_frac: 0.0,
+            cache_sort: false,
+            sparse_keep_top: 3,
+            ..Default::default()
+        };
+        let idx = HybridIndex::build(&data, &cfg);
+        let q = QuerySimConfig::tiny().generate_queries(4, 1).remove(0);
+        // kept + residual == original sparse dot for every row
+        let mut acc = crate::sparse::inverted_index::Accumulator::new(idx.n);
+        let kept_scores = idx.sparse_index.scores(&q.sparse, &mut acc);
+        let kept: std::collections::HashMap<u32, f32> =
+            kept_scores.into_iter().collect();
+        for i in 0..idx.n {
+            let k = kept.get(&(i as u32)).copied().unwrap_or(0.0);
+            let r = idx.sparse_residual.row_dot(i, &q.sparse);
+            let exact = data.sparse.row_dot(i, &q.sparse);
+            assert!(
+                (k + r - exact).abs() < 1e-4,
+                "row {i}: {k}+{r} != {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn whitened_index_reports_transform() {
+        let data = QuerySimConfig::tiny().generate(5);
+        let cfg = IndexConfig::default().with_whitening(true);
+        let idx = HybridIndex::build(&data, &cfg);
+        assert!(idx.whitening.is_some());
+        let q = QuerySimConfig::tiny().generate_queries(6, 1).remove(0);
+        let tq = idx.query_dense(&q);
+        assert_eq!(tq.len(), data.dense_dim());
+        assert_ne!(tq, q.dense);
+    }
+}

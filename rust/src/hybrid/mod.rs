@@ -1,0 +1,12 @@
+//! The hybrid search engine (paper §5–§6): index construction (pruned
+//! sparse + PQ dense, each with a residual index) and the three-stage
+//! residual-reordering search pipeline.
+
+pub mod config;
+pub mod index;
+pub mod search;
+pub mod topk;
+
+pub use config::{IndexConfig, SearchParams};
+pub use index::HybridIndex;
+pub use search::SearchHit;

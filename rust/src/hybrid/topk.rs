@@ -1,0 +1,179 @@
+//! Top-k selection: bounded min-heaps over (score, id) and k-way merge for
+//! the coordinator's scatter-gather.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry ordered by score ascending (BinaryHeap is a max-heap, so we
+/// invert to evict the smallest of the kept set).
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    score: f32,
+    id: u32,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score && self.id == other.id
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse on score: smallest at the top for eviction. Ties break
+        // on id so results are deterministic.
+        other
+            .score
+            .partial_cmp(&self.score)
+            .unwrap_or(Ordering::Equal)
+            .then(other.id.cmp(&self.id))
+    }
+}
+
+/// Keep the k largest (score, id) pairs seen.
+pub struct TopK {
+    k: usize,
+    heap: BinaryHeap<Entry>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k, heap: BinaryHeap::with_capacity(k + 1) }
+    }
+
+    #[inline]
+    pub fn push(&mut self, id: u32, score: f32) {
+        if score.is_nan() {
+            // NaN never competes (and would wedge the eviction compare).
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(Entry { score, id });
+        } else if let Some(min) = self.heap.peek() {
+            if score > min.score {
+                self.heap.pop();
+                self.heap.push(Entry { score, id });
+            }
+        }
+    }
+
+    /// Current admission threshold (score of the kth item), if full.
+    pub fn threshold(&self) -> Option<f32> {
+        if self.heap.len() == self.k {
+            self.heap.peek().map(|e| e.score)
+        } else {
+            None
+        }
+    }
+
+    /// Extract results, best first.
+    pub fn into_sorted(self) -> Vec<(u32, f32)> {
+        let mut v: Vec<(u32, f32)> = self
+            .heap
+            .into_iter()
+            .map(|e| (e.id, e.score))
+            .collect();
+        v.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Top-k over a full score slice (ids = indices).
+pub fn top_k_from_scores(scores: &[f32], k: usize) -> Vec<(u32, f32)> {
+    let mut t = TopK::new(k);
+    for (i, &s) in scores.iter().enumerate() {
+        t.push(i as u32, s);
+    }
+    t.into_sorted()
+}
+
+/// Merge several sorted-descending hit lists into the global top k
+/// (coordinator scatter-gather).
+pub fn merge_topk(lists: &[Vec<(u32, f32)>], k: usize) -> Vec<(u32, f32)> {
+    let mut t = TopK::new(k);
+    for l in lists {
+        for &(id, s) in l {
+            t.push(id, s);
+        }
+    }
+    t.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_k_largest() {
+        let scores: Vec<f32> = (0..100).map(|i| (i * 37 % 100) as f32).collect();
+        let top = top_k_from_scores(&scores, 5);
+        let mut sorted = scores.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let got: Vec<f32> = top.iter().map(|&(_, s)| s).collect();
+        assert_eq!(got, &sorted[..5]);
+    }
+
+    #[test]
+    fn results_sorted_desc_with_id_ties() {
+        let mut t = TopK::new(3);
+        t.push(5, 1.0);
+        t.push(2, 1.0);
+        t.push(9, 2.0);
+        t.push(1, 0.5);
+        let r = t.into_sorted();
+        assert_eq!(r, vec![(9, 2.0), (2, 1.0), (5, 1.0)]);
+    }
+
+    #[test]
+    fn threshold_tracks_kth() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), None);
+        t.push(0, 1.0);
+        t.push(1, 3.0);
+        assert_eq!(t.threshold(), Some(1.0));
+        t.push(2, 2.0);
+        assert_eq!(t.threshold(), Some(2.0));
+    }
+
+    #[test]
+    fn fewer_items_than_k() {
+        let top = top_k_from_scores(&[1.0, 2.0], 10);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0], (1, 2.0));
+    }
+
+    #[test]
+    fn merge_dedups_nothing_but_ranks_globally() {
+        let a = vec![(0u32, 5.0f32), (1, 3.0)];
+        let b = vec![(2u32, 4.0f32), (3, 1.0)];
+        let m = merge_topk(&[a, b], 3);
+        assert_eq!(m, vec![(0, 5.0), (2, 4.0), (1, 3.0)]);
+    }
+
+    #[test]
+    fn nan_scores_do_not_poison() {
+        let mut t = TopK::new(2);
+        t.push(0, f32::NAN);
+        t.push(1, 1.0);
+        t.push(2, 2.0);
+        let r = t.into_sorted();
+        assert!(r.iter().any(|&(id, _)| id == 2));
+    }
+}

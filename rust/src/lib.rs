@@ -1,0 +1,38 @@
+//! # hybrid-ip — Efficient Inner Product Approximation in Hybrid Spaces
+//!
+//! Production-grade reproduction of Wu et al. (2019): maximum-inner-product
+//! search over sparse⊕dense hybrid vectors via
+//!
+//! * a **cache-sorted inverted index** for the sparse component (§3),
+//! * **product quantization + LUT16 in-register ADC** for the dense
+//!   component (§4), and
+//! * **residual reordering** to recover exact-search recall (§5).
+//!
+//! The crate is the L3 coordinator of a three-layer stack: the dense scorer
+//! also exists as a JAX/Pallas computation AOT-lowered to `artifacts/` and
+//! executed through PJRT ([`runtime`]); Python never runs at serving time.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use hybrid_ip::data::synthetic::QuerySimConfig;
+//! use hybrid_ip::hybrid::{config::IndexConfig, index::HybridIndex};
+//!
+//! let data = QuerySimConfig::tiny().generate(42);
+//! let queries = QuerySimConfig::tiny().generate_queries(7, 10);
+//! let index = HybridIndex::build(&data, &IndexConfig::default());
+//! let hits = index.search(&queries[0], 20);
+//! assert_eq!(hits.len(), 20);
+//! ```
+
+pub mod baselines;
+pub mod benchkit;
+pub mod coordinator;
+pub mod data;
+pub mod dense;
+pub mod eval;
+pub mod hybrid;
+pub mod runtime;
+pub mod sparse;
+pub mod types;
+pub mod util;

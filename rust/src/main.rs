@@ -1,0 +1,288 @@
+//! `hybrid-ip` — CLI for the hybrid inner-product search reproduction.
+//!
+//! Subcommands:
+//!   gen-data    generate a synthetic hybrid dataset and print its stats
+//!   table2      run the public-dataset comparison (paper Table 2)
+//!   table3      run the QuerySim-sim comparison (paper Table 3)
+//!   fig4        print the cache-line cost model curves (paper Figure 4)
+//!   fig5        print QuerySim-sim statistics (paper Figure 5 / Table 1)
+//!   serve       start the sharded serving engine and drive load
+//!   runtime     smoke-test the AOT XLA artifacts through PJRT
+//!
+//! Every subcommand takes `--help`.
+
+use hybrid_ip::benchkit::Table;
+use hybrid_ip::coordinator::{Server, ServerConfig};
+use hybrid_ip::data::stats;
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::eval::tables::{render, run_table, TableSpec};
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::sparse::cost_model::CostModel;
+use hybrid_ip::util::cli::CliSpec;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let prog = "hybrid-ip";
+    let sub = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let rest = &argv.get(2..).map(|s| s.to_vec()).unwrap_or_default();
+    let code = match sub {
+        "gen-data" => cmd_gen_data(prog, rest),
+        "table2" => cmd_table(prog, rest, true),
+        "table3" => cmd_table(prog, rest, false),
+        "fig4" => cmd_fig4(prog, rest),
+        "fig5" => cmd_fig5(prog, rest),
+        "serve" => cmd_serve(prog, rest),
+        "runtime" => cmd_runtime(prog, rest),
+        _ => {
+            eprintln!(
+                "usage: {prog} <gen-data|table2|table3|fig4|fig5|serve|runtime> [flags]\n\
+                 run `{prog} <cmd> --help` for details"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_or_exit(
+    spec: CliSpec,
+    prog: &str,
+    rest: &[String],
+) -> hybrid_ip::util::cli::Args {
+    match spec.parse(prog, rest) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_gen_data(prog: &str, rest: &[String]) -> i32 {
+    let spec = CliSpec::new("generate a QuerySim-like hybrid dataset")
+        .flag("n", "100000", "number of datapoints")
+        .flag("seed", "42", "generator seed");
+    let args = parse_or_exit(spec, prog, rest);
+    let cfg = QuerySimConfig::scaled(args.usize("n"));
+    let t = std::time::Instant::now();
+    let data = cfg.generate(args.u64("seed"));
+    let card = stats::scale_card(&data);
+    println!(
+        "generated n={} dense_dims={} active_sparse_dims={} avg_nnz={:.1} \
+         ~{} MB in {:.1}s",
+        card.n,
+        card.dense_dims,
+        card.active_sparse_dims,
+        card.avg_sparse_nnz,
+        card.approx_bytes >> 20,
+        t.elapsed().as_secs_f64()
+    );
+    0
+}
+
+fn cmd_table(prog: &str, rest: &[String], public: bool) -> i32 {
+    let about = if public {
+        "paper Table 2: public-dataset (Netflix/MovieLens-sim) comparison"
+    } else {
+        "paper Table 3: QuerySim-sim comparison"
+    };
+    let spec = CliSpec::new(about)
+        .flag("n", "20000", "datapoints")
+        .flag("queries", "50", "query count")
+        .flag("h", "20", "result count (recall@h)")
+        .flag("alpha", "10", "stage-1 overfetch factor")
+        .flag("beta", "3", "stage-2 retain factor")
+        .flag("seed", "1", "seed");
+    let args = parse_or_exit(spec, prog, rest);
+    let h = args.usize("h");
+    let params = SearchParams::new(h)
+        .with_alpha(args.f32("alpha"))
+        .with_beta(args.f32("beta"));
+    let (data, queries, title) = if public {
+        let cfg = hybrid_ip::data::movielens::RatingsConfig {
+            n_users: args.usize("n"),
+            ..hybrid_ip::data::movielens::RatingsConfig::movielens_sim(0.01)
+        };
+        let data = cfg.generate(args.u64("seed"));
+        let queries = cfg.generate_queries(
+            &data,
+            args.u64("seed") ^ 7,
+            args.usize("queries"),
+        );
+        (data, queries, "Table 2 (MovieLens-sim)")
+    } else {
+        let cfg = QuerySimConfig::scaled(args.usize("n"));
+        let data = cfg.generate(args.u64("seed"));
+        let queries = cfg.related_queries(
+            &data,
+            args.u64("seed") ^ 7,
+            args.usize("queries"),
+        );
+        (data, queries, "Table 3 (QuerySim-sim)")
+    };
+    let rows = run_table(
+        &data,
+        &queries,
+        h,
+        &TableSpec::default(),
+        &IndexConfig::default(),
+        &params,
+    );
+    render(title, &rows).print();
+    0
+}
+
+fn cmd_fig4(prog: &str, rest: &[String]) -> i32 {
+    let spec = CliSpec::new("paper Figure 4: analytic cache-line model")
+        .flag("n", "1000000", "datapoints")
+        .flag("alpha", "2.0", "power-law exponent")
+        .flag("dims", "10000", "dimensions");
+    let args = parse_or_exit(spec, prog, rest);
+    let n = args.usize("n");
+    let alpha = args.f64("alpha");
+    let d = args.usize("dims");
+    let mut t4a = Table::new(
+        "Figure 4a: fraction of accumulator cache-lines accessed",
+        &["dim j", "unsorted", "cache-sorted (bound)"],
+    );
+    let m = CostModel::new(n, alpha, 16, d);
+    let series = m.fig4a_series();
+    for &j in &[0usize, 1, 2, 4, 8, 16, 32, 64, 128, 512, 2048] {
+        if j >= d {
+            continue;
+        }
+        t4a.row(&[
+            j.to_string(),
+            format!("{:.4}", series[j].0),
+            format!("{:.4}", series[j].1),
+        ]);
+    }
+    t4a.print();
+    let mut t4b = Table::new(
+        "Figure 4b: E[C_sort]/E[C_unsort(B=16)] by B, alpha",
+        &["B", "alpha=1.5", "alpha=2.0", "alpha=2.5"],
+    );
+    for &b in &[8usize, 16, 32, 64] {
+        t4b.row(&[
+            b.to_string(),
+            format!("{:.3}", CostModel::new(n, 1.5, b, d).fig4b_ratio()),
+            format!("{:.3}", CostModel::new(n, 2.0, b, d).fig4b_ratio()),
+            format!("{:.3}", CostModel::new(n, 2.5, b, d).fig4b_ratio()),
+        ]);
+    }
+    t4b.print();
+    0
+}
+
+fn cmd_fig5(prog: &str, rest: &[String]) -> i32 {
+    let spec = CliSpec::new("paper Figure 5 / Table 1: dataset statistics")
+        .flag("n", "50000", "datapoints")
+        .flag("seed", "3", "seed");
+    let args = parse_or_exit(spec, prog, rest);
+    let cfg = QuerySimConfig::scaled(args.usize("n"));
+    let data = cfg.generate(args.u64("seed"));
+    let card = stats::scale_card(&data);
+    println!(
+        "Table 1 (scaled): n={} dense={} active_sparse={} avg_nnz={:.1}",
+        card.n, card.dense_dims, card.active_sparse_dims, card.avg_sparse_nnz
+    );
+    let nnz = stats::sorted_dim_nnz(&data.sparse);
+    println!(
+        "Figure 5a: power-law fit alpha = {:.2} (target {:.2})",
+        stats::fit_power_law(&nnz),
+        cfg.alpha
+    );
+    let q = stats::value_quantiles(&data.sparse, &[0.5, 0.75, 0.99]);
+    println!(
+        "Figure 5b: value quantiles median={:.3} p75={:.3} p99={:.3} \
+         (paper: 0.054 / 0.12 / 0.69)",
+        q[0], q[1], q[2]
+    );
+    0
+}
+
+fn cmd_serve(prog: &str, rest: &[String]) -> i32 {
+    let spec = CliSpec::new("start the sharded serving engine, drive load")
+        .flag("n", "50000", "datapoints")
+        .flag("shards", "8", "shard count")
+        .flag("queries", "200", "queries to drive")
+        .flag("h", "20", "result count")
+        .flag("seed", "5", "seed");
+    let args = parse_or_exit(spec, prog, rest);
+    let cfg = QuerySimConfig::scaled(args.usize("n"));
+    let data = cfg.generate(args.u64("seed"));
+    let t = std::time::Instant::now();
+    let server = Server::start(
+        &data,
+        &ServerConfig {
+            n_shards: args.usize("shards"),
+            ..Default::default()
+        },
+    );
+    println!(
+        "started {} shards over {} points in {:.1}s",
+        server.n_shards(),
+        server.len(),
+        t.elapsed().as_secs_f64()
+    );
+    let queries = cfg.related_queries(
+        &data,
+        args.u64("seed") ^ 9,
+        args.usize("queries"),
+    );
+    let params = SearchParams::new(args.usize("h"));
+    for q in &queries {
+        server.search(q, &params);
+    }
+    println!("latency: {}", server.snapshot().line());
+    0
+}
+
+fn cmd_runtime(prog: &str, rest: &[String]) -> i32 {
+    let spec = CliSpec::new("smoke-test the AOT XLA artifacts via PJRT")
+        .flag("artifacts", "artifacts", "artifacts directory");
+    let args = parse_or_exit(spec, prog, rest);
+    let dir = std::path::PathBuf::from(args.str_("artifacts"));
+    match hybrid_ip::runtime::XlaRuntime::load(&dir) {
+        Ok(rt) => {
+            println!(
+                "loaded modules {:?} on platform {}",
+                rt.module_names(),
+                rt.platform()
+            );
+            // tiny numeric check through dense_score
+            let cfg = rt.manifest.config.clone();
+            let queries = vec![vec![0.5f32; cfg.dense_dims]];
+            let codebooks =
+                vec![0.1f32; cfg.subspaces * cfg.codebook_size * cfg.sub_dims];
+            let codes = vec![vec![0u8; cfg.subspaces]; 4];
+            match rt.dense_score_block(&queries, &codebooks, &codes) {
+                Ok(scores) => {
+                    let expect =
+                        0.5 * 0.1 * (cfg.subspaces * cfg.sub_dims) as f32;
+                    println!(
+                        "dense_score sanity: got {:.4}, expect {:.4}",
+                        scores[0][0], expect
+                    );
+                    if (scores[0][0] - expect).abs() > 1e-3 {
+                        eprintln!("numeric mismatch");
+                        return 1;
+                    }
+                    0
+                }
+                Err(e) => {
+                    eprintln!("execution failed: {e:#}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!(
+                "failed to load artifacts from {}: {e:#}\n\
+                 (run `make artifacts` first)",
+                dir.display()
+            );
+            1
+        }
+    }
+}

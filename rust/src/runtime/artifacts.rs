@@ -1,0 +1,150 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! python/compile/aot.py) using the in-tree JSON reader.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Artifact shape configuration (mirrors aot.py constants).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactConfig {
+    pub batch: usize,
+    pub dense_dims: usize,
+    pub subspaces: usize,
+    pub codebook_size: usize,
+    pub sub_dims: usize,
+    pub block_n: usize,
+    pub kmeans_n: usize,
+}
+
+/// One lowered module.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModuleSpec {
+    pub file: String,
+    /// (shape, dtype) per input.
+    pub inputs: Vec<(Vec<usize>, String)>,
+    pub outputs: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ArtifactConfig,
+    pub modules: BTreeMap<String, ModuleSpec>,
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .with_context(|| format!("manifest missing numeric '{key}'"))
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        anyhow::ensure!(
+            j.get("format").and_then(|f| f.as_str()) == Some("hlo-text"),
+            "manifest format must be hlo-text"
+        );
+        let cfg = j.get("config").context("manifest missing config")?;
+        let config = ArtifactConfig {
+            batch: usize_field(cfg, "batch")?,
+            dense_dims: usize_field(cfg, "dense_dims")?,
+            subspaces: usize_field(cfg, "subspaces")?,
+            codebook_size: usize_field(cfg, "codebook_size")?,
+            sub_dims: usize_field(cfg, "sub_dims")?,
+            block_n: usize_field(cfg, "block_n")?,
+            kmeans_n: usize_field(cfg, "kmeans_n")?,
+        };
+        let mut modules = BTreeMap::new();
+        let mods = j
+            .get("modules")
+            .and_then(|m| m.as_obj())
+            .context("manifest missing modules")?;
+        for (name, m) in mods {
+            let file = m
+                .get("file")
+                .and_then(|f| f.as_str())
+                .context("module missing file")?
+                .to_string();
+            let inputs = m
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .context("module missing inputs")?
+                .iter()
+                .map(|inp| {
+                    let shape = inp
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .context("input missing shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("bad dim"))
+                        .collect::<Result<Vec<usize>>>()?;
+                    let dtype = inp
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("float32")
+                        .to_string();
+                    Ok((shape, dtype))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = usize_field(m, "outputs")?;
+            modules.insert(name.clone(), ModuleSpec { file, inputs, outputs });
+        }
+        Ok(Manifest { config, modules })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "config": {"batch": 8, "dense_dims": 200, "subspaces": 100,
+                 "codebook_size": 16, "sub_dims": 2, "block_n": 4096,
+                 "kmeans_n": 16384},
+      "modules": {
+        "dense_score": {
+          "file": "dense_score.hlo.txt",
+          "inputs": [
+            {"shape": [8, 200], "dtype": "float32"},
+            {"shape": [100, 16, 2], "dtype": "float32"},
+            {"shape": [4096, 100], "dtype": "int32"}
+          ],
+          "outputs": 1
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.block_n, 4096);
+        let ds = &m.modules["dense_score"];
+        assert_eq!(ds.inputs.len(), 3);
+        assert_eq!(ds.inputs[2].0, vec![4096, 100]);
+        assert_eq!(ds.inputs[2].1, "int32");
+        assert_eq!(ds.outputs, 1);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_config_field() {
+        let bad = SAMPLE.replace("\"block_n\": 4096,", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Exact sparse scoring: per-row sorted-merge dot products. This is the
+//! paper's "Sparse Brute Force" baseline kernel (the dataset is made fully
+//! sparse by appending a sparse encoding of the dense part — that
+//! conversion lives in `baselines::sparse_bf`).
+
+use crate::types::csr::CsrMatrix;
+use crate::types::sparse::SparseVector;
+use crate::util::threadpool::{default_threads, parallel_for_chunks};
+
+/// Exact q·row for every row, in parallel.
+pub fn all_dots(m: &CsrMatrix, q: &SparseVector) -> Vec<f32> {
+    all_dots_threads(m, q, default_threads())
+}
+
+pub fn all_dots_threads(
+    m: &CsrMatrix,
+    q: &SparseVector,
+    threads: usize,
+) -> Vec<f32> {
+    let n = m.n_rows();
+    let mut out = vec![0.0f32; n];
+    let ptr = crate::util::threadpool::SharedMutPtr::new(out.as_mut_ptr());
+    parallel_for_chunks(n, threads, 1024, |s, e| {
+        for i in s..e {
+            // SAFETY: disjoint index ranges per chunk.
+            unsafe { *ptr.add(i) = m.row_dot(i, q) };
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::new(8);
+        let rows: Vec<SparseVector> = (0..500)
+            .map(|_| {
+                let nnz = rng.below(12);
+                let mut dims: Vec<u32> = rng
+                    .sample_indices(64, nnz)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                dims.sort_unstable();
+                let vals = (0..nnz).map(|_| rng.gauss_f32()).collect();
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        let m = CsrMatrix::from_rows(&rows, 64);
+        let q = SparseVector::new(
+            (0..64).step_by(3).collect(),
+            (0..22).map(|i| i as f32 * 0.1 - 1.0).collect(),
+        );
+        let par = all_dots(&m, &q);
+        for i in 0..m.n_rows() {
+            assert_eq!(par[i], m.row_dot(i, &q));
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = CsrMatrix::from_rows(&[], 4);
+        assert!(all_dots(&m, &SparseVector::default()).is_empty());
+    }
+}

@@ -1,0 +1,266 @@
+//! Cache sorting (paper §3.2, Algorithm 1).
+//!
+//! Finds a datapoint permutation π that makes the rows sharing active
+//! dimensions contiguous, minimizing the accumulator cache-lines a query
+//! touches (§3.1's Cost(Xˢ)). Algorithm 1 recursively partitions rows by
+//! the most-active dimension; as the paper notes, this is *conceptually
+//! sorting the indicator vectors I(x) (dims ordered most→least active) in
+//! decreasing order* — which is exactly how we implement it: each row's
+//! sort key is its sorted list of dimension activity-ranks, compared
+//! lexicographically (rank-lists are the paper's "16 bytes per datapoint
+//! of temporary memory" trick, just nnz-proportional here).
+//!
+//! A binary-reflected Gray-code ordering (§3.2's "conceivable
+//! modification") is provided for the ablation bench; the paper reports it
+//! makes little difference, which `ablation_residual` re-checks.
+
+use crate::types::csr::CsrMatrix;
+
+/// Rank dimensions by activity: rank 0 = most nonzeros. Ties broken by
+/// dimension id for determinism (matches Argsort's stability).
+pub fn activity_ranks(sparse: &CsrMatrix) -> Vec<u32> {
+    let nnz = sparse.col_nnz();
+    let mut order: Vec<u32> = (0..sparse.n_cols as u32).collect();
+    order.sort_by_key(|&j| (std::cmp::Reverse(nnz[j as usize]), j));
+    let mut rank = vec![0u32; sparse.n_cols];
+    for (r, &j) in order.iter().enumerate() {
+        rank[j as usize] = r as u32;
+    }
+    rank
+}
+
+/// Per-row sorted activity-rank lists — the indicator-vector sort keys.
+fn rank_keys(sparse: &CsrMatrix, rank: &[u32]) -> Vec<Vec<u32>> {
+    (0..sparse.n_rows())
+        .map(|i| {
+            let (dims, _) = sparse.row(i);
+            let mut ks: Vec<u32> =
+                dims.iter().map(|&d| rank[d as usize]).collect();
+            ks.sort_unstable();
+            ks
+        })
+        .collect()
+}
+
+/// Decreasing-indicator comparator: the row whose indicator vector is
+/// lexicographically larger (dims ordered by activity) comes first.
+/// Rank lists hold the positions of 1-bits in ascending order, so:
+/// first divergence decides (smaller rank head = has the more active dim
+/// = comes first); equal prefix -> the longer list comes first.
+fn cmp_decreasing(a: &[u32], b: &[u32]) -> std::cmp::Ordering {
+    for (x, y) in a.iter().zip(b.iter()) {
+        match x.cmp(y) {
+            std::cmp::Ordering::Equal => continue,
+            ord => return ord, // smaller rank head first
+        }
+    }
+    b.len().cmp(&a.len()) // longer (more trailing 1s) first
+}
+
+/// Gray-code comparator (binary-reflected): at the first differing bit,
+/// order depends on the parity of 1s in the shared prefix — even parity
+/// puts 1 first, odd parity puts 0 first.
+fn cmp_gray(a: &[u32], b: &[u32]) -> std::cmp::Ordering {
+    let mut i = 0usize;
+    loop {
+        match (a.get(i), b.get(i)) {
+            (Some(x), Some(y)) if x == y => i += 1,
+            (Some(x), Some(y)) => {
+                // Differing bit at rank min(x, y): the row holding that
+                // rank has bit 1 there. Shared 1s before it: i (parity).
+                let a_has = x < y;
+                let one_first = i % 2 == 0;
+                return if a_has == one_first {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Greater
+                };
+            }
+            (Some(_), None) | (None, Some(_)) => {
+                let a_has = a.len() > i;
+                let one_first = i % 2 == 0;
+                return if a_has == one_first {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Greater
+                };
+            }
+            (None, None) => return std::cmp::Ordering::Equal,
+        }
+    }
+}
+
+fn sort_with<F>(sparse: &CsrMatrix, cmp: F) -> Vec<u32>
+where
+    F: Fn(&[u32], &[u32]) -> std::cmp::Ordering,
+{
+    let rank = activity_ranks(sparse);
+    let keys = rank_keys(sparse, &rank);
+    let mut perm: Vec<u32> = (0..sparse.n_rows() as u32).collect();
+    perm.sort_by(|&i, &j| {
+        cmp(&keys[i as usize], &keys[j as usize]).then(i.cmp(&j))
+    });
+    perm
+}
+
+/// Algorithm 1: permutation π with new row i = old row π[i].
+pub fn cache_sort(sparse: &CsrMatrix) -> Vec<u32> {
+    sort_with(sparse, cmp_decreasing)
+}
+
+/// Gray-code variant (§3.2 alternative ordering, for ablation).
+pub fn gray_code_sort(sparse: &CsrMatrix) -> Vec<u32> {
+    sort_with(sparse, cmp_gray)
+}
+
+/// Verify `perm` is a permutation of 0..n (test/property helper).
+pub fn is_permutation(perm: &[u32], n: usize) -> bool {
+    if perm.len() != n {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    for &p in perm {
+        let p = p as usize;
+        if p >= n || seen[p] {
+            return false;
+        }
+        seen[p] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::inverted_index::InvertedIndex;
+    use crate::types::sparse::SparseVector;
+    use crate::util::rng::Rng;
+
+    fn power_law_dataset(seed: u64, n: usize, d: usize) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<SparseVector> = (0..n)
+            .map(|_| {
+                let nnz = 1 + rng.below(10);
+                let mut dims = std::collections::BTreeSet::new();
+                for _ in 0..nnz {
+                    dims.insert(rng.zipf(d, 1.6) as u32);
+                }
+                let dims: Vec<u32> = dims.into_iter().collect();
+                let vals = (0..dims.len()).map(|_| rng.gauss_f32()).collect();
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        CsrMatrix::from_rows(&rows, d)
+    }
+
+    #[test]
+    fn returns_valid_permutation() {
+        let m = power_law_dataset(1, 500, 100);
+        let p = cache_sort(&m);
+        assert!(is_permutation(&p, 500));
+        let g = gray_code_sort(&m);
+        assert!(is_permutation(&g, 500));
+    }
+
+    #[test]
+    fn most_active_dim_rows_are_contiguous_prefix() {
+        let m = power_law_dataset(2, 400, 80);
+        let p = cache_sort(&m);
+        let sorted = m.permute_rows(&p);
+        let nnz = sorted.col_nnz();
+        let top_dim =
+            (0..80).max_by_key(|&j| nnz[j]).unwrap() as u32;
+        // In the sorted matrix, rows containing top_dim form a prefix.
+        let has: Vec<bool> = (0..sorted.n_rows())
+            .map(|i| sorted.row(i).0.contains(&top_dim))
+            .collect();
+        let first_without = has.iter().position(|h| !h).unwrap_or(has.len());
+        assert!(
+            has[first_without..].iter().all(|h| !h),
+            "rows with the most active dim must be contiguous"
+        );
+        assert_eq!(
+            has[..first_without].len() as u64,
+            nnz[top_dim as usize]
+        );
+    }
+
+    #[test]
+    fn sorting_never_increases_cache_lines() {
+        let m = power_law_dataset(3, 1000, 120);
+        let idx_unsorted = InvertedIndex::build(&m);
+        let p = cache_sort(&m);
+        let sorted = m.permute_rows(&p);
+        let idx_sorted = InvertedIndex::build(&sorted);
+        let mut rng = Rng::new(7);
+        let mut total_unsorted = 0usize;
+        let mut total_sorted = 0usize;
+        for _ in 0..30 {
+            let nnz = 1 + rng.below(6);
+            let mut dims = std::collections::BTreeSet::new();
+            for _ in 0..nnz {
+                dims.insert(rng.zipf(120, 1.6) as u32);
+            }
+            let dims: Vec<u32> = dims.into_iter().collect();
+            let vals = vec![1.0; dims.len()];
+            let q = SparseVector::new(dims, vals);
+            total_unsorted += idx_unsorted.count_lines(&q);
+            total_sorted += idx_sorted.count_lines(&q);
+        }
+        assert!(
+            total_sorted <= total_unsorted,
+            "sorted {total_sorted} > unsorted {total_unsorted}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let m = power_law_dataset(4, 300, 60);
+        assert_eq!(cache_sort(&m), cache_sort(&m));
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let m = CsrMatrix::from_rows(&[], 10);
+        assert!(cache_sort(&m).is_empty());
+        let m =
+            CsrMatrix::from_rows(&[SparseVector::new(vec![3], vec![1.0])], 10);
+        assert_eq!(cache_sort(&m), vec![0]);
+    }
+
+    #[test]
+    fn identical_rows_stay_adjacent() {
+        let a = SparseVector::new(vec![1, 5], vec![1.0, 2.0]);
+        let b = SparseVector::new(vec![2], vec![3.0]);
+        let rows = vec![b.clone(), a.clone(), b.clone(), a.clone()];
+        let m = CsrMatrix::from_rows(&rows, 8);
+        let p = cache_sort(&m);
+        let sorted = m.permute_rows(&p);
+        // identical indicator rows must be adjacent after sorting
+        let sig: Vec<Vec<u32>> =
+            (0..4).map(|i| sorted.row(i).0.to_vec()).collect();
+        assert_eq!(sig[0], sig[1]);
+        assert_eq!(sig[2], sig[3]);
+    }
+
+    #[test]
+    fn gray_code_is_permutation_and_groups_identics() {
+        let m = power_law_dataset(5, 200, 40);
+        let p = gray_code_sort(&m);
+        assert!(is_permutation(&p, 200));
+    }
+
+    #[test]
+    fn activity_ranks_ordering() {
+        let rows = vec![
+            SparseVector::new(vec![0, 1], vec![1.0, 1.0]),
+            SparseVector::new(vec![1], vec![1.0]),
+            SparseVector::new(vec![1, 2], vec![1.0, 1.0]),
+        ];
+        let m = CsrMatrix::from_rows(&rows, 3);
+        let r = activity_ranks(&m);
+        assert_eq!(r[1], 0); // dim 1 appears 3x -> rank 0
+        assert_eq!(r[0], 1); // 1x, id-tie beats dim 2
+        assert_eq!(r[2], 2);
+    }
+}

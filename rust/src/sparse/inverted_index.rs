@@ -1,0 +1,364 @@
+//! Inverted index for sparse inner products (§2.2) with the blocked
+//! accumulator whose memory behaviour §3 analyzes.
+//!
+//! The scan is accumulation-based: for each nonzero query dim j, walk the
+//! inverted list I_j = {(i, X^Si_j)} adding q_j * w_ij into accumulator[i].
+//! The §3.1 insight: the bottleneck is accumulator cache-lines, not FLOPs —
+//! so the index (a) stores lists as (row, value) struct-of-arrays for
+//! streaming, (b) tracks the per-query set of touched accumulator *blocks*
+//! (B = 16 f32 slots = one cache-line) so candidate extraction skips
+//! untouched lines, and (c) pairs with `cache_sort` to make touched rows
+//! contiguous.
+
+use crate::types::csr::{CscMatrix, CsrMatrix};
+use crate::types::sparse::SparseVector;
+use crate::util::simd::F32_PER_LINE;
+
+/// Inverted index over a sparse dataset.
+#[derive(Clone, Debug, Default)]
+pub struct InvertedIndex {
+    /// CSC view: per dimension, sorted (row, value) list.
+    csc: CscMatrix,
+    /// nnz per dimension (list lengths), kept for stats/cost model.
+    pub dim_nnz: Vec<u64>,
+}
+
+/// Reusable per-thread scan state: the accumulator array plus the dirty
+/// block bitmap. Allocate once, `reset` between queries — zeroing the full
+/// array would dominate at large N (§3.1's "memory bandwidth" point).
+pub struct Accumulator {
+    pub scores: Vec<f32>,
+    /// One bit per B-row block: did any list touch it this query?
+    dirty: Vec<u64>,
+    touched_blocks: Vec<u32>,
+    generation: Vec<u32>,
+    current_gen: u32,
+}
+
+impl Accumulator {
+    pub fn new(n: usize) -> Self {
+        let blocks = n.div_ceil(F32_PER_LINE);
+        Accumulator {
+            scores: vec![0.0; n],
+            dirty: vec![0; blocks.div_ceil(64)],
+            touched_blocks: Vec::new(),
+            generation: vec![0; blocks],
+            current_gen: 0,
+        }
+    }
+
+    /// O(touched) reset via generation counters (no full memset).
+    pub fn reset(&mut self) {
+        self.current_gen = self.current_gen.wrapping_add(1);
+        if self.current_gen == 0 {
+            // Generation wrapped: hard reset once every 2^32 queries.
+            self.generation.fill(0);
+            self.scores.fill(0.0);
+            self.current_gen = 1;
+        }
+        self.touched_blocks.clear();
+        for w in &mut self.dirty {
+            *w = 0;
+        }
+    }
+
+    #[inline]
+    fn touch_block(&mut self, block: usize) {
+        if self.generation[block] != self.current_gen {
+            self.generation[block] = self.current_gen;
+            // Lazily zero the block on first touch this query.
+            let start = block * F32_PER_LINE;
+            let end = (start + F32_PER_LINE).min(self.scores.len());
+            self.scores[start..end].fill(0.0);
+            self.dirty[block / 64] |= 1 << (block % 64);
+            self.touched_blocks.push(block as u32);
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, row: u32, v: f32) {
+        let block = row as usize / F32_PER_LINE;
+        self.touch_block(block);
+        self.scores[row as usize] += v;
+    }
+
+    /// Number of distinct accumulator cache-lines touched this query —
+    /// the empirical Cost(Xˢ) of §3.1, compared against Eq. 4/5 in the
+    /// fig4 bench.
+    pub fn lines_touched(&self) -> usize {
+        self.touched_blocks.len()
+    }
+
+    /// Iterate (row, score) over touched blocks only, in ascending row
+    /// order (callers merge against other row-ordered score streams;
+    /// touch order follows list traversal and is arbitrary).
+    pub fn drain_scores<F: FnMut(u32, f32)>(&self, mut f: F) {
+        let n = self.scores.len();
+        let mut blocks = self.touched_blocks.clone();
+        blocks.sort_unstable();
+        for &b in &blocks {
+            let start = b as usize * F32_PER_LINE;
+            let end = (start + F32_PER_LINE).min(n);
+            for i in start..end {
+                let s = self.scores[i];
+                if s != 0.0 {
+                    f(i as u32, s);
+                }
+            }
+        }
+    }
+}
+
+impl InvertedIndex {
+    /// Build from the CSR sparse component (counting-sort transpose).
+    pub fn build(sparse: &CsrMatrix) -> Self {
+        let csc = sparse.transpose();
+        let dim_nnz = (0..csc.n_cols())
+            .map(|j| (csc.colptr[j + 1] - csc.colptr[j]))
+            .collect();
+        InvertedIndex { csc, dim_nnz }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.csc.n_rows
+    }
+
+    pub fn n_dims(&self) -> usize {
+        self.csc.n_cols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.csc.nnz()
+    }
+
+    /// Inverted list for dimension j.
+    pub fn list(&self, j: usize) -> (&[u32], &[f32]) {
+        self.csc.col(j)
+    }
+
+    /// Accumulate qˢ against all lists of q's nonzero dims (§2.2).
+    /// `acc` must be sized for `n_rows()` and already `reset()`.
+    pub fn scan(&self, q: &SparseVector, acc: &mut Accumulator) {
+        for (dim, qv) in q.iter() {
+            let j = dim as usize;
+            if j >= self.n_dims() {
+                continue;
+            }
+            let (rows, vals) = self.csc.col(j);
+            // Hot loop: sequential streaming over the list; accumulator
+            // access pattern is what cache_sort optimizes.
+            for (&r, &w) in rows.iter().zip(vals) {
+                acc.add(r, qv * w);
+            }
+        }
+    }
+
+    /// Convenience: scan + extract all (row, score) pairs.
+    pub fn scores(&self, q: &SparseVector, acc: &mut Accumulator) -> Vec<(u32, f32)> {
+        acc.reset();
+        self.scan(q, acc);
+        let mut out = Vec::with_capacity(acc.lines_touched() * F32_PER_LINE / 2);
+        acc.drain_scores(|r, s| out.push((r, s)));
+        out
+    }
+
+    /// Exact count of accumulator cache-lines a query would touch — used
+    /// by fig4 to validate Eq. 4/5 without timing noise.
+    pub fn count_lines(&self, q: &SparseVector) -> usize {
+        let blocks = self.n_rows().div_ceil(F32_PER_LINE);
+        let mut seen = vec![false; blocks];
+        let mut count = 0;
+        for (dim, _) in q.iter() {
+            let j = dim as usize;
+            if j >= self.n_dims() {
+                continue;
+            }
+            let (rows, _) = self.csc.col(j);
+            for &r in rows {
+                let b = r as usize / F32_PER_LINE;
+                if !seen[b] {
+                    seen[b] = true;
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    /// Approximate resident bytes (lists + pointers).
+    pub fn memory_bytes(&self) -> usize {
+        self.csc.rows.len() * 4
+            + self.csc.vals.len() * 4
+            + self.csc.colptr.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::sparse::SparseVector;
+    use crate::util::rng::Rng;
+
+    fn dataset() -> CsrMatrix {
+        let rows = vec![
+            SparseVector::new(vec![0, 2], vec![1.0, 2.0]),
+            SparseVector::new(vec![1, 2], vec![3.0, -1.0]),
+            SparseVector::default(),
+            SparseVector::new(vec![0], vec![4.0]),
+        ];
+        CsrMatrix::from_rows(&rows, 3)
+    }
+
+    #[test]
+    fn scan_matches_exact_dots() {
+        let m = dataset();
+        let idx = InvertedIndex::build(&m);
+        let q = SparseVector::new(vec![0, 2], vec![1.0, 0.5]);
+        let mut acc = Accumulator::new(m.n_rows());
+        let scores = idx.scores(&q, &mut acc);
+        let lookup: std::collections::HashMap<u32, f32> =
+            scores.into_iter().collect();
+        for i in 0..m.n_rows() {
+            let exact = m.row_dot(i, &q);
+            let got = lookup.get(&(i as u32)).copied().unwrap_or(0.0);
+            assert!((got - exact).abs() < 1e-6, "row {i}: {got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn accumulator_reset_is_cheap_and_correct() {
+        let m = dataset();
+        let idx = InvertedIndex::build(&m);
+        let mut acc = Accumulator::new(m.n_rows());
+        let q1 = SparseVector::new(vec![0], vec![1.0]);
+        let q2 = SparseVector::new(vec![1], vec![1.0]);
+        let s1 = idx.scores(&q1, &mut acc);
+        let s2 = idx.scores(&q2, &mut acc);
+        // q2 scores must not contain q1 leftovers.
+        assert!(s2.iter().all(|&(r, _)| r == 1));
+        assert!(s1.iter().any(|&(r, _)| r == 0));
+    }
+
+    #[test]
+    fn generation_wraparound_hard_reset() {
+        let mut acc = Accumulator::new(32);
+        acc.current_gen = u32::MAX - 1;
+        acc.reset();
+        acc.add(5, 1.0);
+        acc.reset(); // wraps to 0 -> hard reset path
+        acc.add(6, 2.0);
+        let mut got = Vec::new();
+        acc.drain_scores(|r, s| got.push((r, s)));
+        assert_eq!(got, vec![(6, 2.0)]);
+    }
+
+    #[test]
+    fn lines_touched_counts_blocks_not_rows() {
+        // 64 rows in 4 blocks of 16; touching rows 0..16 = 1 block.
+        let rows: Vec<SparseVector> = (0..64)
+            .map(|i| {
+                if i < 16 {
+                    SparseVector::new(vec![0], vec![1.0])
+                } else {
+                    SparseVector::new(vec![1], vec![1.0])
+                }
+            })
+            .collect();
+        let m = CsrMatrix::from_rows(&rows, 2);
+        let idx = InvertedIndex::build(&m);
+        let mut acc = Accumulator::new(64);
+        let q = SparseVector::new(vec![0], vec![1.0]);
+        acc.reset();
+        idx.scan(&q, &mut acc);
+        assert_eq!(acc.lines_touched(), 1);
+        assert_eq!(idx.count_lines(&q), 1);
+        let q2 = SparseVector::new(vec![1], vec![1.0]);
+        acc.reset();
+        idx.scan(&q2, &mut acc);
+        assert_eq!(acc.lines_touched(), 3);
+    }
+
+    #[test]
+    fn drain_scores_ascending_even_with_out_of_order_touches() {
+        // Regression: stage-1 merging assumes row-ascending drains; dim 0
+        // touches a high block first, dim 1 a low block second.
+        let rows = vec![
+            SparseVector::new(vec![1], vec![1.0]), // row 0 (block 0)
+            SparseVector::default(),
+            SparseVector::default(),
+        ];
+        let mut all = rows;
+        for _ in 3..40 {
+            all.push(SparseVector::default());
+        }
+        all.push(SparseVector::new(vec![0], vec![2.0])); // row 40 (block 2)
+        let m = CsrMatrix::from_rows(&all, 2);
+        let idx = InvertedIndex::build(&m);
+        let q = SparseVector::new(vec![0, 1], vec![1.0, 1.0]);
+        let mut acc = Accumulator::new(m.n_rows());
+        acc.reset();
+        // scan dim 0 first (touches block 2), then dim 1 (block 0)
+        idx.scan(&q, &mut acc);
+        let mut rows_seen = Vec::new();
+        acc.drain_scores(|r, _| rows_seen.push(r));
+        let mut sorted = rows_seen.clone();
+        sorted.sort_unstable();
+        assert_eq!(rows_seen, sorted, "drain must be row-ascending");
+        assert_eq!(rows_seen, vec![0, 40]);
+    }
+
+    #[test]
+    fn query_dims_beyond_index_ignored() {
+        let m = dataset();
+        let idx = InvertedIndex::build(&m);
+        let q = SparseVector::new(vec![0, 999], vec![1.0, 5.0]);
+        let mut acc = Accumulator::new(m.n_rows());
+        let scores = idx.scores(&q, &mut acc);
+        assert!(scores.iter().all(|&(_, s)| s.is_finite()));
+    }
+
+    #[test]
+    fn random_scan_consistency() {
+        let mut rng = Rng::new(99);
+        let n = 300;
+        let d = 50;
+        let rows: Vec<SparseVector> = (0..n)
+            .map(|_| {
+                let nnz = rng.below(8);
+                let mut dims: Vec<u32> = rng
+                    .sample_indices(d, nnz)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                dims.sort_unstable();
+                let vals = (0..nnz).map(|_| rng.gauss_f32()).collect();
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        let m = CsrMatrix::from_rows(&rows, d);
+        let idx = InvertedIndex::build(&m);
+        let mut acc = Accumulator::new(n);
+        for _ in 0..20 {
+            let nnz = 1 + rng.below(6);
+            let mut dims: Vec<u32> = rng
+                .sample_indices(d, nnz)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect();
+            dims.sort_unstable();
+            let vals: Vec<f32> = (0..nnz).map(|_| rng.gauss_f32()).collect();
+            let q = SparseVector::new(dims, vals);
+            let scores = idx.scores(&q, &mut acc);
+            let lookup: std::collections::HashMap<u32, f32> =
+                scores.into_iter().collect();
+            for i in 0..n {
+                let exact = m.row_dot(i, &q);
+                let got = lookup.get(&(i as u32)).copied().unwrap_or(0.0);
+                assert!(
+                    (got - exact).abs() < 1e-4,
+                    "row {i}: {got} vs {exact}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Sparse-component machinery (paper §2.2–§3, §4.2): the inverted index
+//! with its blocked accumulator, cache sorting (Algorithm 1), per-dimension
+//! pruning, the cache-line cost model (Eqs. 4–5), and exact brute force.
+
+pub mod brute_force;
+pub mod cache_sort;
+pub mod cost_model;
+pub mod inverted_index;
+pub mod pruning;
+
+pub use cache_sort::{cache_sort, gray_code_sort};
+pub use inverted_index::InvertedIndex;
+pub use pruning::PruneThresholds;

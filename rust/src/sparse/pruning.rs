@@ -1,0 +1,211 @@
+//! Per-dimension magnitude pruning of the sparse component (§4.2, §6 Eqs.
+//! 6–7): the data index keeps only entries with |x_j| ≥ η_j; the residual
+//! index keeps η_j > |x_j| ≥ ε_j. The §6.1.2 heuristic sets η_j so only
+//! the top `keep_top` values per dimension survive, and ε_j low (or 0) so
+//! the residual is near-exact.
+
+use crate::types::csr::CsrMatrix;
+use crate::types::sparse::SparseVector;
+
+/// Per-dimension thresholds {η_j} (and the floor ε used for residuals).
+#[derive(Clone, Debug, Default)]
+pub struct PruneThresholds {
+    pub eta: Vec<f32>,
+}
+
+impl PruneThresholds {
+    /// §6.1.2: choose η_j so that at most `keep_top` entries of dimension j
+    /// survive into the data index ("only top 100s of nonzero values in
+    /// dimension j are kept"). Dimensions with ≤ keep_top entries get
+    /// η_j = 0 (keep everything).
+    pub fn top_per_dim(sparse: &CsrMatrix, keep_top: usize) -> Self {
+        let mut per_dim: Vec<Vec<f32>> = vec![Vec::new(); sparse.n_cols];
+        for (&d, &v) in sparse.indices.iter().zip(&sparse.values) {
+            per_dim[d as usize].push(v.abs());
+        }
+        let eta = per_dim
+            .into_iter()
+            .map(|mut mags| {
+                if mags.len() <= keep_top || keep_top == 0 {
+                    return 0.0;
+                }
+                // kth largest magnitude is the threshold (inclusive keep).
+                let k = keep_top - 1;
+                mags.select_nth_unstable_by(k, |a, b| {
+                    b.partial_cmp(a).unwrap()
+                });
+                mags[k]
+            })
+            .collect();
+        PruneThresholds { eta }
+    }
+
+    /// Uniform global threshold (for ablations / Prop. 3 checks).
+    pub fn uniform(n_dims: usize, eta: f32) -> Self {
+        PruneThresholds { eta: vec![eta; n_dims] }
+    }
+
+    #[inline]
+    pub fn get(&self, dim: u32) -> f32 {
+        self.eta.get(dim as usize).copied().unwrap_or(0.0)
+    }
+}
+
+/// Prune(xˢ; {η_j}) for a single vector (Eq. 6). Returns (kept, residual).
+pub fn prune_vector(
+    x: &SparseVector,
+    th: &PruneThresholds,
+) -> (SparseVector, SparseVector) {
+    x.partition(|d, v| v.abs() >= th.get(d))
+}
+
+/// Prune a whole sparse matrix; returns (data index matrix, residual
+/// matrix). The residual may be further pruned with `epsilon` (Eq. 7):
+/// residual entries with |v| < ε_j are dropped entirely (approximation).
+pub struct PrunedSparse {
+    pub kept: CsrMatrix,
+    pub residual: CsrMatrix,
+    /// nnz dropped below epsilon (lost mass diagnostics).
+    pub dropped: usize,
+}
+
+pub fn prune_matrix(
+    sparse: &CsrMatrix,
+    eta: &PruneThresholds,
+    epsilon: &PruneThresholds,
+) -> PrunedSparse {
+    let n = sparse.n_rows();
+    let mut kept_rows = Vec::with_capacity(n);
+    let mut resid_rows = Vec::with_capacity(n);
+    let mut dropped = 0usize;
+    for i in 0..n {
+        let x = sparse.row_vec(i);
+        let (kept, resid_full) = prune_vector(&x, eta);
+        let (resid, below) =
+            resid_full.partition(|d, v| v.abs() >= epsilon.get(d));
+        dropped += below.nnz();
+        kept_rows.push(kept);
+        resid_rows.push(resid);
+    }
+    PrunedSparse {
+        kept: CsrMatrix::from_rows(&kept_rows, sparse.n_cols),
+        residual: CsrMatrix::from_rows(&resid_rows, sparse.n_cols),
+        dropped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy() -> CsrMatrix {
+        let rows = vec![
+            SparseVector::new(vec![0, 1], vec![5.0, 0.1]),
+            SparseVector::new(vec![0, 1], vec![0.2, 4.0]),
+            SparseVector::new(vec![0], vec![3.0]),
+            SparseVector::new(vec![1], vec![0.05]),
+        ];
+        CsrMatrix::from_rows(&rows, 2)
+    }
+
+    #[test]
+    fn top_per_dim_keeps_k_largest() {
+        let m = toy();
+        let th = PruneThresholds::top_per_dim(&m, 2);
+        // dim 0 magnitudes: 5.0, 0.2, 3.0 -> 2nd largest = 3.0
+        assert_eq!(th.eta[0], 3.0);
+        // dim 1 magnitudes: 0.1, 4.0, 0.05 -> 2nd largest = 0.1
+        assert_eq!(th.eta[1], 0.1);
+        let pruned = prune_matrix(
+            &m,
+            &th,
+            &PruneThresholds::uniform(2, 0.0),
+        );
+        // kept nnz per dim must be <= 2 and equal to keep_top where enough
+        let kept_nnz = pruned.kept.col_nnz();
+        assert_eq!(kept_nnz, vec![2, 2]);
+    }
+
+    #[test]
+    fn kept_plus_residual_is_exact_when_epsilon_zero() {
+        let mut rng = Rng::new(42);
+        let rows: Vec<SparseVector> = (0..60)
+            .map(|_| {
+                let nnz = 1 + rng.below(10);
+                let mut dims: Vec<u32> = rng
+                    .sample_indices(30, nnz)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                dims.sort_unstable();
+                let vals =
+                    (0..dims.len()).map(|_| rng.gauss_f32()).collect();
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        let m = CsrMatrix::from_rows(&rows, 30);
+        let th = PruneThresholds::top_per_dim(&m, 3);
+        let pruned =
+            prune_matrix(&m, &th, &PruneThresholds::uniform(30, 0.0));
+        assert_eq!(pruned.dropped, 0);
+        let q = {
+            let vals: Vec<f32> = (0..30).map(|_| rng.gauss_f32()).collect();
+            SparseVector::new((0..30).collect(), vals)
+        };
+        for i in 0..m.n_rows() {
+            let exact = m.row_dot(i, &q);
+            let approx =
+                pruned.kept.row_dot(i, &q) + pruned.residual.row_dot(i, &q);
+            assert!(
+                (exact - approx).abs() < 1e-5,
+                "row {i}: {exact} vs {approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn epsilon_drops_small_entries() {
+        let m = toy();
+        let th = PruneThresholds::top_per_dim(&m, 1);
+        let eps = PruneThresholds::uniform(2, 0.08);
+        let pruned = prune_matrix(&m, &th, &eps);
+        // dim1 value 0.05 < eps -> dropped
+        assert!(pruned.dropped >= 1);
+        // residual contains only entries in [eps, eta)
+        for i in 0..pruned.residual.n_rows() {
+            let (dims, vals) = pruned.residual.row(i);
+            for (&d, &v) in dims.iter().zip(vals) {
+                assert!(v.abs() >= eps.get(d));
+                assert!(v.abs() < th.get(d));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_keep_top_keeps_everything() {
+        let m = toy();
+        let th = PruneThresholds::top_per_dim(&m, 0);
+        assert!(th.eta.iter().all(|&e| e == 0.0));
+        let pruned =
+            prune_matrix(&m, &th, &PruneThresholds::uniform(2, 0.0));
+        assert_eq!(pruned.kept.nnz(), m.nnz());
+        assert_eq!(pruned.residual.nnz(), 0);
+    }
+
+    #[test]
+    fn prune_shrinks_index_monotonically() {
+        let m = toy();
+        let p1 = prune_matrix(
+            &m,
+            &PruneThresholds::top_per_dim(&m, 2),
+            &PruneThresholds::uniform(2, 0.0),
+        );
+        let p2 = prune_matrix(
+            &m,
+            &PruneThresholds::top_per_dim(&m, 1),
+            &PruneThresholds::uniform(2, 0.0),
+        );
+        assert!(p2.kept.nnz() <= p1.kept.nnz());
+    }
+}

@@ -1,0 +1,226 @@
+//! Compressed sparse row matrix — the storage for a dataset's sparse
+//! component Xˢ, and (transposed) the backing of the inverted index I
+//! (§2.2: the inverted index *is* the CSC view of Xˢ).
+
+use crate::types::sparse::SparseVector;
+
+/// CSR: row `i` occupies `indices/values[indptr[i]..indptr[i+1]]`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CsrMatrix {
+    pub indptr: Vec<u64>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+    pub n_cols: usize,
+}
+
+impl CsrMatrix {
+    pub fn from_rows(rows: &[SparseVector], n_cols: usize) -> Self {
+        let nnz: usize = rows.iter().map(|r| r.nnz()).sum();
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0u64);
+        for r in rows {
+            debug_assert!(r.dims.iter().all(|&d| (d as usize) < n_cols));
+            indices.extend_from_slice(&r.dims);
+            values.extend_from_slice(&r.vals);
+            indptr.push(indices.len() as u64);
+        }
+        CsrMatrix { indptr, indices, values, n_cols }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.indptr.len().saturating_sub(1)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let s = self.indptr[i] as usize;
+        let e = self.indptr[i + 1] as usize;
+        (&self.indices[s..e], &self.values[s..e])
+    }
+
+    pub fn row_vec(&self, i: usize) -> SparseVector {
+        let (d, v) = self.row(i);
+        SparseVector::new(d.to_vec(), v.to_vec())
+    }
+
+    /// Exact q·row sparse dot (sorted merge; row dims are sorted).
+    pub fn row_dot(&self, i: usize, q: &SparseVector) -> f32 {
+        let (dims, vals) = self.row(i);
+        let (mut a, mut b) = (0usize, 0usize);
+        let mut acc = 0.0;
+        while a < dims.len() && b < q.dims.len() {
+            match dims[a].cmp(&q.dims[b]) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += vals[a] * q.vals[b];
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Number of nonzeros per column (dimension activity nnz_j, §3.2).
+    pub fn col_nnz(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.n_cols];
+        for &c in &self.indices {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Transpose to CSC (i.e. the inverted index layout): per column, the
+    /// sorted list of (row, value). Counting sort in O(nnz).
+    pub fn transpose(&self) -> CscMatrix {
+        let n_rows = self.n_rows();
+        let mut colptr = vec![0u64; self.n_cols + 1];
+        for &c in &self.indices {
+            colptr[c as usize + 1] += 1;
+        }
+        for j in 0..self.n_cols {
+            colptr[j + 1] += colptr[j];
+        }
+        let mut rows = vec![0u32; self.nnz()];
+        let mut vals = vec![0.0f32; self.nnz()];
+        let mut cursor = colptr.clone();
+        for i in 0..n_rows {
+            let (dims, values) = self.row(i);
+            for (&d, &v) in dims.iter().zip(values) {
+                let slot = cursor[d as usize] as usize;
+                rows[slot] = i as u32;
+                vals[slot] = v;
+                cursor[d as usize] += 1;
+            }
+        }
+        CscMatrix { colptr, rows, vals, n_rows }
+    }
+
+    /// Apply a row permutation: new row `i` = old row `perm[i]`.
+    pub fn permute_rows(&self, perm: &[u32]) -> CsrMatrix {
+        assert_eq!(perm.len(), self.n_rows());
+        let mut indptr = Vec::with_capacity(perm.len() + 1);
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut values = Vec::with_capacity(self.nnz());
+        indptr.push(0u64);
+        for &old in perm {
+            let (d, v) = self.row(old as usize);
+            indices.extend_from_slice(d);
+            values.extend_from_slice(v);
+            indptr.push(indices.len() as u64);
+        }
+        CsrMatrix { indptr, indices, values, n_cols: self.n_cols }
+    }
+}
+
+/// CSC: column `j` occupies `rows/vals[colptr[j]..colptr[j+1]]`, rows
+/// sorted ascending — exactly the paper's inverted list I_j.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CscMatrix {
+    pub colptr: Vec<u64>,
+    pub rows: Vec<u32>,
+    pub vals: Vec<f32>,
+    pub n_rows: usize,
+}
+
+impl CscMatrix {
+    pub fn n_cols(&self) -> usize {
+        self.colptr.len().saturating_sub(1)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
+        let s = self.colptr[j] as usize;
+        let e = self.colptr[j + 1] as usize;
+        (&self.rows[s..e], &self.vals[s..e])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // rows: [ (0:1.0, 2:2.0), (1:3.0), (), (0:4.0, 1:5.0, 3:6.0) ]
+        let rows = vec![
+            SparseVector::new(vec![0, 2], vec![1.0, 2.0]),
+            SparseVector::new(vec![1], vec![3.0]),
+            SparseVector::default(),
+            SparseVector::new(vec![0, 1, 3], vec![4.0, 5.0, 6.0]),
+        ];
+        CsrMatrix::from_rows(&rows, 4)
+    }
+
+    #[test]
+    fn shape_and_rows() {
+        let m = sample();
+        assert_eq!(m.n_rows(), 4);
+        assert_eq!(m.nnz(), 6);
+        assert_eq!(m.row(0), (&[0u32, 2][..], &[1.0f32, 2.0][..]));
+        assert_eq!(m.row(2).0.len(), 0);
+    }
+
+    #[test]
+    fn col_nnz_counts() {
+        assert_eq!(sample().col_nnz(), vec![2, 2, 1, 1]);
+    }
+
+    #[test]
+    fn transpose_is_inverted_index() {
+        let t = sample().transpose();
+        assert_eq!(t.n_cols(), 4);
+        assert_eq!(t.n_rows, 4);
+        let (rows, vals) = t.col(0);
+        assert_eq!(rows, &[0, 3]);
+        assert_eq!(vals, &[1.0, 4.0]);
+        let (rows, vals) = t.col(1);
+        assert_eq!(rows, &[1, 3]);
+        assert_eq!(vals, &[3.0, 5.0]);
+        // row lists within each column are sorted
+        for j in 0..t.n_cols() {
+            let (r, _) = t.col(j);
+            assert!(r.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn row_dot_matches_sparse_dot() {
+        let m = sample();
+        let q = SparseVector::new(vec![0, 1, 3], vec![1.0, -1.0, 0.5]);
+        for i in 0..m.n_rows() {
+            assert_eq!(m.row_dot(i, &q), m.row_vec(i).dot(&q));
+        }
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        let m = sample();
+        let perm = vec![3u32, 2, 1, 0];
+        let p = m.permute_rows(&perm);
+        assert_eq!(p.row_vec(0), m.row_vec(3));
+        assert_eq!(p.row_vec(3), m.row_vec(0));
+        let back = p.permute_rows(&perm);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn transpose_roundtrip_preserves_nnz() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.nnz(), m.nnz());
+        let total: f32 = t.vals.iter().sum();
+        let orig: f32 = m.values.iter().sum();
+        assert!((total - orig).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,167 @@
+//! Dense row-major matrix + vector ops for the dense component xᴰ.
+
+/// Row-major dense matrix: `n` rows of dimension `dim`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DenseMatrix {
+    pub data: Vec<f32>,
+    pub dim: usize,
+}
+
+impl DenseMatrix {
+    pub fn zeros(n: usize, dim: usize) -> Self {
+        DenseMatrix { data: vec![0.0; n * dim], dim }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        if rows.is_empty() {
+            return DenseMatrix { data: Vec::new(), dim: 0 };
+        }
+        let dim = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * dim);
+        for r in rows {
+            assert_eq!(r.len(), dim, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        DenseMatrix { data, dim }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.data.len() / self.dim
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        if self.n_rows() == 0 && self.dim == 0 {
+            self.dim = row.len();
+        }
+        assert_eq!(row.len(), self.dim);
+        self.data.extend_from_slice(row);
+    }
+
+    /// Column means (for whitening / centering).
+    pub fn col_means(&self) -> Vec<f32> {
+        let n = self.n_rows();
+        let mut m = vec![0.0f64; self.dim];
+        for i in 0..n {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                m[j] += v as f64;
+            }
+        }
+        m.iter().map(|&s| (s / n.max(1) as f64) as f32).collect()
+    }
+}
+
+/// Unrolled dense dot product — the scalar hot loop for brute force and
+/// residual reordering. LLVM auto-vectorizes the 4-lane accumulator split.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8 * 8;
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i < chunks {
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+        i += 8;
+    }
+    let mut s = acc.iter().sum::<f32>();
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+#[inline]
+pub fn norm_sq(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// a += s * b
+#[inline]
+pub fn axpy(a: &mut [f32], s: f32, b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += s * y;
+    }
+}
+
+/// Squared euclidean distance.
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_shape_and_rows() {
+        let m = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.dim, 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn push_row_sets_dim() {
+        let mut m = DenseMatrix::default();
+        m.push_row(&[1.0, 2.0, 3.0]);
+        m.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.dim, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_row_rejects_ragged() {
+        let mut m = DenseMatrix::from_rows(&[vec![1.0, 2.0]]);
+        m.push_row(&[1.0]);
+    }
+
+    #[test]
+    fn dot_matches_naive_all_lengths() {
+        for n in 0..40 {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5 - 3.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| 1.0 - i as f32 * 0.25).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_and_dist() {
+        let mut a = vec![1.0, 2.0];
+        axpy(&mut a, 2.0, &[10.0, 20.0]);
+        assert_eq!(a, vec![21.0, 42.0]);
+        assert_eq!(dist_sq(&[0.0, 3.0], &[4.0, 0.0]), 25.0);
+    }
+
+    #[test]
+    fn col_means() {
+        let m = DenseMatrix::from_rows(&[vec![1.0, 10.0], vec![3.0, 30.0]]);
+        assert_eq!(m.col_means(), vec![2.0, 20.0]);
+    }
+}

@@ -1,0 +1,169 @@
+//! The hybrid dataset X and queries q (§2.1): every datapoint is a sparse
+//! vector xˢ concatenated with a dense vector xᴰ; inner product decomposes
+//! as q·x = qˢ·xˢ + qᴰ·xᴰ (Eq. 1).
+
+use crate::types::csr::CsrMatrix;
+use crate::types::dense::{self, DenseMatrix};
+use crate::types::sparse::SparseVector;
+
+/// A query's hybrid vector (owned; queries are few, datapoints many).
+#[derive(Clone, Debug, Default)]
+pub struct HybridQuery {
+    pub sparse: SparseVector,
+    pub dense: Vec<f32>,
+}
+
+/// Column-oriented hybrid dataset: CSR sparse component + row-major dense
+/// component, row i of each describing datapoint i.
+#[derive(Clone, Debug, Default)]
+pub struct HybridDataset {
+    pub sparse: CsrMatrix,
+    pub dense: DenseMatrix,
+}
+
+impl HybridDataset {
+    pub fn new(sparse: CsrMatrix, dense: DenseMatrix) -> Self {
+        assert_eq!(
+            sparse.n_rows(),
+            dense.n_rows(),
+            "sparse/dense row count mismatch"
+        );
+        HybridDataset { sparse, dense }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sparse.n_rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn sparse_dim(&self) -> usize {
+        self.sparse.n_cols
+    }
+
+    pub fn dense_dim(&self) -> usize {
+        self.dense.dim
+    }
+
+    /// Exact hybrid inner product q·x_i (Eq. 1). The ground-truth oracle.
+    pub fn dot(&self, i: usize, q: &HybridQuery) -> f32 {
+        self.sparse.row_dot(i, &q.sparse)
+            + dense::dot(self.dense.row(i), &q.dense)
+    }
+
+    /// Reorder datapoints by `perm` (new i = old perm[i]); used after
+    /// cache sorting to keep sparse/dense rows aligned.
+    pub fn permute(&self, perm: &[u32]) -> HybridDataset {
+        let sparse = self.sparse.permute_rows(perm);
+        let mut dense = DenseMatrix::zeros(self.len(), self.dense.dim);
+        for (new_i, &old) in perm.iter().enumerate() {
+            dense.row_mut(new_i).copy_from_slice(self.dense.row(old as usize));
+        }
+        HybridDataset { sparse, dense }
+    }
+
+    /// Split into `k` contiguous shards (for the coordinator). Returns the
+    /// shards plus each shard's global base offset.
+    pub fn shard(&self, k: usize) -> Vec<(usize, HybridDataset)> {
+        let n = self.len();
+        let k = k.max(1).min(n.max(1));
+        let per = n.div_ceil(k);
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let end = (start + per).min(n);
+            let rows: Vec<SparseVector> =
+                (start..end).map(|i| self.sparse.row_vec(i)).collect();
+            let sp = CsrMatrix::from_rows(&rows, self.sparse.n_cols);
+            let mut dm = DenseMatrix::zeros(end - start, self.dense.dim);
+            for i in start..end {
+                dm.row_mut(i - start).copy_from_slice(self.dense.row(i));
+            }
+            out.push((start, HybridDataset::new(sp, dm)));
+            start = end;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> HybridDataset {
+        let rows = vec![
+            SparseVector::new(vec![0, 2], vec![1.0, 2.0]),
+            SparseVector::new(vec![1], vec![3.0]),
+            SparseVector::new(vec![0, 1], vec![-1.0, 0.5]),
+        ];
+        let sparse = CsrMatrix::from_rows(&rows, 3);
+        let dense = DenseMatrix::from_rows(&[
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![0.5, 0.5],
+        ]);
+        HybridDataset::new(sparse, dense)
+    }
+
+    fn q() -> HybridQuery {
+        HybridQuery {
+            sparse: SparseVector::new(vec![0, 1], vec![2.0, 1.0]),
+            dense: vec![1.0, -1.0],
+        }
+    }
+
+    #[test]
+    fn dot_decomposes() {
+        let d = toy();
+        let q = q();
+        // x0: sparse 2*1 = 2 ; dense 1*1 + 0*-1 = 1 -> 3
+        assert_eq!(d.dot(0, &q), 3.0);
+        // x1: sparse 1*3 = 3 ; dense -1 -> 2
+        assert_eq!(d.dot(1, &q), 2.0);
+        // x2: 2*-1 + 1*0.5 = -1.5 ; dense 0 -> -1.5
+        assert_eq!(d.dot(2, &q), -1.5);
+    }
+
+    #[test]
+    fn permute_preserves_dots() {
+        let d = toy();
+        let q = q();
+        let perm = vec![2u32, 0, 1];
+        let p = d.permute(&perm);
+        for (new_i, &old) in perm.iter().enumerate() {
+            assert_eq!(p.dot(new_i, &q), d.dot(old as usize, &q));
+        }
+    }
+
+    #[test]
+    fn shard_covers_all_rows() {
+        let d = toy();
+        let q = q();
+        let shards = d.shard(2);
+        assert_eq!(shards.len(), 2);
+        let mut dots = Vec::new();
+        for (base, s) in &shards {
+            for i in 0..s.len() {
+                dots.push((base + i, s.dot(i, &q)));
+            }
+        }
+        dots.sort_by_key(|x| x.0);
+        assert_eq!(dots.len(), 3);
+        for (i, (_, v)) in dots.iter().enumerate() {
+            assert_eq!(*v, d.dot(i, &q));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_rows_rejected() {
+        let sparse = CsrMatrix::from_rows(
+            &[SparseVector::new(vec![0], vec![1.0])],
+            1,
+        );
+        let dense = DenseMatrix::from_rows(&[vec![1.0], vec![2.0]]);
+        HybridDataset::new(sparse, dense);
+    }
+}

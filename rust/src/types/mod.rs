@@ -1,0 +1,13 @@
+//! Core vector/matrix types: sparse vectors (sorted coordinate lists), CSR
+//! matrices, dense row-major matrices, and the hybrid dataset that combines
+//! them (paper §2.1: x = xˢ ⊕ xᴰ).
+
+pub mod csr;
+pub mod dense;
+pub mod hybrid;
+pub mod sparse;
+
+pub use csr::CsrMatrix;
+pub use dense::DenseMatrix;
+pub use hybrid::{HybridDataset, HybridQuery};
+pub use sparse::SparseVector;

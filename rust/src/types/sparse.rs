@@ -1,0 +1,169 @@
+//! Sparse vectors: sorted (dim, value) coordinate lists.
+//!
+//! The paper's xˢ ∈ R^{dˢ} with only nz(x) entries stored (§2.2). Dims are
+//! `u32` (dˢ up to 4.3B — QuerySim is 10⁹-dimensional) and values `f32`.
+
+/// Immutable sparse vector with strictly increasing dims.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVector {
+    pub dims: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl SparseVector {
+    pub fn new(dims: Vec<u32>, vals: Vec<f32>) -> Self {
+        debug_assert_eq!(dims.len(), vals.len());
+        debug_assert!(
+            dims.windows(2).all(|w| w[0] < w[1]),
+            "dims must be strictly increasing"
+        );
+        SparseVector { dims, vals }
+    }
+
+    /// Build from unsorted (dim, val) pairs; duplicate dims are summed.
+    pub fn from_pairs(mut pairs: Vec<(u32, f32)>) -> Self {
+        pairs.sort_unstable_by_key(|p| p.0);
+        let mut dims = Vec::with_capacity(pairs.len());
+        let mut vals: Vec<f32> = Vec::with_capacity(pairs.len());
+        for (d, v) in pairs {
+            if dims.last() == Some(&d) {
+                *vals.last_mut().unwrap() += v;
+            } else {
+                dims.push(d);
+                vals.push(v);
+            }
+        }
+        SparseVector { dims, vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dims.is_empty()
+    }
+
+    /// Sparse-sparse inner product via sorted-merge (exact).
+    pub fn dot(&self, other: &SparseVector) -> f32 {
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut acc = 0.0f32;
+        while i < self.dims.len() && j < other.dims.len() {
+            match self.dims[i].cmp(&other.dims[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += self.vals[i] * other.vals[j];
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        acc
+    }
+
+    pub fn norm_sq(&self) -> f32 {
+        self.vals.iter().map(|v| v * v).sum()
+    }
+
+    pub fn norm(&self) -> f32 {
+        self.norm_sq().sqrt()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.vals {
+            *v *= s;
+        }
+    }
+
+    /// Value at `dim` (binary search), 0.0 if absent.
+    pub fn get(&self, dim: u32) -> f32 {
+        match self.dims.binary_search(&dim) {
+            Ok(i) => self.vals[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Split by a per-dimension predicate: (kept, removed). Used by §4.2
+    /// pruning: kept = |v| >= η_j, removed = residual.
+    pub fn partition<F: Fn(u32, f32) -> bool>(
+        &self,
+        keep: F,
+    ) -> (SparseVector, SparseVector) {
+        let mut kd = Vec::new();
+        let mut kv = Vec::new();
+        let mut rd = Vec::new();
+        let mut rv = Vec::new();
+        for (&d, &v) in self.dims.iter().zip(&self.vals) {
+            if keep(d, v) {
+                kd.push(d);
+                kv.push(v);
+            } else {
+                rd.push(d);
+                rv.push(v);
+            }
+        }
+        (SparseVector::new(kd, kv), SparseVector::new(rd, rv))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.dims.iter().copied().zip(self.vals.iter().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(pairs: &[(u32, f32)]) -> SparseVector {
+        SparseVector::from_pairs(pairs.to_vec())
+    }
+
+    #[test]
+    fn from_pairs_sorts_and_merges_duplicates() {
+        let v = sv(&[(5, 1.0), (1, 2.0), (5, 3.0)]);
+        assert_eq!(v.dims, vec![1, 5]);
+        assert_eq!(v.vals, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_matches_dense_equivalent() {
+        let a = sv(&[(0, 1.0), (3, 2.0), (7, -1.5)]);
+        let b = sv(&[(3, 4.0), (5, 9.0), (7, 2.0)]);
+        assert_eq!(a.dot(&b), 2.0 * 4.0 + (-1.5) * 2.0);
+        assert_eq!(a.dot(&b), b.dot(&a));
+    }
+
+    #[test]
+    fn dot_disjoint_is_zero() {
+        let a = sv(&[(0, 1.0), (2, 1.0)]);
+        let b = sv(&[(1, 1.0), (3, 1.0)]);
+        assert_eq!(a.dot(&b), 0.0);
+    }
+
+    #[test]
+    fn dot_with_empty() {
+        let a = sv(&[(0, 1.0)]);
+        assert_eq!(a.dot(&SparseVector::default()), 0.0);
+    }
+
+    #[test]
+    fn get_and_norm() {
+        let a = sv(&[(2, 3.0), (9, 4.0)]);
+        assert_eq!(a.get(2), 3.0);
+        assert_eq!(a.get(3), 0.0);
+        assert_eq!(a.norm(), 5.0);
+    }
+
+    #[test]
+    fn partition_reconstructs() {
+        let a = sv(&[(1, 0.1), (2, 5.0), (3, -0.01), (8, -7.0)]);
+        let (kept, removed) = a.partition(|_, v| v.abs() >= 1.0);
+        assert_eq!(kept.dims, vec![2, 8]);
+        assert_eq!(removed.dims, vec![1, 3]);
+        // kept + removed == original (dot with arbitrary probe agrees)
+        let probe = sv(&[(1, 1.0), (2, 1.0), (3, 1.0), (8, 1.0)]);
+        let together = kept.dot(&probe) + removed.dot(&probe);
+        assert!((together - a.dot(&probe)).abs() < 1e-6);
+    }
+}

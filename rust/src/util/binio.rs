@@ -1,0 +1,269 @@
+//! Versioned little-endian binary (de)serialization for index persistence
+//! (offline substitute for serde/bincode).
+//!
+//! Layout: `MAGIC (8) | VERSION (4) | payload`. All integers are LE; slices
+//! are length-prefixed with u64. Used by `hybrid::index` save/load and the
+//! CLI `build`/`search` subcommands.
+
+use std::io::{self, Read, Write};
+
+pub const MAGIC: &[u8; 8] = b"HYBIDX01";
+pub const VERSION: u32 = 2;
+
+pub struct BinWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> BinWriter<W> {
+    pub fn new(mut w: W) -> io::Result<Self> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        Ok(BinWriter { w })
+    }
+
+    /// Writer without header (for nested sections).
+    pub fn raw(w: W) -> Self {
+        BinWriter { w }
+    }
+
+    pub fn u8(&mut self, v: u8) -> io::Result<()> {
+        self.w.write_all(&[v])
+    }
+
+    pub fn u32(&mut self, v: u32) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn u64(&mut self, v: u64) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn f32(&mut self, v: f32) -> io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn usize(&mut self, v: usize) -> io::Result<()> {
+        self.u64(v as u64)
+    }
+
+    pub fn str_(&mut self, s: &str) -> io::Result<()> {
+        self.usize(s.len())?;
+        self.w.write_all(s.as_bytes())
+    }
+
+    pub fn slice_u8(&mut self, v: &[u8]) -> io::Result<()> {
+        self.usize(v.len())?;
+        self.w.write_all(v)
+    }
+
+    pub fn slice_u32(&mut self, v: &[u32]) -> io::Result<()> {
+        self.usize(v.len())?;
+        for x in v {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn slice_u64(&mut self, v: &[u64]) -> io::Result<()> {
+        self.usize(v.len())?;
+        for x in v {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn slice_f32(&mut self, v: &[f32]) -> io::Result<()> {
+        self.usize(v.len())?;
+        // bulk-copy: f32 slices dominate index size
+        let bytes = unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+        };
+        self.w.write_all(bytes)
+    }
+
+    pub fn finish(mut self) -> io::Result<W> {
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+pub struct BinReader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> BinReader<R> {
+    pub fn new(mut r: R) -> io::Result<Self> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "bad magic: not a hybrid-ip index file",
+            ));
+        }
+        let mut ver = [0u8; 4];
+        r.read_exact(&mut ver)?;
+        let version = u32::from_le_bytes(ver);
+        if version != VERSION {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("index version {version} != supported {VERSION}"),
+            ));
+        }
+        Ok(BinReader { r })
+    }
+
+    pub fn raw(r: R) -> Self {
+        BinReader { r }
+    }
+
+    pub fn u8(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.r.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub fn u32(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn f32(&mut self) -> io::Result<f32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(f32::from_le_bytes(b))
+    }
+
+    pub fn usize(&mut self) -> io::Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn len_checked(&mut self, elem: usize) -> io::Result<usize> {
+        let n = self.usize()?;
+        // Guard against corrupt headers allocating petabytes.
+        if n.saturating_mul(elem) > (1 << 40) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("implausible slice length {n}"),
+            ));
+        }
+        Ok(n)
+    }
+
+    pub fn str_(&mut self) -> io::Result<String> {
+        let n = self.len_checked(1)?;
+        let mut buf = vec![0u8; n];
+        self.r.read_exact(&mut buf)?;
+        String::from_utf8(buf)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+
+    pub fn slice_u8(&mut self) -> io::Result<Vec<u8>> {
+        let n = self.len_checked(1)?;
+        let mut buf = vec![0u8; n];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    pub fn slice_u32(&mut self) -> io::Result<Vec<u32>> {
+        let n = self.len_checked(4)?;
+        let mut buf = vec![0u8; n * 4];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn slice_u64(&mut self) -> io::Result<Vec<u64>> {
+        let n = self.len_checked(8)?;
+        let mut buf = vec![0u8; n * 8];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn slice_f32(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.len_checked(4)?;
+        let mut buf = vec![0u8; n * 4];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut buf = Vec::new();
+        {
+            let mut w = BinWriter::new(&mut buf).unwrap();
+            w.u8(7).unwrap();
+            w.u32(0xDEAD_BEEF).unwrap();
+            w.u64(u64::MAX).unwrap();
+            w.f32(-1.5).unwrap();
+            w.str_("héllo").unwrap();
+            w.slice_u32(&[1, 2, 3]).unwrap();
+            w.slice_f32(&[0.1, -0.2, f32::MAX]).unwrap();
+            w.slice_u8(&[9, 8]).unwrap();
+            w.finish().unwrap();
+        }
+        let mut r = BinReader::new(Cursor::new(&buf)).unwrap();
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.str_().unwrap(), "héllo");
+        assert_eq!(r.slice_u32().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.slice_f32().unwrap(), vec![0.1, -0.2, f32::MAX]);
+        assert_eq!(r.slice_u8().unwrap(), vec![9, 8]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOTMAGIC\x01\x00\x00\x00".to_vec();
+        assert!(BinReader::new(Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let mut buf = MAGIC.to_vec();
+        buf.extend_from_slice(&999u32.to_le_bytes());
+        assert!(BinReader::new(Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_slice() {
+        let mut buf = Vec::new();
+        let mut w = BinWriter::new(&mut buf).unwrap();
+        w.slice_u32(&[1, 2, 3, 4]).unwrap();
+        w.finish().unwrap();
+        buf.truncate(buf.len() - 4);
+        let mut r = BinReader::new(Cursor::new(&buf)).unwrap();
+        assert!(r.slice_u32().is_err());
+    }
+
+    #[test]
+    fn rejects_implausible_length() {
+        let mut buf = MAGIC.to_vec();
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut r = BinReader::new(Cursor::new(&buf)).unwrap();
+        assert!(r.slice_f32().is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Tiny declarative CLI flag parser (offline substitute for clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! subcommands, typed getters with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_bool: bool,
+}
+
+#[derive(Default)]
+pub struct CliSpec {
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl CliSpec {
+    pub fn new(about: &'static str) -> Self {
+        CliSpec { about, flags: Vec::new() }
+    }
+
+    pub fn flag(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.flags.push(FlagSpec { name, help, default: Some(default), is_bool: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_bool: false });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: Some("false"), is_bool: true });
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}\n\nUSAGE: {prog} [flags]\n\nFLAGS:", self.about);
+        for f in &self.flags {
+            let d = match f.default {
+                Some(d) if !f.is_bool => format!(" (default: {d})"),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  --{:<22} {}{}", f.name, f.help, d);
+        }
+        let _ = writeln!(s, "  --{:<22} print this help", "help");
+        s
+    }
+
+    /// Parse argv (after the subcommand). Returns Err(message) on bad input
+    /// or when --help is requested (message is the usage text).
+    pub fn parse(&self, prog: &str, argv: &[String]) -> Result<Args, String> {
+        let mut vals: BTreeMap<String, String> = BTreeMap::new();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                vals.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(stripped) = a.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument '{a}'\n\n{}", self.usage(prog)));
+            };
+            if stripped == "help" {
+                return Err(self.usage(prog));
+            }
+            let (key, inline_val) = match stripped.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            let Some(spec) = self.flags.iter().find(|f| f.name == key) else {
+                return Err(format!("unknown flag '--{key}'\n\n{}", self.usage(prog)));
+            };
+            let val = if spec.is_bool {
+                match inline_val {
+                    Some(v) => v,
+                    None => "true".to_string(),
+                }
+            } else {
+                match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("flag '--{key}' expects a value"))?
+                    }
+                }
+            };
+            vals.insert(key, val);
+            i += 1;
+        }
+        for f in &self.flags {
+            if !vals.contains_key(f.name) {
+                return Err(format!("missing required flag '--{}'\n\n{}", f.name, self.usage(prog)));
+            }
+        }
+        Ok(Args { vals })
+    }
+}
+
+#[derive(Debug)]
+pub struct Args {
+    vals: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn str_(&self, name: &str) -> &str {
+        self.vals
+            .get(name)
+            .unwrap_or_else(|| panic!("flag '{name}' not in spec"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_or_die(name)
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_or_die(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_or_die(name)
+    }
+
+    pub fn f32(&self, name: &str) -> f32 {
+        self.parse_or_die(name)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.str_(name), "true" | "1" | "yes")
+    }
+
+    fn parse_or_die<T: std::str::FromStr>(&self, name: &str) -> T {
+        let raw = self.str_(name);
+        raw.parse().unwrap_or_else(|_| {
+            eprintln!("invalid value '{raw}' for flag '--{name}'");
+            std::process::exit(2)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CliSpec {
+        CliSpec::new("test")
+            .flag("n", "100", "count")
+            .flag("alpha", "2.0", "exponent")
+            .switch("verbose", "talk more")
+            .req("out", "output path")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = spec()
+            .parse("t", &argv(&["--out", "x.bin", "--n=500"]))
+            .unwrap();
+        assert_eq!(a.usize("n"), 500);
+        assert_eq!(a.f64("alpha"), 2.0);
+        assert!(!a.bool("verbose"));
+        assert_eq!(a.str_("out"), "x.bin");
+    }
+
+    #[test]
+    fn switch_forms() {
+        let a = spec()
+            .parse("t", &argv(&["--out", "o", "--verbose"]))
+            .unwrap();
+        assert!(a.bool("verbose"));
+        let a = spec()
+            .parse("t", &argv(&["--out", "o", "--verbose=false"]))
+            .unwrap();
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(spec().parse("t", &argv(&["--n", "5"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(spec()
+            .parse("t", &argv(&["--out", "o", "--bogus", "1"]))
+            .is_err());
+    }
+
+    #[test]
+    fn help_yields_usage() {
+        let err = spec().parse("t", &argv(&["--help"])).unwrap_err();
+        assert!(err.contains("USAGE"));
+        assert!(err.contains("--alpha"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Zero-dependency substrates (the offline environment carries only the
+//! `xla` crate's dep tree, so rand / rayon / clap / serde / proptest
+//! equivalents live here — see DESIGN.md §4).
+
+pub mod binio;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod simd;
+pub mod threadpool;
+pub mod timer;

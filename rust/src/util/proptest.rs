@@ -1,0 +1,130 @@
+//! Seeded property-testing mini-framework (offline substitute for proptest).
+//!
+//! `forall(N_CASES, seed, |g| { ... })` runs a closure over N generated
+//! cases; on panic/failure it reports the failing case seed so the exact
+//! case replays with `replay(seed, |g| ...)`. No shrinking — failing seeds
+//! are deterministic and the generators are kept small instead.
+
+use crate::util::rng::Rng;
+
+/// Case-local generator handed to property bodies.
+pub struct Gen {
+    pub rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_gauss(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.gauss_f32()).collect()
+    }
+
+    /// Random sparse vector: `nnz` distinct dims in [0, dim), gaussian vals.
+    pub fn sparse(&mut self, dim: usize, nnz: usize) -> (Vec<u32>, Vec<f32>) {
+        let nnz = nnz.min(dim);
+        let mut dims: Vec<u32> = self
+            .rng
+            .sample_indices(dim, nnz)
+            .into_iter()
+            .map(|d| d as u32)
+            .collect();
+        dims.sort_unstable();
+        let vals = (0..nnz)
+            .map(|_| {
+                // avoid exact zeros so nnz semantics stay crisp
+                let v = self.rng.gauss_f32();
+                if v == 0.0 {
+                    1e-3
+                } else {
+                    v
+                }
+            })
+            .collect();
+        (dims, vals)
+    }
+}
+
+/// Run `cases` property checks with deterministic sub-seeds derived from
+/// `root_seed`. Panics (with the case seed in the message) on first failure.
+pub fn forall<F: FnMut(&mut Gen)>(cases: usize, root_seed: u64, mut body: F) {
+    let mut master = Rng::new(root_seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64() ^ (case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let mut g =
+                    Gen { rng: Rng::new(case_seed), case_seed };
+                body(&mut g);
+            },
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed at case {case}/{cases} \
+                 (replay seed: {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn replay<F: FnOnce(&mut Gen)>(case_seed: u64, body: F) {
+    let mut g = Gen { rng: Rng::new(case_seed), case_seed };
+    body(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall(50, 1, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x <= 100);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(50, 2, |g| {
+                let x = g.usize_in(0, 100);
+                assert!(x < 95, "x={x}"); // will eventually fail
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn sparse_gen_is_sorted_distinct() {
+        forall(30, 3, |g| {
+            let dim = g.usize_in(1, 200);
+            let nnz = g.usize_in(0, dim);
+            let (dims, vals) = g.sparse(dim, nnz);
+            assert_eq!(dims.len(), vals.len());
+            assert!(dims.windows(2).all(|w| w[0] < w[1]));
+            assert!(dims.iter().all(|&d| (d as usize) < dim));
+            assert!(vals.iter().all(|&v| v != 0.0));
+        });
+    }
+}

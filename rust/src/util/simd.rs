@@ -1,0 +1,53 @@
+//! CPU feature detection + cache geometry constants.
+//!
+//! The paper's LUT16 path (§4.1.2) needs AVX2's VPSHUFB; we detect it once
+//! at startup and dispatch. The cache-line constants parameterize the §3
+//! cost model and the accumulator layout.
+
+/// x86 cache-line size in bytes (§3.1: "64-byte cache-lines").
+pub const CACHE_LINE_BYTES: usize = 64;
+
+/// f32 accumulator slots per cache-line (B = 16 in the paper's notation).
+pub const F32_PER_LINE: usize = CACHE_LINE_BYTES / 4;
+
+/// u16 accumulator slots per cache-line (B = 32).
+pub const U16_PER_LINE: usize = CACHE_LINE_BYTES / 2;
+
+/// True when the AVX2 in-register LUT16 kernel can run on this host.
+#[inline]
+pub fn has_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// One-line capability summary for logs/bench headers.
+pub fn capability_string() -> String {
+    format!(
+        "arch={} avx2={} threads={}",
+        std::env::consts::ARCH,
+        has_avx2(),
+        crate::util::threadpool::default_threads()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_consistent() {
+        assert_eq!(F32_PER_LINE, 16); // paper: B=16 for 32-bit accumulators
+        assert_eq!(U16_PER_LINE, 32); // paper: B=32 for 16-bit accumulators
+    }
+
+    #[test]
+    fn capability_string_mentions_arch() {
+        assert!(capability_string().contains("arch="));
+    }
+}

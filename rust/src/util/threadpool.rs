@@ -1,0 +1,243 @@
+//! Minimal threading substrate (offline substitute for rayon/tokio).
+//!
+//! Two pieces:
+//!  * [`parallel_for`] / [`parallel_map`] — scoped data-parallel loops with
+//!    atomic chunk stealing, used by ground-truth brute force, index builds
+//!    and PQ training.
+//!  * [`ThreadPool`] — a long-lived job queue (mpsc + workers) that the
+//!    coordinator builds its shard workers on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default (leave one core for the OS).
+pub fn default_threads() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+/// Run `body(start, end)` over chunks of `0..n` on `threads` workers.
+/// Chunks are claimed with an atomic cursor so uneven work self-balances.
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, chunk: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        body(0, n);
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let chunk = chunk.max(1);
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                body(start, (start + chunk).min(n));
+            });
+        }
+    });
+}
+
+/// `parallel_for(n, threads, f)` calls `f(i)` for every `i in 0..n`.
+pub fn parallel_for<F>(n: usize, threads: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let chunk = (n / (threads.max(1) * 8)).max(1);
+    parallel_for_chunks(n, threads, chunk, |s, e| {
+        for i in s..e {
+            body(i);
+        }
+    });
+}
+
+/// Map `0..n` to a Vec, computed in parallel, order-preserving.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let out_ptr = SharedMutPtr::new(out.as_mut_ptr());
+        let chunk = (n / (threads.max(1) * 8)).max(1);
+        parallel_for_chunks(n, threads, chunk, |s, e| {
+            for i in s..e {
+                // SAFETY: each index is written by exactly one worker.
+                unsafe { *out_ptr.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Wrapper making a raw pointer shareable across scoped workers for
+/// writes to *disjoint* indices. The accessor method keeps edition-2021
+/// closures capturing the wrapper (Sync) rather than the raw field.
+pub struct SharedMutPtr<T>(*mut T);
+unsafe impl<T> Sync for SharedMutPtr<T> {}
+unsafe impl<T> Send for SharedMutPtr<T> {}
+
+impl<T> SharedMutPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        SharedMutPtr(p)
+    }
+
+    /// SAFETY: caller guarantees disjoint-index access across threads and
+    /// that the pointee outlives the parallel region.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn add(&self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Long-lived worker pool with a shared job queue.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Message>,
+    handles: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            handles.push(thread::spawn(move || loop {
+                let msg = { rx.lock().unwrap().recv() };
+                match msg {
+                    Ok(Message::Run(job)) => {
+                        job();
+                        let (lock, cv) = &*pending;
+                        let mut p = lock.lock().unwrap();
+                        *p -= 1;
+                        if *p == 0 {
+                            cv.notify_all();
+                        }
+                    }
+                    Ok(Message::Shutdown) | Err(_) => break,
+                }
+            }));
+        }
+        ThreadPool { tx, handles, pending }
+    }
+
+    /// Submit a job; `join()` waits for all submitted jobs.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .send(Message::Run(Box::new(f)))
+            .expect("pool shut down");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, 8, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(1000, 8, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_for_zero_and_one() {
+        parallel_for(0, 4, |_| panic!("must not run"));
+        let count = AtomicUsize::new(0);
+        parallel_for(1, 4, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_joins() {
+        let pool = ThreadPool::new(4);
+        let sum = Arc::new(AtomicU64::new(0));
+        for i in 0..100u64 {
+            let sum = Arc::clone(&sum);
+            pool.execute(move || {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn pool_join_idempotent_and_reusable() {
+        let pool = ThreadPool::new(2);
+        pool.join(); // nothing pending
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&flag);
+        pool.execute(move || {
+            f2.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.join();
+        assert_eq!(flag.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,79 @@
+//! Timing helpers shared by benchkit and the coordinator's metrics.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Human-friendly duration: "1.23 µs", "45.6 ms", "2.3 s".
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+/// "1.2 K", "3.4 M", "5.6 G" etc.
+pub fn fmt_count(n: f64) -> String {
+    if n.abs() >= 1e9 {
+        format!("{:.2} G", n / 1e9)
+    } else if n.abs() >= 1e6 {
+        format!("{:.2} M", n / 1e6)
+    } else if n.abs() >= 1e3 {
+        format!("{:.2} K", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.ms() >= 1.0);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500.0 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(42)), "42.00 µs");
+        assert_eq!(fmt_duration(Duration::from_millis(42)), "42.00 ms");
+        assert_eq!(fmt_count(1500.0), "1.50 K");
+        assert_eq!(fmt_count(2.5e6), "2.50 M");
+        assert_eq!(fmt_count(42.0), "42");
+    }
+}

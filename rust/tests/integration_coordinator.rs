@@ -1,0 +1,139 @@
+//! Integration: the sharded serving engine — recall parity with a single
+//! index, metrics sanity, batching behaviour under load.
+
+use hybrid_ip::coordinator::batcher::{BatchPolicy, Batcher};
+use hybrid_ip::coordinator::{Server, ServerConfig};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::eval::ground_truth::exact_top_k;
+use hybrid_ip::eval::recall::recall_at;
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::search::search;
+
+fn dataset(n: usize, seed: u64) -> (QuerySimConfig, hybrid_ip::types::hybrid::HybridDataset) {
+    let mut cfg = QuerySimConfig::tiny();
+    cfg.n = n;
+    cfg.sparse_dims = 2048;
+    cfg.avg_nnz = 20;
+    let data = cfg.generate(seed);
+    (cfg, data)
+}
+
+#[test]
+fn sharded_recall_matches_single_index() {
+    let (cfg, data) = dataset(800, 21);
+    let queries = cfg.related_queries(&data, 22, 10);
+    let params = SearchParams::new(10).with_alpha(20.0).with_beta(6.0);
+
+    let single = HybridIndex::build(&data, &IndexConfig::default());
+    let server = Server::start(
+        &data,
+        &ServerConfig { n_shards: 5, ..Default::default() },
+    );
+    let (mut r_single, mut r_sharded) = (0.0, 0.0);
+    for q in &queries {
+        let truth = exact_top_k(&data, q, 10);
+        let a: Vec<u32> =
+            search(&single, q, &params).iter().map(|h| h.id).collect();
+        let b: Vec<u32> = server
+            .search(q, &params)
+            .into_iter()
+            .map(|(id, _)| id)
+            .collect();
+        r_single += recall_at(&truth, &a, 10);
+        r_sharded += recall_at(&truth, &b, 10);
+    }
+    let n = queries.len() as f64;
+    // sharding only *helps* recall (each shard overfetches αh locally)
+    assert!(
+        r_sharded / n >= r_single / n - 0.05,
+        "sharded {} vs single {}",
+        r_sharded / n,
+        r_single / n
+    );
+    assert!(r_sharded / n >= 0.85);
+}
+
+#[test]
+fn metrics_capture_every_query() {
+    let (cfg, data) = dataset(300, 23);
+    let queries = cfg.generate_queries(24, 25);
+    let server = Server::start(
+        &data,
+        &ServerConfig { n_shards: 3, ..Default::default() },
+    );
+    for q in &queries {
+        let hits = server.search(q, &SearchParams::new(5));
+        assert_eq!(hits.len(), 5);
+        // scores sorted desc
+        assert!(hits.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+    let m = server.snapshot();
+    assert_eq!(m.count, 25);
+    assert!(m.qps > 0.0);
+    assert!(m.p50 <= m.p99);
+}
+
+#[test]
+fn concurrent_clients_share_the_cluster() {
+    let (cfg, data) = dataset(400, 25);
+    let queries = cfg.related_queries(&data, 26, 16);
+    let server = std::sync::Arc::new(Server::start(
+        &data,
+        &ServerConfig { n_shards: 4, ..Default::default() },
+    ));
+    let params = SearchParams::new(8);
+    std::thread::scope(|sc| {
+        for t in 0..4 {
+            let server = std::sync::Arc::clone(&server);
+            let queries = &queries;
+            sc.spawn(move || {
+                for q in queries.iter().skip(t * 4).take(4) {
+                    let hits = server.search(q, &params);
+                    assert_eq!(hits.len(), 8);
+                }
+            });
+        }
+    });
+    assert_eq!(server.snapshot().count, 16);
+}
+
+#[test]
+fn batcher_flushes_under_mixed_load() {
+    let mut b = Batcher::new(BatchPolicy {
+        max_batch: 4,
+        max_delay: std::time::Duration::from_millis(1),
+    });
+    let mut flushed = Vec::new();
+    for i in 0..10 {
+        if let Some(batch) = b.push(i) {
+            flushed.extend(batch);
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    if let Some(batch) = b.poll() {
+        flushed.extend(batch);
+    }
+    assert_eq!(flushed, (0..10).collect::<Vec<_>>());
+}
+
+#[test]
+fn global_ids_survive_sharding() {
+    let (cfg, data) = dataset(500, 27);
+    let server = Server::start(
+        &data,
+        &ServerConfig { n_shards: 7, ..Default::default() },
+    );
+    let queries = cfg.related_queries(&data, 28, 5);
+    for q in &queries {
+        for (id, score) in server.search(q, &SearchParams::new(10)) {
+            assert!((id as usize) < data.len());
+            // the reported score approximates the true hybrid IP
+            let exact = data.dot(id as usize, q);
+            assert!(
+                (score - exact).abs() < 0.25 * (1.0 + exact.abs()),
+                "id {id}: {score} vs {exact}"
+            );
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Integration: full index-build + search pipeline against exact ground
+//! truth, across datasets, configs and parameter sweeps.
+
+use hybrid_ip::data::movielens::RatingsConfig;
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::eval::ground_truth::exact_top_k;
+use hybrid_ip::eval::recall::recall_at;
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::search::{search, search_with, SearchScratch};
+
+fn querysim(n: usize, seed: u64) -> hybrid_ip::types::hybrid::HybridDataset {
+    let mut cfg = QuerySimConfig::tiny();
+    cfg.n = n;
+    cfg.sparse_dims = 2048;
+    cfg.dense_dims = 32;
+    cfg.avg_nnz = 24;
+    cfg.generate(seed)
+}
+
+#[test]
+fn recall_improves_with_alpha() {
+    let cfg = {
+        let mut c = QuerySimConfig::tiny();
+        c.n = 800;
+        c
+    };
+    let data = cfg.generate(1);
+    let queries = cfg.related_queries(&data, 2, 10);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let mut prev = -1.0;
+    for alpha in [1.0f32, 4.0, 16.0, 64.0] {
+        let params = SearchParams::new(10).with_alpha(alpha).with_beta(alpha);
+        let mut r = 0.0;
+        for q in &queries {
+            let hits = search(&index, q, &params);
+            let ids: Vec<u32> = hits.iter().map(|h| h.id).collect();
+            r += recall_at(&exact_top_k(&data, q, 10), &ids, 10);
+        }
+        r /= queries.len() as f64;
+        assert!(
+            r >= prev - 0.10,
+            "recall not (weakly) monotone in alpha: {r} after {prev}"
+        );
+        prev = prev.max(r);
+    }
+    assert!(prev >= 0.85, "max recall {prev}");
+}
+
+#[test]
+fn movielens_pipeline_end_to_end() {
+    let cfg = RatingsConfig {
+        n_users: 600,
+        svd_rank: 16,
+        ..RatingsConfig::tiny()
+    };
+    let data = cfg.generate(3);
+    let queries = cfg.generate_queries(&data, 4, 8);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let params = SearchParams::new(10).with_alpha(20.0).with_beta(5.0);
+    let mut r = 0.0;
+    for q in &queries {
+        let hits = search(&index, q, &params);
+        let ids: Vec<u32> = hits.iter().map(|h| h.id).collect();
+        r += recall_at(&exact_top_k(&data, q, 10), &ids, 10);
+    }
+    r /= queries.len() as f64;
+    assert!(r >= 0.8, "movielens recall {r}");
+}
+
+#[test]
+fn pruning_ablation_keep_top_tradeoff() {
+    let data = querysim(800, 5);
+    let cfg = {
+        let mut c = QuerySimConfig::tiny();
+        c.n = 800;
+        c.sparse_dims = 2048;
+        c.dense_dims = 32;
+        c.avg_nnz = 24;
+        c
+    };
+    let queries = cfg.related_queries(&data, 6, 8);
+    // aggressive pruning must shrink the index
+    let loose = HybridIndex::build(
+        &data,
+        &IndexConfig::default().with_keep_top(0),
+    );
+    let tight = HybridIndex::build(
+        &data,
+        &IndexConfig::default().with_keep_top(8),
+    );
+    assert!(tight.sparse_index.nnz() < loose.sparse_index.nnz());
+    // and recall with residual reordering stays high (ε=0 ⇒ exact resid)
+    let params = SearchParams::new(10).with_alpha(20.0).with_beta(8.0);
+    let mut r = 0.0;
+    for q in &queries {
+        let hits = search(&tight, q, &params);
+        let ids: Vec<u32> = hits.iter().map(|h| h.id).collect();
+        r += recall_at(&exact_top_k(&data, q, 10), &ids, 10);
+    }
+    r /= queries.len() as f64;
+    assert!(r >= 0.8, "tight-pruning recall {r}");
+}
+
+#[test]
+fn whitening_preserves_search_quality() {
+    let data = querysim(500, 7);
+    let cfg = {
+        let mut c = QuerySimConfig::tiny();
+        c.n = 500;
+        c.sparse_dims = 2048;
+        c.dense_dims = 32;
+        c.avg_nnz = 24;
+        c
+    };
+    let queries = cfg.related_queries(&data, 8, 6);
+    let white = HybridIndex::build(
+        &data,
+        &IndexConfig::default().with_whitening(true),
+    );
+    let params = SearchParams::new(10).with_alpha(20.0).with_beta(5.0);
+    let mut r = 0.0;
+    for q in &queries {
+        let hits = search(&white, q, &params);
+        let ids: Vec<u32> = hits.iter().map(|h| h.id).collect();
+        r += recall_at(&exact_top_k(&data, q, 10), &ids, 10);
+    }
+    r /= queries.len() as f64;
+    assert!(r >= 0.75, "whitened recall {r}");
+}
+
+#[test]
+fn scratch_reuse_is_equivalent_to_fresh() {
+    let data = querysim(400, 9);
+    let cfg = {
+        let mut c = QuerySimConfig::tiny();
+        c.n = 400;
+        c.sparse_dims = 2048;
+        c.dense_dims = 32;
+        c.avg_nnz = 24;
+        c
+    };
+    let queries = cfg.related_queries(&data, 10, 6);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let params = SearchParams::new(8);
+    let mut scratch = SearchScratch::new(&index);
+    for q in &queries {
+        let (reused, _) = search_with(&index, q, &params, &mut scratch);
+        let fresh = search(&index, q, &params);
+        assert_eq!(reused, fresh, "scratch reuse changed results");
+    }
+}
+
+#[test]
+fn residual_stages_actually_lift_recall() {
+    // §5's point: index-only ranking (no residual reorder) loses recall
+    // that the reordering recovers.
+    let data = querysim(900, 11);
+    let cfg = {
+        let mut c = QuerySimConfig::tiny();
+        c.n = 900;
+        c.sparse_dims = 2048;
+        c.dense_dims = 32;
+        c.avg_nnz = 24;
+        c
+    };
+    let queries = cfg.related_queries(&data, 12, 10);
+    // no dense residual + heavy pruning, alpha=1 -> stage-1 ranking only
+    let no_resid_cfg = IndexConfig {
+        dense_residual: false,
+        sparse_keep_top: 8,
+        ..Default::default()
+    };
+    let idx_plain = HybridIndex::build(&data, &no_resid_cfg);
+    let with_resid_cfg = IndexConfig {
+        dense_residual: true,
+        sparse_keep_top: 8,
+        ..Default::default()
+    };
+    let idx_resid = HybridIndex::build(&data, &with_resid_cfg);
+    let p_stage1 = SearchParams::new(10).with_alpha(1.0).with_beta(1.0);
+    let p_full = SearchParams::new(10).with_alpha(12.0).with_beta(4.0);
+    let (mut r_plain, mut r_full) = (0.0, 0.0);
+    for q in &queries {
+        let truth = exact_top_k(&data, q, 10);
+        let a: Vec<u32> = search(&idx_plain, q, &p_stage1)
+            .iter()
+            .map(|h| h.id)
+            .collect();
+        let b: Vec<u32> = search(&idx_resid, q, &p_full)
+            .iter()
+            .map(|h| h.id)
+            .collect();
+        r_plain += recall_at(&truth, &a, 10);
+        r_full += recall_at(&truth, &b, 10);
+    }
+    assert!(
+        r_full > r_plain,
+        "residual reordering should lift recall: {r_full} vs {r_plain}"
+    );
+}

@@ -1,0 +1,136 @@
+//! Integration: the three-layer composition. Load the AOT artifacts
+//! (JAX L2 + Pallas L1 lowered to HLO text) through PJRT and cross-check
+//! numerics against the rust-native dense machinery.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` has not been
+//! built — run `make artifacts` first; CI always builds them.
+
+use hybrid_ip::dense::kmeans;
+use hybrid_ip::dense::lut::QueryLut;
+use hybrid_ip::dense::pq::{PqCodebooks, PqIndex};
+use hybrid_ip::runtime::{default_artifacts_dir, XlaRuntime};
+use hybrid_ip::types::dense::DenseMatrix;
+use hybrid_ip::util::rng::Rng;
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = default_artifacts_dir();
+    match XlaRuntime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!(
+                "SKIP: artifacts unavailable at {} ({e}); run `make artifacts`",
+                dir.display()
+            );
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_all_modules() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.module_names();
+    for want in ["lut_build", "adc_score", "dense_score", "kmeans_step"] {
+        assert!(names.iter().any(|n| n == want), "missing module {want}");
+    }
+    assert_eq!(rt.manifest.config.codebook_size, 16); // LUT16
+    assert_eq!(
+        rt.manifest.config.subspaces * rt.manifest.config.sub_dims,
+        rt.manifest.config.dense_dims
+    );
+}
+
+#[test]
+fn dense_score_matches_native_exact_adc() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest.config.clone();
+    let mut rng = Rng::new(41);
+    // random data at artifact shapes
+    let n = 600usize;
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..cfg.dense_dims).map(|_| rng.gauss_f32()).collect())
+        .collect();
+    let data = DenseMatrix::from_rows(&rows);
+    let cb = PqCodebooks::train(&data, cfg.subspaces, 16, 6, 5);
+    let pq = PqIndex::build(&data, cb.clone());
+    let queries: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..cfg.dense_dims).map(|_| rng.gauss_f32()).collect())
+        .collect();
+    let codes_rows: Vec<Vec<u8>> =
+        (0..n).map(|i| pq.row_codes(i)).collect();
+    let xla = rt
+        .dense_score_block(&queries, &cb.codewords, &codes_rows)
+        .expect("xla exec");
+    for (b, q) in queries.iter().enumerate() {
+        let lut = QueryLut::build(&cb, q);
+        for i in (0..n).step_by(37) {
+            let native = lut.score_codes(&pq.row_codes(i));
+            let got = xla[b][i];
+            assert!(
+                (native - got).abs() < 1e-3,
+                "q{b} row{i}: native {native} xla {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_kmeans_step_matches_native_assignment() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest.config.clone();
+    let mut rng = Rng::new(43);
+    let n = cfg.kmeans_n; // full block: no padding bias
+    let sub = cfg.sub_dims;
+    let points: Vec<f32> =
+        (0..n * sub).map(|_| rng.gauss_f32()).collect();
+    let centroids: Vec<f32> =
+        (0..cfg.codebook_size * sub).map(|_| rng.gauss_f32()).collect();
+    let (new_c, assign, dist) =
+        rt.kmeans_step(&points, n, &centroids).expect("xla kmeans");
+    assert_eq!(new_c.len(), centroids.len());
+    assert!(dist.is_finite() && dist > 0.0);
+    // native assignment agreement
+    let pts = DenseMatrix { data: points.clone(), dim: sub };
+    let cents = DenseMatrix { data: centroids.clone(), dim: sub };
+    let (native_assign, _) = kmeans::assign(&pts, &cents);
+    let mismatches = assign
+        .iter()
+        .zip(&native_assign)
+        .filter(|(a, b)| **a as u32 != **b)
+        .count();
+    // ties on exact-equal distances may differ; must be rare
+    assert!(
+        mismatches < n / 1000 + 2,
+        "assignment mismatch {mismatches}/{n}"
+    );
+    // distortion must not increase when we re-assign to new centroids
+    let new_cents = DenseMatrix { data: new_c, dim: sub };
+    let (_, d_old) = kmeans::assign(&pts, &cents);
+    let (_, d_new) = kmeans::assign(&pts, &new_cents);
+    assert!(d_new <= d_old + 1e-3, "lloyd step increased distortion");
+}
+
+#[test]
+fn xla_driven_pq_training_converges() {
+    // Drive full PQ-subspace training through the XLA kmeans_step
+    // artifact — rust orchestrates, XLA computes (the L3/L2 contract).
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest.config.clone();
+    let mut rng = Rng::new(47);
+    let n = cfg.kmeans_n;
+    let sub = cfg.sub_dims;
+    let points: Vec<f32> = (0..n * sub)
+        .map(|_| if rng.bool(0.5) { 2.0 } else { -2.0 } + 0.1 * rng.gauss_f32())
+        .collect();
+    let mut centroids: Vec<f32> =
+        (0..cfg.codebook_size * sub).map(|_| rng.gauss_f32()).collect();
+    let mut prev = f32::INFINITY;
+    for _ in 0..8 {
+        let (c, _, d) = rt.kmeans_step(&points, n, &centroids).unwrap();
+        centroids = c;
+        assert!(d <= prev + 1e-3, "distortion rose: {d} > {prev}");
+        prev = d;
+    }
+    // clustered data at ±2 per axis: distortion must drop well below 1.
+    assert!(prev < 0.5, "final distortion {prev}");
+}

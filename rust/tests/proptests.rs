@@ -1,0 +1,241 @@
+//! Property-based tests over the paper's core invariants, driven by the
+//! in-tree seeded property harness (`util::proptest`).
+
+use hybrid_ip::dense::adc_lut16::{scan, Lut16Codes};
+use hybrid_ip::dense::lut::{QuantizedLut, QueryLut};
+use hybrid_ip::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
+use hybrid_ip::hybrid::topk::{top_k_from_scores, TopK};
+use hybrid_ip::sparse::cache_sort::{cache_sort, gray_code_sort, is_permutation};
+use hybrid_ip::sparse::inverted_index::{Accumulator, InvertedIndex};
+use hybrid_ip::sparse::pruning::{prune_matrix, PruneThresholds};
+use hybrid_ip::types::csr::CsrMatrix;
+use hybrid_ip::types::dense::DenseMatrix;
+use hybrid_ip::types::sparse::SparseVector;
+use hybrid_ip::util::proptest::{forall, Gen};
+
+fn random_csr(g: &mut Gen, n: usize, d: usize) -> CsrMatrix {
+    let rows: Vec<SparseVector> = (0..n)
+        .map(|_| {
+            let nnz = g.usize_in(0, d.min(12));
+            let (dims, vals) = g.sparse(d, nnz);
+            SparseVector::new(dims, vals)
+        })
+        .collect();
+    CsrMatrix::from_rows(&rows, d)
+}
+
+#[test]
+fn prop_cache_sort_is_permutation_and_groups_identical_rows() {
+    forall(40, 0xCA5E, |g| {
+        let n = g.usize_in(1, 120);
+        let d = g.usize_in(1, 40);
+        let m = random_csr(g, n, d);
+        let p = cache_sort(&m);
+        assert!(is_permutation(&p, n));
+        let p2 = gray_code_sort(&m);
+        assert!(is_permutation(&p2, n));
+        // identical dim-signatures must be adjacent after sorting
+        let sorted = m.permute_rows(&p);
+        let sigs: Vec<Vec<u32>> =
+            (0..n).map(|i| sorted.row(i).0.to_vec()).collect();
+        for i in 0..n {
+            for j in (i + 2)..n {
+                if sigs[i] == sigs[j] {
+                    // everything between must share the signature
+                    for k in i..j {
+                        assert_eq!(
+                            sigs[k], sigs[i],
+                            "identical rows split apart at {k}"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_inverted_index_scan_equals_exact_dots() {
+    forall(40, 0x1DE7, |g| {
+        let n = g.usize_in(1, 100);
+        let d = g.usize_in(1, 30);
+        let m = random_csr(g, n, d);
+        let idx = InvertedIndex::build(&m);
+        let nnz = g.usize_in(0, d.min(8));
+        let (qd, qv) = g.sparse(d, nnz);
+        let q = SparseVector::new(qd, qv);
+        let mut acc = Accumulator::new(n);
+        let scores: std::collections::HashMap<u32, f32> =
+            idx.scores(&q, &mut acc).into_iter().collect();
+        for i in 0..n {
+            let exact = m.row_dot(i, &q);
+            let got = scores.get(&(i as u32)).copied().unwrap_or(0.0);
+            assert!((exact - got).abs() < 1e-3, "row {i}: {exact} vs {got}");
+        }
+    });
+}
+
+#[test]
+fn prop_prune_plus_residual_is_lossless_at_eps_zero() {
+    forall(40, 0x9EAE, |g| {
+        let n = g.usize_in(1, 60);
+        let d = g.usize_in(1, 25);
+        let m = random_csr(g, n, d);
+        let keep = g.usize_in(0, 6);
+        let eta = PruneThresholds::top_per_dim(&m, keep);
+        let pruned = prune_matrix(&m, &eta, &PruneThresholds::uniform(d, 0.0));
+        assert_eq!(pruned.dropped, 0);
+        assert_eq!(pruned.kept.nnz() + pruned.residual.nnz(), m.nnz());
+        let nnz = g.usize_in(0, d);
+        let (qd, qv) = g.sparse(d, nnz);
+        let q = SparseVector::new(qd, qv);
+        for i in 0..n {
+            let sum =
+                pruned.kept.row_dot(i, &q) + pruned.residual.row_dot(i, &q);
+            assert!((sum - m.row_dot(i, &q)).abs() < 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_lut16_scan_error_within_quantization_bound() {
+    forall(25, 0xADC0, |g| {
+        let k = g.usize_in(1, 40);
+        let n = g.usize_in(1, 90);
+        let dim = k * 2;
+        let rows: Vec<Vec<f32>> =
+            (0..n.max(20)).map(|_| g.vec_gauss(dim)).collect();
+        let data = DenseMatrix::from_rows(&rows);
+        let cb = PqCodebooks::train(&data, k, 16, 4, g.case_seed);
+        let pq = PqIndex::build(&data, cb.clone());
+        let codes = Lut16Codes::from_pq_index(&pq);
+        let q = g.vec_gauss(dim);
+        let lut = QueryLut::build(&cb, &q);
+        let qlut = QuantizedLut::build(&lut);
+        let mut out = vec![0.0f32; pq.n];
+        scan(&codes, &qlut, &mut out);
+        for i in 0..pq.n {
+            let exact = lut.score_codes(&pq.row_codes(i));
+            assert!(
+                (out[i] - exact).abs() <= qlut.max_error() + 1e-3,
+                "row {i}: {} vs {exact}, bound {}",
+                out[i],
+                qlut.max_error()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_pq_error_decreases_with_more_subspaces() {
+    // Prop. 1 direction: more bits (more subspaces at fixed l) => lower
+    // quantization MSE, on average.
+    forall(10, 0xB175, |g| {
+        let dim = 16;
+        let rows: Vec<Vec<f32>> = (0..300).map(|_| g.vec_gauss(dim)).collect();
+        let data = DenseMatrix::from_rows(&rows);
+        let mse = |k: usize| -> f64 {
+            let cb = PqCodebooks::train(&data, k, 16, 8, g.case_seed);
+            let pq = PqIndex::build(&data, cb);
+            let mut err = 0.0f64;
+            for i in 0..data.n_rows() {
+                let rec = pq.decode_row(i);
+                for (a, b) in data.row(i).iter().zip(&rec) {
+                    err += ((a - b) as f64).powi(2);
+                }
+            }
+            err / data.n_rows() as f64
+        };
+        let m2 = mse(2);
+        let m8 = mse(8);
+        assert!(m8 < m2, "K=8 mse {m8} !< K=2 mse {m2}");
+    });
+}
+
+#[test]
+fn prop_scalar_quantization_dot_error_bounded() {
+    forall(30, 0x5CA1, |g| {
+        let n = g.usize_in(1, 80);
+        let dim = g.usize_in(1, 16);
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| g.vec_gauss(dim)).collect();
+        let data = DenseMatrix::from_rows(&rows);
+        let sq = ScalarQuantizedResiduals::build(&data);
+        let q = g.vec_gauss(dim);
+        // |q.(x - decode(x))| <= sum_j |q_j| * step_j / 2
+        let bound: f32 = q
+            .iter()
+            .zip(&sq.step)
+            .map(|(qv, s)| qv.abs() * s * 0.5)
+            .sum::<f32>()
+            + 1e-3;
+        for i in 0..n {
+            let exact: f32 =
+                q.iter().zip(data.row(i)).map(|(a, b)| a * b).sum();
+            let approx = sq.dot(i, &q);
+            assert!(
+                (exact - approx).abs() <= bound,
+                "row {i}: err {} > bound {bound}",
+                (exact - approx).abs()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_topk_matches_full_sort() {
+    forall(50, 0x70BE, |g| {
+        let n = g.usize_in(1, 200);
+        let k = g.usize_in(1, n);
+        let scores = g.vec_f32(n, -100.0, 100.0);
+        let got = top_k_from_scores(&scores, k);
+        let mut all: Vec<(u32, f32)> = scores
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (i as u32, s))
+            .collect();
+        all.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+        });
+        assert_eq!(got, all[..k].to_vec());
+    });
+}
+
+#[test]
+fn prop_topk_threshold_is_admission_bar() {
+    forall(30, 0x7B47, |g| {
+        let k = g.usize_in(1, 10);
+        let mut t = TopK::new(k);
+        for i in 0..k + g.usize_in(0, 30) {
+            t.push(i as u32, g.f32_in(-10.0, 10.0));
+        }
+        if let Some(th) = t.threshold() {
+            let sorted = t.into_sorted();
+            assert_eq!(sorted.last().unwrap().1, th);
+        }
+    });
+}
+
+#[test]
+fn prop_cache_sort_never_increases_touched_lines() {
+    forall(15, 0xCAC4E, |g| {
+        let n = g.usize_in(32, 400);
+        let d = g.usize_in(2, 30);
+        let m = random_csr(g, n, d);
+        let unsorted = InvertedIndex::build(&m);
+        let sorted_m = m.permute_rows(&cache_sort(&m));
+        let sorted = InvertedIndex::build(&sorted_m);
+        let mut total_u = 0usize;
+        let mut total_s = 0usize;
+        for _ in 0..5 {
+            let nnz = g.usize_in(1, d.min(6));
+            let (qd, qv) = g.sparse(d, nnz);
+            let q = SparseVector::new(qd, qv);
+            total_u += unsorted.count_lines(&q);
+            total_s += sorted.count_lines(&q);
+        }
+        assert!(
+            total_s <= total_u,
+            "sorting increased lines: {total_s} > {total_u}"
+        );
+    });
+}
