@@ -1,0 +1,125 @@
+//! Batch-engine throughput: queries/sec of the parallel batch engine at
+//! 1, 2, 4 and all-host threads, against the sequential `search_with`
+//! loop — the serving-side claim behind the paper's "orders of magnitude
+//! faster search at production scale" (§7.2 runs batched traffic).
+//! Also exercises the data-sharded mode and cross-checks that every
+//! engine configuration returns bit-identical hits to sequential search.
+//!
+//!     cargo bench --bench batch_throughput
+//!     BENCH_N=200000 BENCH_Q=256 cargo bench --bench batch_throughput
+
+use hybrid_ip::benchkit::{self, bench, BenchConfig, Table};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::hybrid::batch::{BatchEngine, EngineConfig, ShardMode};
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::search::{search_with, SearchHit, SearchScratch};
+use hybrid_ip::util::threadpool::default_threads;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("BENCH_N", 50_000);
+    let n_queries = env_usize("BENCH_Q", 128);
+    benchkit::preamble(
+        "batch_throughput",
+        &format!("n={n} batch={n_queries} (BENCH_N/BENCH_Q to change)"),
+    );
+    let cfg = QuerySimConfig::scaled(n);
+    let data = cfg.generate(0xBA7C);
+    let queries = cfg.related_queries(&data, 0xBA7D, n_queries);
+    let t = std::time::Instant::now();
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    println!(
+        "[batch_throughput] index built in {:.1}s",
+        t.elapsed().as_secs_f64()
+    );
+    let params = SearchParams::new(20);
+    let bcfg = BenchConfig::default();
+
+    // Reference answers + sequential baseline timing.
+    let mut scratch = SearchScratch::new(&index);
+    let reference: Vec<Vec<SearchHit>> = queries
+        .iter()
+        .map(|q| search_with(&index, q, &params, &mut scratch).0)
+        .collect();
+    let seq = bench("sequential", bcfg, || {
+        for q in &queries {
+            std::hint::black_box(search_with(
+                &index, q, &params, &mut scratch,
+            ));
+        }
+    });
+
+    let mut table = Table::new(
+        "Batch engine throughput",
+        &["config", "ms/batch (med)", "queries/s", "vs sequential"],
+    );
+    let seq_qps = seq.throughput(n_queries as f64);
+    table.row(&seq.throughput_row(
+        "sequential (1 thread)",
+        n_queries as f64,
+        seq_qps,
+    ));
+
+    let mut thread_counts = vec![1usize, 2, 4, default_threads()];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+    let mut qps_by_threads = Vec::new();
+    for &t in &thread_counts {
+        let engine = BatchEngine::new(&index, t);
+        // determinism cross-check before timing
+        let out = engine.search_batch(&index, &queries, &params);
+        assert_eq!(out.hits, reference, "batch({t}) diverged from sequential");
+        let stats = bench(&format!("batch x{t}"), bcfg, || {
+            std::hint::black_box(
+                engine.search_batch(&index, &queries, &params).stats.queries,
+            );
+        });
+        qps_by_threads.push((t, stats.throughput(n_queries as f64)));
+        table.row(&stats.throughput_row(
+            &format!("batch engine, {t} thread(s)"),
+            n_queries as f64,
+            seq_qps,
+        ));
+    }
+
+    // data-sharded mode at full host width
+    let threads = default_threads();
+    let engine = BatchEngine::with_config(
+        &index,
+        EngineConfig { threads, mode: ShardMode::ByData },
+    );
+    let out = engine.search_batch(&index, &queries, &params);
+    assert_eq!(out.hits, reference, "data-sharded mode diverged");
+    let stats = bench("batch by-data", bcfg, || {
+        std::hint::black_box(
+            engine.search_batch(&index, &queries, &params).stats.queries,
+        );
+    });
+    table.row(&stats.throughput_row(
+        &format!("data-sharded, {threads} thread(s)"),
+        n_queries as f64,
+        seq_qps,
+    ));
+    table.print();
+
+    let qps1 = qps_by_threads
+        .iter()
+        .find(|&&(t, _)| t == 1)
+        .map(|&(_, q)| q)
+        .unwrap_or(seq_qps);
+    if let Some(&(t, q4)) = qps_by_threads.iter().find(|&&(t, _)| t == 4) {
+        let speedup = q4 / qps1;
+        println!(
+            "\n[batch_throughput] {t}-thread speedup over 1-thread engine: \
+             {speedup:.2}x (acceptance: > 1.5x)"
+        );
+    }
+    println!("[batch_throughput] all configs bit-identical to sequential");
+}

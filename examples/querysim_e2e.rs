@@ -20,9 +20,11 @@ use hybrid_ip::dense::lut::{QuantizedLut, QueryLut};
 use hybrid_ip::dense::adc_lut16;
 use hybrid_ip::eval::ground_truth::ground_truth;
 use hybrid_ip::eval::recall::{mean_recall, recall_at};
+use hybrid_ip::hybrid::batch::BatchEngine;
 use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
 use hybrid_ip::hybrid::index::HybridIndex;
 use hybrid_ip::hybrid::search::{search_with, SearchScratch};
+use hybrid_ip::util::threadpool::default_threads;
 use hybrid_ip::baselines::inverted_exact::SparseInvertedExact;
 use hybrid_ip::baselines::Baseline;
 use hybrid_ip::runtime::{default_artifacts_dir, XlaRuntime};
@@ -72,6 +74,29 @@ fn main() {
     let hybrid_ms = t.elapsed().as_secs_f64() * 1e3 / n_queries as f64;
     let hybrid_recall = mean_recall(&truth, &retrieved, h);
 
+    // --- the same workload through the parallel batch engine
+    let threads = default_threads();
+    let engine = BatchEngine::new(&index, threads);
+    let out = engine.search_batch(&index, &queries, &params);
+    let batch_ms = out.stats.wall_us / 1e3 / n_queries as f64;
+    let batch_ids: Vec<Vec<u32>> = out
+        .hits
+        .iter()
+        .map(|hs| hs.iter().map(|x| x.id).collect())
+        .collect();
+    assert_eq!(
+        batch_ids, retrieved,
+        "batch engine must match sequential results"
+    );
+    println!(
+        "[e2e] batch engine ({} threads): {:.0} qps, {:.2} ms/query, \
+         {:.1}x vs sequential (results identical)",
+        threads,
+        out.stats.qps(),
+        batch_ms,
+        hybrid_ms / batch_ms.max(1e-9)
+    );
+
     // --- exact inverted-index baseline (the paper's closest exact rival)
     let t = Instant::now();
     let exact = SparseInvertedExact::build(&data);
@@ -98,6 +123,12 @@ fn main() {
     println!(
         "{:<28} {:>10.2} {:>9.0}%",
         "Hybrid (ours)", hybrid_ms, 100.0 * hybrid_recall
+    );
+    println!(
+        "{:<28} {:>10.2} {:>9.0}%",
+        format!("Hybrid batch x{threads}"),
+        batch_ms,
+        100.0 * hybrid_recall
     );
     println!(
         "speedup: {:.1}x at {:.0}% recall",

@@ -35,6 +35,24 @@ impl Stats {
         items_per_sample / self.median.as_secs_f64()
     }
 
+    /// Table-row cells for a throughput comparison: label, median
+    /// ms/sample, items/s, and speedup vs `baseline_qps` (the batch
+    /// throughput bench's reporting shape).
+    pub fn throughput_row(
+        &self,
+        label: &str,
+        items_per_sample: f64,
+        baseline_qps: f64,
+    ) -> Vec<String> {
+        let qps = self.throughput(items_per_sample);
+        vec![
+            label.to_string(),
+            format!("{:.2}", self.median_ms()),
+            format!("{qps:.0}"),
+            format!("{:.2}x", qps / baseline_qps.max(1e-12)),
+        ]
+    }
+
     pub fn line(&self) -> String {
         format!(
             "{:<44} med {:>10}  p95 {:>10}  min {:>10}  (n={})",
@@ -218,6 +236,19 @@ mod tests {
         assert_eq!(s.median, Duration::from_micros(51));
         assert_eq!(s.p95, Duration::from_micros(96));
         assert_eq!(s.max, Duration::from_micros(100));
+    }
+
+    #[test]
+    fn throughput_row_reports_speedup() {
+        let s = summarize(
+            "x",
+            vec![Duration::from_millis(10), Duration::from_millis(10)],
+        );
+        // 50 items / 10ms = 5000/s; vs baseline 2500/s => 2.00x
+        let row = s.throughput_row("x", 50.0, 2500.0);
+        assert_eq!(row[0], "x");
+        assert_eq!(row[2], "5000");
+        assert_eq!(row[3], "2.00x");
     }
 
     #[test]

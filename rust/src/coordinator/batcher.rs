@@ -2,6 +2,11 @@
 //! `max_delay`, then flush as one unit. Amortizes router dispatch and —
 //! per §4.1.2 — LUT16 sustains its peak lookup rate "when operating on
 //! batches of 3 or more queries", so serving batches matter.
+//!
+//! Drained batches flow through `Server::search_batch` →
+//! `Router::search_batch` → each shard's `BatchEngine`: one message per
+//! shard per batch, executed against the shard's long-lived per-worker
+//! scratches (see `hybrid::batch`).
 
 use std::time::{Duration, Instant};
 

@@ -4,8 +4,11 @@
 
 use std::sync::mpsc::channel;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-use crate::coordinator::shard::{ShardHandle, ShardRequest};
+use crate::coordinator::shard::{
+    ShardBatchRequest, ShardHandle, ShardRequest,
+};
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::topk::merge_topk;
 use crate::types::hybrid::HybridQuery;
@@ -50,6 +53,45 @@ impl Router {
             lists.push(reply.hits);
         }
         merge_topk(&lists, params.h)
+    }
+
+    /// Broadcast a whole batch to every shard (one message per shard, not
+    /// per query), gather the per-shard batch replies, and merge each
+    /// query's shard lists into its global top-h.
+    pub fn search_batch(
+        &self,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+    ) -> Vec<Vec<(u32, f32)>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
+        // One copy of the batch total, shared by every shard.
+        let batch: Arc<[HybridQuery]> = queries.to_vec().into();
+        let (reply_tx, reply_rx) = channel();
+        for shard in &self.shards {
+            shard.submit_batch(ShardBatchRequest {
+                queries: Arc::clone(&batch),
+                params: *params,
+                reply: reply_tx.clone(),
+                tag,
+            });
+        }
+        drop(reply_tx);
+        // Gather by moving each shard's hit lists into per-query bins.
+        let mut lists_per_query: Vec<Vec<Vec<(u32, f32)>>> =
+            vec![Vec::with_capacity(self.shards.len()); queries.len()];
+        while let Ok(reply) = reply_rx.recv() {
+            debug_assert_eq!(reply.tag, tag);
+            for (i, hits) in reply.hits.into_iter().enumerate() {
+                lists_per_query[i].push(hits);
+            }
+        }
+        lists_per_query
+            .into_iter()
+            .map(|lists| merge_topk(&lists, params.h))
+            .collect()
     }
 }
 

@@ -1,13 +1,16 @@
 //! Shard worker: a thread owning one `HybridIndex` slice, serving search
 //! requests over an mpsc channel (the in-process analogue of the paper's
-//! per-server shard).
+//! per-server shard). Each worker constructs one [`BatchEngine`] at
+//! startup — single queries and whole batches alike flow through it, so
+//! the per-worker scratches are allocated exactly once per shard.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::hybrid::batch::BatchEngine;
 use crate::hybrid::config::{IndexConfig, SearchParams};
 use crate::hybrid::index::HybridIndex;
-use crate::hybrid::search::{search_with, SearchScratch};
 use crate::types::hybrid::{HybridDataset, HybridQuery};
 
 /// A search request routed to one shard.
@@ -26,48 +29,113 @@ pub struct ShardReply {
     pub hits: Vec<(u32, f32)>,
 }
 
+/// A whole query batch routed to one shard (the batcher's flush unit).
+/// The batch is shared, not copied: the router clones one `Arc` per
+/// shard instead of deep-copying every query's sparse+dense payload.
+pub struct ShardBatchRequest {
+    pub queries: Arc<[HybridQuery]>,
+    pub params: SearchParams,
+    pub reply: Sender<ShardBatchReply>,
+    pub tag: u64,
+}
+
+pub struct ShardBatchReply {
+    pub tag: u64,
+    pub shard_id: usize,
+    /// `hits[i]` answers `queries[i]`: (global id, score), best first.
+    pub hits: Vec<Vec<(u32, f32)>>,
+}
+
+enum ShardMsg {
+    One(ShardRequest),
+    Batch(ShardBatchRequest),
+}
+
 /// Owning handle to a running shard worker.
 pub struct ShardHandle {
     pub shard_id: usize,
     pub base: usize,
     pub len: usize,
-    tx: Sender<ShardRequest>,
+    tx: Sender<ShardMsg>,
     join: Option<JoinHandle<()>>,
 }
 
 impl ShardHandle {
-    /// Build the shard index (synchronously) and start its worker thread.
+    /// Build the shard index (synchronously) and start its worker thread
+    /// with a single-threaded batch engine (the classic one-thread-per-
+    /// shard layout).
     pub fn spawn(
         shard_id: usize,
         base: usize,
         data: HybridDataset,
         config: &IndexConfig,
     ) -> Self {
+        Self::spawn_with_engine(shard_id, base, data, config, 1)
+    }
+
+    /// As [`ShardHandle::spawn`], but the shard's batch engine fans each
+    /// batch across `engine_threads` workers (intra-shard parallelism for
+    /// big hosts serving few shards).
+    pub fn spawn_with_engine(
+        shard_id: usize,
+        base: usize,
+        data: HybridDataset,
+        config: &IndexConfig,
+        engine_threads: usize,
+    ) -> Self {
         let len = data.len();
         let index = HybridIndex::build(&data, config);
-        let (tx, rx): (Sender<ShardRequest>, Receiver<ShardRequest>) =
-            channel();
+        let (tx, rx): (Sender<ShardMsg>, Receiver<ShardMsg>) = channel();
         let join = std::thread::Builder::new()
             .name(format!("shard-{shard_id}"))
             .spawn(move || {
-                let mut scratch = SearchScratch::new(&index);
-                while let Ok(req) = rx.recv() {
-                    let (hits, _stats) = search_with(
-                        &index,
-                        &req.query,
-                        &req.params,
-                        &mut scratch,
-                    );
-                    let global: Vec<(u32, f32)> = hits
-                        .into_iter()
-                        .map(|h| (base as u32 + h.id, h.score))
-                        .collect();
-                    // receiver may have hung up on shutdown: ignore
-                    let _ = req.reply.send(ShardReply {
-                        tag: req.tag,
-                        shard_id,
-                        hits: global,
-                    });
+                let engine = BatchEngine::new(&index, engine_threads);
+                let to_global = |h: crate::hybrid::search::SearchHit| {
+                    (base as u32 + h.id, h.score)
+                };
+                while let Ok(msg) = rx.recv() {
+                    // receiver may have hung up on shutdown: ignore sends
+                    match msg {
+                        ShardMsg::One(req) => {
+                            let out = engine.search_batch(
+                                &index,
+                                std::slice::from_ref(&req.query),
+                                &req.params,
+                            );
+                            let hits = out
+                                .hits
+                                .into_iter()
+                                .next()
+                                .unwrap_or_default()
+                                .into_iter()
+                                .map(to_global)
+                                .collect();
+                            let _ = req.reply.send(ShardReply {
+                                tag: req.tag,
+                                shard_id,
+                                hits,
+                            });
+                        }
+                        ShardMsg::Batch(req) => {
+                            let out = engine.search_batch(
+                                &index,
+                                &req.queries,
+                                &req.params,
+                            );
+                            let hits = out
+                                .hits
+                                .into_iter()
+                                .map(|hs| {
+                                    hs.into_iter().map(to_global).collect()
+                                })
+                                .collect();
+                            let _ = req.reply.send(ShardBatchReply {
+                                tag: req.tag,
+                                shard_id,
+                                hits,
+                            });
+                        }
+                    }
                 }
             })
             .expect("spawn shard worker");
@@ -75,7 +143,11 @@ impl ShardHandle {
     }
 
     pub fn submit(&self, req: ShardRequest) {
-        self.tx.send(req).expect("shard worker gone");
+        self.tx.send(ShardMsg::One(req)).expect("shard worker gone");
+    }
+
+    pub fn submit_batch(&self, req: ShardBatchRequest) {
+        self.tx.send(ShardMsg::Batch(req)).expect("shard worker gone");
     }
 }
 
@@ -123,5 +195,37 @@ mod tests {
             .iter()
             .all(|&(id, _)| (id as usize) >= base
                 && (id as usize) < base + data.len()));
+    }
+
+    #[test]
+    fn shard_serves_batches_matching_singles() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(5);
+        let shard =
+            ShardHandle::spawn(0, 0, data.clone(), &IndexConfig::default());
+        let queries = cfg.related_queries(&data, 6, 4);
+        let params = SearchParams::new(5);
+        // batch answer
+        let (btx, brx) = channel();
+        shard.submit_batch(ShardBatchRequest {
+            queries: queries.clone().into(),
+            params,
+            reply: btx,
+            tag: 7,
+        });
+        let batch = brx.recv().unwrap();
+        assert_eq!(batch.tag, 7);
+        assert_eq!(batch.hits.len(), queries.len());
+        // must equal the one-at-a-time answers
+        for (q, want) in queries.iter().zip(&batch.hits) {
+            let (tx, rx) = channel();
+            shard.submit(ShardRequest {
+                query: q.clone(),
+                params,
+                reply: tx,
+                tag: 8,
+            });
+            assert_eq!(&rx.recv().unwrap().hits, want);
+        }
     }
 }

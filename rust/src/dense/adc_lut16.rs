@@ -83,24 +83,51 @@ impl Lut16Codes {
 /// Scan all points: `out[i] = dequantized ADC score of point i`.
 /// Dispatches to AVX2 when available.
 pub fn scan(codes: &Lut16Codes, qlut: &QuantizedLut, out: &mut [f32]) {
+    scan_blocks(codes, qlut, out, 0, codes.n_blocks);
+}
+
+/// Scan the contiguous block range `[b0, b1)`, filling
+/// `out[b0*BLOCK .. min(b1*BLOCK, n)]`; `out` is the full n-length score
+/// buffer and rows outside the range are left untouched. This is the
+/// data-sharded batch engine's unit of dense work: disjoint ranges can be
+/// scanned by different workers into different buffers.
+pub fn scan_blocks(
+    codes: &Lut16Codes,
+    qlut: &QuantizedLut,
+    out: &mut [f32],
+    b0: usize,
+    b1: usize,
+) {
     assert_eq!(out.len(), codes.n);
     assert_eq!(qlut.k, codes.k);
+    assert!(b0 <= b1 && b1 <= codes.n_blocks, "bad block range {b0}..{b1}");
     #[cfg(target_arch = "x86_64")]
     {
         if has_avx2() {
-            unsafe { scan_avx2(codes, qlut, out) };
+            unsafe { scan_blocks_avx2(codes, qlut, out, b0, b1) };
             return;
         }
     }
-    scan_scalar(codes, qlut, out);
+    scan_blocks_scalar(codes, qlut, out, b0, b1);
 }
 
 /// Portable scalar scan over the blocked layout (also the oracle the AVX2
 /// path is tested against).
 pub fn scan_scalar(codes: &Lut16Codes, qlut: &QuantizedLut, out: &mut [f32]) {
+    scan_blocks_scalar(codes, qlut, out, 0, codes.n_blocks);
+}
+
+/// Scalar kernel over a block range (see [`scan_blocks`]).
+pub fn scan_blocks_scalar(
+    codes: &Lut16Codes,
+    qlut: &QuantizedLut,
+    out: &mut [f32],
+    b0: usize,
+    b1: usize,
+) {
     assert_eq!(out.len(), codes.n);
     let mut acc = [0u32; BLOCK];
-    for b in 0..codes.n_blocks {
+    for b in b0..b1 {
         acc.fill(0);
         let blk = codes.block(b);
         for p in 0..codes.k_pairs {
@@ -137,6 +164,20 @@ pub unsafe fn scan_avx2(
     qlut: &QuantizedLut,
     out: &mut [f32],
 ) {
+    scan_blocks_avx2(codes, qlut, out, 0, codes.n_blocks);
+}
+
+/// AVX2 kernel over a block range (see [`scan_blocks`]). SAFETY: caller
+/// must ensure AVX2 is available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn scan_blocks_avx2(
+    codes: &Lut16Codes,
+    qlut: &QuantizedLut,
+    out: &mut [f32],
+    b0: usize,
+    b1: usize,
+) {
     use std::arch::x86_64::*;
 
     let k = codes.k;
@@ -149,7 +190,7 @@ pub unsafe fn scan_avx2(
     let low_mask = _mm256_set1_epi8(0x0F);
     let zero = _mm256_setzero_si256();
 
-    for b in 0..codes.n_blocks {
+    for b in b0..b1 {
         let blk = codes.block(b);
         // u32 totals per point, filled by flushes.
         let mut total = [0u32; BLOCK];
@@ -287,6 +328,26 @@ mod tests {
             let want = qlut.dequantize(acc);
             assert!((out[i] - want).abs() < 1e-4, "row {i}");
         }
+    }
+
+    #[test]
+    fn scan_blocks_range_matches_full_scan() {
+        let (idx, _, qlut) = setup(9, 100, 8);
+        let blocked = Lut16Codes::from_pq_index(&idx);
+        let mut full = vec![0.0f32; 100];
+        scan(&blocked, &qlut, &mut full);
+        let mut ranged = vec![f32::NAN; 100];
+        let mid = blocked.n_blocks / 2;
+        scan_blocks(&blocked, &qlut, &mut ranged, 0, mid);
+        scan_blocks(&blocked, &qlut, &mut ranged, mid, blocked.n_blocks);
+        for i in 0..100 {
+            assert_eq!(full[i].to_bits(), ranged[i].to_bits(), "row {i}");
+        }
+        // rows outside the scanned range must be left untouched
+        let mut partial = vec![f32::NAN; 100];
+        scan_blocks(&blocked, &qlut, &mut partial, 0, 1);
+        assert!(partial[..BLOCK].iter().all(|v| !v.is_nan()));
+        assert!(partial[BLOCK..].iter().all(|v| v.is_nan()));
     }
 
     #[test]

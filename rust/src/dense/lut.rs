@@ -20,9 +20,26 @@ pub struct QueryLut {
 }
 
 impl QueryLut {
+    /// Zeroed table of the right shape, ready for [`QueryLut::rebuild`].
+    /// Lets callers (e.g. `SearchScratch`) hold long-lived LUT storage.
+    pub fn with_shape(k: usize, l: usize) -> Self {
+        QueryLut { table: vec![0.0f32; k * l], k, l }
+    }
+
     pub fn build(codebooks: &PqCodebooks, q: &[f32]) -> Self {
+        let mut lut = QueryLut::with_shape(codebooks.k, codebooks.l);
+        lut.rebuild(codebooks, q);
+        lut
+    }
+
+    /// Recompute the tables for a new query in place — no allocation when
+    /// the codebook shape matches the existing storage (the batch-engine
+    /// hot path).
+    pub fn rebuild(&mut self, codebooks: &PqCodebooks, q: &[f32]) {
         let (k, l, sub) = (codebooks.k, codebooks.l, codebooks.sub);
-        let mut table = vec![0.0f32; k * l];
+        self.k = k;
+        self.l = l;
+        self.table.resize(k * l, 0.0);
         for ks in 0..k {
             let lo = ks * sub;
             for c in 0..l {
@@ -32,10 +49,9 @@ impl QueryLut {
                     let qv = q.get(lo + j).copied().unwrap_or(0.0);
                     acc += qv * cw[j];
                 }
-                table[ks * l + c] = acc;
+                self.table[ks * l + c] = acc;
             }
         }
-        QueryLut { table, k, l }
     }
 
     #[inline]
@@ -67,41 +83,56 @@ pub struct QuantizedLut {
 }
 
 impl QuantizedLut {
+    /// Identity-scale empty tables sized for `k` subspaces, ready for
+    /// [`QuantizedLut::rebuild`] (long-lived scratch storage).
+    pub fn with_k(k: usize) -> Self {
+        QuantizedLut { table: vec![0u8; k * 16], k, scale: 1.0, offset_sum: 0.0 }
+    }
+
     /// Quantize the f32 table: per-subspace center offset (improves the
     /// 8-bit budget when tables have different means), one global scale
     /// from the max residual magnitude, entries biased by +128.
     pub fn build(lut: &QueryLut) -> Self {
+        let mut qlut = QuantizedLut::with_k(lut.k);
+        qlut.rebuild(lut);
+        qlut
+    }
+
+    /// Requantize a rebuilt `QueryLut` in place — no allocation when the
+    /// subspace count matches the existing storage. The per-subspace
+    /// offsets are recomputed on the fly (16 f32 adds per row) rather
+    /// than staged in a temporary, keeping the per-query path alloc-free.
+    pub fn rebuild(&mut self, lut: &QueryLut) {
         assert_eq!(lut.l, 16, "LUT16 requires l = 16");
         let (k, l) = (lut.k, lut.l);
-        // per-subspace offsets = table mean
-        let mut offsets = vec![0.0f32; k];
-        for ks in 0..k {
+        self.k = k;
+        self.table.resize(k * l, 0);
+        let row_offset = |ks: usize| -> f32 {
             let row = &lut.table[ks * l..(ks + 1) * l];
-            offsets[ks] = row.iter().sum::<f32>() / l as f32;
-        }
+            row.iter().sum::<f32>() / l as f32
+        };
         // global scale from max |entry - offset|
         let mut max_abs = 0.0f32;
+        let mut offset_sum = 0.0f32;
         for ks in 0..k {
+            let off = row_offset(ks);
+            offset_sum += off;
             for c in 0..l {
-                let r = lut.table[ks * l + c] - offsets[ks];
+                let r = lut.table[ks * l + c] - off;
                 max_abs = max_abs.max(r.abs());
             }
         }
         let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
-        let mut table = vec![0u8; k * l];
         for ks in 0..k {
+            let off = row_offset(ks);
             for c in 0..l {
-                let r = lut.table[ks * l + c] - offsets[ks];
+                let r = lut.table[ks * l + c] - off;
                 let q = (r / scale).round().clamp(-128.0, 127.0) as i32;
-                table[ks * l + c] = (q + 128) as u8;
+                self.table[ks * l + c] = (q + 128) as u8;
             }
         }
-        QuantizedLut {
-            table,
-            k,
-            scale,
-            offset_sum: offsets.iter().sum(),
-        }
+        self.scale = scale;
+        self.offset_sum = offset_sum;
     }
 
     /// Dequantize an accumulated sum of biased-u8 entries over all K
@@ -206,6 +237,26 @@ mod tests {
         let lut = QueryLut::build(&cb, &q);
         assert_eq!(lut.table.len(), 4 * 16);
         assert!(lut.table.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rebuild_matches_build_and_reuses_storage() {
+        let (cb, q) = setup(7, 6, 2);
+        let mut lut = QueryLut::with_shape(cb.k, cb.l);
+        lut.rebuild(&cb, &q);
+        let fresh = QueryLut::build(&cb, &q);
+        assert_eq!(lut.table, fresh.table);
+        let mut qlut = QuantizedLut::with_k(cb.k);
+        qlut.rebuild(&lut);
+        let fresh_q = QuantizedLut::build(&fresh);
+        assert_eq!(qlut.table, fresh_q.table);
+        assert_eq!(qlut.scale, fresh_q.scale);
+        assert_eq!(qlut.offset_sum, fresh_q.offset_sum);
+        // a second rebuild must reuse the same allocation
+        let ptr = lut.table.as_ptr();
+        let q2: Vec<f32> = q.iter().map(|v| v * 0.5).collect();
+        lut.rebuild(&cb, &q2);
+        assert_eq!(lut.table.as_ptr(), ptr);
     }
 
     #[test]

@@ -1,0 +1,436 @@
+//! Parallel batch query engine — the serving substrate between the
+//! per-query kernels (§3–§5) and the distributed coordinator (§7.2).
+//!
+//! A [`BatchEngine`] owns a pool of workers, each with its own long-lived
+//! [`SearchScratch`]: the accumulator, dense score buffer, sparse overlay
+//! and both per-query LUTs are allocated once and reused for every query
+//! the worker ever serves, so the stage-1 hot path runs allocation-free
+//! after warmup. A `&[HybridQuery]` batch is fanned across the pool in one
+//! of two sharding modes:
+//!
+//! * **[`ShardMode::ByQuery`]** (default) — workers claim whole queries
+//!   from an atomic cursor and run the full three-stage pipeline
+//!   independently. Embarrassingly parallel; per-query results are
+//!   bit-identical to sequential [`search_with`] because each query's
+//!   computation is untouched.
+//! * **[`ShardMode::ByData`]** — each worker owns a contiguous row range
+//!   (dense: a LUT16 block range; sparse: a binary-searched segment of
+//!   every inverted list) and scans it for every query in the batch,
+//!   producing range-local αh candidates; the calling thread merges them
+//!   and runs the O(h) reorder stages. One thread spawn per *batch*.
+//!   Useful when N is huge and batches are small (latency-bound
+//!   serving). Results are *also* bit-identical to sequential search
+//!   because [`TopK`] admission follows a total order (score desc, id
+//!   asc), making candidate selection independent of scan partitioning.
+//!
+//! The engine is index-bound: its scratches are sized for the index given
+//! at construction, and `search_batch` asserts it is called with an index
+//! of the same size.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::dense::adc_lut16::{self, BLOCK};
+use crate::dense::lut::{QuantizedLut, QueryLut};
+use crate::hybrid::config::SearchParams;
+use crate::hybrid::index::HybridIndex;
+use crate::hybrid::search::{
+    rerank, search_with, select_alpha, SearchHit, SearchScratch, SearchStats,
+};
+use crate::hybrid::topk::TopK;
+use crate::types::hybrid::HybridQuery;
+use crate::util::threadpool::{default_threads, parallel_workers, SharedMutPtr};
+
+/// How a batch is spread across the worker pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardMode {
+    /// One query per work item (default). Highest throughput: no
+    /// cross-worker coordination inside a query.
+    ByQuery,
+    /// One row range per work item; workers cooperate on each query.
+    /// Lowest single-query latency at large N.
+    ByData,
+}
+
+/// Engine construction parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Worker count (and number of long-lived scratches).
+    pub threads: usize,
+    pub mode: ShardMode,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { threads: default_threads(), mode: ShardMode::ByQuery }
+    }
+}
+
+/// Aggregated accounting for one executed batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    pub queries: usize,
+    /// Whole-batch wall time in µs (parallel time, not the sum of
+    /// per-query times).
+    pub wall_us: f64,
+    /// Sum of the per-query stage timings and counters (CPU-time-like:
+    /// in ByData mode the concurrent workers' scan times are summed, so
+    /// the breakdown stays comparable with ByQuery).
+    pub per_query: SearchStats,
+}
+
+impl BatchStats {
+    /// Batch throughput in queries/second.
+    pub fn qps(&self) -> f64 {
+        self.queries as f64 / (self.wall_us.max(1e-9) / 1e6)
+    }
+
+    /// Mean per-query pipeline time (CPU time, summed over stages).
+    pub fn mean_query_us(&self) -> f64 {
+        self.per_query.total_us() / self.queries.max(1) as f64
+    }
+}
+
+/// Result of [`BatchEngine::search_batch`].
+#[derive(Debug)]
+pub struct BatchOutput {
+    /// `hits[i]` answers `queries[i]`; ids are original-dataset ids,
+    /// best first.
+    pub hits: Vec<Vec<SearchHit>>,
+    pub stats: BatchStats,
+}
+
+/// Worker pool + per-worker scratch, bound to one index's dimensions.
+pub struct BatchEngine {
+    threads: usize,
+    mode: ShardMode,
+    n: usize,
+    scratches: Vec<Mutex<SearchScratch>>,
+}
+
+impl BatchEngine {
+    /// Engine with `threads` workers in the default (by-query) mode.
+    pub fn new(index: &HybridIndex, threads: usize) -> Self {
+        Self::with_config(
+            index,
+            EngineConfig { threads, ..EngineConfig::default() },
+        )
+    }
+
+    pub fn with_config(index: &HybridIndex, config: EngineConfig) -> Self {
+        let threads = config.threads.max(1);
+        let scratches = (0..threads)
+            .map(|_| Mutex::new(SearchScratch::new(index)))
+            .collect();
+        BatchEngine { threads, mode: config.mode, n: index.n, scratches }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn mode(&self) -> ShardMode {
+        self.mode
+    }
+
+    /// Execute a batch, returning per-query hits plus aggregated stats.
+    pub fn search_batch(
+        &self,
+        index: &HybridIndex,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+    ) -> BatchOutput {
+        assert_eq!(
+            index.n, self.n,
+            "engine scratches were sized for a different index"
+        );
+        let t = Instant::now();
+        let (hits, per_query) = match self.mode {
+            ShardMode::ByQuery => self.run_by_query(index, queries, params),
+            ShardMode::ByData => self.run_by_data(index, queries, params),
+        };
+        BatchOutput {
+            hits,
+            stats: BatchStats {
+                queries: queries.len(),
+                wall_us: t.elapsed().as_secs_f64() * 1e6,
+                per_query,
+            },
+        }
+    }
+
+    /// By-query sharding: an atomic cursor hands out query indices;
+    /// worker `w` serves them with `scratches[w]`.
+    fn run_by_query(
+        &self,
+        index: &HybridIndex,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+    ) -> (Vec<Vec<SearchHit>>, SearchStats) {
+        let m = queries.len();
+        let mut hits: Vec<Vec<SearchHit>> = vec![Vec::new(); m];
+        let mut stats: Vec<SearchStats> = vec![SearchStats::default(); m];
+        let workers = self.threads.min(m).max(1);
+        {
+            let cursor = AtomicUsize::new(0);
+            let hits_ptr = SharedMutPtr::new(hits.as_mut_ptr());
+            let stats_ptr = SharedMutPtr::new(stats.as_mut_ptr());
+            parallel_workers(workers, |w| {
+                let mut scratch = self.scratches[w].lock().unwrap();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= m {
+                        break;
+                    }
+                    let (h, st) =
+                        search_with(index, &queries[i], params, &mut scratch);
+                    // SAFETY: the cursor hands each i to exactly one
+                    // worker; slots are disjoint and outlive the scope.
+                    unsafe {
+                        *hits_ptr.add(i) = h;
+                        *stats_ptr.add(i) = st;
+                    }
+                }
+            });
+        }
+        let mut agg = SearchStats::default();
+        for st in &stats {
+            agg.accumulate(st);
+        }
+        (hits, agg)
+    }
+
+    /// By-data sharding: ONE parallel region per batch. Worker `w` owns a
+    /// fixed block range and scans it for every query in turn — its
+    /// scratch (accumulator, score buffer, overlay) stays warm across
+    /// the whole batch and threads are spawned once per batch, not per
+    /// query. Per-query LUTs are prepared once on the calling thread and
+    /// shared; the calling thread then merges each query's range-local
+    /// candidates and runs the O(αh) reorder stages.
+    fn run_by_data(
+        &self,
+        index: &HybridIndex,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+    ) -> (Vec<Vec<SearchHit>>, SearchStats) {
+        let m = queries.len();
+        let mut agg = SearchStats::default();
+        if m == 0 {
+            return (Vec::new(), agg);
+        }
+        let n = index.n;
+        let n_blocks = index.dense_codes.n_blocks;
+        let workers = self.threads.min(n_blocks).max(1);
+        let alpha_h = params.alpha_h().min(n);
+
+        // Per-query dense transform + quantized LUT, built once on the
+        // calling thread (one in-place f32 LUT rebuild per query) and
+        // shared read-only by every worker — workers never redo query
+        // preprocessing.
+        let mut lut =
+            QueryLut::with_shape(index.codebooks.k, index.codebooks.l);
+        let prep: Vec<(Vec<f32>, QuantizedLut)> = queries
+            .iter()
+            .map(|q| {
+                let qd = index.query_dense(q);
+                lut.rebuild(&index.codebooks, &qd);
+                (qd, QuantizedLut::build(&lut))
+            })
+            .collect();
+
+        // ---- Stage 1 fan-out: partials[qi * workers + w] holds worker
+        // w's range-local top-αh for query qi. Worker scan time is summed
+        // (CPU time) so per_query stats stay comparable with ByQuery.
+        let mut partials: Vec<Vec<(u32, f32)>> =
+            vec![Vec::new(); m * workers];
+        let lines = AtomicUsize::new(0);
+        let scan_ns = AtomicU64::new(0);
+        {
+            let partials_ptr = SharedMutPtr::new(partials.as_mut_ptr());
+            let prep = &prep;
+            let per = n_blocks.div_ceil(workers);
+            parallel_workers(workers, |w| {
+                let b0 = (w * per).min(n_blocks);
+                let b1 = ((w + 1) * per).min(n_blocks);
+                if b0 >= b1 {
+                    return;
+                }
+                let t_w = Instant::now();
+                let row0 = b0 * BLOCK;
+                let row1 = (b1 * BLOCK).min(n);
+                let mut guard = self.scratches[w].lock().unwrap();
+                let scratch = &mut *guard;
+                for (qi, q) in queries.iter().enumerate() {
+                    adc_lut16::scan_blocks(
+                        &index.dense_codes,
+                        &prep[qi].1,
+                        &mut scratch.dense_scores,
+                        b0,
+                        b1,
+                    );
+                    scratch.acc.reset();
+                    index.sparse_index.scan_range(
+                        &q.sparse,
+                        &mut scratch.acc,
+                        row0 as u32,
+                        row1 as u32,
+                    );
+                    lines.fetch_add(
+                        scratch.acc.lines_touched(),
+                        Ordering::Relaxed,
+                    );
+                    scratch.overlay.clear();
+                    let (acc, overlay) =
+                        (&mut scratch.acc, &mut scratch.overlay);
+                    acc.drain_scores(|r, s| overlay.push((r, s)));
+                    let part = select_alpha(
+                        &scratch.dense_scores[row0..row1],
+                        &scratch.overlay,
+                        row0 as u32,
+                        alpha_h.min(row1 - row0),
+                    );
+                    // SAFETY: slot (qi, w) is written by exactly one
+                    // worker; slots are disjoint and outlive the scope.
+                    unsafe {
+                        *partials_ptr.add(qi * workers + w) = part;
+                    }
+                }
+                scan_ns.fetch_add(
+                    t_w.elapsed().as_nanos() as u64,
+                    Ordering::Relaxed,
+                );
+            });
+        }
+        agg.accumulator_lines = lines.load(Ordering::Relaxed);
+        agg.stage1_scan_us = scan_ns.load(Ordering::Relaxed) as f64 / 1e3;
+
+        // ---- Per query: merge range-local candidates into the global
+        // αh (TopK admission follows a total order, so this reproduces
+        // sequential selection exactly — the union of range-local top-αh
+        // sets contains the global top-αh), then the O(αh) stages 2–3.
+        let mut hits = Vec::with_capacity(m);
+        for (qi, q) in queries.iter().enumerate() {
+            let mut stats = SearchStats::default();
+            let t1 = Instant::now();
+            let mut top = TopK::new(alpha_h);
+            for part in &partials[qi * workers..(qi + 1) * workers] {
+                for &(r, s) in part {
+                    top.push(r, s);
+                }
+            }
+            let alpha_candidates = top.into_sorted();
+            stats.candidates_alpha = alpha_candidates.len();
+            stats.stage1_select_us = t1.elapsed().as_secs_f64() * 1e6;
+            hits.push(rerank(
+                index,
+                &prep[qi].0,
+                q,
+                params,
+                alpha_candidates,
+                &mut stats,
+            ));
+            agg.accumulate(&stats);
+        }
+        (hits, agg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+    use crate::hybrid::config::IndexConfig;
+    use crate::hybrid::search::search;
+    use crate::types::hybrid::HybridDataset;
+
+    fn setup(n: usize) -> (HybridDataset, Vec<HybridQuery>, HybridIndex) {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = n;
+        let data = cfg.generate(21);
+        let queries = cfg.related_queries(&data, 22, 12);
+        let index = HybridIndex::build(&data, &IndexConfig::default());
+        (data, queries, index)
+    }
+
+    fn assert_hits_identical(a: &[SearchHit], b: &[SearchHit]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+    }
+
+    #[test]
+    fn by_query_matches_sequential() {
+        let (_, queries, index) = setup(500);
+        let params = SearchParams::new(10);
+        let engine = BatchEngine::new(&index, 4);
+        let out = engine.search_batch(&index, &queries, &params);
+        assert_eq!(out.hits.len(), queries.len());
+        assert_eq!(out.stats.queries, queries.len());
+        for (q, got) in queries.iter().zip(&out.hits) {
+            let want = search(&index, q, &params);
+            assert_hits_identical(got, &want);
+        }
+    }
+
+    #[test]
+    fn by_data_matches_sequential() {
+        let (_, queries, index) = setup(500);
+        let params = SearchParams::new(10).with_alpha(15.0);
+        let engine = BatchEngine::with_config(
+            &index,
+            EngineConfig { threads: 4, mode: ShardMode::ByData },
+        );
+        let out = engine.search_batch(&index, &queries, &params);
+        for (q, got) in queries.iter().zip(&out.hits) {
+            let want = search(&index, q, &params);
+            assert_hits_identical(got, &want);
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_more_threads_than_queries() {
+        let (_, queries, index) = setup(200);
+        let params = SearchParams::new(5);
+        let engine = BatchEngine::new(&index, 8);
+        let out = engine.search_batch(&index, &[], &params);
+        assert!(out.hits.is_empty());
+        assert_eq!(out.stats.queries, 0);
+        let out = engine.search_batch(&index, &queries[..2], &params);
+        assert_eq!(out.hits.len(), 2);
+        for hs in &out.hits {
+            assert_eq!(hs.len(), 5);
+        }
+    }
+
+    #[test]
+    fn stats_aggregate_over_batch() {
+        let (_, queries, index) = setup(300);
+        let params = SearchParams::new(10);
+        let engine = BatchEngine::new(&index, 2);
+        let out = engine.search_batch(&index, &queries, &params);
+        assert_eq!(out.stats.queries, queries.len());
+        assert!(out.stats.wall_us > 0.0);
+        assert!(out.stats.per_query.total_us() > 0.0);
+        assert!(out.stats.qps() > 0.0);
+        // every query produced αh candidates
+        assert_eq!(
+            out.stats.per_query.candidates_alpha,
+            queries.len() * params.alpha_h().min(index.n)
+        );
+    }
+
+    #[test]
+    fn single_thread_engine_runs_inline() {
+        let (_, queries, index) = setup(200);
+        let params = SearchParams::new(5);
+        let engine = BatchEngine::new(&index, 1);
+        let out = engine.search_batch(&index, &queries, &params);
+        for (q, got) in queries.iter().zip(&out.hits) {
+            let want = search(&index, q, &params);
+            assert_hits_identical(got, &want);
+        }
+    }
+}

@@ -1,12 +1,15 @@
 //! The hybrid search engine (paper §5–§6): index construction (pruned
-//! sparse + PQ dense, each with a residual index) and the three-stage
-//! residual-reordering search pipeline.
+//! sparse + PQ dense, each with a residual index), the three-stage
+//! residual-reordering search pipeline, and the parallel batch engine
+//! that fans query batches across per-worker scratches.
 
+pub mod batch;
 pub mod config;
 pub mod index;
 pub mod search;
 pub mod topk;
 
+pub use batch::{BatchEngine, BatchOutput, BatchStats, EngineConfig, ShardMode};
 pub use config::{IndexConfig, SearchParams};
 pub use index::HybridIndex;
 pub use search::SearchHit;

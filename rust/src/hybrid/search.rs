@@ -51,13 +51,32 @@ impl SearchStats {
     pub fn reorder_fraction(&self) -> f64 {
         (self.stage2_us + self.stage3_us) / self.total_us().max(1e-9)
     }
+
+    /// Fold another query's stats into this aggregate (batch reporting).
+    pub fn accumulate(&mut self, other: &SearchStats) {
+        self.stage1_scan_us += other.stage1_scan_us;
+        self.stage1_select_us += other.stage1_select_us;
+        self.stage2_us += other.stage2_us;
+        self.stage3_us += other.stage3_us;
+        self.accumulator_lines += other.accumulator_lines;
+        self.candidates_alpha += other.candidates_alpha;
+        self.candidates_beta += other.candidates_beta;
+    }
 }
 
-/// Reusable per-thread search scratch (accumulator + score buffer):
-/// allocate once per shard/worker, reuse across queries.
+/// Reusable per-thread search scratch: accumulator, dense score buffer,
+/// sparse-score overlay and both per-query LUTs. Allocate once per
+/// shard/worker, reuse across queries — after the first query, stage 1
+/// runs without touching the allocator.
 pub struct SearchScratch {
     pub acc: Accumulator,
     pub dense_scores: Vec<f32>,
+    /// Stage-1 sparse overlay (row, score), drained from `acc` per query.
+    pub overlay: Vec<(u32, f32)>,
+    /// Per-query f32 ADC tables, rebuilt in place.
+    pub lut: QueryLut,
+    /// Per-query LUT16 u8 tables, requantized in place.
+    pub qlut: QuantizedLut,
 }
 
 impl SearchScratch {
@@ -65,6 +84,9 @@ impl SearchScratch {
         SearchScratch {
             acc: Accumulator::new(index.n),
             dense_scores: vec![0.0; index.n],
+            overlay: Vec::new(),
+            lut: QueryLut::with_shape(index.codebooks.k, index.codebooks.l),
+            qlut: QuantizedLut::with_k(index.codebooks.k),
         }
     }
 }
@@ -90,10 +112,14 @@ pub fn search_with(
     // ---- Stage 1: approximate scans over both data indices.
     let t0 = Instant::now();
     let qd = index.query_dense(q);
-    // dense: LUT16 scan over all points
-    let lut = QueryLut::build(&index.codebooks, &qd);
-    let qlut = QuantizedLut::build(&lut);
-    adc_lut16::scan(&index.dense_codes, &qlut, &mut scratch.dense_scores);
+    // dense: LUT16 scan over all points (tables rebuilt in place)
+    scratch.lut.rebuild(&index.codebooks, &qd);
+    scratch.qlut.rebuild(&scratch.lut);
+    adc_lut16::scan(
+        &index.dense_codes,
+        &scratch.qlut,
+        &mut scratch.dense_scores,
+    );
     // sparse: inverted-index accumulation over pruned lists
     scratch.acc.reset();
     index.sparse_index.scan(&q.sparse, &mut scratch.acc);
@@ -103,21 +129,39 @@ pub fn search_with(
     // select αh by combined approximate score
     let t1 = Instant::now();
     let alpha_h = params.alpha_h().min(index.n);
+    // The accumulator holds stale data outside touched blocks; mask by
+    // draining touched rows into the (reused) sparse overlay.
+    scratch.overlay.clear();
+    let (acc, overlay) = (&mut scratch.acc, &mut scratch.overlay);
+    acc.drain_scores(|r, s| overlay.push((r, s)));
+    let alpha_candidates =
+        select_alpha(&scratch.dense_scores, &scratch.overlay, 0, alpha_h);
+    stats.candidates_alpha = alpha_candidates.len();
+    stats.stage1_select_us = t1.elapsed().as_secs_f64() * 1e6;
+
+    // ---- Stages 2–3: residual reordering of the αh candidates.
+    let hits = rerank(index, &qd, q, params, alpha_candidates, &mut stats);
+    (hits, stats)
+}
+
+/// Stage-1 candidate selection: merge a contiguous dense-score slice with
+/// the row-ascending sparse overlay and keep the `alpha_h` best. Rows with
+/// sparse contributions get the sum; rows without still compete on the
+/// dense score alone. `row_base` is the dataset row of `dense_scores[0]`
+/// (nonzero in the batch engine's data-sharded scans).
+pub fn select_alpha(
+    dense_scores: &[f32],
+    overlay: &[(u32, f32)],
+    row_base: u32,
+    alpha_h: usize,
+) -> Vec<(u32, f32)> {
     let mut top = TopK::new(alpha_h);
-    // Rows with sparse contributions get the sum; rows without still
-    // compete on the dense score alone. Iterate once over dense scores
-    // (contiguous) and add sparse accumulator values where present.
-    let sparse_scores = &scratch.acc.scores;
-    // The accumulator holds stale data outside touched blocks; mask via
-    // drain first into a sparse overlay.
-    let mut overlay: Vec<(u32, f32)> = Vec::new();
-    scratch.acc.drain_scores(|r, s| overlay.push((r, s)));
-    let _ = sparse_scores;
     let mut overlay_iter = overlay.iter().peekable();
-    for (i, &ds) in scratch.dense_scores.iter().enumerate() {
+    for (off, &ds) in dense_scores.iter().enumerate() {
+        let row = row_base + off as u32;
         let mut s = ds;
         while let Some(&&(r, sv)) = overlay_iter.peek() {
-            match (r as usize).cmp(&i) {
+            match r.cmp(&row) {
                 std::cmp::Ordering::Less => {
                     overlay_iter.next();
                 }
@@ -129,12 +173,23 @@ pub fn search_with(
                 std::cmp::Ordering::Greater => break,
             }
         }
-        top.push(i as u32, s);
+        top.push(row, s);
     }
-    let alpha_candidates = top.into_sorted();
-    stats.candidates_alpha = alpha_candidates.len();
-    stats.stage1_select_us = t1.elapsed().as_secs_f64() * 1e6;
+    top.into_sorted()
+}
 
+/// Stages 2–3 (§5): residual-reorder the stage-1 candidates and return
+/// the final hits. `qd` must be the index-space dense query (whitened if
+/// the index whitens). Shared by `search_with` and the batch engine's
+/// data-sharded path.
+pub fn rerank(
+    index: &HybridIndex,
+    qd: &[f32],
+    q: &HybridQuery,
+    params: &SearchParams,
+    alpha_candidates: Vec<(u32, f32)>,
+    stats: &mut SearchStats,
+) -> Vec<SearchHit> {
     // ---- Stage 2: dense residual reorder, retain βh.
     let t2 = Instant::now();
     let beta_h = params.beta_h().min(alpha_candidates.len());
@@ -142,7 +197,7 @@ pub fn search_with(
         Some(res) => {
             let mut t = TopK::new(beta_h);
             for &(id, s) in &alpha_candidates {
-                let corrected = s + res.dot(id as usize, &qd);
+                let corrected = s + res.dot(id as usize, qd);
                 t.push(id, corrected);
             }
             t.into_sorted()
@@ -169,7 +224,7 @@ pub fn search_with(
         })
         .collect();
     stats.stage3_us = t3.elapsed().as_secs_f64() * 1e6;
-    (hits, stats)
+    hits
 }
 
 #[cfg(test)]
@@ -246,10 +301,7 @@ mod tests {
         for q in &queries {
             let (_, st) =
                 search_with(&idx, q, &SearchParams::new(10), &mut scratch);
-            stats_sum.stage1_scan_us += st.stage1_scan_us;
-            stats_sum.stage1_select_us += st.stage1_select_us;
-            stats_sum.stage2_us += st.stage2_us;
-            stats_sum.stage3_us += st.stage3_us;
+            stats_sum.accumulate(&st);
         }
         // §5: residual reordering is a minority of the time. At tiny N
         // the gap narrows, so use a loose bound.
@@ -258,6 +310,25 @@ mod tests {
             "reorder fraction {}",
             stats_sum.reorder_fraction()
         );
+    }
+
+    #[test]
+    fn scratch_reuse_is_alloc_stable_and_result_identical() {
+        let (data, queries) = setup();
+        let idx = HybridIndex::build(&data, &IndexConfig::default());
+        let params = SearchParams::new(5);
+        let mut scratch = SearchScratch::new(&idx);
+        let _ = search_with(&idx, &queries[0], &params, &mut scratch);
+        let lut_ptr = scratch.lut.table.as_ptr();
+        let qlut_ptr = scratch.qlut.table.as_ptr();
+        let (reused, _) =
+            search_with(&idx, &queries[1], &params, &mut scratch);
+        // LUT storage must not have been reallocated between queries.
+        assert_eq!(scratch.lut.table.as_ptr(), lut_ptr);
+        assert_eq!(scratch.qlut.table.as_ptr(), qlut_ptr);
+        // and a warm scratch must not change results vs a fresh one
+        let fresh = search(&idx, &queries[1], &params);
+        assert_eq!(reused, fresh);
     }
 
     #[test]

@@ -26,16 +26,22 @@ impl PartialOrd for Entry {
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse on score: smallest at the top for eviction. Ties break
-        // on id so results are deterministic.
+        // on id (larger id = worse) so the kept set is the top of a
+        // *total* order — see `TopK::push`.
         other
             .score
             .partial_cmp(&self.score)
             .unwrap_or(Ordering::Equal)
-            .then(other.id.cmp(&self.id))
+            .then(self.id.cmp(&other.id))
     }
 }
 
-/// Keep the k largest (score, id) pairs seen.
+/// Keep the k largest (score, id) pairs seen, under the total order
+/// (score descending, id ascending). Because admission/eviction follow
+/// that total order — not insertion order — the kept set is independent
+/// of push order, which is what lets the batch engine's sharded scans and
+/// the coordinator's scatter-gather merge reproduce sequential results
+/// bit-for-bit even when scores tie at the kth boundary.
 pub struct TopK {
     k: usize,
     heap: BinaryHeap<Entry>,
@@ -55,7 +61,7 @@ impl TopK {
         if self.heap.len() < self.k {
             self.heap.push(Entry { score, id });
         } else if let Some(min) = self.heap.peek() {
-            if score > min.score {
+            if score > min.score || (score == min.score && id < min.id) {
                 self.heap.pop();
                 self.heap.push(Entry { score, id });
             }
@@ -165,6 +171,32 @@ mod tests {
         let b = vec![(2u32, 4.0f32), (3, 1.0)];
         let m = merge_topk(&[a, b], 3);
         assert_eq!(m, vec![(0, 5.0), (2, 4.0), (1, 3.0)]);
+    }
+
+    #[test]
+    fn tie_at_boundary_is_push_order_invariant() {
+        // Canonical top-2 under (score desc, id asc) of three tied scores
+        // is {0, 3} regardless of the order items arrive — the property
+        // the batch engine's sharded merges rely on.
+        let orders: &[&[u32]] = &[
+            &[0, 7, 3],
+            &[0, 3, 7],
+            &[3, 0, 7],
+            &[3, 7, 0],
+            &[7, 0, 3],
+            &[7, 3, 0],
+        ];
+        for ord in orders {
+            let mut t = TopK::new(2);
+            for &id in *ord {
+                t.push(id, 1.0);
+            }
+            assert_eq!(
+                t.into_sorted(),
+                vec![(0, 1.0), (3, 1.0)],
+                "push order {ord:?}"
+            );
+        }
     }
 
     #[test]

@@ -1,12 +1,17 @@
 //! Artifact manifest parsing (`artifacts/manifest.json`, written by
-//! python/compile/aot.py) using the in-tree JSON reader.
+//! python/compile/aot.py) using the in-tree JSON reader. Std-only —
+//! errors are plain strings so the default (dependency-free) build can
+//! always introspect artifacts even when the PJRT executor is not
+//! compiled in.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
 use crate::util::json::Json;
+
+/// Manifest errors are human-readable strings (no error-handling deps in
+/// the default build).
+pub type Result<T> = std::result::Result<T, String>;
 
 /// Artifact shape configuration (mirrors aot.py constants).
 #[derive(Clone, Debug, PartialEq)]
@@ -38,17 +43,18 @@ pub struct Manifest {
 fn usize_field(j: &Json, key: &str) -> Result<usize> {
     j.get(key)
         .and_then(|v| v.as_usize())
-        .with_context(|| format!("manifest missing numeric '{key}'"))
+        .ok_or_else(|| format!("manifest missing numeric '{key}'"))
 }
 
 impl Manifest {
     pub fn parse(text: &str) -> Result<Self> {
-        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
-        anyhow::ensure!(
-            j.get("format").and_then(|f| f.as_str()) == Some("hlo-text"),
-            "manifest format must be hlo-text"
-        );
-        let cfg = j.get("config").context("manifest missing config")?;
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        if j.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            return Err("manifest format must be hlo-text".to_string());
+        }
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| "manifest missing config".to_string())?;
         let config = ArtifactConfig {
             batch: usize_field(cfg, "batch")?,
             dense_dims: usize_field(cfg, "dense_dims")?,
@@ -62,25 +68,27 @@ impl Manifest {
         let mods = j
             .get("modules")
             .and_then(|m| m.as_obj())
-            .context("manifest missing modules")?;
+            .ok_or_else(|| "manifest missing modules".to_string())?;
         for (name, m) in mods {
             let file = m
                 .get("file")
                 .and_then(|f| f.as_str())
-                .context("module missing file")?
+                .ok_or_else(|| "module missing file".to_string())?
                 .to_string();
             let inputs = m
                 .get("inputs")
                 .and_then(|i| i.as_arr())
-                .context("module missing inputs")?
+                .ok_or_else(|| "module missing inputs".to_string())?
                 .iter()
                 .map(|inp| {
                     let shape = inp
                         .get("shape")
                         .and_then(|s| s.as_arr())
-                        .context("input missing shape")?
+                        .ok_or_else(|| "input missing shape".to_string())?
                         .iter()
-                        .map(|d| d.as_usize().context("bad dim"))
+                        .map(|d| {
+                            d.as_usize().ok_or_else(|| "bad dim".to_string())
+                        })
                         .collect::<Result<Vec<usize>>>()?;
                     let dtype = inp
                         .get("dtype")
@@ -98,7 +106,7 @@ impl Manifest {
 
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("read {}", path.display()))?;
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
         Self::parse(&text)
     }
 }

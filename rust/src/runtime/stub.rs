@@ -1,0 +1,57 @@
+//! Dependency-free stand-in for the PJRT executor, compiled when the
+//! `xla-runtime` feature is off (the default in the offline image).
+//!
+//! `load` always returns an explanatory error, so the stub can never be
+//! constructed; the remaining methods exist only to keep callers
+//! (`main.rs runtime`, `examples/querysim_e2e.rs`, the runtime
+//! integration tests) compiling unchanged — they all handle the `Err`
+//! branch as "artifacts unavailable, skip".
+
+use std::path::Path;
+
+use crate::runtime::artifacts::Manifest;
+
+const UNAVAILABLE: &str = "hybrid-ip was built without the `xla-runtime` \
+     feature; the PJRT executor is unavailable. Enable the feature and \
+     its dependencies in Cargo.toml to run AOT artifacts.";
+
+/// Stub mirror of the PJRT-backed `XlaRuntime` (see `runtime::pjrt`).
+pub struct XlaRuntime {
+    pub manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Always fails in the stub build.
+    pub fn load(_dir: &Path) -> Result<Self, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn module_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Stub mirror of `dense_score_block`; unreachable (no constructor
+    /// succeeds) but keeps call sites typechecking.
+    pub fn dense_score_block(
+        &self,
+        _queries: &[Vec<f32>],
+        _codebooks_flat: &[f32],
+        _codes_rows: &[Vec<u8>],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    /// Stub mirror of `kmeans_step`.
+    pub fn kmeans_step(
+        &self,
+        _points: &[f32],
+        _n_points: usize,
+        _centroids: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>, f32), String> {
+        Err(UNAVAILABLE.to_string())
+    }
+}

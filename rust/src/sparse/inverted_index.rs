@@ -91,12 +91,12 @@ impl Accumulator {
 
     /// Iterate (row, score) over touched blocks only, in ascending row
     /// order (callers merge against other row-ordered score streams;
-    /// touch order follows list traversal and is arbitrary).
-    pub fn drain_scores<F: FnMut(u32, f32)>(&self, mut f: F) {
+    /// touch order follows list traversal and is arbitrary). Sorts the
+    /// touched-block list in place — no allocation on the query hot path.
+    pub fn drain_scores<F: FnMut(u32, f32)>(&mut self, mut f: F) {
         let n = self.scores.len();
-        let mut blocks = self.touched_blocks.clone();
-        blocks.sort_unstable();
-        for &b in &blocks {
+        self.touched_blocks.sort_unstable();
+        for &b in &self.touched_blocks {
             let start = b as usize * F32_PER_LINE;
             let end = (start + F32_PER_LINE).min(n);
             for i in start..end {
@@ -148,6 +148,34 @@ impl InvertedIndex {
             // Hot loop: sequential streaming over the list; accumulator
             // access pattern is what cache_sort optimizes.
             for (&r, &w) in rows.iter().zip(vals) {
+                acc.add(r, qv * w);
+            }
+        }
+    }
+
+    /// Range-restricted scan: accumulate only rows in `[row_start,
+    /// row_end)`. Lists store rows ascending, so each list's contribution
+    /// is one contiguous segment located by binary search — data-sharded
+    /// batch workers walk disjoint segments of every list rather than
+    /// re-reading whole lists.
+    pub fn scan_range(
+        &self,
+        q: &SparseVector,
+        acc: &mut Accumulator,
+        row_start: u32,
+        row_end: u32,
+    ) {
+        for (dim, qv) in q.iter() {
+            let j = dim as usize;
+            if j >= self.n_dims() {
+                continue;
+            }
+            let (rows, vals) = self.csc.col(j);
+            let lo = rows.partition_point(|&r| r < row_start);
+            for (&r, &w) in rows[lo..].iter().zip(&vals[lo..]) {
+                if r >= row_end {
+                    break;
+                }
                 acc.add(r, qv * w);
             }
         }
@@ -237,6 +265,46 @@ mod tests {
         // q2 scores must not contain q1 leftovers.
         assert!(s2.iter().all(|&(r, _)| r == 1));
         assert!(s1.iter().any(|&(r, _)| r == 0));
+    }
+
+    #[test]
+    fn scan_range_partitions_full_scan() {
+        let mut rng = Rng::new(7);
+        let n = 100;
+        let d = 20;
+        let rows: Vec<SparseVector> = (0..n)
+            .map(|_| {
+                let nnz = 1 + rng.below(5);
+                let mut dims: Vec<u32> = rng
+                    .sample_indices(d, nnz)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                dims.sort_unstable();
+                let vals = (0..nnz).map(|_| rng.gauss_f32()).collect();
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        let m = CsrMatrix::from_rows(&rows, d);
+        let idx = InvertedIndex::build(&m);
+        let q = SparseVector::new(vec![0, 3, 7, 11], vec![1.0, -0.5, 2.0, 0.25]);
+        let mut full = Accumulator::new(n);
+        full.reset();
+        idx.scan(&q, &mut full);
+        let mut want = Vec::new();
+        full.drain_scores(|r, s| want.push((r, s)));
+        // disjoint range scans must reproduce the full scan exactly
+        let mut got = Vec::new();
+        let mid = (n / 2) as u32;
+        for (a, b) in [(0u32, mid), (mid, n as u32)] {
+            let mut acc = Accumulator::new(n);
+            acc.reset();
+            idx.scan_range(&q, &mut acc, a, b);
+            let before = got.len();
+            acc.drain_scores(|r, s| got.push((r, s)));
+            assert!(got[before..].iter().all(|&(r, _)| r >= a && r < b));
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -47,6 +47,28 @@ where
     });
 }
 
+/// Spawn exactly `threads` scoped workers, each called once with its
+/// worker id `0..threads`. Unlike [`parallel_for`], the body knows *which*
+/// worker it is — the primitive the batch engine uses to hand each worker
+/// its own long-lived `SearchScratch`. `threads == 1` runs inline with no
+/// spawn.
+pub fn parallel_workers<F>(threads: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 {
+        body(0);
+        return;
+    }
+    thread::scope(|scope| {
+        let body = &body;
+        for w in 0..threads {
+            scope.spawn(move || body(w));
+        }
+    });
+}
+
 /// `parallel_for(n, threads, f)` calls `f(i)` for every `i in 0..n`.
 pub fn parallel_for<F>(n: usize, threads: usize, body: F)
 where
@@ -202,6 +224,23 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * i);
         }
+    }
+
+    #[test]
+    fn parallel_workers_each_id_once() {
+        let hits: Vec<AtomicUsize> =
+            (0..6).map(|_| AtomicUsize::new(0)).collect();
+        parallel_workers(6, |w| {
+            hits[w].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // single worker runs inline
+        let solo = AtomicUsize::new(0);
+        parallel_workers(1, |w| {
+            assert_eq!(w, 0);
+            solo.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(solo.load(Ordering::Relaxed), 1);
     }
 
     #[test]

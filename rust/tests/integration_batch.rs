@@ -1,0 +1,145 @@
+//! Integration: the parallel batch engine against sequential search —
+//! determinism at thread counts, per-worker scratch hygiene across
+//! interleaved repeated queries, data-sharded agreement, and the
+//! coordinator's shard-level batch path.
+
+use hybrid_ip::coordinator::{Server, ServerConfig};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::hybrid::batch::{BatchEngine, EngineConfig, ShardMode};
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::search::{search_with, SearchHit, SearchScratch};
+use hybrid_ip::types::hybrid::HybridQuery;
+
+fn setup(n: usize, seed: u64) -> (Vec<HybridQuery>, HybridIndex) {
+    let mut cfg = QuerySimConfig::tiny();
+    cfg.n = n;
+    let data = cfg.generate(seed);
+    let queries = cfg.related_queries(&data, seed ^ 0xF00D, 16);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    (queries, index)
+}
+
+fn sequential(
+    index: &HybridIndex,
+    queries: &[HybridQuery],
+    params: &SearchParams,
+) -> Vec<Vec<SearchHit>> {
+    let mut scratch = SearchScratch::new(index);
+    queries
+        .iter()
+        .map(|q| search_with(index, q, params, &mut scratch).0)
+        .collect()
+}
+
+fn assert_bit_identical(got: &[Vec<SearchHit>], want: &[Vec<SearchHit>]) {
+    assert_eq!(got.len(), want.len());
+    for (qi, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.len(), w.len(), "query {qi}: result count");
+        for (rank, (a, b)) in g.iter().zip(w).enumerate() {
+            assert_eq!(a.id, b.id, "query {qi} rank {rank}: id");
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "query {qi} rank {rank}: score bits"
+            );
+        }
+    }
+}
+
+#[test]
+fn by_query_engine_bit_identical_to_sequential_at_every_width() {
+    let (queries, index) = setup(800, 31);
+    let params = SearchParams::new(10);
+    let want = sequential(&index, &queries, &params);
+    for threads in [1usize, 2, 3, 4, 8] {
+        let engine = BatchEngine::new(&index, threads);
+        let out = engine.search_batch(&index, &queries, &params);
+        assert_bit_identical(&out.hits, &want);
+    }
+}
+
+#[test]
+fn by_data_engine_bit_identical_to_sequential() {
+    let (queries, index) = setup(800, 37);
+    // α large enough that the candidate cut crosses quantized-score ties,
+    // exercising the total-order TopK merge.
+    let params = SearchParams::new(10).with_alpha(25.0);
+    let want = sequential(&index, &queries, &params);
+    for threads in [2usize, 4, 7] {
+        let engine = BatchEngine::with_config(
+            &index,
+            EngineConfig { threads, mode: ShardMode::ByData },
+        );
+        let out = engine.search_batch(&index, &queries, &params);
+        assert_bit_identical(&out.hits, &want);
+    }
+}
+
+#[test]
+fn worker_scratch_does_not_leak_state_across_queries() {
+    let (queries, index) = setup(600, 41);
+    let params = SearchParams::new(10);
+    // One batch where the same query appears first, interleaved in the
+    // middle, and last: every occurrence must produce identical hits,
+    // regardless of which (warm) worker scratch served it.
+    let probe = queries[0].clone();
+    let mut batch = vec![probe.clone()];
+    for q in &queries[1..] {
+        batch.push(q.clone());
+        batch.push(probe.clone());
+    }
+    let engine = BatchEngine::new(&index, 3);
+    let out = engine.search_batch(&index, &batch, &params);
+    let fresh = sequential(&index, std::slice::from_ref(&probe), &params)
+        .remove(0);
+    for (i, hits) in out.hits.iter().enumerate() {
+        if i % 2 == 0 {
+            // even slots are the probe query
+            assert_bit_identical(
+                std::slice::from_ref(hits),
+                std::slice::from_ref(&fresh),
+            );
+        }
+    }
+    // and a second pass over the same (now fully warm) engine agrees
+    let again = engine.search_batch(&index, &batch, &params);
+    assert_bit_identical(&again.hits, &out.hits);
+}
+
+#[test]
+fn batch_stats_aggregate_consistently() {
+    let (queries, index) = setup(500, 43);
+    let params = SearchParams::new(10);
+    let engine = BatchEngine::new(&index, 4);
+    let out = engine.search_batch(&index, &queries, &params);
+    assert_eq!(out.stats.queries, queries.len());
+    assert!(out.stats.wall_us > 0.0);
+    assert!(out.stats.qps() > 0.0);
+    assert!(out.stats.mean_query_us() > 0.0);
+    assert_eq!(
+        out.stats.per_query.candidates_alpha,
+        queries.len() * params.alpha_h().min(index.n)
+    );
+}
+
+#[test]
+fn server_batch_path_matches_singles_with_engine_threads() {
+    let mut cfg = QuerySimConfig::tiny();
+    cfg.n = 400;
+    let data = cfg.generate(47);
+    let queries = cfg.related_queries(&data, 48, 6);
+    let params = SearchParams::new(10);
+    let server = Server::start(
+        &data,
+        &ServerConfig {
+            n_shards: 2,
+            engine_threads: 2,
+            ..Default::default()
+        },
+    );
+    let batched = server.search_batch(&queries, &params);
+    for (q, want) in queries.iter().zip(&batched) {
+        assert_eq!(&server.search(q, &params), want);
+    }
+}
