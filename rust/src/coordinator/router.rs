@@ -1,17 +1,23 @@
 //! Scatter-gather router: broadcast a query to every shard, gather the
 //! per-shard top-h lists, merge to the global top-h (ids are global, so
-//! the merge is a pure top-k).
+//! the merge is a pure top-k). Mutations route to exactly one shard by a
+//! stateless ownership rule: ids inside a shard's initial contiguous
+//! slice belong to that shard; ids born after startup go to
+//! `id % n_shards`. The rule is deterministic, so upsert and delete of
+//! the same id always land on the same shard.
 
 use std::sync::mpsc::channel;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::shard::{
-    ShardBatchRequest, ShardHandle, ShardRequest,
+    ShardBatchRequest, ShardDelete, ShardFlush, ShardHandle, ShardRequest,
+    ShardUpsert, UpsertOutcome,
 };
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::topk::merge_topk;
 use crate::types::hybrid::HybridQuery;
+use crate::types::sparse::SparseVector;
 
 pub struct Router {
     shards: Vec<ShardHandle>,
@@ -92,6 +98,75 @@ impl Router {
             .into_iter()
             .map(|lists| merge_topk(&lists, params.h))
             .collect()
+    }
+
+    /// Owner shard of a global id (see module docs for the rule).
+    pub fn owner_of(&self, id: u32) -> usize {
+        let i = id as usize;
+        for (s, shard) in self.shards.iter().enumerate() {
+            if i >= shard.base && i < shard.base + shard.len {
+                return s;
+            }
+        }
+        i % self.shards.len()
+    }
+
+    /// Insert or replace document `id` on its owner shard (synchronous:
+    /// waits for the shard's ack). A payload whose dimensions don't
+    /// match the corpus is rejected, not applied.
+    pub fn upsert(
+        &self,
+        id: u32,
+        sparse: SparseVector,
+        dense: Vec<f32>,
+    ) -> UpsertOutcome {
+        let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.shards[self.owner_of(id)].submit_upsert(ShardUpsert {
+            id,
+            sparse,
+            dense,
+            reply: tx,
+            tag,
+        });
+        let ack = rx.recv().expect("shard worker gone");
+        debug_assert_eq!(ack.tag, tag);
+        match (ack.accepted, ack.applied) {
+            (false, _) => UpsertOutcome::Rejected,
+            (true, true) => UpsertOutcome::Replaced,
+            (true, false) => UpsertOutcome::Inserted,
+        }
+    }
+
+    /// Delete document `id`; returns false if no shard held it.
+    pub fn delete(&self, id: u32) -> bool {
+        let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.shards[self.owner_of(id)].submit_delete(ShardDelete {
+            id,
+            reply: tx,
+            tag,
+        });
+        let ack = rx.recv().expect("shard worker gone");
+        debug_assert_eq!(ack.tag, tag);
+        ack.applied
+    }
+
+    /// Broadcast a flush barrier: every shard seals its write buffer and
+    /// compacts if over threshold. Returns the total live doc count.
+    pub fn flush(&self) -> usize {
+        let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        for shard in &self.shards {
+            shard.submit_flush(ShardFlush { reply: tx.clone(), tag });
+        }
+        drop(tx);
+        let mut total = 0usize;
+        while let Ok(ack) = rx.recv() {
+            debug_assert_eq!(ack.tag, tag);
+            total += ack.len;
+        }
+        total
     }
 }
 

@@ -7,9 +7,11 @@ use std::time::Instant;
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::{LatencyRecorder, MetricsSnapshot};
 use crate::coordinator::router::Router;
-use crate::coordinator::shard::ShardHandle;
+use crate::coordinator::shard::{ShardHandle, UpsertOutcome};
 use crate::hybrid::config::{IndexConfig, SearchParams};
+use crate::hybrid::mutable::MutableConfig;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
+use crate::types::sparse::SparseVector;
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -20,15 +22,30 @@ pub struct ServerConfig {
     pub engine_threads: usize,
     pub index: IndexConfig,
     pub batch: BatchPolicy,
+    /// Buffer rows before a shard seals a delta segment.
+    pub delta_seal_rows: usize,
+    /// Per-shard merge threshold (fraction of the base segment).
+    pub merge_fraction: f32,
+    /// Let shards kick off *background* merges when the threshold is
+    /// crossed (serving continues during the merge). Off by default:
+    /// install timing then decides which docs score via merged-base vs
+    /// delta codebooks, so results stop being bit-reproducible across
+    /// runs. With it off, compaction happens only at the deterministic
+    /// [`Server::flush`] barrier (threshold-gated, synchronous).
+    pub auto_merge: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
+        let m = MutableConfig::default();
         ServerConfig {
             n_shards: 4,
             engine_threads: 1,
             index: IndexConfig::default(),
             batch: BatchPolicy::default(),
+            delta_seal_rows: m.delta_seal_rows,
+            merge_fraction: m.merge_fraction,
+            auto_merge: m.auto_merge,
         }
     }
 }
@@ -51,16 +68,15 @@ impl Server {
                 .into_iter()
                 .enumerate()
                 .map(|(i, (base, slice))| {
-                    let cfg = config.index.clone();
-                    let engine_threads = config.engine_threads;
+                    let cfg = MutableConfig {
+                        index: config.index.clone(),
+                        delta_seal_rows: config.delta_seal_rows,
+                        merge_fraction: config.merge_fraction,
+                        engine_threads: config.engine_threads,
+                        auto_merge: config.auto_merge,
+                    };
                     sc.spawn(move || {
-                        ShardHandle::spawn_with_engine(
-                            i,
-                            base,
-                            slice,
-                            &cfg,
-                            engine_threads,
-                        )
+                        ShardHandle::spawn_mutable(i, base, slice, cfg)
                     })
                 })
                 .collect();
@@ -119,6 +135,38 @@ impl Server {
             self.metrics.record(elapsed);
         }
         results
+    }
+
+    /// Insert or replace document `id` on its owner shard. Synchronous:
+    /// once this returns, the doc is searchable (served from the shard's
+    /// write buffer until the next seal). Malformed payloads (dimension
+    /// mismatch) are rejected without touching the cluster.
+    pub fn upsert(
+        &mut self,
+        id: u32,
+        sparse: SparseVector,
+        dense: Vec<f32>,
+    ) -> UpsertOutcome {
+        let outcome = self.router.upsert(id, sparse, dense);
+        if outcome == UpsertOutcome::Inserted {
+            self.n += 1;
+        }
+        outcome
+    }
+
+    /// Delete document `id`; returns false if it wasn't present.
+    pub fn delete(&mut self, id: u32) -> bool {
+        let applied = self.router.delete(id);
+        if applied {
+            self.n -= 1;
+        }
+        applied
+    }
+
+    /// Flush barrier: every shard seals its write buffer and compacts if
+    /// over threshold. Returns the cluster-wide live doc count.
+    pub fn flush(&self) -> usize {
+        self.router.flush()
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {

@@ -1,17 +1,19 @@
-//! Shard worker: a thread owning one `HybridIndex` slice, serving search
-//! requests over an mpsc channel (the in-process analogue of the paper's
-//! per-server shard). Each worker constructs one [`BatchEngine`] at
-//! startup — single queries and whole batches alike flow through it, so
-//! the per-worker scratches are allocated exactly once per shard.
+//! Shard worker: a thread owning one mutable index slice, serving search
+//! *and mutation* requests over an mpsc channel (the in-process analogue
+//! of the paper's per-server shard). Each shard owns a
+//! [`MutableHybridIndex`] whose per-segment batch engines hold the
+//! long-lived scratches — single queries and whole batches alike flow
+//! through them, and `Upsert`/`Delete`/`Flush` mutate the shard online
+//! while it keeps serving.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::hybrid::batch::BatchEngine;
 use crate::hybrid::config::{IndexConfig, SearchParams};
-use crate::hybrid::index::HybridIndex;
+use crate::hybrid::mutable::{MutableConfig, MutableHybridIndex};
 use crate::types::hybrid::{HybridDataset, HybridQuery};
+use crate::types::sparse::SparseVector;
 
 /// A search request routed to one shard.
 pub struct ShardRequest {
@@ -46,15 +48,71 @@ pub struct ShardBatchReply {
     pub hits: Vec<Vec<(u32, f32)>>,
 }
 
+/// Insert-or-replace one document (global id) on its owner shard.
+pub struct ShardUpsert {
+    pub id: u32,
+    pub sparse: SparseVector,
+    pub dense: Vec<f32>,
+    pub reply: Sender<ShardAck>,
+    pub tag: u64,
+}
+
+/// Delete one document (global id) from its owner shard.
+pub struct ShardDelete {
+    pub id: u32,
+    pub reply: Sender<ShardAck>,
+    pub tag: u64,
+}
+
+/// Seal the shard's write buffer (and compact if the merge threshold is
+/// crossed) — the deterministic barrier after a write burst.
+pub struct ShardFlush {
+    pub reply: Sender<ShardAck>,
+    pub tag: u64,
+}
+
+/// Mutation acknowledgement. `applied` reports whether the op touched an
+/// existing doc: true for a replacing upsert or a delete of a present
+/// id; false for a fresh insert or a delete of an absent id.
+pub struct ShardAck {
+    pub tag: u64,
+    pub shard_id: usize,
+    pub applied: bool,
+    /// False when an upsert payload was rejected (dimension mismatch)
+    /// without touching the index — malformed documents must not kill
+    /// the worker.
+    pub accepted: bool,
+    /// Live docs on the shard after the operation.
+    pub len: usize,
+}
+
+/// Outcome of an upsert routed through the cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpsertOutcome {
+    /// New document inserted.
+    Inserted,
+    /// Existing document replaced.
+    Replaced,
+    /// Payload rejected (sparse/dense dimensions don't match the
+    /// shard's corpus); the index is unchanged.
+    Rejected,
+}
+
 enum ShardMsg {
     One(ShardRequest),
     Batch(ShardBatchRequest),
+    Upsert(ShardUpsert),
+    Delete(ShardDelete),
+    Flush(ShardFlush),
 }
 
 /// Owning handle to a running shard worker.
 pub struct ShardHandle {
     pub shard_id: usize,
+    /// First global id of the shard's *initial* slice (mutation routing
+    /// uses these initial ranges; see `Router::owner_of`).
     pub base: usize,
+    /// Length of the initial slice.
     pub len: usize,
     tx: Sender<ShardMsg>,
     join: Option<JoinHandle<()>>,
@@ -62,7 +120,7 @@ pub struct ShardHandle {
 
 impl ShardHandle {
     /// Build the shard index (synchronously) and start its worker thread
-    /// with a single-threaded batch engine (the classic one-thread-per-
+    /// with single-threaded segment engines (the classic one-thread-per-
     /// shard layout).
     pub fn spawn(
         shard_id: usize,
@@ -73,9 +131,9 @@ impl ShardHandle {
         Self::spawn_with_engine(shard_id, base, data, config, 1)
     }
 
-    /// As [`ShardHandle::spawn`], but the shard's batch engine fans each
-    /// batch across `engine_threads` workers (intra-shard parallelism for
-    /// big hosts serving few shards).
+    /// As [`ShardHandle::spawn`], but each segment's batch engine fans
+    /// batches across `engine_threads` workers (intra-shard parallelism
+    /// for big hosts serving few shards).
     pub fn spawn_with_engine(
         shard_id: usize,
         base: usize,
@@ -83,32 +141,47 @@ impl ShardHandle {
         config: &IndexConfig,
         engine_threads: usize,
     ) -> Self {
+        Self::spawn_mutable(
+            shard_id,
+            base,
+            data,
+            MutableConfig {
+                index: config.clone(),
+                engine_threads,
+                ..MutableConfig::default()
+            },
+        )
+    }
+
+    /// Full-control spawn: the shard serves from a [`MutableHybridIndex`]
+    /// with the given mutability knobs. Rows of `data` get global ids
+    /// `base..base+len`.
+    pub fn spawn_mutable(
+        shard_id: usize,
+        base: usize,
+        data: HybridDataset,
+        config: MutableConfig,
+    ) -> Self {
         let len = data.len();
-        let index = HybridIndex::build(&data, config);
+        let mut index =
+            MutableHybridIndex::from_dataset(&data, base as u32, config);
         let (tx, rx): (Sender<ShardMsg>, Receiver<ShardMsg>) = channel();
         let join = std::thread::Builder::new()
             .name(format!("shard-{shard_id}"))
             .spawn(move || {
-                let engine = BatchEngine::new(&index, engine_threads);
-                let to_global = |h: crate::hybrid::search::SearchHit| {
-                    (base as u32 + h.id, h.score)
-                };
+                // receiver may have hung up on shutdown: ignore sends
                 while let Ok(msg) = rx.recv() {
-                    // receiver may have hung up on shutdown: ignore sends
+                    // Install any finished background merge before
+                    // serving: read-only workloads must not keep paying
+                    // the multi-segment scan (and the merge job's second
+                    // index copy) after compaction has completed.
+                    index.try_install_merge();
                     match msg {
                         ShardMsg::One(req) => {
-                            let out = engine.search_batch(
-                                &index,
-                                std::slice::from_ref(&req.query),
-                                &req.params,
-                            );
-                            let hits = out
-                                .hits
+                            let hits = index
+                                .search(&req.query, &req.params)
                                 .into_iter()
-                                .next()
-                                .unwrap_or_default()
-                                .into_iter()
-                                .map(to_global)
+                                .map(|h| (h.id, h.score))
                                 .collect();
                             let _ = req.reply.send(ShardReply {
                                 tag: req.tag,
@@ -117,22 +190,59 @@ impl ShardHandle {
                             });
                         }
                         ShardMsg::Batch(req) => {
-                            let out = engine.search_batch(
-                                &index,
-                                &req.queries,
-                                &req.params,
-                            );
-                            let hits = out
-                                .hits
+                            let hits = index
+                                .search_batch(&req.queries, &req.params)
                                 .into_iter()
                                 .map(|hs| {
-                                    hs.into_iter().map(to_global).collect()
+                                    hs.into_iter()
+                                        .map(|h| (h.id, h.score))
+                                        .collect()
                                 })
                                 .collect();
                             let _ = req.reply.send(ShardBatchReply {
                                 tag: req.tag,
                                 shard_id,
                                 hits,
+                            });
+                        }
+                        ShardMsg::Upsert(req) => {
+                            // Validate here rather than asserting inside
+                            // the index: a malformed document must ack a
+                            // rejection, not panic the worker thread.
+                            let valid = index
+                                .payload_fits(&req.sparse, &req.dense);
+                            let applied = valid
+                                && index.upsert(
+                                    req.id, req.sparse, req.dense,
+                                );
+                            let _ = req.reply.send(ShardAck {
+                                tag: req.tag,
+                                shard_id,
+                                applied,
+                                accepted: valid,
+                                len: index.len(),
+                            });
+                        }
+                        ShardMsg::Delete(req) => {
+                            let applied = index.delete(req.id);
+                            let _ = req.reply.send(ShardAck {
+                                tag: req.tag,
+                                shard_id,
+                                applied,
+                                accepted: true,
+                                len: index.len(),
+                            });
+                        }
+                        ShardMsg::Flush(req) => {
+                            index.wait_merge();
+                            index.flush();
+                            index.maybe_merge();
+                            let _ = req.reply.send(ShardAck {
+                                tag: req.tag,
+                                shard_id,
+                                applied: true,
+                                accepted: true,
+                                len: index.len(),
                             });
                         }
                     }
@@ -148,6 +258,18 @@ impl ShardHandle {
 
     pub fn submit_batch(&self, req: ShardBatchRequest) {
         self.tx.send(ShardMsg::Batch(req)).expect("shard worker gone");
+    }
+
+    pub fn submit_upsert(&self, req: ShardUpsert) {
+        self.tx.send(ShardMsg::Upsert(req)).expect("shard worker gone");
+    }
+
+    pub fn submit_delete(&self, req: ShardDelete) {
+        self.tx.send(ShardMsg::Delete(req)).expect("shard worker gone");
+    }
+
+    pub fn submit_flush(&self, req: ShardFlush) {
+        self.tx.send(ShardMsg::Flush(req)).expect("shard worker gone");
     }
 }
 
@@ -227,5 +349,103 @@ mod tests {
             });
             assert_eq!(&rx.recv().unwrap().hits, want);
         }
+    }
+
+    #[test]
+    fn shard_mutates_while_serving() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(9);
+        let n = data.len();
+        let shard =
+            ShardHandle::spawn(0, 0, data.clone(), &IndexConfig::default());
+        // upsert a copy of row 0 under a fresh global id
+        let (tx, rx) = channel();
+        shard.submit_upsert(ShardUpsert {
+            id: n as u32,
+            sparse: data.sparse.row_vec(0),
+            dense: data.dense.row(0).to_vec(),
+            reply: tx,
+            tag: 1,
+        });
+        let ack = rx.recv().unwrap();
+        assert!(!ack.applied, "fresh insert replaces nothing");
+        assert_eq!(ack.len, n + 1);
+        // upserting the same id again replaces
+        let (tx, rx) = channel();
+        shard.submit_upsert(ShardUpsert {
+            id: n as u32,
+            sparse: data.sparse.row_vec(1),
+            dense: data.dense.row(1).to_vec(),
+            reply: tx,
+            tag: 11,
+        });
+        let ack = rx.recv().unwrap();
+        assert!(ack.applied);
+        assert_eq!(ack.len, n + 1);
+        // delete it again (and a bogus id)
+        let (tx, rx) = channel();
+        shard.submit_delete(ShardDelete { id: n as u32, reply: tx, tag: 2 });
+        assert!(rx.recv().unwrap().applied);
+        let (tx, rx) = channel();
+        shard.submit_delete(ShardDelete {
+            id: 9_999_999,
+            reply: tx,
+            tag: 3,
+        });
+        let ack = rx.recv().unwrap();
+        assert!(!ack.applied);
+        assert_eq!(ack.len, n);
+        // flush is a deterministic barrier
+        let (tx, rx) = channel();
+        shard.submit_flush(ShardFlush { reply: tx, tag: 4 });
+        assert!(rx.recv().unwrap().applied);
+    }
+
+    #[test]
+    fn malformed_upsert_is_rejected_not_fatal() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(13);
+        let n = data.len();
+        let shard =
+            ShardHandle::spawn(0, 0, data.clone(), &IndexConfig::default());
+        // wrong dense dimensionality: must ack a rejection, index
+        // untouched, worker still alive
+        let (tx, rx) = channel();
+        shard.submit_upsert(ShardUpsert {
+            id: n as u32,
+            sparse: data.sparse.row_vec(0),
+            dense: vec![0.0; data.dense_dim() + 3],
+            reply: tx,
+            tag: 1,
+        });
+        let ack = rx.recv().unwrap();
+        assert!(!ack.accepted);
+        assert!(!ack.applied);
+        assert_eq!(ack.len, n);
+        // sparse dim out of range: same
+        let (tx, rx) = channel();
+        shard.submit_upsert(ShardUpsert {
+            id: n as u32,
+            sparse: crate::types::sparse::SparseVector::new(
+                vec![data.sparse_dim() as u32],
+                vec![1.0],
+            ),
+            dense: data.dense.row(0).to_vec(),
+            reply: tx,
+            tag: 2,
+        });
+        let ack = rx.recv().unwrap();
+        assert!(!ack.accepted);
+        assert_eq!(ack.len, n);
+        // the worker survived: a well-formed request still serves
+        let (tx, rx) = channel();
+        let q = cfg.related_queries(&data, 14, 1).remove(0);
+        shard.submit(ShardRequest {
+            query: q,
+            params: SearchParams::new(5),
+            reply: tx,
+            tag: 3,
+        });
+        assert_eq!(rx.recv().unwrap().hits.len(), 5);
     }
 }

@@ -36,8 +36,10 @@ use crate::dense::lut::{QuantizedLut, QueryLut};
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::index::HybridIndex;
 use crate::hybrid::search::{
-    rerank, search_with, select_alpha, SearchHit, SearchScratch, SearchStats,
+    rerank, search_with_filter, select_alpha, SearchHit, SearchScratch,
+    SearchStats,
 };
+use crate::hybrid::segment::Tombstones;
 use crate::hybrid::topk::TopK;
 use crate::types::hybrid::HybridQuery;
 use crate::util::threadpool::{default_threads, parallel_workers, SharedMutPtr};
@@ -141,14 +143,34 @@ impl BatchEngine {
         queries: &[HybridQuery],
         params: &SearchParams,
     ) -> BatchOutput {
+        self.search_batch_filtered(index, queries, params, None)
+    }
+
+    /// As [`BatchEngine::search_batch`], with a tombstone bitmap applied
+    /// to every query's stage-1 candidates before the reorder stages —
+    /// the mutable index's per-segment batch path. Both sharding modes
+    /// filter at the same point (after global αh selection), so results
+    /// stay bit-identical across modes and with sequential
+    /// `search_with_filter`.
+    pub fn search_batch_filtered(
+        &self,
+        index: &HybridIndex,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+        tombstones: Option<&Tombstones>,
+    ) -> BatchOutput {
         assert_eq!(
             index.n, self.n,
             "engine scratches were sized for a different index"
         );
         let t = Instant::now();
         let (hits, per_query) = match self.mode {
-            ShardMode::ByQuery => self.run_by_query(index, queries, params),
-            ShardMode::ByData => self.run_by_data(index, queries, params),
+            ShardMode::ByQuery => {
+                self.run_by_query(index, queries, params, tombstones)
+            }
+            ShardMode::ByData => {
+                self.run_by_data(index, queries, params, tombstones)
+            }
         };
         BatchOutput {
             hits,
@@ -167,6 +189,7 @@ impl BatchEngine {
         index: &HybridIndex,
         queries: &[HybridQuery],
         params: &SearchParams,
+        tombstones: Option<&Tombstones>,
     ) -> (Vec<Vec<SearchHit>>, SearchStats) {
         let m = queries.len();
         let mut hits: Vec<Vec<SearchHit>> = vec![Vec::new(); m];
@@ -183,8 +206,13 @@ impl BatchEngine {
                     if i >= m {
                         break;
                     }
-                    let (h, st) =
-                        search_with(index, &queries[i], params, &mut scratch);
+                    let (h, st) = search_with_filter(
+                        index,
+                        &queries[i],
+                        params,
+                        &mut scratch,
+                        tombstones,
+                    );
                     // SAFETY: the cursor hands each i to exactly one
                     // worker; slots are disjoint and outlive the scope.
                     unsafe {
@@ -213,6 +241,7 @@ impl BatchEngine {
         index: &HybridIndex,
         queries: &[HybridQuery],
         params: &SearchParams,
+        tombstones: Option<&Tombstones>,
     ) -> (Vec<Vec<SearchHit>>, SearchStats) {
         let m = queries.len();
         let mut agg = SearchStats::default();
@@ -223,6 +252,13 @@ impl BatchEngine {
         let n_blocks = index.dense_codes.n_blocks;
         let workers = self.threads.min(n_blocks).max(1);
         let alpha_h = params.alpha_h().min(n);
+        // Over-select by the dead count so tombstones can't eat into the
+        // live αh budget — mirrors `search_with_filter` exactly, keeping
+        // the two modes bit-identical.
+        let fetch = match tombstones {
+            Some(t) => (alpha_h + t.dead()).min(n),
+            None => alpha_h,
+        };
 
         // Per-query dense transform + quantized LUT, built once on the
         // calling thread (one in-place f32 LUT rebuild per query) and
@@ -288,7 +324,7 @@ impl BatchEngine {
                         &scratch.dense_scores[row0..row1],
                         &scratch.overlay,
                         row0 as u32,
-                        alpha_h.min(row1 - row0),
+                        fetch.min(row1 - row0),
                     );
                     // SAFETY: slot (qi, w) is written by exactly one
                     // worker; slots are disjoint and outlive the scope.
@@ -313,13 +349,18 @@ impl BatchEngine {
         for (qi, q) in queries.iter().enumerate() {
             let mut stats = SearchStats::default();
             let t1 = Instant::now();
-            let mut top = TopK::new(alpha_h);
+            let mut top = TopK::new(fetch);
             for part in &partials[qi * workers..(qi + 1) * workers] {
                 for &(r, s) in part {
                     top.push(r, s);
                 }
             }
-            let alpha_candidates = top.into_sorted();
+            let mut alpha_candidates = top.into_sorted();
+            if let Some(t) = tombstones {
+                alpha_candidates
+                    .retain(|&(r, _)| !t.get(index.original_id(r)));
+                alpha_candidates.truncate(alpha_h);
+            }
             stats.candidates_alpha = alpha_candidates.len();
             stats.stage1_select_us = t1.elapsed().as_secs_f64() * 1e6;
             hits.push(rerank(

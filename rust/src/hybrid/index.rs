@@ -20,6 +20,21 @@ use crate::sparse::pruning::{prune_matrix, PruneThresholds};
 use crate::types::csr::CsrMatrix;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
 
+/// Pre-trained dense-side artifacts shared between segments of a mutable
+/// index: delta segments encode their rows against the *base* segment's
+/// codebooks (and whitening transform) so all segments score in the same
+/// space without re-running k-means per seal. A merge drops the artifacts
+/// and retrains from scratch.
+#[derive(Clone, Debug)]
+pub struct DenseArtifacts {
+    pub codebooks: PqCodebooks,
+    pub whitening: Option<Whitening>,
+    /// True (unpadded) dense dim the codebooks were trained on — kept so
+    /// `build_with` can reject data of a different dimensionality even
+    /// when both pad to the same codebook width.
+    pub dense_dim: usize,
+}
+
 /// The full §6 index: ready for `search::search`.
 pub struct HybridIndex {
     /// Permutation applied at build: internal row i = original perm[i].
@@ -44,6 +59,35 @@ pub struct HybridIndex {
 
 impl HybridIndex {
     pub fn build(data: &HybridDataset, config: &IndexConfig) -> Self {
+        Self::build_inner(data, config, None)
+    }
+
+    /// Build reusing pre-trained dense artifacts instead of fitting
+    /// whitening / training PQ codebooks on `data` — the delta-segment
+    /// seal path of the mutable index (see [`crate::hybrid::mutable`]).
+    pub fn build_with(
+        data: &HybridDataset,
+        config: &IndexConfig,
+        artifacts: &DenseArtifacts,
+    ) -> Self {
+        Self::build_inner(data, config, Some(artifacts))
+    }
+
+    /// The dense artifacts of this index, for sealing delta segments
+    /// against it.
+    pub fn dense_artifacts(&self) -> DenseArtifacts {
+        DenseArtifacts {
+            codebooks: self.codebooks.clone(),
+            whitening: self.whitening.clone(),
+            dense_dim: self.dense_dim,
+        }
+    }
+
+    fn build_inner(
+        data: &HybridDataset,
+        config: &IndexConfig,
+        artifacts: Option<&DenseArtifacts>,
+    ) -> Self {
         let n = data.len();
         assert!(n > 0, "cannot index an empty dataset");
 
@@ -77,25 +121,36 @@ impl HybridIndex {
         };
 
         // 3. dense index + residual
-        let whitening = if config.whitening {
-            Some(Whitening::fit(&working.dense))
-        } else {
-            None
+        let whitening = match artifacts {
+            Some(a) => a.whitening.clone(),
+            None if config.whitening => Some(Whitening::fit(&working.dense)),
+            None => None,
         };
         let dense_mat = match &whitening {
             Some(w) => w.transform_matrix(&working.dense),
             None => working.dense.clone(),
         };
-        let k = config
-            .pq_subspaces
-            .unwrap_or_else(|| PqCodebooks::paper_default_k(dense_mat.dim));
-        let codebooks = PqCodebooks::train(
-            &dense_mat,
-            k,
-            config.pq_codebook_size,
-            config.pq_iters,
-            config.seed,
-        );
+        let codebooks = match artifacts {
+            Some(a) => {
+                assert_eq!(
+                    a.dense_dim, dense_mat.dim,
+                    "artifact codebooks trained for a different dense dim"
+                );
+                a.codebooks.clone()
+            }
+            None => {
+                let k = config.pq_subspaces.unwrap_or_else(|| {
+                    PqCodebooks::paper_default_k(dense_mat.dim)
+                });
+                PqCodebooks::train(
+                    &dense_mat,
+                    k,
+                    config.pq_codebook_size,
+                    config.pq_iters,
+                    config.seed,
+                )
+            }
+        };
         let pq_index = PqIndex::build(&dense_mat, codebooks.clone());
         let dense_codes = Lut16Codes::from_pq_index(&pq_index);
         let dense_residual = if config.dense_residual {

@@ -1,15 +1,21 @@
 //! The hybrid search engine (paper §5–§6): index construction (pruned
 //! sparse + PQ dense, each with a residual index), the three-stage
-//! residual-reordering search pipeline, and the parallel batch engine
-//! that fans query batches across per-worker scratches.
+//! residual-reordering search pipeline, the parallel batch engine that
+//! fans query batches across per-worker scratches, and the mutable
+//! segmented index (base + delta segments + tombstones + merge) that
+//! serves upserts/deletes online.
 
 pub mod batch;
 pub mod config;
 pub mod index;
+pub mod mutable;
 pub mod search;
+pub mod segment;
 pub mod topk;
 
 pub use batch::{BatchEngine, BatchOutput, BatchStats, EngineConfig, ShardMode};
 pub use config::{IndexConfig, SearchParams};
-pub use index::HybridIndex;
+pub use index::{DenseArtifacts, HybridIndex};
+pub use mutable::{MutableConfig, MutableHybridIndex};
 pub use search::SearchHit;
+pub use segment::{Doc, Segment, Tombstones};

@@ -1,0 +1,694 @@
+//! The mutable, segmented hybrid index: upserts and deletes while
+//! serving, without full rebuilds on every change.
+//!
+//! Layout (LSM-flavoured, as in segment-based vector stores):
+//!
+//! * a **base segment** — today's [`HybridIndex`] sealed over the bulk of
+//!   the corpus, with freshly trained k-means codebooks and the cache
+//!   sort applied;
+//! * **delta segments** — small sealed indices over recently upserted
+//!   rows, encoded against the *base's* codebooks/whitening
+//!   ([`HybridIndex::build_with`]) so every segment scores in the same
+//!   space without re-running k-means per seal;
+//! * an **append-only buffer** of not-yet-sealed rows, scored exactly
+//!   (brute force) at query time;
+//! * **tombstones** — per-segment bitmaps; a delete (or the old version
+//!   of an upsert) marks its row dead, and search filters dead rows out
+//!   of the stage-1 candidates before the reorder stages;
+//! * a **merge** — synchronous ([`MutableHybridIndex::merge`]) or on a
+//!   background thread ([`MutableHybridIndex::start_background_merge`])
+//!   — that collects all live rows sorted by id and re-seals them into a
+//!   fresh base (k-means residual assignment and the cache sort re-run).
+//!   A merged index is *bit-identical* to a static
+//!   [`HybridIndex::build`] over the same logical corpus, which
+//!   `tests/integration_mutable.rs` asserts.
+//!
+//! Search fans over segments: each sealed segment runs the full
+//! three-stage pipeline through its own `BatchEngine`, the buffer is
+//! scored exactly, and the per-segment top-h lists merge under the
+//! `TopK` total order (score desc, id asc) — so batch and sequential
+//! paths stay bit-identical, as in the static engine.
+
+use std::collections::HashMap;
+use std::thread::JoinHandle;
+
+use crate::hybrid::config::{IndexConfig, SearchParams};
+use crate::hybrid::index::DenseArtifacts;
+use crate::hybrid::search::SearchHit;
+use crate::hybrid::segment::{Doc, Segment};
+use crate::hybrid::topk::TopK;
+use crate::types::dense;
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+use crate::types::sparse::SparseVector;
+
+/// Mutability knobs on top of the static [`IndexConfig`].
+#[derive(Clone, Debug)]
+pub struct MutableConfig {
+    pub index: IndexConfig,
+    /// Buffer rows before the active buffer auto-seals into a delta
+    /// segment.
+    pub delta_seal_rows: usize,
+    /// Merge threshold: re-seal once delta + buffer + tombstoned rows
+    /// exceed this fraction of the base segment's rows.
+    pub merge_fraction: f32,
+    /// Worker threads in each segment's batch engine.
+    pub engine_threads: usize,
+    /// Kick off a background merge automatically when an upsert crosses
+    /// the threshold. Off by default: deterministic tests (and callers
+    /// that want bit-reproducible results) merge explicitly instead.
+    pub auto_merge: bool,
+}
+
+impl Default for MutableConfig {
+    fn default() -> Self {
+        MutableConfig {
+            index: IndexConfig::default(),
+            delta_seal_rows: 1024,
+            merge_fraction: 0.25,
+            engine_threads: 1,
+            auto_merge: false,
+        }
+    }
+}
+
+/// Where a live doc currently resides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Loc {
+    /// In the sealed segment with this serial (serials survive merges;
+    /// positions in `segments` do not).
+    Sealed { serial: u64, row: u32 },
+    /// In the active buffer at this slot.
+    Buffer { slot: u32 },
+}
+
+struct SealedEntry {
+    serial: u64,
+    seg: Segment,
+}
+
+/// An in-flight background merge: the thread re-sealing a snapshot, the
+/// serials it covers (they die on install), and the serial the merged
+/// segment will take.
+struct MergeJob {
+    handle: JoinHandle<Segment>,
+    covered: Vec<u64>,
+    serial: u64,
+}
+
+/// Mutable segmented index; see the module docs for the layout.
+pub struct MutableHybridIndex {
+    config: MutableConfig,
+    sparse_dims: usize,
+    dense_dims: usize,
+    /// Sealed segments, base first (oldest, k-means-trained), then
+    /// deltas in seal order.
+    segments: Vec<SealedEntry>,
+    buffer: Vec<Doc>,
+    buffer_dead: Vec<bool>,
+    buffer_live: usize,
+    /// External id → current live location. Exactly one entry per live
+    /// doc; dead rows have none.
+    locs: HashMap<u32, Loc>,
+    next_serial: u64,
+    merge_job: Option<MergeJob>,
+}
+
+impl MutableHybridIndex {
+    /// Empty index over the given dimensionality.
+    pub fn new(
+        sparse_dims: usize,
+        dense_dims: usize,
+        config: MutableConfig,
+    ) -> Self {
+        MutableHybridIndex {
+            config,
+            sparse_dims,
+            dense_dims,
+            segments: Vec::new(),
+            buffer: Vec::new(),
+            buffer_dead: Vec::new(),
+            buffer_live: 0,
+            locs: HashMap::new(),
+            next_serial: 0,
+            merge_job: None,
+        }
+    }
+
+    /// Build from an initial corpus, sealed immediately as the base
+    /// segment; row `i` gets external id `base_id + i`.
+    pub fn from_dataset(
+        data: &HybridDataset,
+        base_id: u32,
+        config: MutableConfig,
+    ) -> Self {
+        let mut idx =
+            Self::new(data.sparse_dim(), data.dense_dim(), config);
+        if !data.is_empty() {
+            let docs: Vec<Doc> = (0..data.len())
+                .map(|i| Doc {
+                    id: base_id + i as u32,
+                    sparse: data.sparse.row_vec(i),
+                    dense: data.dense.row(i).to_vec(),
+                })
+                .collect();
+            idx.install_sealed(docs, None);
+        }
+        idx
+    }
+
+    /// Live document count.
+    pub fn len(&self) -> usize {
+        self.locs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.locs.is_empty()
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.locs.contains_key(&id)
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Rows in the active (unsealed) buffer, live only.
+    pub fn buffered_rows(&self) -> usize {
+        self.buffer_live
+    }
+
+    pub fn is_merging(&self) -> bool {
+        self.merge_job.is_some()
+    }
+
+    pub fn sparse_dims(&self) -> usize {
+        self.sparse_dims
+    }
+
+    pub fn dense_dims(&self) -> usize {
+        self.dense_dims
+    }
+
+    pub fn config(&self) -> &MutableConfig {
+        &self.config
+    }
+
+    /// Resident bytes across all segments + buffer payloads.
+    pub fn memory_bytes(&self) -> usize {
+        let seg: usize =
+            self.segments.iter().map(|e| e.seg.memory_bytes()).sum();
+        let buf: usize = self
+            .buffer
+            .iter()
+            .map(|d| d.sparse.nnz() * 8 + d.dense.len() * 4)
+            .sum();
+        seg + buf
+    }
+
+    /// Insert or replace the document `id`. The old version (if any) is
+    /// tombstoned immediately and can never surface again; the new row
+    /// is served from the buffer (exact scoring) until the next seal.
+    /// Returns true when an existing version was replaced.
+    pub fn upsert(
+        &mut self,
+        id: u32,
+        sparse: SparseVector,
+        dense: Vec<f32>,
+    ) -> bool {
+        self.try_install_merge();
+        assert!(
+            self.payload_fits(&sparse, &dense),
+            "payload dims don't match the index ({}ˢ/{}ᴰ)",
+            self.sparse_dims,
+            self.dense_dims
+        );
+        let replaced = self.unlink(id);
+        let slot = self.buffer.len() as u32;
+        self.buffer.push(Doc { id, sparse, dense });
+        self.buffer_dead.push(false);
+        self.buffer_live += 1;
+        self.locs.insert(id, Loc::Buffer { slot });
+        if self.buffer.len() >= self.config.delta_seal_rows {
+            self.flush();
+        }
+        if self.config.auto_merge
+            && self.merge_job.is_none()
+            && self.needs_merge()
+        {
+            self.start_background_merge();
+        }
+        replaced
+    }
+
+    /// True when a payload is well-formed for this index: dims strictly
+    /// increasing (a debug-only invariant of `SparseVector` that the
+    /// sorted-merge scorers silently rely on in release), every dim in
+    /// range, dims/vals parallel, dense width exact. This is the
+    /// precondition [`Self::upsert`] asserts; network boundaries (the
+    /// shard worker) check it first and ack a rejection instead of
+    /// panicking — or worse, sealing corrupt rows.
+    pub fn payload_fits(&self, sparse: &SparseVector, dense: &[f32]) -> bool {
+        dense.len() == self.dense_dims
+            && sparse.dims.len() == sparse.vals.len()
+            && sparse.dims.windows(2).all(|w| w[0] < w[1])
+            && sparse
+                .dims
+                .last()
+                .map_or(true, |&j| (j as usize) < self.sparse_dims)
+    }
+
+    /// Delete `id`; returns false if it wasn't present.
+    pub fn delete(&mut self, id: u32) -> bool {
+        self.try_install_merge();
+        self.unlink(id)
+    }
+
+    /// Tombstone the current version of `id`, wherever it lives.
+    fn unlink(&mut self, id: u32) -> bool {
+        match self.locs.remove(&id) {
+            Some(Loc::Sealed { serial, row }) => {
+                if let Some(e) =
+                    self.segments.iter_mut().find(|e| e.serial == serial)
+                {
+                    e.seg.tombstones.set(row);
+                }
+                true
+            }
+            Some(Loc::Buffer { slot }) => {
+                let s = slot as usize;
+                if !self.buffer_dead[s] {
+                    self.buffer_dead[s] = true;
+                    self.buffer_live -= 1;
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Seal the active buffer into a delta segment (no-op when the
+    /// buffer holds no live rows). The delta reuses the base's dense
+    /// artifacts; with no base yet, this seal *becomes* the base and
+    /// trains its own codebooks.
+    pub fn flush(&mut self) {
+        if self.buffer_live == 0 {
+            self.buffer.clear();
+            self.buffer_dead.clear();
+            return;
+        }
+        let dead = std::mem::take(&mut self.buffer_dead);
+        let mut docs: Vec<Doc> = std::mem::take(&mut self.buffer)
+            .into_iter()
+            .zip(dead)
+            .filter_map(|(d, dead)| (!dead).then_some(d))
+            .collect();
+        self.buffer_live = 0;
+        docs.sort_by_key(|d| d.id);
+        let artifacts = self
+            .segments
+            .first()
+            .map(|e| e.seg.index.dense_artifacts());
+        self.install_sealed(docs, artifacts);
+    }
+
+    /// Seal `docs` (sorted by id) and register their locations.
+    fn install_sealed(
+        &mut self,
+        docs: Vec<Doc>,
+        artifacts: Option<DenseArtifacts>,
+    ) {
+        let serial = self.next_serial;
+        self.next_serial += 1;
+        let seg = Segment::seal(
+            &docs,
+            self.sparse_dims,
+            &self.config.index,
+            artifacts.as_ref(),
+            self.config.engine_threads,
+        );
+        for (row, d) in docs.iter().enumerate() {
+            self.locs
+                .insert(d.id, Loc::Sealed { serial, row: row as u32 });
+        }
+        self.segments.push(SealedEntry { serial, seg });
+    }
+
+    /// True once the rows a merge would clean up — delta + buffer rows
+    /// (live or dead) plus tombstoned *base* rows, each physical row
+    /// counted once — exceed `merge_fraction` of the base segment.
+    pub fn needs_merge(&self) -> bool {
+        let (base, base_dead) = match self.segments.first() {
+            Some(e) => (e.seg.len(), e.seg.tombstones.dead()),
+            None => return false,
+        };
+        let extra: usize = self
+            .segments
+            .iter()
+            .skip(1)
+            .map(|e| e.seg.len())
+            .sum::<usize>()
+            + self.buffer.len();
+        (extra + base_dead) as f32
+            > self.config.merge_fraction * base as f32
+    }
+
+    /// All live docs, ascending id (clones payloads).
+    fn snapshot_docs(&self) -> Vec<Doc> {
+        let mut docs: Vec<Doc> = Vec::with_capacity(self.len());
+        for e in &self.segments {
+            for row in 0..e.seg.len() {
+                if !e.seg.tombstones.get(row as u32) {
+                    docs.push(e.seg.doc(row));
+                }
+            }
+        }
+        for (d, &dead) in self.buffer.iter().zip(&self.buffer_dead) {
+            if !dead {
+                docs.push(d.clone());
+            }
+        }
+        docs.sort_by_key(|d| d.id);
+        docs
+    }
+
+    /// Synchronous merge: re-seal every live row into a single fresh
+    /// base, retraining k-means and re-running the cache sort. The
+    /// result is bit-identical to a static [`HybridIndex::build`] over
+    /// the same logical corpus (rows ordered by ascending id).
+    pub fn merge(&mut self) {
+        self.wait_merge(); // never race two merges
+        // Unlike the background path (which must snapshot and leave the
+        // segments serving), the sync merge owns its segments: drain
+        // them one at a time so each segment's index and retained rows
+        // are freed as soon as its live docs are copied out, instead of
+        // holding the whole old index alongside the full doc copy.
+        let mut docs: Vec<Doc> = Vec::with_capacity(self.len());
+        for e in std::mem::take(&mut self.segments) {
+            for row in 0..e.seg.len() {
+                if !e.seg.tombstones.get(row as u32) {
+                    docs.push(e.seg.doc(row));
+                }
+            }
+            // e drops here, releasing the segment before the next one
+        }
+        for (d, dead) in
+            std::mem::take(&mut self.buffer).into_iter().zip(
+                std::mem::take(&mut self.buffer_dead),
+            )
+        {
+            if !dead {
+                docs.push(d);
+            }
+        }
+        self.buffer_live = 0;
+        docs.sort_by_key(|d| d.id);
+        self.locs.clear();
+        if !docs.is_empty() {
+            self.install_sealed(docs, None);
+        }
+    }
+
+    /// Merge if the threshold is crossed (synchronous).
+    pub fn maybe_merge(&mut self) {
+        if self.needs_merge() {
+            self.merge();
+        }
+    }
+
+    /// Start re-sealing on a background thread. Mutations and searches
+    /// continue against the current segments; the install reconciles
+    /// anything that raced the merge. Returns false if a merge is
+    /// already running or there is nothing to merge.
+    ///
+    /// The finished merge is installed by the next `upsert`/`delete`
+    /// (or `flush`/`wait_merge`/`try_install_merge`) — `search` takes
+    /// `&self` and cannot install. A caller that goes read-only after
+    /// starting a merge should call [`Self::try_install_merge`] when
+    /// convenient (the shard worker does this on every message),
+    /// otherwise queries keep paying the multi-segment scan and the
+    /// merged copy stays parked in the join handle.
+    pub fn start_background_merge(&mut self) -> bool {
+        if self.merge_job.is_some() {
+            return false;
+        }
+        self.flush();
+        let docs = self.snapshot_docs();
+        if docs.is_empty() {
+            // fully-dead corpus: nothing to re-seal, drop the husks now
+            self.segments.clear();
+            return false;
+        }
+        let covered: Vec<u64> =
+            self.segments.iter().map(|e| e.serial).collect();
+        let serial = self.next_serial;
+        self.next_serial += 1;
+        let config = self.config.index.clone();
+        let sparse_dims = self.sparse_dims;
+        let engine_threads = self.config.engine_threads;
+        let handle = std::thread::Builder::new()
+            .name("segment-merge".into())
+            .spawn(move || {
+                Segment::seal(&docs, sparse_dims, &config, None, engine_threads)
+            })
+            .expect("spawn merge thread");
+        self.merge_job = Some(MergeJob { handle, covered, serial });
+        true
+    }
+
+    /// Install a finished background merge, if one is ready (non-
+    /// blocking). Called opportunistically from upsert/delete.
+    pub fn try_install_merge(&mut self) -> bool {
+        if self
+            .merge_job
+            .as_ref()
+            .is_some_and(|j| j.handle.is_finished())
+        {
+            self.install_merge();
+            return true;
+        }
+        false
+    }
+
+    /// Block until any in-flight background merge completes, and install
+    /// it.
+    pub fn wait_merge(&mut self) {
+        if self.merge_job.is_some() {
+            self.install_merge();
+        }
+    }
+
+    fn install_merge(&mut self) {
+        let job = self.merge_job.take().expect("no merge in flight");
+        let mut seg = job.handle.join().expect("merge thread panicked");
+        // Reconcile mutations that raced the merge: a snapshot doc whose
+        // current location is no longer one of the covered segments was
+        // re-upserted (newer version elsewhere) or deleted mid-merge —
+        // its merged row is dead on arrival.
+        for row in 0..seg.len() as u32 {
+            let id = seg.ids[row as usize];
+            match self.locs.get(&id) {
+                Some(&Loc::Sealed { serial, .. })
+                    if job.covered.contains(&serial) =>
+                {
+                    self.locs.insert(
+                        id,
+                        Loc::Sealed { serial: job.serial, row },
+                    );
+                }
+                _ => {
+                    seg.tombstones.set(row);
+                }
+            }
+        }
+        self.segments.retain(|e| !job.covered.contains(&e.serial));
+        // The merged segment becomes the new base; deltas sealed during
+        // the merge stay behind it (each segment owns its codebooks, so
+        // dropping the old base is safe).
+        self.segments.insert(0, SealedEntry { serial: job.serial, seg });
+    }
+
+    /// Exact score of a live buffer row against `q`.
+    fn score_buffer<F: FnMut(u32, f32)>(&self, q: &HybridQuery, mut f: F) {
+        for (d, &dead) in self.buffer.iter().zip(&self.buffer_dead) {
+            if !dead {
+                f(
+                    d.id,
+                    d.sparse.dot(&q.sparse) + dense::dot(&d.dense, &q.dense),
+                );
+            }
+        }
+    }
+
+    /// Multi-segment three-stage search: every sealed segment runs the
+    /// full pipeline (tombstones filtered before stage 2), the buffer is
+    /// scored exactly, and the per-segment top-h lists merge under the
+    /// `TopK` total order. Hits carry external ids, best first.
+    /// Delegates to [`Self::search_batch`] so there is exactly one copy
+    /// of the segment-fan/merge logic.
+    pub fn search(
+        &self,
+        q: &HybridQuery,
+        params: &SearchParams,
+    ) -> Vec<SearchHit> {
+        self.search_batch(std::slice::from_ref(q), params)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Batch search over the segmented corpus; per query, each
+    /// segment's batch engine is bit-identical to its sequential path,
+    /// and the cross-segment merge follows the `TopK` total order.
+    pub fn search_batch(
+        &self,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+    ) -> Vec<Vec<SearchHit>> {
+        let mut per_query: Vec<TopK> =
+            (0..queries.len()).map(|_| TopK::new(params.h)).collect();
+        for e in &self.segments {
+            if e.seg.live() == 0 {
+                continue;
+            }
+            let lists = e.seg.search_batch(queries, params);
+            for (top, hs) in per_query.iter_mut().zip(lists) {
+                for h in hs {
+                    top.push(h.id, h.score);
+                }
+            }
+        }
+        for (top, q) in per_query.iter_mut().zip(queries) {
+            self.score_buffer(q, |id, s| top.push(id, s));
+        }
+        per_query
+            .into_iter()
+            .map(|t| {
+                t.into_sorted()
+                    .into_iter()
+                    .map(|(id, score)| SearchHit { id, score })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+impl Drop for MutableHybridIndex {
+    fn drop(&mut self) {
+        // Don't leak a merge thread past the index's lifetime.
+        if let Some(job) = self.merge_job.take() {
+            let _ = job.handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+
+    fn tiny_config() -> MutableConfig {
+        MutableConfig { delta_seal_rows: 32, ..Default::default() }
+    }
+
+    fn doc_of(data: &HybridDataset, i: usize) -> (SparseVector, Vec<f32>) {
+        (data.sparse.row_vec(i), data.dense.row(i).to_vec())
+    }
+
+    #[test]
+    fn starts_empty_and_grows() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(41);
+        let mut idx = MutableHybridIndex::new(
+            data.sparse_dim(),
+            data.dense_dim(),
+            tiny_config(),
+        );
+        assert!(idx.is_empty());
+        for i in 0..100 {
+            let (s, d) = doc_of(&data, i);
+            idx.upsert(i as u32, s, d);
+        }
+        assert_eq!(idx.len(), 100);
+        // 32-row seal threshold -> sealed deltas plus a live buffer tail
+        assert!(idx.n_segments() >= 3, "segments: {}", idx.n_segments());
+        assert!(idx.buffered_rows() < 32);
+        let q = cfg.related_queries(&data, 42, 1).remove(0);
+        let hits = idx.search(&q, &SearchParams::new(10));
+        assert_eq!(hits.len(), 10);
+        assert!(hits.windows(2).all(|w| w[0].score >= w[1].score));
+    }
+
+    #[test]
+    fn upsert_replaces_and_delete_removes() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(43);
+        let mut idx =
+            MutableHybridIndex::from_dataset(&data, 0, tiny_config());
+        assert_eq!(idx.len(), data.len());
+        assert!(idx.contains(7));
+        // replace id 7 with row 8's payload: still one live doc for id 7
+        let (s, d) = doc_of(&data, 8);
+        idx.upsert(7, s, d);
+        assert_eq!(idx.len(), data.len());
+        assert!(idx.delete(7));
+        assert!(!idx.delete(7), "double delete reports absence");
+        assert_eq!(idx.len(), data.len() - 1);
+        assert!(!idx.contains(7));
+    }
+
+    #[test]
+    fn buffer_upsert_then_delete_in_buffer() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(44);
+        let mut idx = MutableHybridIndex::new(
+            data.sparse_dim(),
+            data.dense_dim(),
+            tiny_config(),
+        );
+        let (s, d) = doc_of(&data, 0);
+        idx.upsert(1000, s.clone(), d.clone());
+        idx.upsert(1000, s, d); // same id twice: old buffer slot dies
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.buffered_rows(), 1);
+        assert!(idx.delete(1000));
+        assert!(idx.is_empty());
+        idx.flush(); // flushing an all-dead buffer is a no-op
+        assert_eq!(idx.n_segments(), 0);
+    }
+
+    #[test]
+    fn needs_merge_tracks_fraction() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(45);
+        let mut mc = tiny_config();
+        mc.merge_fraction = 0.10;
+        let mut idx = MutableHybridIndex::from_dataset(&data, 0, mc);
+        assert!(!idx.needs_merge());
+        let n = data.len();
+        for i in 0..(n / 8) {
+            let (s, d) = doc_of(&data, i);
+            idx.upsert((n + i) as u32, s, d);
+        }
+        assert!(idx.needs_merge());
+        idx.merge();
+        assert!(!idx.needs_merge());
+        assert_eq!(idx.n_segments(), 1);
+        assert_eq!(idx.len(), n + n / 8);
+    }
+
+    #[test]
+    fn merge_of_empty_corpus_clears() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(46);
+        let mut idx =
+            MutableHybridIndex::from_dataset(&data, 0, tiny_config());
+        for i in 0..data.len() {
+            idx.delete(i as u32);
+        }
+        idx.merge();
+        assert!(idx.is_empty());
+        assert_eq!(idx.n_segments(), 0);
+        let q = cfg.related_queries(&data, 47, 1).remove(0);
+        assert!(idx.search(&q, &SearchParams::new(5)).is_empty());
+    }
+}

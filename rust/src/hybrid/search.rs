@@ -18,6 +18,7 @@ use crate::dense::adc_lut16;
 use crate::dense::lut::{QuantizedLut, QueryLut};
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::index::HybridIndex;
+use crate::hybrid::segment::Tombstones;
 use crate::hybrid::topk::TopK;
 use crate::sparse::inverted_index::Accumulator;
 use crate::types::hybrid::HybridQuery;
@@ -107,6 +108,21 @@ pub fn search_with(
     params: &SearchParams,
     scratch: &mut SearchScratch,
 ) -> (Vec<SearchHit>, SearchStats) {
+    search_with_filter(index, q, params, scratch, None)
+}
+
+/// As [`search_with`], but with a tombstone bitmap (indexed by dataset
+/// row, the id space of `HybridIndex::original_id`): dead rows are
+/// dropped from the stage-1 candidate list *before* the reorder stages,
+/// so a deleted/upserted row can never reach stage 2 or the results.
+/// This is the per-segment entry point of the mutable index.
+pub fn search_with_filter(
+    index: &HybridIndex,
+    q: &HybridQuery,
+    params: &SearchParams,
+    scratch: &mut SearchScratch,
+    tombstones: Option<&Tombstones>,
+) -> (Vec<SearchHit>, SearchStats) {
     let mut stats = SearchStats::default();
 
     // ---- Stage 1: approximate scans over both data indices.
@@ -129,13 +145,25 @@ pub fn search_with(
     // select αh by combined approximate score
     let t1 = Instant::now();
     let alpha_h = params.alpha_h().min(index.n);
+    // With tombstones, over-select by the dead count so dropped rows
+    // don't eat into the live candidate budget: at most `dead()` of the
+    // top (αh + dead) can be tombstones, so ≥ αh live rows survive the
+    // filter whenever that many exist.
+    let fetch = match tombstones {
+        Some(t) => (alpha_h + t.dead()).min(index.n),
+        None => alpha_h,
+    };
     // The accumulator holds stale data outside touched blocks; mask by
     // draining touched rows into the (reused) sparse overlay.
     scratch.overlay.clear();
     let (acc, overlay) = (&mut scratch.acc, &mut scratch.overlay);
     acc.drain_scores(|r, s| overlay.push((r, s)));
-    let alpha_candidates =
-        select_alpha(&scratch.dense_scores, &scratch.overlay, 0, alpha_h);
+    let mut alpha_candidates =
+        select_alpha(&scratch.dense_scores, &scratch.overlay, 0, fetch);
+    if let Some(t) = tombstones {
+        alpha_candidates.retain(|&(r, _)| !t.get(index.original_id(r)));
+        alpha_candidates.truncate(alpha_h);
+    }
     stats.candidates_alpha = alpha_candidates.len();
     stats.stage1_select_us = t1.elapsed().as_secs_f64() * 1e6;
 

@@ -1,0 +1,343 @@
+//! Index segments + tombstones — the building blocks of the mutable
+//! hybrid index (see [`crate::hybrid::mutable`]).
+//!
+//! A [`Segment`] is a sealed, immutable `HybridIndex` over a snapshot of
+//! documents, plus the row→external-id map, a [`Tombstones`] bitmap that
+//! later deletes/upserts punch into it, and a per-segment `BatchEngine`
+//! whose long-lived scratches are sized for exactly this segment. The
+//! segment also retains its raw rows (`data`): the lossy PQ codes cannot
+//! reconstruct them, and a merge must re-train k-means on the *original*
+//! vectors to stay bit-identical with a from-scratch build.
+
+use crate::hybrid::batch::{BatchEngine, EngineConfig, ShardMode};
+use crate::hybrid::config::{IndexConfig, SearchParams};
+use crate::hybrid::index::{DenseArtifacts, HybridIndex};
+use crate::hybrid::search::SearchHit;
+use crate::types::csr::CsrMatrix;
+use crate::types::dense::DenseMatrix;
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+use crate::types::sparse::SparseVector;
+
+/// One document: external id + hybrid payload.
+#[derive(Clone, Debug)]
+pub struct Doc {
+    pub id: u32,
+    pub sparse: SparseVector,
+    pub dense: Vec<f32>,
+}
+
+/// Per-segment delete bitmap, indexed by the segment's *dataset row* (the
+/// pre-cache-sort position, i.e. what `HybridIndex::original_id` returns).
+#[derive(Clone, Debug, Default)]
+pub struct Tombstones {
+    bits: Vec<u64>,
+    dead: usize,
+    n: usize,
+}
+
+impl Tombstones {
+    pub fn new(n: usize) -> Self {
+        Tombstones { bits: vec![0; n.div_ceil(64)], dead: 0, n }
+    }
+
+    /// Mark `row` dead; returns true if it was alive.
+    pub fn set(&mut self, row: u32) -> bool {
+        let (w, b) = (row as usize / 64, row as usize % 64);
+        let mask = 1u64 << b;
+        if self.bits[w] & mask == 0 {
+            self.bits[w] |= mask;
+            self.dead += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, row: u32) -> bool {
+        (self.bits[row as usize / 64] >> (row as usize % 64)) & 1 == 1
+    }
+
+    /// Number of dead rows.
+    pub fn dead(&self) -> usize {
+        self.dead
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// True if at least one row is dead (search skips the filter pass
+    /// entirely on clean segments).
+    pub fn any(&self) -> bool {
+        self.dead > 0
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.bits.len() * 8
+    }
+}
+
+/// A sealed, immutable segment of the mutable index.
+pub struct Segment {
+    /// The raw snapshot the segment was sealed from (rows align with
+    /// `ids` and with `index.original_id`); retained for merges.
+    pub data: HybridDataset,
+    /// Dataset row → external doc id, strictly ascending.
+    pub ids: Vec<u32>,
+    pub index: HybridIndex,
+    pub tombstones: Tombstones,
+    engine: BatchEngine,
+}
+
+impl Segment {
+    /// Seal `docs` — sorted by id, ids unique — into a segment. With
+    /// `artifacts`, dense rows are encoded against the given codebooks /
+    /// whitening (delta segments); without, k-means and whitening are
+    /// (re)trained on `docs` (base build and merges).
+    pub fn seal(
+        docs: &[Doc],
+        sparse_dims: usize,
+        config: &IndexConfig,
+        artifacts: Option<&DenseArtifacts>,
+        engine_threads: usize,
+    ) -> Self {
+        assert!(!docs.is_empty(), "cannot seal an empty segment");
+        debug_assert!(
+            docs.windows(2).all(|w| w[0].id < w[1].id),
+            "segment docs must be sorted by id, unique"
+        );
+        let sparse = CsrMatrix::from_row_slices(
+            docs.iter().map(|d| (&d.sparse.dims[..], &d.sparse.vals[..])),
+            sparse_dims,
+        );
+        let mut dense = DenseMatrix::zeros(docs.len(), docs[0].dense.len());
+        for (i, d) in docs.iter().enumerate() {
+            dense.row_mut(i).copy_from_slice(&d.dense);
+        }
+        let data = HybridDataset::new(sparse, dense);
+        let index = match artifacts {
+            Some(a) => HybridIndex::build_with(&data, config, a),
+            None => HybridIndex::build(&data, config),
+        };
+        let engine = BatchEngine::with_config(
+            &index,
+            EngineConfig {
+                threads: engine_threads.max(1),
+                mode: ShardMode::ByQuery,
+            },
+        );
+        Segment {
+            data,
+            ids: docs.iter().map(|d| d.id).collect(),
+            index,
+            tombstones: Tombstones::new(docs.len()),
+            engine,
+        }
+    }
+
+    /// Total rows sealed into the segment (live + dead).
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Rows not yet tombstoned.
+    pub fn live(&self) -> usize {
+        self.ids.len() - self.tombstones.dead()
+    }
+
+    /// Dataset row of external `id`, if sealed here (live or dead).
+    pub fn row_of(&self, id: u32) -> Option<u32> {
+        self.ids.binary_search(&id).ok().map(|r| r as u32)
+    }
+
+    /// Reconstruct the raw document at `row` (for merges).
+    pub fn doc(&self, row: usize) -> Doc {
+        Doc {
+            id: self.ids[row],
+            sparse: self.data.sparse.row_vec(row),
+            dense: self.data.dense.row(row).to_vec(),
+        }
+    }
+
+    /// Tombstone-filtered three-stage search; hits carry external ids.
+    pub fn search(
+        &self,
+        q: &HybridQuery,
+        params: &SearchParams,
+    ) -> Vec<SearchHit> {
+        self.search_batch(std::slice::from_ref(q), params)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Batch search over this segment — bit-identical per query to
+    /// [`Segment::search`] (the engine's by-query mode leaves each
+    /// query's computation untouched).
+    pub fn search_batch(
+        &self,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+    ) -> Vec<Vec<SearchHit>> {
+        let tomb = self.tombstones.any().then_some(&self.tombstones);
+        let out = self
+            .engine
+            .search_batch_filtered(&self.index, queries, params, tomb);
+        out.hits
+            .into_iter()
+            .map(|hs| {
+                hs.into_iter()
+                    .map(|h| SearchHit {
+                        id: self.ids[h.id as usize],
+                        score: h.score,
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Resident bytes: search structures + retained raw rows + bookkeeping.
+    pub fn memory_bytes(&self) -> usize {
+        self.index.memory_bytes()
+            + self.data.sparse.indices.len() * 8
+            + self.data.dense.data.len() * 4
+            + self.ids.len() * 4
+            + self.tombstones.memory_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+    use crate::hybrid::search::search;
+
+    fn docs_from(data: &HybridDataset, base_id: u32) -> Vec<Doc> {
+        (0..data.len())
+            .map(|i| Doc {
+                id: base_id + i as u32,
+                sparse: data.sparse.row_vec(i),
+                dense: data.dense.row(i).to_vec(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tombstones_set_get_count() {
+        let mut t = Tombstones::new(130);
+        assert!(!t.any());
+        assert!(t.set(0));
+        assert!(t.set(129));
+        assert!(!t.set(129), "second set reports already-dead");
+        assert!(t.get(0) && t.get(129) && !t.get(64));
+        assert_eq!(t.dead(), 2);
+        assert!(t.any());
+    }
+
+    #[test]
+    fn sealed_segment_matches_plain_index() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(31);
+        let seg = Segment::seal(
+            &docs_from(&data, 0),
+            data.sparse_dim(),
+            &IndexConfig::default(),
+            None,
+            1,
+        );
+        let plain = HybridIndex::build(&data, &IndexConfig::default());
+        let params = SearchParams::new(10);
+        for q in &cfg.related_queries(&data, 32, 5) {
+            let a = seg.search(q, &params);
+            let b = search(&plain, q, &params);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn external_ids_offset_through_search() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(33);
+        let seg = Segment::seal(
+            &docs_from(&data, 5000),
+            data.sparse_dim(),
+            &IndexConfig::default(),
+            None,
+            1,
+        );
+        let q = cfg.related_queries(&data, 34, 1).remove(0);
+        for h in seg.search(&q, &SearchParams::new(8)) {
+            assert!((5000..5000 + data.len() as u32).contains(&h.id));
+        }
+        assert_eq!(seg.row_of(5001), Some(1));
+        assert_eq!(seg.row_of(4999), None);
+        assert_eq!(seg.doc(3).id, 5003);
+    }
+
+    #[test]
+    fn tombstoned_rows_never_returned() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(35);
+        let mut seg = Segment::seal(
+            &docs_from(&data, 0),
+            data.sparse_dim(),
+            &IndexConfig::default(),
+            None,
+            1,
+        );
+        let q = cfg.related_queries(&data, 36, 1).remove(0);
+        let params = SearchParams::new(10);
+        let before = seg.search(&q, &params);
+        // kill every returned row, then search again: none may resurface
+        for h in &before {
+            seg.tombstones.set(h.id);
+        }
+        let after = seg.search(&q, &params);
+        let dead: std::collections::HashSet<u32> =
+            before.iter().map(|h| h.id).collect();
+        assert!(after.iter().all(|h| !dead.contains(&h.id)));
+        assert_eq!(after.len(), params.h, "enough live rows remain");
+        assert_eq!(seg.live(), seg.len() - dead.len());
+    }
+
+    #[test]
+    fn delta_seal_reuses_base_artifacts() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(37);
+        let base = Segment::seal(
+            &docs_from(&data, 0),
+            data.sparse_dim(),
+            &IndexConfig::default(),
+            None,
+            1,
+        );
+        let extra = cfg.generate(38);
+        let artifacts = base.index.dense_artifacts();
+        let delta = Segment::seal(
+            &docs_from(&extra, data.len() as u32),
+            extra.sparse_dim(),
+            &IndexConfig::default(),
+            Some(&artifacts),
+            1,
+        );
+        // same codeword storage content: k-means was not re-run
+        assert_eq!(
+            delta.index.codebooks.codewords,
+            base.index.codebooks.codewords
+        );
+        let q = cfg.related_queries(&extra, 39, 1).remove(0);
+        assert_eq!(delta.search(&q, &SearchParams::new(5)).len(), 5);
+    }
+}

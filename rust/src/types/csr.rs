@@ -29,6 +29,27 @@ impl CsrMatrix {
         CsrMatrix { indptr, indices, values, n_cols }
     }
 
+    /// Build from borrowed (dims, vals) row slices — same layout rules
+    /// as [`CsrMatrix::from_rows`] without intermediate `SparseVector`
+    /// allocations (the segment-seal path assembles rows it doesn't
+    /// own).
+    pub fn from_row_slices<'a, I>(rows: I, n_cols: usize) -> Self
+    where
+        I: IntoIterator<Item = (&'a [u32], &'a [f32])>,
+    {
+        let mut indptr = vec![0u64];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (dims, vals) in rows {
+            debug_assert_eq!(dims.len(), vals.len());
+            debug_assert!(dims.iter().all(|&d| (d as usize) < n_cols));
+            indices.extend_from_slice(dims);
+            values.extend_from_slice(vals);
+            indptr.push(indices.len() as u64);
+        }
+        CsrMatrix { indptr, indices, values, n_cols }
+    }
+
     pub fn n_rows(&self) -> usize {
         self.indptr.len().saturating_sub(1)
     }
@@ -160,6 +181,21 @@ mod tests {
             SparseVector::new(vec![0, 1, 3], vec![4.0, 5.0, 6.0]),
         ];
         CsrMatrix::from_rows(&rows, 4)
+    }
+
+    #[test]
+    fn from_row_slices_matches_from_rows() {
+        let rows = vec![
+            SparseVector::new(vec![0, 2], vec![1.0, 2.0]),
+            SparseVector::default(),
+            SparseVector::new(vec![1, 3], vec![3.0, 4.0]),
+        ];
+        let a = CsrMatrix::from_rows(&rows, 4);
+        let b = CsrMatrix::from_row_slices(
+            rows.iter().map(|r| (&r.dims[..], &r.vals[..])),
+            4,
+        );
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! index, metrics sanity, batching behaviour under load.
 
 use hybrid_ip::coordinator::batcher::{BatchPolicy, Batcher};
+use hybrid_ip::coordinator::shard::UpsertOutcome;
 use hybrid_ip::coordinator::{Server, ServerConfig};
 use hybrid_ip::data::synthetic::QuerySimConfig;
 use hybrid_ip::eval::ground_truth::exact_top_k;
@@ -115,6 +116,75 @@ fn batcher_flushes_under_mixed_load() {
         flushed.extend(batch);
     }
     assert_eq!(flushed, (0..10).collect::<Vec<_>>());
+}
+
+#[test]
+fn cluster_mutates_online_while_serving() {
+    let (cfg, data) = dataset(600, 31);
+    let mut server = Server::start(
+        &data,
+        &ServerConfig { n_shards: 4, ..Default::default() },
+    );
+    let n = data.len();
+    let queries = cfg.related_queries(&data, 32, 6);
+    let params = SearchParams::new(10).with_alpha(20.0).with_beta(6.0);
+
+    // 1. a brand-new doc that duplicates a strong neighbor of query 0
+    //    must become retrievable as soon as upsert acks
+    let probe = &queries[0];
+    let best = server.search(probe, &params)[0].0;
+    assert_eq!(
+        server.upsert(
+            n as u32,
+            data.sparse.row_vec(best as usize),
+            data.dense.row(best as usize).to_vec(),
+        ),
+        UpsertOutcome::Inserted,
+        "fresh id replaces nothing"
+    );
+    assert_eq!(server.len(), n + 1);
+    let ids: Vec<u32> =
+        server.search(probe, &params).iter().map(|&(id, _)| id).collect();
+    assert!(
+        ids.contains(&(n as u32)),
+        "upserted duplicate of the top hit must rank in the top 10"
+    );
+
+    // 2. delete it again: gone from results, count restored
+    assert!(server.delete(n as u32));
+    assert!(!server.delete(n as u32), "double delete");
+    assert_eq!(server.len(), n);
+    let ids: Vec<u32> =
+        server.search(probe, &params).iter().map(|&(id, _)| id).collect();
+    assert!(!ids.contains(&(n as u32)));
+
+    // 3. replace an existing doc's payload: id count stable
+    assert_eq!(
+        server.upsert(
+            best,
+            data.sparse.row_vec((best as usize + 1) % n),
+            data.dense.row((best as usize + 1) % n).to_vec(),
+        ),
+        UpsertOutcome::Replaced
+    );
+    assert_eq!(server.len(), n);
+    // 3b. malformed payload: rejected, cluster untouched
+    assert_eq!(
+        server.upsert(best, data.sparse.row_vec(0), vec![0.0; 3]),
+        UpsertOutcome::Rejected
+    );
+    assert_eq!(server.len(), n);
+
+    // 4. flush barrier: buffers seal, count survives, recall intact
+    assert_eq!(server.flush(), n);
+    let mut recall = 0.0;
+    for q in &queries {
+        let got: Vec<u32> =
+            server.search(q, &params).iter().map(|&(id, _)| id).collect();
+        recall += recall_at(&exact_top_k(&data, q, 10), &got, 10);
+    }
+    // one doc was replaced, so allow a sliver below the static gate
+    assert!(recall / queries.len() as f64 >= 0.8);
 }
 
 #[test]

@@ -1,0 +1,397 @@
+//! Integration: the mutable segmented index. The load-bearing claim is
+//! *convergence*: an index that reaches a logical corpus through any
+//! sequence of upserts/deletes/merges returns results **bit-identical**
+//! to a from-scratch static build of that corpus — same ids, same f32
+//! score bits. Plus: tombstoned ids never surface in any pre-merge
+//! state, batch search is bit-identical to sequential on segmented
+//! state, and a background merge reconciles mutations that raced it.
+
+use std::collections::{HashMap, HashSet};
+
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::mutable::{MutableConfig, MutableHybridIndex};
+use hybrid_ip::hybrid::search::{search, SearchHit};
+use hybrid_ip::types::csr::CsrMatrix;
+use hybrid_ip::types::dense::DenseMatrix;
+use hybrid_ip::types::hybrid::{HybridDataset, HybridQuery};
+use hybrid_ip::types::sparse::SparseVector;
+
+/// Sub-dataset of `rows` (in the given order).
+fn subset(data: &HybridDataset, rows: impl Iterator<Item = usize>) -> HybridDataset {
+    let rows: Vec<usize> = rows.collect();
+    let sparse_rows: Vec<SparseVector> =
+        rows.iter().map(|&i| data.sparse.row_vec(i)).collect();
+    let sparse = CsrMatrix::from_rows(&sparse_rows, data.sparse_dim());
+    let mut dense = DenseMatrix::zeros(rows.len(), data.dense_dim());
+    for (new_i, &i) in rows.iter().enumerate() {
+        dense.row_mut(new_i).copy_from_slice(data.dense.row(i));
+    }
+    HybridDataset::new(sparse, dense)
+}
+
+fn payload(data: &HybridDataset, i: usize) -> (SparseVector, Vec<f32>) {
+    (data.sparse.row_vec(i), data.dense.row(i).to_vec())
+}
+
+fn assert_hits_identical(a: &[SearchHit], b: &[SearchHit], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{ctx}: id diverged");
+        assert_eq!(
+            x.score.to_bits(),
+            y.score.to_bits(),
+            "{ctx}: score bits diverged for id {}",
+            x.id
+        );
+    }
+}
+
+fn tiny(n: usize) -> QuerySimConfig {
+    let mut cfg = QuerySimConfig::tiny();
+    cfg.n = n;
+    cfg
+}
+
+#[test]
+fn upserts_then_merge_match_static_rebuild() {
+    let cfg = tiny(500);
+    let data = cfg.generate(51);
+    let queries = cfg.related_queries(&data, 52, 8);
+    let params = SearchParams::new(10);
+
+    // grow 400 -> 500 via upserts, seal a delta, then merge
+    let mut mutable = MutableHybridIndex::from_dataset(
+        &subset(&data, 0..400),
+        0,
+        MutableConfig::default(),
+    );
+    for i in 400..500 {
+        let (s, d) = payload(&data, i);
+        mutable.upsert(i as u32, s, d);
+    }
+    mutable.flush();
+    assert_eq!(mutable.n_segments(), 2, "base + sealed delta");
+    // pre-merge sanity: the delta rows are searchable
+    assert!(mutable.contains(450));
+    mutable.merge();
+    assert_eq!(mutable.n_segments(), 1);
+    assert_eq!(mutable.len(), 500);
+
+    let static_idx = HybridIndex::build(&data, &IndexConfig::default());
+    for (qi, q) in queries.iter().enumerate() {
+        let got = mutable.search(q, &params);
+        let want = search(&static_idx, q, &params);
+        assert_hits_identical(&got, &want, &format!("grow, query {qi}"));
+    }
+}
+
+#[test]
+fn deletes_then_merge_match_static_rebuild() {
+    let cfg = tiny(500);
+    let data = cfg.generate(53);
+    let queries = cfg.related_queries(&data, 54, 8);
+    let params = SearchParams::new(10);
+
+    // shrink 500 -> 400 via deletes, then merge
+    let mut mutable = MutableHybridIndex::from_dataset(
+        &data,
+        0,
+        MutableConfig::default(),
+    );
+    for id in 400..500u32 {
+        assert!(mutable.delete(id));
+    }
+    mutable.merge();
+    assert_eq!(mutable.len(), 400);
+
+    let static_idx = HybridIndex::build(
+        &subset(&data, 0..400),
+        &IndexConfig::default(),
+    );
+    for (qi, q) in queries.iter().enumerate() {
+        let got = mutable.search(q, &params);
+        let want = search(&static_idx, q, &params);
+        assert_hits_identical(&got, &want, &format!("shrink, query {qi}"));
+    }
+}
+
+#[test]
+fn upsert_replacements_then_merge_match_static_rebuild() {
+    let cfg = tiny(400);
+    let data = cfg.generate(55);
+    let replacements = cfg.generate(56); // fresh payloads, same shape
+    let queries = cfg.related_queries(&data, 57, 8);
+    let params = SearchParams::new(10);
+
+    let mut mutable = MutableHybridIndex::from_dataset(
+        &data,
+        0,
+        MutableConfig::default(),
+    );
+    for i in 0..50 {
+        let (s, d) = payload(&replacements, i);
+        assert!(mutable.upsert(i as u32, s, d), "replacement reported");
+    }
+    assert_eq!(mutable.len(), 400, "replacement must not grow the corpus");
+    mutable.merge();
+
+    // the logical corpus: rows 0..50 replaced, 50..400 original
+    let modified = {
+        let mut rows: Vec<(SparseVector, Vec<f32>)> =
+            (0..400).map(|i| payload(&data, i)).collect();
+        for (i, row) in rows.iter_mut().enumerate().take(50) {
+            *row = payload(&replacements, i);
+        }
+        let sparse = CsrMatrix::from_rows(
+            &rows.iter().map(|(s, _)| s.clone()).collect::<Vec<_>>(),
+            data.sparse_dim(),
+        );
+        let mut dense = DenseMatrix::zeros(400, data.dense_dim());
+        for (i, (_, d)) in rows.iter().enumerate() {
+            dense.row_mut(i).copy_from_slice(d);
+        }
+        HybridDataset::new(sparse, dense)
+    };
+    let static_idx = HybridIndex::build(&modified, &IndexConfig::default());
+    for (qi, q) in queries.iter().enumerate() {
+        let got = mutable.search(q, &params);
+        let want = search(&static_idx, q, &params);
+        assert_hits_identical(&got, &want, &format!("replace, query {qi}"));
+    }
+}
+
+/// Build a three-tier state: sealed base + sealed delta + live buffer,
+/// with tombstones punched into all three.
+fn segmented_state(
+    data: &HybridDataset,
+) -> (MutableHybridIndex, HashSet<u32>) {
+    let n = data.len();
+    assert!(n >= 450);
+    let mut mutable = MutableHybridIndex::from_dataset(
+        &subset(data, 0..300),
+        0,
+        MutableConfig { delta_seal_rows: 100, ..Default::default() },
+    );
+    // exactly fills one delta segment...
+    for i in 300..400 {
+        let (s, d) = payload(data, i);
+        mutable.upsert(i as u32, s, d);
+    }
+    // ...and these stay in the buffer
+    for i in 400..450 {
+        let (s, d) = payload(data, i);
+        mutable.upsert(i as u32, s, d);
+    }
+    assert_eq!(mutable.n_segments(), 2);
+    assert_eq!(mutable.buffered_rows(), 50);
+    // tombstones across base, delta and buffer
+    let mut deleted = HashSet::new();
+    for id in [5u32, 17, 123, 299, 310, 377, 405, 449] {
+        assert!(mutable.delete(id));
+        deleted.insert(id);
+    }
+    (mutable, deleted)
+}
+
+#[test]
+fn tombstoned_ids_never_surface_in_any_state() {
+    let cfg = tiny(450);
+    let data = cfg.generate(61);
+    let (mut mutable, mut deleted) = segmented_state(&data);
+    let queries = cfg.related_queries(&data, 62, 10);
+    // overfetch aggressively so dead rows would surface if filterable
+    let params = SearchParams::new(20).with_alpha(20.0).with_beta(8.0);
+
+    let check = |idx: &MutableHybridIndex, dead: &HashSet<u32>, ctx: &str| {
+        for q in &queries {
+            let hits = idx.search(q, &params);
+            let mut seen = HashSet::new();
+            for h in &hits {
+                assert!(!dead.contains(&h.id), "{ctx}: dead id {} surfaced", h.id);
+                assert!(seen.insert(h.id), "{ctx}: duplicate id {}", h.id);
+            }
+        }
+    };
+    check(&mutable, &deleted, "segmented");
+
+    // delete each query's current top hit, at every state, repeatedly:
+    // the next search must never return it again
+    for round in 0..3 {
+        for q in &queries {
+            if let Some(top) = mutable.search(q, &params).first().copied() {
+                mutable.delete(top.id);
+                deleted.insert(top.id);
+            }
+        }
+        check(&mutable, &deleted, &format!("round {round}"));
+        match round {
+            0 => mutable.flush(),
+            1 => mutable.merge(),
+            _ => {}
+        }
+        check(&mutable, &deleted, &format!("round {round} after compaction"));
+    }
+}
+
+#[test]
+fn batch_is_bit_identical_to_sequential_on_segmented_state() {
+    let cfg = tiny(450);
+    let data = cfg.generate(63);
+    let (mutable, _) = segmented_state(&data);
+    let queries = cfg.related_queries(&data, 64, 12);
+    let params = SearchParams::new(10);
+    let batched = mutable.search_batch(&queries, &params);
+    assert_eq!(batched.len(), queries.len());
+    for (qi, (q, got)) in queries.iter().zip(&batched).enumerate() {
+        let want = mutable.search(q, &params);
+        assert_hits_identical(got, &want, &format!("batch query {qi}"));
+    }
+}
+
+#[test]
+fn threaded_engines_match_single_threaded() {
+    let cfg = tiny(450);
+    let data = cfg.generate(65);
+    let queries = cfg.related_queries(&data, 66, 8);
+    let params = SearchParams::new(10);
+    let build = |threads: usize| {
+        let mut m = MutableHybridIndex::from_dataset(
+            &subset(&data, 0..300),
+            0,
+            MutableConfig {
+                delta_seal_rows: 100,
+                engine_threads: threads,
+                ..Default::default()
+            },
+        );
+        for i in 300..450 {
+            let (s, d) = payload(&data, i);
+            m.upsert(i as u32, s, d);
+        }
+        m.delete(42);
+        m
+    };
+    let single = build(1);
+    let threaded = build(4);
+    let a = single.search_batch(&queries, &params);
+    let b = threaded.search_batch(&queries, &params);
+    for (qi, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_hits_identical(x, y, &format!("threads, query {qi}"));
+    }
+}
+
+#[test]
+fn background_merge_reconciles_racing_mutations() {
+    let cfg = tiny(480);
+    let data = cfg.generate(67);
+    let fresh = cfg.generate(68);
+    let params = SearchParams::new(10).with_alpha(20.0);
+
+    let mut mutable = MutableHybridIndex::from_dataset(
+        &subset(&data, 0..400),
+        0,
+        MutableConfig::default(),
+    );
+    // model of the logical corpus: id -> (source dataset marker, row)
+    let mut model: HashMap<u32, (u8, usize)> =
+        (0..400).map(|i| (i as u32, (0u8, i))).collect();
+    for i in 400..440 {
+        let (s, d) = payload(&data, i);
+        mutable.upsert(i as u32, s, d);
+        model.insert(i as u32, (0, i));
+    }
+    mutable.flush();
+
+    assert!(mutable.start_background_merge());
+    assert!(mutable.is_merging());
+    assert!(!mutable.start_background_merge(), "no concurrent merges");
+    // race the merge: delete snapshot ids, replace others, insert fresh
+    for id in 0..20u32 {
+        assert!(mutable.delete(id));
+        model.remove(&id);
+    }
+    for id in 100..120u32 {
+        let (s, d) = payload(&fresh, id as usize);
+        mutable.upsert(id, s, d);
+        model.insert(id, (1, id as usize));
+    }
+    for i in 440..480 {
+        let (s, d) = payload(&data, i);
+        mutable.upsert(i as u32, s, d);
+        model.insert(i as u32, (0, i));
+    }
+    mutable.wait_merge();
+    assert!(!mutable.is_merging());
+    assert_eq!(mutable.len(), model.len());
+
+    // logical state correct after install
+    for id in 0..20u32 {
+        assert!(!mutable.contains(id), "deleted id {id} survived install");
+    }
+    let q = cfg.related_queries(&data, 69, 1).remove(0);
+    for h in mutable.search(&q, &params) {
+        assert!(model.contains_key(&h.id), "ghost id {}", h.id);
+    }
+
+    // after a final full merge, state is bit-identical to a static build
+    // of the model corpus
+    mutable.merge();
+    let mut ids: Vec<u32> = model.keys().copied().collect();
+    ids.sort_unstable();
+    let logical = {
+        let sparse_rows: Vec<SparseVector> = ids
+            .iter()
+            .map(|id| {
+                let (src, row) = model[id];
+                let d = if src == 0 { &data } else { &fresh };
+                d.sparse.row_vec(row)
+            })
+            .collect();
+        let sparse =
+            CsrMatrix::from_rows(&sparse_rows, data.sparse_dim());
+        let mut dense = DenseMatrix::zeros(ids.len(), data.dense_dim());
+        for (i, id) in ids.iter().enumerate() {
+            let (src, row) = model[id];
+            let d = if src == 0 { &data } else { &fresh };
+            dense.row_mut(i).copy_from_slice(d.dense.row(row));
+        }
+        HybridDataset::new(sparse, dense)
+    };
+    let static_idx = HybridIndex::build(&logical, &IndexConfig::default());
+    let queries = cfg.related_queries(&data, 70, 6);
+    for (qi, q) in queries.iter().enumerate() {
+        let got = mutable.search(q, &params);
+        let want: Vec<SearchHit> = search(&static_idx, q, &params)
+            .into_iter()
+            .map(|h| SearchHit { id: ids[h.id as usize], score: h.score })
+            .collect();
+        assert_hits_identical(&got, &want, &format!("post-race, query {qi}"));
+    }
+}
+
+#[test]
+fn queries_against_empty_and_tiny_states() {
+    let cfg = QuerySimConfig::tiny();
+    let data = cfg.generate(71);
+    let q: HybridQuery = cfg.related_queries(&data, 72, 1).remove(0);
+    let params = SearchParams::new(5);
+    let mut idx = MutableHybridIndex::new(
+        data.sparse_dim(),
+        data.dense_dim(),
+        MutableConfig::default(),
+    );
+    assert!(idx.search(&q, &params).is_empty());
+    let (s, d) = payload(&data, 0);
+    idx.upsert(0, s, d);
+    let hits = idx.search(&q, &params);
+    assert_eq!(hits.len(), 1, "single buffered doc is searchable");
+    // exact buffer scoring: score equals the true inner product
+    let exact = data.dot(0, &q);
+    assert_eq!(hits[0].score.to_bits(), exact.to_bits());
+    idx.flush();
+    assert_eq!(idx.search(&q, &params).len(), 1);
+    idx.merge();
+    assert_eq!(idx.search(&q, &params).len(), 1);
+}

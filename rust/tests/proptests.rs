@@ -4,12 +4,17 @@
 use hybrid_ip::dense::adc_lut16::{scan, Lut16Codes};
 use hybrid_ip::dense::lut::{QuantizedLut, QueryLut};
 use hybrid_ip::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::mutable::{MutableConfig, MutableHybridIndex};
+use hybrid_ip::hybrid::search::{SearchHit, SearchScratch};
 use hybrid_ip::hybrid::topk::{top_k_from_scores, TopK};
 use hybrid_ip::sparse::cache_sort::{cache_sort, gray_code_sort, is_permutation};
 use hybrid_ip::sparse::inverted_index::{Accumulator, InvertedIndex};
 use hybrid_ip::sparse::pruning::{prune_matrix, PruneThresholds};
 use hybrid_ip::types::csr::CsrMatrix;
 use hybrid_ip::types::dense::DenseMatrix;
+use hybrid_ip::types::hybrid::{HybridDataset, HybridQuery};
 use hybrid_ip::types::sparse::SparseVector;
 use hybrid_ip::util::proptest::{forall, Gen};
 
@@ -211,6 +216,216 @@ fn prop_topk_threshold_is_admission_bar() {
         if let Some(th) = t.threshold() {
             let sorted = t.into_sorted();
             assert_eq!(sorted.last().unwrap().1, th);
+        }
+    });
+}
+
+/// One step of a randomized mutation/search tape (see
+/// `prop_mutable_interleavings_deterministic`).
+enum MutOp {
+    Upsert(u32, SparseVector, Vec<f32>),
+    Delete(u32),
+    Flush,
+    Merge,
+    Search(HybridQuery),
+}
+
+fn random_query(g: &mut Gen, sd: usize, dd: usize) -> HybridQuery {
+    let nnz = g.usize_in(0, sd.min(6));
+    let (dims, vals) = g.sparse(sd, nnz);
+    HybridQuery {
+        sparse: SparseVector::new(dims, vals),
+        dense: g.vec_gauss(dd),
+    }
+}
+
+/// Assert `hits` follow the TopK total order (score desc, id asc on
+/// ties), carry no duplicates, and only ids in `live`.
+fn check_hits(
+    hits: &[SearchHit],
+    live: &std::collections::HashSet<u32>,
+    ctx: &str,
+) {
+    for w in hits.windows(2) {
+        assert!(
+            w[0].score > w[1].score
+                || (w[0].score == w[1].score && w[0].id < w[1].id),
+            "{ctx}: total order violated: ({}, {}) before ({}, {})",
+            w[0].id,
+            w[0].score,
+            w[1].id,
+            w[1].score
+        );
+    }
+    let mut seen = std::collections::HashSet::new();
+    for h in hits {
+        assert!(seen.insert(h.id), "{ctx}: duplicate id {}", h.id);
+        assert!(live.contains(&h.id), "{ctx}: dead/unknown id {}", h.id);
+    }
+}
+
+#[test]
+fn prop_mutable_interleavings_deterministic() {
+    forall(12, 0x3E6E, |g| {
+        let sd = g.usize_in(8, 64);
+        let dd = g.usize_in(1, 5) * 2;
+        let config = MutableConfig {
+            delta_seal_rows: g.usize_in(4, 24),
+            merge_fraction: 0.5,
+            ..Default::default()
+        };
+        // Pre-generate the whole tape, then replay it onto two fresh
+        // indices: randomized interleavings of insert/delete/search must
+        // leave both in bit-identical states at every checkpoint.
+        let n_ops = g.usize_in(10, 70);
+        let mut tape = Vec::with_capacity(n_ops + 1);
+        for _ in 0..n_ops {
+            tape.push(match g.usize_in(0, 9) {
+                0..=4 => {
+                    let id = g.usize_in(0, 40) as u32;
+                    let nnz = g.usize_in(0, sd.min(8));
+                    let (dims, vals) = g.sparse(sd, nnz);
+                    MutOp::Upsert(id, SparseVector::new(dims, vals), g.vec_gauss(dd))
+                }
+                5..=6 => MutOp::Delete(g.usize_in(0, 40) as u32),
+                7 => MutOp::Flush,
+                8 => MutOp::Merge,
+                _ => MutOp::Search(random_query(g, sd, dd)),
+            });
+        }
+        tape.push(MutOp::Search(random_query(g, sd, dd)));
+
+        let mut a = MutableHybridIndex::new(sd, dd, config.clone());
+        let mut b = MutableHybridIndex::new(sd, dd, config);
+        let mut live = std::collections::HashSet::new();
+        let params = SearchParams::new(8);
+        for (step, op) in tape.iter().enumerate() {
+            match op {
+                MutOp::Upsert(id, s, d) => {
+                    a.upsert(*id, s.clone(), d.clone());
+                    b.upsert(*id, s.clone(), d.clone());
+                    live.insert(*id);
+                }
+                MutOp::Delete(id) => {
+                    let ra = a.delete(*id);
+                    let rb = b.delete(*id);
+                    assert_eq!(ra, rb, "step {step}: delete diverged");
+                    assert_eq!(ra, live.remove(id), "step {step}: model");
+                }
+                MutOp::Flush => {
+                    a.flush();
+                    b.flush();
+                }
+                MutOp::Merge => {
+                    a.merge();
+                    b.merge();
+                }
+                MutOp::Search(q) => {
+                    let ha = a.search(q, &params);
+                    let hb = b.search(q, &params);
+                    let ctx = format!("step {step}");
+                    check_hits(&ha, &live, &ctx);
+                    assert_eq!(ha.len(), hb.len(), "{ctx}: replay diverged");
+                    for (x, y) in ha.iter().zip(&hb) {
+                        assert_eq!(x.id, y.id, "{ctx}: replay id diverged");
+                        assert_eq!(
+                            x.score.to_bits(),
+                            y.score.to_bits(),
+                            "{ctx}: replay score bits diverged"
+                        );
+                    }
+                    // a second identical search must reproduce itself,
+                    // and the batch path must agree bit-for-bit
+                    let again = a.search(q, &params);
+                    let batch =
+                        a.search_batch(std::slice::from_ref(q), &params)
+                            .pop()
+                            .unwrap();
+                    for (x, y, z) in
+                        ha.iter().zip(&again).zip(&batch).map(|((x, y), z)| (x, y, z))
+                    {
+                        assert_eq!(x.id, y.id);
+                        assert_eq!(x.score.to_bits(), y.score.to_bits());
+                        assert_eq!(x.id, z.id);
+                        assert_eq!(x.score.to_bits(), z.score.to_bits());
+                    }
+                    assert_eq!(ha.len(), again.len());
+                    assert_eq!(ha.len(), batch.len());
+                    assert_eq!(a.len(), live.len(), "{ctx}: live count");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_stage1_scores_within_quantization_bound() {
+    // Stage-1 approximate scores (LUT16 dense scan + inverted-index
+    // sparse accumulation) must stay within the quantized-LUT error
+    // bound of the exact recombination: f32-LUT ADC score + kept-matrix
+    // sparse dot.
+    forall(15, 0x51A6, |g| {
+        let n = g.usize_in(20, 120);
+        let sd = g.usize_in(8, 40);
+        let dd = g.usize_in(1, 4) * 2;
+        let sparse_rows: Vec<SparseVector> = (0..n)
+            .map(|_| {
+                let nnz = g.usize_in(0, sd.min(8));
+                let (dims, vals) = g.sparse(sd, nnz);
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        let dense_rows: Vec<Vec<f32>> =
+            (0..n).map(|_| g.vec_gauss(dd)).collect();
+        let data = HybridDataset::new(
+            CsrMatrix::from_rows(&sparse_rows, sd),
+            DenseMatrix::from_rows(&dense_rows),
+        );
+        let cfg = IndexConfig {
+            cache_sort: false, // identity perm: rows align 1:1 below
+            sparse_keep_top: g.usize_in(0, 6),
+            epsilon_frac: 0.0,
+            ..Default::default()
+        };
+        let idx = HybridIndex::build(&data, &cfg);
+        let q = random_query(g, sd, dd);
+
+        // run stage 1 exactly as search_with does
+        let mut scratch = SearchScratch::new(&idx);
+        scratch.lut.rebuild(&idx.codebooks, &q.dense);
+        scratch.qlut.rebuild(&scratch.lut);
+        hybrid_ip::dense::adc_lut16::scan(
+            &idx.dense_codes,
+            &scratch.qlut,
+            &mut scratch.dense_scores,
+        );
+        scratch.acc.reset();
+        idx.sparse_index.scan(&q.sparse, &mut scratch.acc);
+        let mut overlay = std::collections::HashMap::new();
+        scratch.acc.drain_scores(|r, s| {
+            overlay.insert(r, s);
+        });
+
+        // exact recombination reference
+        let eta = PruneThresholds::top_per_dim(&data.sparse, cfg.sparse_keep_top);
+        let kept =
+            prune_matrix(&data.sparse, &eta, &PruneThresholds::uniform(sd, 0.0))
+                .kept;
+        for i in 0..n {
+            let stage1 = scratch.dense_scores[i]
+                + overlay.get(&(i as u32)).copied().unwrap_or(0.0);
+            let exact_dense =
+                scratch.lut.score_codes(&idx.pq_index.row_codes(i));
+            let exact_sparse = kept.row_dot(i, &q.sparse);
+            let exact = exact_dense + exact_sparse;
+            let bound = scratch.qlut.max_error()
+                + 2e-3 * (1.0 + exact.abs());
+            assert!(
+                (stage1 - exact).abs() <= bound,
+                "row {i}: stage1 {stage1} vs exact {exact} \
+                 (err {} > bound {bound})",
+                (stage1 - exact).abs()
+            );
         }
     });
 }
