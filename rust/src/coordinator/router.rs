@@ -6,13 +6,14 @@
 //! `id % n_shards`. The rule is deterministic, so upsert and delete of
 //! the same id always land on the same shard.
 
+use std::path::Path;
 use std::sync::mpsc::channel;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::shard::{
     ShardBatchRequest, ShardDelete, ShardFlush, ShardHandle, ShardRequest,
-    ShardUpsert, UpsertOutcome,
+    ShardSnapshot, ShardUpsert, UpsertOutcome,
 };
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::topk::merge_topk;
@@ -32,6 +33,27 @@ impl Router {
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Each shard's initial contiguous id range `(base, len)` — the
+    /// stateless mutation-routing rule, persisted in the snapshot
+    /// manifest so a restored cluster routes identically.
+    pub fn shard_ranges(&self) -> Vec<(usize, usize)> {
+        self.shards.iter().map(|s| (s.base, s.len)).collect()
+    }
+
+    /// A scatter-gather must hear back from *every* shard: a worker
+    /// that died mid-request silently drops its reply sender, the
+    /// `recv()` loop ends early, and the merge would otherwise proceed
+    /// over a partial corpus — returning confidently wrong results.
+    fn check_gather(&self, got: usize, what: &str) {
+        assert_eq!(
+            got,
+            self.shards.len(),
+            "{what}: short gather — {got}/{} shard replies (a shard \
+             worker died; results would silently drop its corpus)",
+            self.shards.len()
+        );
     }
 
     /// Broadcast + gather + merge. Each shard returns its local top-h;
@@ -58,6 +80,7 @@ impl Router {
             debug_assert_eq!(reply.tag, tag);
             lists.push(reply.hits);
         }
+        self.check_gather(lists.len(), "search");
         merge_topk(&lists, params.h)
     }
 
@@ -86,14 +109,17 @@ impl Router {
         }
         drop(reply_tx);
         // Gather by moving each shard's hit lists into per-query bins.
+        let mut replies = 0usize;
         let mut lists_per_query: Vec<Vec<Vec<(u32, f32)>>> =
             vec![Vec::with_capacity(self.shards.len()); queries.len()];
         while let Ok(reply) = reply_rx.recv() {
             debug_assert_eq!(reply.tag, tag);
+            replies += 1;
             for (i, hits) in reply.hits.into_iter().enumerate() {
                 lists_per_query[i].push(hits);
             }
         }
+        self.check_gather(replies, "search_batch");
         lists_per_query
             .into_iter()
             .map(|lists| merge_topk(&lists, params.h))
@@ -154,7 +180,11 @@ impl Router {
 
     /// Broadcast a flush barrier: every shard seals its write buffer and
     /// compacts if over threshold. Returns the total live doc count.
-    pub fn flush(&self) -> usize {
+    /// Panics if a shard died (short gather); a *recoverable* compaction
+    /// failure (e.g. disk-backed merge rows unreadable under
+    /// `RowRetention::OnDisk`) comes back as `Err` instead, so callers
+    /// like `Server::save_snapshot` can propagate it.
+    pub fn flush(&self) -> std::io::Result<usize> {
         let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         for shard in &self.shards {
@@ -162,11 +192,65 @@ impl Router {
         }
         drop(tx);
         let mut total = 0usize;
+        let mut acks = 0usize;
+        let mut failed: Option<usize> = None;
         while let Ok(ack) = rx.recv() {
             debug_assert_eq!(ack.tag, tag);
+            if !ack.accepted {
+                failed.get_or_insert(ack.shard_id);
+            }
+            acks += 1;
             total += ack.len;
         }
-        total
+        self.check_gather(acks, "flush");
+        if let Some(shard) = failed {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("flush: shard {shard} failed to compact"),
+            ));
+        }
+        Ok(total)
+    }
+
+    /// Broadcast a snapshot barrier: every shard persists its full index
+    /// state into `dir` (callers flush first for a deterministic cut).
+    /// Returns the total snapshot bytes across shards; any shard's save
+    /// error fails the whole snapshot, and a short gather panics.
+    pub fn snapshot(&self, dir: &Path) -> std::io::Result<u64> {
+        let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        for shard in &self.shards {
+            shard.submit_snapshot(ShardSnapshot {
+                dir: dir.to_path_buf(),
+                reply: tx.clone(),
+                tag,
+            });
+        }
+        drop(tx);
+        let mut total = 0u64;
+        let mut acks = 0usize;
+        let mut first_err: Option<String> = None;
+        while let Ok(done) = rx.recv() {
+            debug_assert_eq!(done.tag, tag);
+            acks += 1;
+            match done.result {
+                Ok(bytes) => total += bytes,
+                Err(e) => {
+                    first_err.get_or_insert(format!(
+                        "shard {}: {e}",
+                        done.shard_id
+                    ));
+                }
+            }
+        }
+        self.check_gather(acks, "snapshot");
+        match first_err {
+            Some(e) => Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("snapshot failed: {e}"),
+            )),
+            None => Ok(total),
+        }
     }
 }
 
@@ -178,6 +262,42 @@ mod tests {
     use crate::eval::ground_truth::exact_top_k;
     use crate::eval::recall::recall_at;
     use crate::hybrid::config::IndexConfig;
+
+    /// A 2-shard cluster whose second shard swallows one request and
+    /// dies — the short-gather scenario (previously the merge silently
+    /// proceeded over the surviving shard's corpus only).
+    fn router_with_dead_shard() -> (Router, QuerySimConfig, Vec<crate::types::hybrid::HybridQuery>) {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(81);
+        let queries = cfg.related_queries(&data, 82, 2);
+        let n = data.len();
+        let shards = vec![
+            ShardHandle::spawn(0, 0, data, &IndexConfig::default()),
+            ShardHandle::spawn_black_hole(1, n, n),
+        ];
+        (Router::new(shards), cfg, queries)
+    }
+
+    #[test]
+    #[should_panic(expected = "short gather")]
+    fn dead_shard_makes_search_loud() {
+        let (router, _, queries) = router_with_dead_shard();
+        router.search(&queries[0], &SearchParams::new(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "short gather")]
+    fn dead_shard_makes_search_batch_loud() {
+        let (router, _, queries) = router_with_dead_shard();
+        router.search_batch(&queries, &SearchParams::new(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "short gather")]
+    fn dead_shard_makes_flush_loud() {
+        let (router, _, _) = router_with_dead_shard();
+        let _ = router.flush();
+    }
 
     #[test]
     fn sharded_search_matches_single_index_recall() {

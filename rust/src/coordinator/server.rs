@@ -2,6 +2,8 @@
 //! together (the in-process analogue of the paper's 200-server online
 //! system).
 
+use std::io;
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::coordinator::batcher::BatchPolicy;
@@ -9,9 +11,41 @@ use crate::coordinator::metrics::{LatencyRecorder, MetricsSnapshot};
 use crate::coordinator::router::Router;
 use crate::coordinator::shard::{ShardHandle, UpsertOutcome};
 use crate::hybrid::config::{IndexConfig, SearchParams};
-use crate::hybrid::mutable::MutableConfig;
+use crate::hybrid::mutable::{MutableConfig, RowRetention};
+use crate::hybrid::persist;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
 use crate::types::sparse::SparseVector;
+
+/// Cluster manifest file inside a snapshot directory: committed epoch,
+/// shard count, live doc count, and each shard's initial id range (the
+/// routing rule). Shard files live under `epoch-<k>/` subdirectories;
+/// the manifest names the epoch whose files are complete, and is only
+/// rewritten (atomically) after every shard of the new epoch has been
+/// written — a crash or failure mid-snapshot leaves the previous epoch
+/// fully intact and still referenced.
+pub const MANIFEST_FILE: &str = "MANIFEST.snap";
+
+/// Subdirectory holding one snapshot epoch's shard files.
+fn epoch_dir_name(epoch: u64) -> String {
+    format!("epoch-{epoch}")
+}
+
+/// Next unused epoch number in `dir` (max existing + 1, counting even
+/// uncommitted leftovers so a failed attempt is never overwritten).
+fn next_epoch(dir: &std::path::Path) -> io::Result<u64> {
+    let mut max: Option<u64> = None;
+    for entry in std::fs::read_dir(dir)? {
+        let name = entry?.file_name();
+        if let Some(k) = name
+            .to_str()
+            .and_then(|n| n.strip_prefix("epoch-"))
+            .and_then(|n| n.parse::<u64>().ok())
+        {
+            max = Some(max.map_or(k, |m| m.max(k)));
+        }
+    }
+    Ok(max.map_or(0, |m| m + 1))
+}
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -33,6 +67,15 @@ pub struct ServerConfig {
     /// runs. With it off, compaction happens only at the deterministic
     /// [`Server::flush`] barrier (threshold-gated, synchronous).
     pub auto_merge: bool,
+    /// Raw-row retention policy for every shard's sealed segments (the
+    /// ROADMAP memory-governance knob): `InMemory` keeps merge sources
+    /// in RAM, `OnDisk` sheds them to the snapshot after a save (merges
+    /// re-read the snapshot), `Drop` discards them (merges rejected —
+    /// read-only / merge-never deployments at ~half the residency).
+    pub row_retention: RowRetention,
+    /// Directory for [`Server::save_snapshot`] / [`Server::restore`].
+    /// None disables persistence.
+    pub snapshot_dir: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -46,6 +89,8 @@ impl Default for ServerConfig {
             delta_seal_rows: m.delta_seal_rows,
             merge_fraction: m.merge_fraction,
             auto_merge: m.auto_merge,
+            row_retention: m.row_retention,
+            snapshot_dir: None,
         }
     }
 }
@@ -54,6 +99,20 @@ pub struct Server {
     router: Router,
     pub metrics: LatencyRecorder,
     n: usize,
+    snapshot_dir: Option<PathBuf>,
+}
+
+/// The per-shard mutability knobs a [`ServerConfig`] implies.
+fn shard_config(config: &ServerConfig) -> MutableConfig {
+    MutableConfig {
+        index: config.index.clone(),
+        delta_seal_rows: config.delta_seal_rows,
+        merge_fraction: config.merge_fraction,
+        engine_threads: config.engine_threads,
+        auto_merge: config.auto_merge,
+        row_retention: config.row_retention,
+        ..MutableConfig::default()
+    }
 }
 
 impl Server {
@@ -68,13 +127,7 @@ impl Server {
                 .into_iter()
                 .enumerate()
                 .map(|(i, (base, slice))| {
-                    let cfg = MutableConfig {
-                        index: config.index.clone(),
-                        delta_seal_rows: config.delta_seal_rows,
-                        merge_fraction: config.merge_fraction,
-                        engine_threads: config.engine_threads,
-                        auto_merge: config.auto_merge,
-                    };
+                    let cfg = shard_config(config);
                     sc.spawn(move || {
                         ShardHandle::spawn_mutable(i, base, slice, cfg)
                     })
@@ -86,7 +139,115 @@ impl Server {
             router: Router::new(shards),
             metrics: LatencyRecorder::new(),
             n,
+            snapshot_dir: config.snapshot_dir.clone(),
         }
+    }
+
+    /// Restore a cluster from the snapshot directory a previous
+    /// [`Server::save_snapshot`] wrote (`config.snapshot_dir`): the
+    /// manifest fixes the shard count and id-routing ranges, and each
+    /// shard worker loads its index in parallel. The restored cluster
+    /// serves bit-identical results to the one that was saved — no
+    /// k-means retraining, no re-sealing.
+    pub fn restore(config: &ServerConfig) -> io::Result<Self> {
+        let dir = config.snapshot_dir.as_ref().ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "ServerConfig::snapshot_dir not set",
+            )
+        })?;
+        let mut r = persist::open_file(
+            &dir.join(MANIFEST_FILE),
+            persist::SNAP_MANIFEST,
+        )?;
+        let epoch = r.u64()?;
+        let n_shards = r.usize()?;
+        let live = r.usize()?;
+        if n_shards == 0 || n_shards > (1 << 16) {
+            return Err(persist::invalid(format!(
+                "manifest: implausible shard count {n_shards}"
+            )));
+        }
+        let mut ranges = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let base = r.usize()?;
+            let len = r.usize()?;
+            ranges.push((base, len));
+        }
+        let shard_dir = dir.join(epoch_dir_name(epoch));
+        let shards: io::Result<Vec<ShardHandle>> =
+            std::thread::scope(|sc| {
+                let handles: Vec<_> = ranges
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, (base, len))| {
+                        let cfg = shard_config(config);
+                        let dir = shard_dir.clone();
+                        sc.spawn(move || {
+                            ShardHandle::restore(i, base, len, &dir, cfg)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+        Ok(Server {
+            router: Router::new(shards?),
+            metrics: LatencyRecorder::new(),
+            n: live,
+            snapshot_dir: Some(dir.clone()),
+        })
+    }
+
+    /// Persist the whole cluster: a flush barrier first (buffers seal,
+    /// threshold-gated compactions run, every shard settles), then each
+    /// shard writes its index snapshot into a *fresh epoch directory*,
+    /// then the manifest naming that epoch is committed last (atomic
+    /// tmp+rename) — a restore can only ever see a manifest whose shard
+    /// files are complete, and a failed or crashed snapshot leaves the
+    /// previous epoch untouched. Older epochs are pruned after the
+    /// commit. Returns total snapshot bytes across shards.
+    pub fn save_snapshot(&self) -> io::Result<u64> {
+        let dir = self.snapshot_dir.as_ref().ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "ServerConfig::snapshot_dir not set",
+            )
+        })?;
+        std::fs::create_dir_all(dir)?;
+        let epoch = next_epoch(dir)?;
+        let epoch_dir = dir.join(epoch_dir_name(epoch));
+        std::fs::create_dir_all(&epoch_dir)?;
+        let live = self.router.flush()?;
+        let bytes = self.router.snapshot(&epoch_dir)?;
+        let tmp = dir.join("MANIFEST.tmp");
+        let mut w = persist::create_file(&tmp, persist::SNAP_MANIFEST)?;
+        w.u64(epoch)?;
+        w.usize(self.router.n_shards())?;
+        w.usize(live)?;
+        for (base, len) in self.router.shard_ranges() {
+            w.usize(base)?;
+            w.usize(len)?;
+        }
+        w.finish()?;
+        std::fs::rename(&tmp, dir.join(MANIFEST_FILE))?;
+        // The committed epoch owns every live disk-backed row pointer
+        // (each shard's save re-targets its segments before acking), so
+        // older epochs — including leftovers of failed attempts — are
+        // dead weight now.
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            if let Some(k) = entry
+                .file_name()
+                .to_str()
+                .and_then(|n| n.strip_prefix("epoch-"))
+                .and_then(|n| n.parse::<u64>().ok())
+            {
+                if k < epoch {
+                    std::fs::remove_dir_all(entry.path()).ok();
+                }
+            }
+        }
+        Ok(bytes)
     }
 
     pub fn n_shards(&self) -> usize {
@@ -164,8 +325,9 @@ impl Server {
     }
 
     /// Flush barrier: every shard seals its write buffer and compacts if
-    /// over threshold. Returns the cluster-wide live doc count.
-    pub fn flush(&self) -> usize {
+    /// over threshold. Returns the cluster-wide live doc count; `Err` if
+    /// a shard's compaction failed (its buffer is still sealed).
+    pub fn flush(&self) -> io::Result<usize> {
         self.router.flush()
     }
 

@@ -6,6 +6,7 @@
 //! through them, and `Upsert`/`Delete`/`Flush` mutate the shard online
 //! while it keeps serving.
 
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -14,6 +15,12 @@ use crate::hybrid::config::{IndexConfig, SearchParams};
 use crate::hybrid::mutable::{MutableConfig, MutableHybridIndex};
 use crate::types::hybrid::{HybridDataset, HybridQuery};
 use crate::types::sparse::SparseVector;
+
+/// Snapshot file a shard writes into (and restores from) a snapshot
+/// directory.
+pub fn shard_snapshot_file(shard_id: usize) -> String {
+    format!("shard-{shard_id}.snap")
+}
 
 /// A search request routed to one shard.
 pub struct ShardRequest {
@@ -71,6 +78,22 @@ pub struct ShardFlush {
     pub tag: u64,
 }
 
+/// Persist the shard's full index state into `dir` (the router's
+/// flush-then-snapshot barrier; see `Server::save_snapshot`).
+pub struct ShardSnapshot {
+    pub dir: PathBuf,
+    pub reply: Sender<ShardSnapshotDone>,
+    pub tag: u64,
+}
+
+pub struct ShardSnapshotDone {
+    pub tag: u64,
+    pub shard_id: usize,
+    /// Snapshot bytes written, or the save error rendered for the
+    /// gatherer.
+    pub result: Result<u64, String>,
+}
+
 /// Mutation acknowledgement. `applied` reports whether the op touched an
 /// existing doc: true for a replacing upsert or a delete of a present
 /// id; false for a fresh insert or a delete of an absent id.
@@ -104,6 +127,7 @@ enum ShardMsg {
     Upsert(ShardUpsert),
     Delete(ShardDelete),
     Flush(ShardFlush),
+    Snapshot(ShardSnapshot),
 }
 
 /// Owning handle to a running shard worker.
@@ -163,8 +187,35 @@ impl ShardHandle {
         config: MutableConfig,
     ) -> Self {
         let len = data.len();
-        let mut index =
+        let index =
             MutableHybridIndex::from_dataset(&data, base as u32, config);
+        Self::spawn_with_index(shard_id, base, len, index)
+    }
+
+    /// Restore a shard from `dir`'s snapshot (written by a
+    /// [`ShardSnapshot`] barrier). `base`/`len` are the shard's initial
+    /// id range from the cluster manifest — the mutation-routing rule
+    /// must survive the restart unchanged.
+    pub fn restore(
+        shard_id: usize,
+        base: usize,
+        len: usize,
+        dir: &Path,
+        config: MutableConfig,
+    ) -> std::io::Result<Self> {
+        let path = dir.join(shard_snapshot_file(shard_id));
+        let index = MutableHybridIndex::load(&path, config)?;
+        Ok(Self::spawn_with_index(shard_id, base, len, index))
+    }
+
+    /// Start a worker thread around an already-built (or restored)
+    /// index.
+    pub fn spawn_with_index(
+        shard_id: usize,
+        base: usize,
+        len: usize,
+        mut index: MutableHybridIndex,
+    ) -> Self {
         let (tx, rx): (Sender<ShardMsg>, Receiver<ShardMsg>) = channel();
         let join = std::thread::Builder::new()
             .name(format!("shard-{shard_id}"))
@@ -236,19 +287,55 @@ impl ShardHandle {
                         ShardMsg::Flush(req) => {
                             index.wait_merge();
                             index.flush();
-                            index.maybe_merge();
+                            // A failed compaction (disk-backed rows
+                            // unreadable) must surface in the ack, not
+                            // vanish: the router turns !accepted into a
+                            // loud failure.
+                            let merged = index.maybe_merge();
                             let _ = req.reply.send(ShardAck {
                                 tag: req.tag,
                                 shard_id,
                                 applied: true,
-                                accepted: true,
+                                accepted: merged.is_ok(),
                                 len: index.len(),
+                            });
+                        }
+                        ShardMsg::Snapshot(req) => {
+                            let path = req.dir
+                                .join(shard_snapshot_file(shard_id));
+                            let result = index
+                                .save(&path)
+                                .map_err(|e| e.to_string());
+                            let _ = req.reply.send(ShardSnapshotDone {
+                                tag: req.tag,
+                                shard_id,
+                                result,
                             });
                         }
                     }
                 }
             })
             .expect("spawn shard worker");
+        ShardHandle { shard_id, base, len, tx, join: Some(join) }
+    }
+
+    /// Test-only: a shard whose worker receives one message and exits
+    /// without replying — observationally identical to a worker thread
+    /// that panicked mid-request (the reply sender is dropped unsent),
+    /// so router gather paths can assert the failure is loud.
+    #[cfg(test)]
+    pub(crate) fn spawn_black_hole(
+        shard_id: usize,
+        base: usize,
+        len: usize,
+    ) -> Self {
+        let (tx, rx): (Sender<ShardMsg>, Receiver<ShardMsg>) = channel();
+        let join = std::thread::Builder::new()
+            .name(format!("shard-{shard_id}-blackhole"))
+            .spawn(move || {
+                let _ = rx.recv(); // swallow one request, die silently
+            })
+            .expect("spawn black-hole worker");
         ShardHandle { shard_id, base, len, tx, join: Some(join) }
     }
 
@@ -270,6 +357,10 @@ impl ShardHandle {
 
     pub fn submit_flush(&self, req: ShardFlush) {
         self.tx.send(ShardMsg::Flush(req)).expect("shard worker gone");
+    }
+
+    pub fn submit_snapshot(&self, req: ShardSnapshot) {
+        self.tx.send(ShardMsg::Snapshot(req)).expect("shard worker gone");
     }
 }
 

@@ -36,6 +36,11 @@ pub struct DenseArtifacts {
 }
 
 /// The full §6 index: ready for `search::search`.
+///
+/// Persistence: `save`/`load` (implemented in [`crate::hybrid::persist`])
+/// write the whole index — codebooks, whitening, PQ codes, inverted
+/// lists, residuals and the cache-sort permutation — as a versioned
+/// binary snapshot that restores bit-identically.
 pub struct HybridIndex {
     /// Permutation applied at build: internal row i = original perm[i].
     pub perm: Vec<u32>,

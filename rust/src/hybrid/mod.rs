@@ -1,14 +1,16 @@
 //! The hybrid search engine (paper §5–§6): index construction (pruned
 //! sparse + PQ dense, each with a residual index), the three-stage
 //! residual-reordering search pipeline, the parallel batch engine that
-//! fans query batches across per-worker scratches, and the mutable
+//! fans query batches across per-worker scratches, the mutable
 //! segmented index (base + delta segments + tombstones + merge) that
-//! serves upserts/deletes online.
+//! serves upserts/deletes online, and the versioned snapshot format
+//! that persists all of it.
 
 pub mod batch;
 pub mod config;
 pub mod index;
 pub mod mutable;
+pub mod persist;
 pub mod search;
 pub mod segment;
 pub mod topk;
@@ -16,6 +18,6 @@ pub mod topk;
 pub use batch::{BatchEngine, BatchOutput, BatchStats, EngineConfig, ShardMode};
 pub use config::{IndexConfig, SearchParams};
 pub use index::{DenseArtifacts, HybridIndex};
-pub use mutable::{MutableConfig, MutableHybridIndex};
+pub use mutable::{MutableConfig, MutableHybridIndex, RowRetention};
 pub use search::SearchHit;
-pub use segment::{Doc, Segment, Tombstones};
+pub use segment::{Doc, MergeError, RowStore, Segment, Tombstones};

@@ -26,20 +26,51 @@
 //! Search fans over segments: each sealed segment runs the full
 //! three-stage pipeline through its own `BatchEngine`, the buffer is
 //! scored exactly, and the per-segment top-h lists merge under the
-//! `TopK` total order (score desc, id asc) — so batch and sequential
-//! paths stay bit-identical, as in the static engine.
+//! `TopK` total order — so batch and sequential paths stay bit-identical,
+//! as in the static engine.
+//!
+//! **Persistence**: [`MutableHybridIndex::save`] writes the whole state
+//! (segments with raw rows, buffer, tombstones) as one v3 snapshot and
+//! [`MutableHybridIndex::load`] restores it bit-identically. The
+//! [`RowRetention`] knob governs what happens to each segment's raw
+//! rows — the ROADMAP's ~2x-resident-memory cost — across that
+//! boundary; see `tests/integration_persistence.rs`.
 
 use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::hybrid::config::{IndexConfig, SearchParams};
 use crate::hybrid::index::DenseArtifacts;
+use crate::hybrid::persist;
 use crate::hybrid::search::SearchHit;
-use crate::hybrid::segment::{Doc, Segment};
+use crate::hybrid::segment::{Doc, MergeError, RowStore, Segment};
 use crate::hybrid::topk::TopK;
 use crate::types::dense;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
 use crate::types::sparse::SparseVector;
+use crate::util::binio::BinWriter;
+
+/// What happens to a sealed segment's raw (unquantized) rows. Sealed
+/// segments need the true vectors only to *merge* (k-means retrains on
+/// them); serving never touches them, yet keeping them resident roughly
+/// doubles per-shard memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowRetention {
+    /// Keep raw rows in RAM (default): merges never touch the disk.
+    InMemory,
+    /// Keep raw rows only in the snapshot file: [`MutableHybridIndex::save`]
+    /// evicts them from RAM and [`MutableHybridIndex::load`] leaves them
+    /// on disk; a merge re-reads them from the snapshot.
+    OnDisk,
+    /// Discard raw rows at seal/load: minimum memory, but
+    /// [`MutableHybridIndex::merge`] is rejected with
+    /// [`MergeError::RowsDropped`] and
+    /// [`MutableHybridIndex::needs_merge`] is always false
+    /// (merge-never deployments).
+    Drop,
+}
 
 /// Mutability knobs on top of the static [`IndexConfig`].
 #[derive(Clone, Debug)]
@@ -51,12 +82,21 @@ pub struct MutableConfig {
     /// Merge threshold: re-seal once delta + buffer + tombstoned rows
     /// exceed this fraction of the base segment's rows.
     pub merge_fraction: f32,
+    /// Merge threshold when there is *no base segment yet* (an index
+    /// grown purely from upserts whose buffer never hit
+    /// `delta_seal_rows`): merge once this many total rows have
+    /// accumulated, so the corpus eventually gets a k-means-trained base
+    /// instead of being brute-force scanned forever.
+    pub merge_floor_rows: usize,
     /// Worker threads in each segment's batch engine.
     pub engine_threads: usize,
     /// Kick off a background merge automatically when an upsert crosses
     /// the threshold. Off by default: deterministic tests (and callers
     /// that want bit-reproducible results) merge explicitly instead.
     pub auto_merge: bool,
+    /// Raw-row retention policy for sealed segments (see
+    /// [`RowRetention`]).
+    pub row_retention: RowRetention,
 }
 
 impl Default for MutableConfig {
@@ -65,8 +105,10 @@ impl Default for MutableConfig {
             index: IndexConfig::default(),
             delta_seal_rows: 1024,
             merge_fraction: 0.25,
+            merge_floor_rows: 512,
             engine_threads: 1,
             auto_merge: false,
+            row_retention: RowRetention::InMemory,
         }
     }
 }
@@ -194,10 +236,12 @@ impl MutableHybridIndex {
         &self.config
     }
 
-    /// Resident bytes across all segments + buffer payloads.
+    /// Resident bytes across all segments + buffer payloads. Raw rows
+    /// evicted or dropped by the [`RowRetention`] knob are *not*
+    /// counted — this is the number the knob shrinks.
     pub fn memory_bytes(&self) -> usize {
         let seg: usize =
-            self.segments.iter().map(|e| e.seg.memory_bytes()).sum();
+            self.segments.iter().map(|e| e.seg.resident_bytes()).sum();
         let buf: usize = self
             .buffer
             .iter()
@@ -236,7 +280,10 @@ impl MutableHybridIndex {
             && self.merge_job.is_none()
             && self.needs_merge()
         {
-            self.start_background_merge();
+            // An I/O failure re-reading disk-backed rows only delays
+            // compaction — the next threshold crossing retries; callers
+            // that need the error use start_background_merge directly.
+            let _ = self.start_background_merge();
         }
         replaced
     }
@@ -312,7 +359,8 @@ impl MutableHybridIndex {
         self.install_sealed(docs, artifacts);
     }
 
-    /// Seal `docs` (sorted by id) and register their locations.
+    /// Seal `docs` (sorted by id), apply the retention policy, and
+    /// register their locations.
     fn install_sealed(
         &mut self,
         docs: Vec<Doc>,
@@ -320,13 +368,16 @@ impl MutableHybridIndex {
     ) {
         let serial = self.next_serial;
         self.next_serial += 1;
-        let seg = Segment::seal(
+        let mut seg = Segment::seal(
             &docs,
             self.sparse_dims,
             &self.config.index,
             artifacts.as_ref(),
             self.config.engine_threads,
         );
+        if self.config.row_retention == RowRetention::Drop {
+            seg.drop_rows();
+        }
         for (row, d) in docs.iter().enumerate() {
             self.locs
                 .insert(d.id, Loc::Sealed { serial, row: row as u32 });
@@ -334,13 +385,22 @@ impl MutableHybridIndex {
         self.segments.push(SealedEntry { serial, seg });
     }
 
-    /// True once the rows a merge would clean up — delta + buffer rows
-    /// (live or dead) plus tombstoned *base* rows, each physical row
-    /// counted once — exceed `merge_fraction` of the base segment.
+    /// True once a merge is warranted. With a base segment: the rows a
+    /// merge would clean up — delta + buffer rows (live or dead) plus
+    /// tombstoned *base* rows, each physical row counted once — exceed
+    /// `merge_fraction` of the base. Without one (an index grown purely
+    /// from upserts that never filled a delta seal): total accumulated
+    /// rows reach the absolute `merge_floor_rows` floor. Always false
+    /// under [`RowRetention::Drop`], whose merges are rejected.
     pub fn needs_merge(&self) -> bool {
+        if self.config.row_retention == RowRetention::Drop {
+            return false;
+        }
         let (base, base_dead) = match self.segments.first() {
             Some(e) => (e.seg.len(), e.seg.tombstones.dead()),
-            None => return false,
+            None => {
+                return self.buffer.len() >= self.config.merge_floor_rows
+            }
         };
         let extra: usize = self
             .segments
@@ -353,14 +413,23 @@ impl MutableHybridIndex {
             > self.config.merge_fraction * base as f32
     }
 
-    /// All live docs, ascending id (clones payloads).
-    fn snapshot_docs(&self) -> Vec<Doc> {
+    /// All live docs, ascending id (clones payloads; re-reads
+    /// disk-backed rows).
+    fn snapshot_docs(&self) -> Result<Vec<Doc>, MergeError> {
         let mut docs: Vec<Doc> = Vec::with_capacity(self.len());
+        // Disk-backed rows first, validated — the only untrusted source
+        // (resident segments and the buffer were validated at upsert).
         for e in &self.segments {
-            for row in 0..e.seg.len() {
-                if !e.seg.tombstones.get(row as u32) {
-                    docs.push(e.seg.doc(row));
-                }
+            if !e.seg.rows_resident() {
+                e.seg.live_docs_into(&mut docs)?;
+            }
+        }
+        self.check_docs(&docs)?;
+        for e in &self.segments {
+            if e.seg.rows_resident() {
+                e.seg
+                    .live_docs_into(&mut docs)
+                    .expect("resident rows cannot fail to fetch");
             }
         }
         for (d, &dead) in self.buffer.iter().zip(&self.buffer_dead) {
@@ -369,26 +438,56 @@ impl MutableHybridIndex {
             }
         }
         docs.sort_by_key(|d| d.id);
-        docs
+        Ok(docs)
+    }
+
+    /// Reject malformed rows before they reach a seal (disk-backed rows
+    /// come from a file whose sparse width must match this index).
+    fn check_docs(&self, docs: &[Doc]) -> Result<(), MergeError> {
+        for d in docs {
+            if !self.payload_fits(&d.sparse, &d.dense) {
+                return Err(MergeError::Io(persist::invalid(format!(
+                    "doc {} payload doesn't fit index dims ({}ˢ/{}ᴰ)",
+                    d.id, self.sparse_dims, self.dense_dims
+                ))));
+            }
+        }
+        Ok(())
     }
 
     /// Synchronous merge: re-seal every live row into a single fresh
     /// base, retraining k-means and re-running the cache sort. The
     /// result is bit-identical to a static [`HybridIndex::build`] over
     /// the same logical corpus (rows ordered by ascending id).
-    pub fn merge(&mut self) {
+    ///
+    /// Fails — leaving the index serving, unchanged — when raw rows are
+    /// unavailable: always under [`RowRetention::Drop`], or on an I/O
+    /// error re-reading disk-backed rows under [`RowRetention::OnDisk`].
+    pub fn merge(&mut self) -> Result<(), MergeError> {
+        if self.config.row_retention == RowRetention::Drop {
+            return Err(MergeError::RowsDropped);
+        }
         self.wait_merge(); // never race two merges
+        let mut docs: Vec<Doc> = Vec::with_capacity(self.len());
+        // Fallible pass first: disk-backed rows can fail to re-read (or
+        // come from a file that doesn't match this index), and an error
+        // must leave the index fully intact.
+        for e in &self.segments {
+            if !e.seg.rows_resident() {
+                e.seg.live_docs_into(&mut docs)?;
+            }
+        }
+        self.check_docs(&docs)?;
         // Unlike the background path (which must snapshot and leave the
         // segments serving), the sync merge owns its segments: drain
         // them one at a time so each segment's index and retained rows
         // are freed as soon as its live docs are copied out, instead of
         // holding the whole old index alongside the full doc copy.
-        let mut docs: Vec<Doc> = Vec::with_capacity(self.len());
         for e in std::mem::take(&mut self.segments) {
-            for row in 0..e.seg.len() {
-                if !e.seg.tombstones.get(row as u32) {
-                    docs.push(e.seg.doc(row));
-                }
+            if e.seg.rows_resident() {
+                e.seg
+                    .live_docs_into(&mut docs)
+                    .expect("resident rows cannot fail to fetch");
             }
             // e drops here, releasing the segment before the next one
         }
@@ -407,19 +506,25 @@ impl MutableHybridIndex {
         if !docs.is_empty() {
             self.install_sealed(docs, None);
         }
+        Ok(())
     }
 
-    /// Merge if the threshold is crossed (synchronous).
-    pub fn maybe_merge(&mut self) {
+    /// Merge if the threshold is crossed (synchronous). Under
+    /// [`RowRetention::Drop`] the threshold never trips, so this is a
+    /// no-op rather than an error.
+    pub fn maybe_merge(&mut self) -> Result<(), MergeError> {
         if self.needs_merge() {
-            self.merge();
+            self.merge()
+        } else {
+            Ok(())
         }
     }
 
     /// Start re-sealing on a background thread. Mutations and searches
     /// continue against the current segments; the install reconciles
-    /// anything that raced the merge. Returns false if a merge is
-    /// already running or there is nothing to merge.
+    /// anything that raced the merge. Returns `Ok(false)` if a merge is
+    /// already running or there is nothing to merge, and an error if
+    /// raw rows are unavailable (dropped, or a disk re-read failed).
     ///
     /// The finished merge is installed by the next `upsert`/`delete`
     /// (or `flush`/`wait_merge`/`try_install_merge`) — `search` takes
@@ -428,16 +533,19 @@ impl MutableHybridIndex {
     /// convenient (the shard worker does this on every message),
     /// otherwise queries keep paying the multi-segment scan and the
     /// merged copy stays parked in the join handle.
-    pub fn start_background_merge(&mut self) -> bool {
+    pub fn start_background_merge(&mut self) -> Result<bool, MergeError> {
+        if self.config.row_retention == RowRetention::Drop {
+            return Err(MergeError::RowsDropped);
+        }
         if self.merge_job.is_some() {
-            return false;
+            return Ok(false);
         }
         self.flush();
-        let docs = self.snapshot_docs();
+        let docs = self.snapshot_docs()?;
         if docs.is_empty() {
             // fully-dead corpus: nothing to re-seal, drop the husks now
             self.segments.clear();
-            return false;
+            return Ok(false);
         }
         let covered: Vec<u64> =
             self.segments.iter().map(|e| e.serial).collect();
@@ -453,7 +561,7 @@ impl MutableHybridIndex {
             })
             .expect("spawn merge thread");
         self.merge_job = Some(MergeJob { handle, covered, serial });
-        true
+        Ok(true)
     }
 
     /// Install a finished background merge, if one is ready (non-
@@ -570,6 +678,212 @@ impl MutableHybridIndex {
             })
             .collect()
     }
+
+    /// Write the full index state — every segment (ids, tombstones,
+    /// sealed search structures, raw rows), the active buffer, and the
+    /// serial counter — to `path` as one v3 snapshot. The write goes to
+    /// a temp file first and is renamed into place, so a crash mid-save
+    /// never corrupts an existing snapshot. Any in-flight background
+    /// merge is installed first (the snapshot captures a settled state).
+    ///
+    /// Under [`RowRetention::OnDisk`] the in-memory raw rows are
+    /// *evicted* after a successful save: each segment keeps a pointer
+    /// to its raw-rows section of the new snapshot instead, shedding
+    /// the retention memory immediately. Returns the snapshot size in
+    /// bytes.
+    pub fn save(&mut self, path: &Path) -> std::io::Result<u64> {
+        self.wait_merge();
+        let tmp = {
+            let mut os = path.as_os_str().to_os_string();
+            os.push(".tmp");
+            std::path::PathBuf::from(os)
+        };
+        let mut w = persist::create_file(&tmp, persist::SNAP_MUTABLE)?;
+        let result = self.write_payload(&mut w);
+        let bytes = w.bytes_written();
+        let row_offsets = match result.and_then(|ofs| {
+            w.finish()?;
+            Ok(ofs)
+        }) {
+            Ok(ofs) => ofs,
+            Err(e) => {
+                std::fs::remove_file(&tmp).ok();
+                return Err(e);
+            }
+        };
+        std::fs::rename(&tmp, path)?;
+        if self.config.row_retention == RowRetention::OnDisk {
+            // Re-point every segment (evicting resident rows, and moving
+            // already-disk-backed pointers off the old file, which the
+            // caller may prune) at the snapshot just committed.
+            let shared = Arc::new(path.to_path_buf());
+            for (e, &(off, len)) in
+                self.segments.iter_mut().zip(&row_offsets)
+            {
+                if off != 0 {
+                    e.seg.evict_rows_to(Arc::clone(&shared), off, len);
+                }
+            }
+        }
+        Ok(bytes)
+    }
+
+    /// Serialize the payload; returns each segment's raw-rows
+    /// `(offset, len)`.
+    fn write_payload<W: std::io::Write>(
+        &self,
+        w: &mut BinWriter<W>,
+    ) -> std::io::Result<Vec<(u64, u64)>> {
+        w.usize(self.sparse_dims)?;
+        w.usize(self.dense_dims)?;
+        w.u64(self.next_serial)?;
+        w.usize(self.segments.len())?;
+        let mut row_offsets = Vec::with_capacity(self.segments.len());
+        for e in &self.segments {
+            w.u64(e.serial)?;
+            row_offsets.push(e.seg.write_into(w)?);
+        }
+        w.usize(self.buffer.len())?;
+        for d in &self.buffer {
+            w.u32(d.id)?;
+            persist::write_sparse_vec(w, &d.sparse)?;
+            w.slice_f32(&d.dense)?;
+        }
+        let dead: Vec<u8> =
+            self.buffer_dead.iter().map(|&b| b as u8).collect();
+        w.slice_u8(&dead)?;
+        Ok(row_offsets)
+    }
+
+    /// Restore an index saved by [`MutableHybridIndex::save`]. The
+    /// restored index serves bit-identical results to the one that was
+    /// saved. `config.row_retention` decides where each segment's raw
+    /// rows end up: `InMemory` loads them into RAM, `OnDisk` leaves
+    /// them in the snapshot (merges re-read `path`), `Drop` discards
+    /// them (merges are rejected).
+    pub fn load(
+        path: &Path,
+        config: MutableConfig,
+    ) -> std::io::Result<Self> {
+        let mut r = persist::open_file(path, persist::SNAP_MUTABLE)?;
+        let sparse_dims = r.usize()?;
+        let dense_dims = r.usize()?;
+        let next_serial = r.u64()?;
+        let n_segments = r.usize()?;
+        let source = Arc::new(path.to_path_buf());
+        let keep_rows = config.row_retention == RowRetention::InMemory;
+        let refer = (config.row_retention == RowRetention::OnDisk)
+            .then_some(&source);
+        let mut segments: Vec<SealedEntry> = Vec::new();
+        for _ in 0..n_segments {
+            let serial = r.u64()?;
+            if serial >= next_serial {
+                return Err(persist::invalid(
+                    "segment serial >= next_serial",
+                ));
+            }
+            if segments.iter().any(|e| e.serial == serial) {
+                return Err(persist::invalid("duplicate segment serial"));
+            }
+            let seg = Segment::read_from(
+                &mut r,
+                config.engine_threads,
+                keep_rows,
+                refer,
+            )?;
+            // dims checked unconditionally (not via the raw rows, which
+            // OnDisk/Drop loads don't materialize): a segment index of
+            // the wrong width would panic in the query path instead of
+            // failing the load
+            if seg.index.dense_dim != dense_dims
+                || seg.index.sparse_residual.n_cols != sparse_dims
+            {
+                return Err(persist::invalid(
+                    "segment index disagrees with file-level dims",
+                ));
+            }
+            if let RowStore::Memory(data) = &seg.rows {
+                if data.sparse.n_cols != sparse_dims
+                    || data.dense.dim != dense_dims
+                {
+                    return Err(persist::invalid(
+                        "segment raw rows disagree with index dims",
+                    ));
+                }
+            }
+            segments.push(SealedEntry { serial, seg });
+        }
+        let n_buf = r.usize()?;
+        let mut buffer: Vec<Doc> = Vec::new();
+        for _ in 0..n_buf {
+            let id = r.u32()?;
+            let sparse = persist::read_sparse_vec(&mut r)?;
+            let dense = r.slice_f32()?;
+            buffer.push(Doc { id, sparse, dense });
+        }
+        let dead_bytes = r.slice_u8()?;
+        if dead_bytes.len() != buffer.len() {
+            return Err(persist::invalid(
+                "buffer dead-flags length != buffer length",
+            ));
+        }
+        let buffer_dead: Vec<bool> =
+            dead_bytes.iter().map(|&b| b != 0).collect();
+
+        let mut idx = MutableHybridIndex {
+            config,
+            sparse_dims,
+            dense_dims,
+            segments,
+            buffer,
+            buffer_dead,
+            buffer_live: 0,
+            locs: HashMap::new(),
+            next_serial,
+            merge_job: None,
+        };
+        // Rebuild the id → location map from live rows; a live id in two
+        // places means the snapshot is corrupt.
+        for e in &idx.segments {
+            for row in 0..e.seg.len() as u32 {
+                if !e.seg.tombstones.get(row) {
+                    let id = e.seg.ids[row as usize];
+                    let loc = Loc::Sealed { serial: e.serial, row };
+                    if idx.locs.insert(id, loc).is_some() {
+                        return Err(persist::invalid(format!(
+                            "id {id} live in two segments"
+                        )));
+                    }
+                }
+            }
+        }
+        for (slot, (d, &dead)) in
+            idx.buffer.iter().zip(&idx.buffer_dead).enumerate()
+        {
+            if !dead {
+                if d.dense.len() != idx.dense_dims
+                    || d.sparse
+                        .dims
+                        .last()
+                        .is_some_and(|&j| (j as usize) >= idx.sparse_dims)
+                {
+                    return Err(persist::invalid(format!(
+                        "buffer doc {} payload doesn't fit index dims",
+                        d.id
+                    )));
+                }
+                let loc = Loc::Buffer { slot: slot as u32 };
+                if idx.locs.insert(d.id, loc).is_some() {
+                    return Err(persist::invalid(format!(
+                        "id {} live in segment and buffer",
+                        d.id
+                    )));
+                }
+                idx.buffer_live += 1;
+            }
+        }
+        Ok(idx)
+    }
 }
 
 impl Drop for MutableHybridIndex {
@@ -670,10 +984,38 @@ mod tests {
             idx.upsert((n + i) as u32, s, d);
         }
         assert!(idx.needs_merge());
-        idx.merge();
+        idx.merge().unwrap();
         assert!(!idx.needs_merge());
         assert_eq!(idx.n_segments(), 1);
         assert_eq!(idx.len(), n + n / 8);
+    }
+
+    #[test]
+    fn needs_merge_without_base_uses_absolute_floor() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(48);
+        let mut mc = tiny_config();
+        // seal threshold far above the corpus: the buffer never flushes
+        mc.delta_seal_rows = 100_000;
+        mc.merge_floor_rows = 20;
+        let mut idx = MutableHybridIndex::new(
+            data.sparse_dim(),
+            data.dense_dim(),
+            mc,
+        );
+        for i in 0..19 {
+            let (s, d) = doc_of(&data, i);
+            idx.upsert(i as u32, s, d);
+        }
+        assert!(!idx.needs_merge(), "below the floor");
+        let (s, d) = doc_of(&data, 19);
+        idx.upsert(19, s, d);
+        assert_eq!(idx.n_segments(), 0, "still pure buffer");
+        assert!(idx.needs_merge(), "floor reached with no base segment");
+        idx.maybe_merge().unwrap();
+        assert_eq!(idx.n_segments(), 1, "merge sealed a k-means base");
+        assert!(!idx.needs_merge());
+        assert_eq!(idx.len(), 20);
     }
 
     #[test]
@@ -685,10 +1027,38 @@ mod tests {
         for i in 0..data.len() {
             idx.delete(i as u32);
         }
-        idx.merge();
+        idx.merge().unwrap();
         assert!(idx.is_empty());
         assert_eq!(idx.n_segments(), 0);
         let q = cfg.related_queries(&data, 47, 1).remove(0);
         assert!(idx.search(&q, &SearchParams::new(5)).is_empty());
+    }
+
+    #[test]
+    fn drop_retention_rejects_merges_and_never_wants_one() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(49);
+        let mc = MutableConfig {
+            delta_seal_rows: 16,
+            merge_fraction: 0.01,
+            merge_floor_rows: 4,
+            row_retention: RowRetention::Drop,
+            ..Default::default()
+        };
+        let mut idx = MutableHybridIndex::from_dataset(&data, 0, mc);
+        let n = data.len();
+        for i in 0..64 {
+            let (s, d) = doc_of(&data, i);
+            idx.upsert((n + i) as u32, s, d);
+        }
+        assert!(!idx.needs_merge(), "Drop never wants a merge");
+        assert!(matches!(idx.merge(), Err(MergeError::RowsDropped)));
+        assert!(matches!(
+            idx.start_background_merge(),
+            Err(MergeError::RowsDropped)
+        ));
+        // serving is unaffected
+        let q = cfg.related_queries(&data, 50, 1).remove(0);
+        assert_eq!(idx.search(&q, &SearchParams::new(10)).len(), 10);
     }
 }

@@ -1,0 +1,645 @@
+//! Snapshot (de)serialization for the hybrid index family — the v3
+//! on-disk format over `util::binio`.
+//!
+//! Every snapshot file is `MAGIC | VERSION | kind (u8) | payload`:
+//!
+//! * kind [`SNAP_HYBRID_INDEX`] — one sealed [`HybridIndex`]: config,
+//!   permutation, inverted index (CSC), sparse residual (CSR), PQ
+//!   codebooks + row-major codes + LUT16 blocked codes, optional
+//!   scalar-quantized dense residual, optional whitening transform.
+//! * kind `SNAP_SEGMENT` — a sealed segment: ids, tombstones, its
+//!   `HybridIndex`, then a *length-prefixed* raw-rows section that
+//!   loaders may skip (see `hybrid::segment`).
+//! * kind `SNAP_MUTABLE` — a full `MutableHybridIndex`: dims, serials,
+//!   segments, write buffer (see `hybrid::mutable`).
+//! * kind [`SNAP_MANIFEST`] — the coordinator's cluster manifest
+//!   (shard count + per-shard id ranges; see `coordinator::server`).
+//!
+//! Loaders treat input as untrusted: every section is structurally
+//! validated (monotonic row pointers, in-bounds column/row ids,
+//! cross-field length agreement) and malformed data yields
+//! `io::ErrorKind::InvalidData` rather than a panic deeper in the
+//! query path. Round-tripping is *bit-exact*: floats are stored as
+//! their LE bit patterns, so a restored index serves bit-identical
+//! results to the index that was saved.
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::dense::adc_lut16::{Lut16Codes, BLOCK};
+use crate::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
+use crate::dense::whitening::Whitening;
+use crate::hybrid::config::IndexConfig;
+use crate::hybrid::index::HybridIndex;
+use crate::sparse::inverted_index::InvertedIndex;
+use crate::types::csr::{CscMatrix, CsrMatrix};
+use crate::types::dense::DenseMatrix;
+use crate::types::hybrid::HybridDataset;
+use crate::types::sparse::SparseVector;
+use crate::util::binio::{BinReader, BinWriter};
+
+pub const SNAP_HYBRID_INDEX: u8 = 1;
+pub const SNAP_SEGMENT: u8 = 2;
+pub const SNAP_MUTABLE: u8 = 3;
+pub const SNAP_MANIFEST: u8 = 4;
+
+pub fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Create a snapshot file: header + kind byte written, ready for a
+/// payload.
+pub fn create_file(
+    path: &Path,
+    kind: u8,
+) -> io::Result<BinWriter<BufWriter<File>>> {
+    let f = File::create(path)?;
+    let mut w = BinWriter::new(BufWriter::new(f))?;
+    w.u8(kind)?;
+    Ok(w)
+}
+
+/// Open a snapshot file, check header + kind, return a reader whose
+/// length checks are bounded by the actual file size.
+pub fn open_file(
+    path: &Path,
+    kind: u8,
+) -> io::Result<BinReader<BufReader<File>>> {
+    let f = File::open(path)?;
+    let total = f.metadata()?.len();
+    let mut r = BinReader::with_limit(BufReader::new(f), total)?;
+    let got = r.u8()?;
+    if got != kind {
+        return Err(invalid(format!(
+            "snapshot kind {got} != expected {kind} in {}",
+            path.display()
+        )));
+    }
+    Ok(r)
+}
+
+/// Open a snapshot file positioned at an absolute byte `offset` (raw
+/// reader: no header re-check — the offset was recorded by a checked
+/// load of the same file).
+pub fn open_file_at(
+    path: &Path,
+    offset: u64,
+) -> io::Result<BinReader<BufReader<File>>> {
+    let mut f = File::open(path)?;
+    let total = f.metadata()?.len();
+    if offset > total {
+        return Err(invalid(format!(
+            "offset {offset} beyond snapshot {} ({total} bytes)",
+            path.display()
+        )));
+    }
+    f.seek(SeekFrom::Start(offset))?;
+    Ok(BinReader::raw_with_limit(BufReader::new(f), total - offset))
+}
+
+// ---------------------------------------------------------------- config
+
+pub fn write_config<W: Write>(
+    w: &mut BinWriter<W>,
+    c: &IndexConfig,
+) -> io::Result<()> {
+    w.usize(c.sparse_keep_top)?;
+    w.f32(c.epsilon_frac)?;
+    match c.pq_subspaces {
+        Some(k) => {
+            w.u8(1)?;
+            w.usize(k)?;
+        }
+        None => {
+            w.u8(0)?;
+            w.usize(0)?;
+        }
+    }
+    w.usize(c.pq_codebook_size)?;
+    w.usize(c.pq_iters)?;
+    w.u8(c.dense_residual as u8)?;
+    w.u8(c.cache_sort as u8)?;
+    w.u8(c.whitening as u8)?;
+    w.u64(c.seed)
+}
+
+pub fn read_config<R: Read>(r: &mut BinReader<R>) -> io::Result<IndexConfig> {
+    let sparse_keep_top = r.usize()?;
+    let epsilon_frac = r.f32()?;
+    let has_k = r.u8()? != 0;
+    let k = r.usize()?;
+    let pq_subspaces = has_k.then_some(k);
+    let pq_codebook_size = r.usize()?;
+    let pq_iters = r.usize()?;
+    let dense_residual = r.u8()? != 0;
+    let cache_sort = r.u8()? != 0;
+    let whitening = r.u8()? != 0;
+    let seed = r.u64()?;
+    if pq_codebook_size == 0 || pq_codebook_size > 256 {
+        return Err(invalid(format!(
+            "bad pq_codebook_size {pq_codebook_size}"
+        )));
+    }
+    Ok(IndexConfig {
+        sparse_keep_top,
+        epsilon_frac,
+        pq_subspaces,
+        pq_codebook_size,
+        pq_iters,
+        dense_residual,
+        cache_sort,
+        whitening,
+        seed,
+    })
+}
+
+// ------------------------------------------------------------- matrices
+
+fn check_ptr(ptr: &[u64], nnz: usize, what: &str) -> io::Result<()> {
+    if ptr.is_empty() {
+        if nnz != 0 {
+            return Err(invalid(format!("{what}: empty ptr, nonzero data")));
+        }
+        return Ok(());
+    }
+    if ptr[0] != 0 {
+        return Err(invalid(format!("{what}: ptr[0] != 0")));
+    }
+    if ptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(invalid(format!("{what}: ptr not monotonic")));
+    }
+    if *ptr.last().unwrap() != nnz as u64 {
+        return Err(invalid(format!("{what}: ptr end != nnz {nnz}")));
+    }
+    Ok(())
+}
+
+pub fn write_csr<W: Write>(
+    w: &mut BinWriter<W>,
+    m: &CsrMatrix,
+) -> io::Result<()> {
+    w.slice_u64(&m.indptr)?;
+    w.slice_u32(&m.indices)?;
+    w.slice_f32(&m.values)?;
+    w.usize(m.n_cols)
+}
+
+pub fn read_csr<R: Read>(r: &mut BinReader<R>) -> io::Result<CsrMatrix> {
+    let indptr = r.slice_u64()?;
+    let indices = r.slice_u32()?;
+    let values = r.slice_f32()?;
+    let n_cols = r.usize()?;
+    if indices.len() != values.len() {
+        return Err(invalid("csr: indices/values length mismatch"));
+    }
+    check_ptr(&indptr, indices.len(), "csr")?;
+    if indices.iter().any(|&c| c as usize >= n_cols) {
+        return Err(invalid("csr: column index out of range"));
+    }
+    Ok(CsrMatrix { indptr, indices, values, n_cols })
+}
+
+pub fn write_csc<W: Write>(
+    w: &mut BinWriter<W>,
+    m: &CscMatrix,
+) -> io::Result<()> {
+    w.slice_u64(&m.colptr)?;
+    w.slice_u32(&m.rows)?;
+    w.slice_f32(&m.vals)?;
+    w.usize(m.n_rows)
+}
+
+pub fn read_csc<R: Read>(r: &mut BinReader<R>) -> io::Result<CscMatrix> {
+    let colptr = r.slice_u64()?;
+    let rows = r.slice_u32()?;
+    let vals = r.slice_f32()?;
+    let n_rows = r.usize()?;
+    if rows.len() != vals.len() {
+        return Err(invalid("csc: rows/vals length mismatch"));
+    }
+    check_ptr(&colptr, rows.len(), "csc")?;
+    if rows.iter().any(|&i| i as usize >= n_rows) {
+        return Err(invalid("csc: row id out of range"));
+    }
+    // each column's row list must be strictly ascending: scan_range
+    // binary-searches it, so unsorted postings would silently skip or
+    // double-count rows instead of erroring
+    for j in 0..colptr.len().saturating_sub(1) {
+        let col = &rows[colptr[j] as usize..colptr[j + 1] as usize];
+        if col.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(invalid(format!(
+                "csc: column {j} rows not strictly ascending"
+            )));
+        }
+    }
+    Ok(CscMatrix { colptr, rows, vals, n_rows })
+}
+
+pub fn write_dense<W: Write>(
+    w: &mut BinWriter<W>,
+    m: &DenseMatrix,
+) -> io::Result<()> {
+    w.usize(m.dim)?;
+    w.slice_f32(&m.data)
+}
+
+pub fn read_dense<R: Read>(r: &mut BinReader<R>) -> io::Result<DenseMatrix> {
+    let dim = r.usize()?;
+    let data = r.slice_f32()?;
+    if dim == 0 {
+        if !data.is_empty() {
+            return Err(invalid("dense: zero dim, nonzero data"));
+        }
+    } else if data.len() % dim != 0 {
+        return Err(invalid("dense: data not a multiple of dim"));
+    }
+    Ok(DenseMatrix { data, dim })
+}
+
+pub fn write_sparse_vec<W: Write>(
+    w: &mut BinWriter<W>,
+    v: &SparseVector,
+) -> io::Result<()> {
+    w.slice_u32(&v.dims)?;
+    w.slice_f32(&v.vals)
+}
+
+pub fn read_sparse_vec<R: Read>(
+    r: &mut BinReader<R>,
+) -> io::Result<SparseVector> {
+    let dims = r.slice_u32()?;
+    let vals = r.slice_f32()?;
+    if dims.len() != vals.len() {
+        return Err(invalid("sparse vec: dims/vals length mismatch"));
+    }
+    if dims.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(invalid("sparse vec: dims not strictly increasing"));
+    }
+    Ok(SparseVector { dims, vals })
+}
+
+pub fn write_dataset<W: Write>(
+    w: &mut BinWriter<W>,
+    d: &HybridDataset,
+) -> io::Result<()> {
+    write_csr(w, &d.sparse)?;
+    write_dense(w, &d.dense)
+}
+
+/// Exact serialized size of [`write_dataset`]'s output, so writers can
+/// length-prefix a raw-rows section and stream it instead of buffering
+/// a full copy (kept in lockstep with `write_csr` + `write_dense`:
+/// every slice is an 8-byte length followed by its elements).
+pub fn dataset_wire_len(d: &HybridDataset) -> u64 {
+    let csr = (8 + d.sparse.indptr.len() as u64 * 8)
+        + (8 + d.sparse.indices.len() as u64 * 4)
+        + (8 + d.sparse.values.len() as u64 * 4)
+        + 8; // n_cols
+    let dense = 8 + (8 + d.dense.data.len() as u64 * 4); // dim + data
+    csr + dense
+}
+
+pub fn read_dataset<R: Read>(
+    r: &mut BinReader<R>,
+) -> io::Result<HybridDataset> {
+    let sparse = read_csr(r)?;
+    let dense = read_dense(r)?;
+    if sparse.n_rows() != dense.n_rows() {
+        return Err(invalid(format!(
+            "dataset: sparse rows {} != dense rows {}",
+            sparse.n_rows(),
+            dense.n_rows()
+        )));
+    }
+    Ok(HybridDataset { sparse, dense })
+}
+
+// --------------------------------------------------------- dense pieces
+
+pub fn write_codebooks<W: Write>(
+    w: &mut BinWriter<W>,
+    c: &PqCodebooks,
+) -> io::Result<()> {
+    w.usize(c.k)?;
+    w.usize(c.l)?;
+    w.usize(c.sub)?;
+    w.slice_f32(&c.codewords)
+}
+
+pub fn read_codebooks<R: Read>(
+    r: &mut BinReader<R>,
+) -> io::Result<PqCodebooks> {
+    let k = r.usize()?;
+    let l = r.usize()?;
+    let sub = r.usize()?;
+    let codewords = r.slice_f32()?;
+    let want = k
+        .checked_mul(l)
+        .and_then(|x| x.checked_mul(sub))
+        .ok_or_else(|| invalid("codebooks: k*l*sub overflows"))?;
+    if codewords.len() != want {
+        return Err(invalid(format!(
+            "codebooks: {} codewords != k*l*sub {want}",
+            codewords.len()
+        )));
+    }
+    Ok(PqCodebooks { codewords, k, l, sub })
+}
+
+pub fn write_lut16<W: Write>(
+    w: &mut BinWriter<W>,
+    c: &Lut16Codes,
+) -> io::Result<()> {
+    w.usize(c.n)?;
+    w.usize(c.k)?;
+    w.slice_u8(&c.data)
+}
+
+pub fn read_lut16<R: Read>(r: &mut BinReader<R>) -> io::Result<Lut16Codes> {
+    let n = r.usize()?;
+    let k = r.usize()?;
+    let data = r.slice_u8()?;
+    let k_pairs = k.div_ceil(2);
+    let n_blocks = n.div_ceil(BLOCK);
+    let want = n_blocks
+        .checked_mul(k_pairs)
+        .and_then(|x| x.checked_mul(BLOCK))
+        .ok_or_else(|| invalid("lut16: size overflows"))?;
+    if data.len() != want {
+        return Err(invalid(format!(
+            "lut16: {} bytes != expected {want}",
+            data.len()
+        )));
+    }
+    Ok(Lut16Codes { data, n, k, k_pairs, n_blocks })
+}
+
+pub fn write_sq_residuals<W: Write>(
+    w: &mut BinWriter<W>,
+    s: &ScalarQuantizedResiduals,
+) -> io::Result<()> {
+    w.usize(s.dim)?;
+    w.slice_u8(&s.codes)?;
+    w.slice_f32(&s.lo)?;
+    w.slice_f32(&s.step)
+}
+
+pub fn read_sq_residuals<R: Read>(
+    r: &mut BinReader<R>,
+) -> io::Result<ScalarQuantizedResiduals> {
+    let dim = r.usize()?;
+    let codes = r.slice_u8()?;
+    let lo = r.slice_f32()?;
+    let step = r.slice_f32()?;
+    if lo.len() != dim || step.len() != dim {
+        return Err(invalid("sq residuals: lo/step length != dim"));
+    }
+    if dim > 0 && codes.len() % dim != 0 {
+        return Err(invalid("sq residuals: codes not a multiple of dim"));
+    }
+    Ok(ScalarQuantizedResiduals { codes, dim, lo, step })
+}
+
+pub fn write_whitening<W: Write>(
+    w: &mut BinWriter<W>,
+    t: &Whitening,
+) -> io::Result<()> {
+    w.usize(t.dim)?;
+    w.slice_f64(&t.p)?;
+    w.slice_f64(&t.p_inv_t)
+}
+
+pub fn read_whitening<R: Read>(r: &mut BinReader<R>) -> io::Result<Whitening> {
+    let dim = r.usize()?;
+    let p = r.slice_f64()?;
+    let p_inv_t = r.slice_f64()?;
+    let want = dim
+        .checked_mul(dim)
+        .ok_or_else(|| invalid("whitening: dim*dim overflows"))?;
+    if p.len() != want || p_inv_t.len() != want {
+        return Err(invalid("whitening: matrix size != dim*dim"));
+    }
+    Ok(Whitening { p, p_inv_t, dim })
+}
+
+// ----------------------------------------------------------- HybridIndex
+
+impl HybridIndex {
+    /// Serialize the full sealed index as a nested section of `w`.
+    pub fn write_into<W: Write>(
+        &self,
+        w: &mut BinWriter<W>,
+    ) -> io::Result<()> {
+        write_config(w, &self.config)?;
+        w.usize(self.n)?;
+        w.usize(self.dense_dim)?;
+        w.slice_u32(&self.perm)?;
+        write_csc(w, self.sparse_index.csc())?;
+        write_csr(w, &self.sparse_residual)?;
+        write_codebooks(w, &self.codebooks)?;
+        write_lut16(w, &self.dense_codes)?;
+        // row-major PQ codes (codebooks are shared with the section above)
+        w.usize(self.pq_index.row_bytes)?;
+        w.slice_u8(&self.pq_index.codes)?;
+        match &self.dense_residual {
+            Some(s) => {
+                w.u8(1)?;
+                write_sq_residuals(w, s)?;
+            }
+            None => w.u8(0)?,
+        }
+        match &self.whitening {
+            Some(t) => {
+                w.u8(1)?;
+                write_whitening(w, t)?;
+            }
+            None => w.u8(0)?,
+        }
+        Ok(())
+    }
+
+    /// Deserialize an index section written by
+    /// [`HybridIndex::write_into`], re-validating cross-field invariants.
+    pub fn read_from<R: Read>(r: &mut BinReader<R>) -> io::Result<Self> {
+        let config = read_config(r)?;
+        let n = r.usize()?;
+        let dense_dim = r.usize()?;
+        let perm = r.slice_u32()?;
+        if perm.len() != n {
+            return Err(invalid(format!(
+                "perm length {} != n {n}",
+                perm.len()
+            )));
+        }
+        // must be a true permutation of 0..n: an out-of-range or
+        // duplicated entry would panic deep in the query path
+        // (original_id → tombstone lookups / id mapping) instead of
+        // failing the load
+        let mut seen = vec![false; n];
+        for &p in &perm {
+            match seen.get_mut(p as usize) {
+                Some(s) if !*s => *s = true,
+                _ => {
+                    return Err(invalid(format!(
+                        "perm is not a permutation (entry {p})"
+                    )))
+                }
+            }
+        }
+        let csc = read_csc(r)?;
+        if csc.n_rows != n {
+            return Err(invalid("inverted index rows != n"));
+        }
+        let sparse_index = InvertedIndex::from_csc(csc);
+        let sparse_residual = read_csr(r)?;
+        if sparse_residual.n_rows() != n {
+            return Err(invalid("sparse residual rows != n"));
+        }
+        if sparse_index.n_dims() != sparse_residual.n_cols {
+            return Err(invalid(
+                "inverted index width != sparse residual width",
+            ));
+        }
+        let codebooks = read_codebooks(r)?;
+        let dense_codes = read_lut16(r)?;
+        if dense_codes.n != n || dense_codes.k != codebooks.k {
+            return Err(invalid("lut16 shape disagrees with codebooks/n"));
+        }
+        let row_bytes = r.usize()?;
+        let codes = r.slice_u8()?;
+        let want_rb = if codebooks.l <= 16 {
+            codebooks.k.div_ceil(2)
+        } else {
+            codebooks.k
+        };
+        if row_bytes != want_rb
+            || codes.len()
+                != n.checked_mul(row_bytes)
+                    .ok_or_else(|| invalid("pq codes size overflows"))?
+        {
+            return Err(invalid("pq codes shape disagrees with codebooks"));
+        }
+        let pq_index = PqIndex {
+            codebooks: codebooks.clone(),
+            codes,
+            row_bytes,
+            n,
+            dim: dense_dim,
+        };
+        let dense_residual = match r.u8()? {
+            0 => None,
+            _ => {
+                let s = read_sq_residuals(r)?;
+                if s.dim != dense_dim
+                    || s.codes.len()
+                        != n.checked_mul(s.dim).ok_or_else(|| {
+                            invalid("sq codes size overflows")
+                        })?
+                {
+                    return Err(invalid("sq residual shape != (n, dim)"));
+                }
+                Some(s)
+            }
+        };
+        let whitening = match r.u8()? {
+            0 => None,
+            _ => {
+                let t = read_whitening(r)?;
+                if t.dim != dense_dim {
+                    return Err(invalid("whitening dim != dense dim"));
+                }
+                Some(t)
+            }
+        };
+        Ok(HybridIndex {
+            perm,
+            sparse_index,
+            sparse_residual,
+            dense_codes,
+            codebooks,
+            dense_residual,
+            whitening,
+            pq_index,
+            n,
+            dense_dim,
+            config,
+        })
+    }
+
+    /// Write the index to `path` as a standalone snapshot; returns the
+    /// file size in bytes.
+    pub fn save(&self, path: &Path) -> io::Result<u64> {
+        let mut w = create_file(path, SNAP_HYBRID_INDEX)?;
+        self.write_into(&mut w)?;
+        let bytes = w.bytes_written();
+        w.finish()?;
+        Ok(bytes)
+    }
+
+    /// Load a standalone index snapshot written by [`HybridIndex::save`].
+    pub fn load(path: &Path) -> io::Result<Self> {
+        let mut r = open_file(path, SNAP_HYBRID_INDEX)?;
+        Self::read_from(&mut r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+
+    #[test]
+    fn hybrid_index_file_roundtrip_bit_identical() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(7);
+        let idx = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_whitening(true),
+        );
+        let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("index.snap");
+        let bytes = idx.save(&path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        let back = HybridIndex::load(&path).unwrap();
+        assert_eq!(back.n, idx.n);
+        assert_eq!(back.perm, idx.perm);
+        assert_eq!(back.dense_codes.data, idx.dense_codes.data);
+        for q in &cfg.related_queries(&data, 8, 4) {
+            let a = idx.search(q, 10);
+            let b = back.search(q, 10);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_kind_rejected() {
+        let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("kind.snap");
+        let w = create_file(&path, SNAP_SEGMENT).unwrap();
+        w.finish().unwrap();
+        assert!(open_file(&path, SNAP_HYBRID_INDEX).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_csr_rejected_not_panicking() {
+        // column index out of range must be InvalidData, not a later OOB
+        let mut buf = Vec::new();
+        let mut w = BinWriter::raw(&mut buf);
+        w.slice_u64(&[0, 2]).unwrap();
+        w.slice_u32(&[1, 99]).unwrap(); // 99 >= n_cols
+        w.slice_f32(&[1.0, 2.0]).unwrap();
+        w.usize(4).unwrap();
+        let mut r = BinReader::raw(std::io::Cursor::new(&buf));
+        let err = read_csr(&mut r).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+}

@@ -4,19 +4,34 @@
 //! A [`Segment`] is a sealed, immutable `HybridIndex` over a snapshot of
 //! documents, plus the row→external-id map, a [`Tombstones`] bitmap that
 //! later deletes/upserts punch into it, and a per-segment `BatchEngine`
-//! whose long-lived scratches are sized for exactly this segment. The
-//! segment also retains its raw rows (`data`): the lossy PQ codes cannot
-//! reconstruct them, and a merge must re-train k-means on the *original*
-//! vectors to stay bit-identical with a from-scratch build.
+//! whose long-lived scratches are sized for exactly this segment.
+//!
+//! The segment's *raw rows* (the unquantized source vectors) are managed
+//! through a [`RowStore`]: the lossy PQ codes cannot reconstruct them,
+//! and a merge must re-train k-means on the original vectors to stay
+//! bit-identical with a from-scratch build — but read-only or
+//! merge-never deployments shouldn't pay ~2x resident memory to keep
+//! them. `Memory` retains them in RAM (the default), `Disk` points at
+//! the raw-rows section of a snapshot file and re-reads them only at
+//! merge time, and `Dropped` discards them, turning any later merge into
+//! a loud [`MergeError::RowsDropped`] instead of a silent retrain on
+//! lossy reconstructions.
+
+use std::borrow::Cow;
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::hybrid::batch::{BatchEngine, EngineConfig, ShardMode};
 use crate::hybrid::config::{IndexConfig, SearchParams};
 use crate::hybrid::index::{DenseArtifacts, HybridIndex};
+use crate::hybrid::persist;
 use crate::hybrid::search::SearchHit;
 use crate::types::csr::CsrMatrix;
 use crate::types::dense::DenseMatrix;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
 use crate::types::sparse::SparseVector;
+use crate::util::binio::{BinReader, BinWriter};
 
 /// One document: external id + hybrid payload.
 #[derive(Clone, Debug)]
@@ -24,6 +39,52 @@ pub struct Doc {
     pub id: u32,
     pub sparse: SparseVector,
     pub dense: Vec<f32>,
+}
+
+/// Why a merge (or any raw-row fetch) could not proceed.
+#[derive(Debug)]
+pub enum MergeError {
+    /// The segment was sealed (or loaded) under `RowRetention::Drop`:
+    /// the true vectors no longer exist anywhere, so retraining is
+    /// impossible by construction.
+    RowsDropped,
+    /// Disk-backed rows could not be re-read from the snapshot.
+    Io(io::Error),
+}
+
+impl std::fmt::Display for MergeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MergeError::RowsDropped => write!(
+                f,
+                "raw rows were dropped (RowRetention::Drop); \
+                 merge would retrain on lossy reconstructions"
+            ),
+            MergeError::Io(e) => {
+                write!(f, "failed to re-read raw rows from snapshot: {e}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MergeError {}
+
+impl From<io::Error> for MergeError {
+    fn from(e: io::Error) -> Self {
+        MergeError::Io(e)
+    }
+}
+
+/// Where a segment's raw rows live (see the module docs).
+pub enum RowStore {
+    /// Retained in RAM (rows align with `ids` / `index.original_id`).
+    Memory(HybridDataset),
+    /// Persisted in the raw-rows section of a snapshot file: `len`
+    /// bytes starting at absolute byte `offset`; re-read on demand at
+    /// merge time, raw-copied on re-save.
+    Disk { path: Arc<PathBuf>, offset: u64, len: u64 },
+    /// Discarded: merges are impossible for this segment.
+    Dropped,
 }
 
 /// Per-segment delete bitmap, indexed by the segment's *dataset row* (the
@@ -80,13 +141,46 @@ impl Tombstones {
     pub fn memory_bytes(&self) -> usize {
         self.bits.len() * 8
     }
+
+    /// Serialize as a nested section (`dead` is recomputed on load, not
+    /// trusted).
+    pub fn write_into<W: Write>(
+        &self,
+        w: &mut BinWriter<W>,
+    ) -> io::Result<()> {
+        w.usize(self.n)?;
+        w.slice_u64(&self.bits)
+    }
+
+    pub fn read_from<R: Read>(r: &mut BinReader<R>) -> io::Result<Self> {
+        let n = r.usize()?;
+        let bits = r.slice_u64()?;
+        if bits.len() != n.div_ceil(64) {
+            return Err(persist::invalid("tombstones: bitmap size != n"));
+        }
+        // bits past n must be clear, or dead counts / live() go wrong
+        if n % 64 != 0 {
+            if let Some(&last) = bits.last() {
+                if last >> (n % 64) != 0 {
+                    return Err(persist::invalid(
+                        "tombstones: set bits beyond n",
+                    ));
+                }
+            }
+        }
+        let dead = bits.iter().map(|w| w.count_ones() as usize).sum();
+        if dead > n {
+            return Err(persist::invalid("tombstones: dead > n"));
+        }
+        Ok(Tombstones { bits, dead, n })
+    }
 }
 
 /// A sealed, immutable segment of the mutable index.
 pub struct Segment {
     /// The raw snapshot the segment was sealed from (rows align with
-    /// `ids` and with `index.original_id`); retained for merges.
-    pub data: HybridDataset,
+    /// `ids` and with `index.original_id`); needed for merges.
+    pub rows: RowStore,
     /// Dataset row → external doc id, strictly ascending.
     pub ids: Vec<u32>,
     pub index: HybridIndex,
@@ -98,7 +192,9 @@ impl Segment {
     /// Seal `docs` — sorted by id, ids unique — into a segment. With
     /// `artifacts`, dense rows are encoded against the given codebooks /
     /// whitening (delta segments); without, k-means and whitening are
-    /// (re)trained on `docs` (base build and merges).
+    /// (re)trained on `docs` (base build and merges). Rows are retained
+    /// in memory; callers that opt out of retention follow up with
+    /// [`Segment::drop_rows`] or [`Segment::evict_rows_to`].
     pub fn seal(
         docs: &[Doc],
         sparse_dims: usize,
@@ -124,20 +220,24 @@ impl Segment {
             Some(a) => HybridIndex::build_with(&data, config, a),
             None => HybridIndex::build(&data, config),
         };
-        let engine = BatchEngine::with_config(
-            &index,
-            EngineConfig {
-                threads: engine_threads.max(1),
-                mode: ShardMode::ByQuery,
-            },
-        );
+        let engine = Self::engine_for(&index, engine_threads);
         Segment {
-            data,
+            rows: RowStore::Memory(data),
             ids: docs.iter().map(|d| d.id).collect(),
             index,
             tombstones: Tombstones::new(docs.len()),
             engine,
         }
+    }
+
+    fn engine_for(index: &HybridIndex, engine_threads: usize) -> BatchEngine {
+        BatchEngine::with_config(
+            index,
+            EngineConfig {
+                threads: engine_threads.max(1),
+                mode: ShardMode::ByQuery,
+            },
+        )
     }
 
     /// Total rows sealed into the segment (live + dead).
@@ -159,13 +259,76 @@ impl Segment {
         self.ids.binary_search(&id).ok().map(|r| r as u32)
     }
 
-    /// Reconstruct the raw document at `row` (for merges).
-    pub fn doc(&self, row: usize) -> Doc {
-        Doc {
-            id: self.ids[row],
-            sparse: self.data.sparse.row_vec(row),
-            dense: self.data.dense.row(row).to_vec(),
+    /// True when the raw rows are resident in RAM.
+    pub fn rows_resident(&self) -> bool {
+        matches!(self.rows, RowStore::Memory(_))
+    }
+
+    /// Discard the raw rows (RowRetention::Drop): frees their memory and
+    /// makes any later [`Segment::fetch_rows`] fail loudly.
+    pub fn drop_rows(&mut self) {
+        self.rows = RowStore::Dropped;
+    }
+
+    /// Replace in-memory rows with a pointer into the snapshot file that
+    /// now holds them as a `len`-byte section at `offset`
+    /// (RowRetention::OnDisk, after a save).
+    pub fn evict_rows_to(&mut self, path: Arc<PathBuf>, offset: u64, len: u64) {
+        self.rows = RowStore::Disk { path, offset, len };
+    }
+
+    /// The raw rows: borrowed when resident, re-read from the snapshot
+    /// when disk-backed, an error when dropped.
+    pub fn fetch_rows(&self) -> Result<Cow<'_, HybridDataset>, MergeError> {
+        match &self.rows {
+            RowStore::Memory(d) => Ok(Cow::Borrowed(d)),
+            RowStore::Disk { path, offset, len: _ } => {
+                let mut r = persist::open_file_at(path, *offset)?;
+                let data = persist::read_dataset(&mut r)?;
+                if data.len() != self.ids.len() {
+                    return Err(MergeError::Io(persist::invalid(format!(
+                        "snapshot rows {} != segment rows {}",
+                        data.len(),
+                        self.ids.len()
+                    ))));
+                }
+                Ok(Cow::Owned(data))
+            }
+            RowStore::Dropped => Err(MergeError::RowsDropped),
         }
+    }
+
+    /// Reconstruct the raw document at `row`. Panics unless the rows are
+    /// resident; merge paths use [`Segment::live_docs_into`], which also
+    /// handles disk-backed rows.
+    pub fn doc(&self, row: usize) -> Doc {
+        match &self.rows {
+            RowStore::Memory(data) => Doc {
+                id: self.ids[row],
+                sparse: data.sparse.row_vec(row),
+                dense: data.dense.row(row).to_vec(),
+            },
+            _ => panic!("Segment::doc: raw rows not resident"),
+        }
+    }
+
+    /// Append every live (non-tombstoned) document to `out`, fetching
+    /// the raw rows from wherever they live.
+    pub fn live_docs_into(
+        &self,
+        out: &mut Vec<Doc>,
+    ) -> Result<(), MergeError> {
+        let rows = self.fetch_rows()?;
+        for row in 0..self.ids.len() {
+            if !self.tombstones.get(row as u32) {
+                out.push(Doc {
+                    id: self.ids[row],
+                    sparse: rows.sparse.row_vec(row),
+                    dense: rows.dense.row(row).to_vec(),
+                });
+            }
+        }
+        Ok(())
     }
 
     /// Tombstone-filtered three-stage search; hits carry external ids.
@@ -204,13 +367,139 @@ impl Segment {
             .collect()
     }
 
-    /// Resident bytes: search structures + retained raw rows + bookkeeping.
-    pub fn memory_bytes(&self) -> usize {
+    /// Resident bytes: search structures + bookkeeping + raw rows *if*
+    /// they are held in RAM (the RowRetention knob's measurable effect).
+    pub fn resident_bytes(&self) -> usize {
+        let rows = match &self.rows {
+            RowStore::Memory(data) => {
+                data.sparse.indices.len() * 8 + data.dense.data.len() * 4
+            }
+            _ => 0,
+        };
         self.index.memory_bytes()
-            + self.data.sparse.indices.len() * 8
-            + self.data.dense.data.len() * 4
+            + rows
             + self.ids.len() * 4
             + self.tombstones.memory_bytes()
+    }
+
+    /// Back-compat alias for [`Segment::resident_bytes`].
+    pub fn memory_bytes(&self) -> usize {
+        self.resident_bytes()
+    }
+
+    /// Serialize: ids, tombstones, index, then a length-prefixed
+    /// raw-rows section a loader can skip wholesale. Disk-backed rows
+    /// are raw-copied byte-for-byte so the new snapshot is
+    /// self-contained without decoding them; dropped rows write an
+    /// empty section (the drop is permanent). Returns the raw-rows
+    /// payload's `(offset, len)` within the writer's stream — `(0, 0)`
+    /// when dropped — so a saver can re-point the segment at the new
+    /// file via [`Segment::evict_rows_to`].
+    pub fn write_into<W: Write>(
+        &self,
+        w: &mut BinWriter<W>,
+    ) -> io::Result<(u64, u64)> {
+        w.slice_u32(&self.ids)?;
+        self.tombstones.write_into(w)?;
+        self.index.write_into(w)?;
+        match &self.rows {
+            RowStore::Memory(data) => {
+                w.u8(1)?;
+                // length-prefix computed up front so the section streams
+                // straight to the writer — buffering it would transiently
+                // re-pay the very memory RowRetention exists to shed
+                let len = persist::dataset_wire_len(data);
+                w.u64(len)?;
+                let at = w.bytes_written();
+                persist::write_dataset(w, data)?;
+                debug_assert_eq!(
+                    w.bytes_written() - at,
+                    len,
+                    "dataset_wire_len out of lockstep with write_dataset"
+                );
+                Ok((at, len))
+            }
+            RowStore::Disk { path, offset, len } => {
+                // byte-identical raw copy of the already-encoded section:
+                // decoding it into a HybridDataset would materialize the
+                // exact memory OnDisk retention sheds
+                w.u8(1)?;
+                w.u64(*len)?;
+                let at = w.bytes_written();
+                let mut f = std::fs::File::open(path.as_ref())?;
+                f.seek(SeekFrom::Start(*offset))?;
+                w.copy_from(&mut f, *len)?;
+                Ok((at, *len))
+            }
+            RowStore::Dropped => {
+                w.u8(0)?;
+                w.u64(0)?;
+                Ok((0, 0))
+            }
+        }
+    }
+
+    /// Deserialize a segment written by [`Segment::write_into`].
+    ///
+    /// `keep_rows` decides what happens to the raw-rows section: `true`
+    /// loads it into RAM, `false` skips it. When skipped, `source`
+    /// (the snapshot file being read, if any) turns the section into a
+    /// [`RowStore::Disk`] pointer so merges can still re-read it;
+    /// without a source the rows are treated as dropped.
+    pub fn read_from<R: Read + io::Seek>(
+        r: &mut BinReader<R>,
+        engine_threads: usize,
+        keep_rows: bool,
+        source: Option<&Arc<PathBuf>>,
+    ) -> io::Result<Self> {
+        let ids = r.slice_u32()?;
+        if ids.is_empty() {
+            return Err(persist::invalid("segment: empty id list"));
+        }
+        if ids.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(persist::invalid("segment: ids not ascending"));
+        }
+        let tombstones = Tombstones::read_from(r)?;
+        if tombstones.len() != ids.len() {
+            return Err(persist::invalid("segment: tombstones size != ids"));
+        }
+        let index = HybridIndex::read_from(r)?;
+        if index.n != ids.len() {
+            return Err(persist::invalid("segment: index rows != ids"));
+        }
+        let has_rows = r.u8()? != 0;
+        let section_len = r.u64()?;
+        // `consumed` is now the absolute offset of the rows payload.
+        let payload_at = r.consumed();
+        let rows = if !has_rows {
+            r.skip_seek(section_len)?;
+            RowStore::Dropped
+        } else if keep_rows {
+            let data = persist::read_dataset(r)?;
+            if r.consumed() - payload_at != section_len {
+                return Err(persist::invalid(
+                    "segment: rows section length mismatch",
+                ));
+            }
+            if data.len() != ids.len() {
+                return Err(persist::invalid("segment: rows != ids"));
+            }
+            RowStore::Memory(data)
+        } else {
+            // seek, don't read: for OnDisk/Drop loads this section is
+            // the dominant share of the file
+            r.skip_seek(section_len)?;
+            match source {
+                Some(path) => RowStore::Disk {
+                    path: Arc::clone(path),
+                    offset: payload_at,
+                    len: section_len,
+                },
+                None => RowStore::Dropped,
+            }
+        };
+        let engine = Self::engine_for(&index, engine_threads);
+        Ok(Segment { rows, ids, index, tombstones, engine })
     }
 }
 
@@ -240,6 +529,27 @@ mod tests {
         assert!(t.get(0) && t.get(129) && !t.get(64));
         assert_eq!(t.dead(), 2);
         assert!(t.any());
+    }
+
+    #[test]
+    fn tombstones_roundtrip_and_tail_bit_check() {
+        let mut t = Tombstones::new(70);
+        t.set(3);
+        t.set(69);
+        let mut buf = Vec::new();
+        let mut w = BinWriter::raw(&mut buf);
+        t.write_into(&mut w).unwrap();
+        let mut r = BinReader::raw(std::io::Cursor::new(&buf));
+        let back = Tombstones::read_from(&mut r).unwrap();
+        assert_eq!(back.dead(), 2);
+        assert!(back.get(3) && back.get(69) && !back.get(4));
+        // a set bit beyond n must be rejected
+        let mut bad = Vec::new();
+        let mut w = BinWriter::raw(&mut bad);
+        w.usize(70).unwrap();
+        w.slice_u64(&[0, 1 << 20]).unwrap(); // bit 84 > 70
+        let mut r = BinReader::raw(std::io::Cursor::new(&bad));
+        assert!(Tombstones::read_from(&mut r).is_err());
     }
 
     #[test]
@@ -339,5 +649,30 @@ mod tests {
         );
         let q = cfg.related_queries(&extra, 39, 1).remove(0);
         assert_eq!(delta.search(&q, &SearchParams::new(5)).len(), 5);
+    }
+
+    #[test]
+    fn dropped_rows_shrink_residency_and_block_doc_fetch() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(40);
+        let mut seg = Segment::seal(
+            &docs_from(&data, 0),
+            data.sparse_dim(),
+            &IndexConfig::default(),
+            None,
+            1,
+        );
+        let raw_share =
+            data.sparse.indices.len() * 8 + data.dense.data.len() * 4;
+        let with_rows = seg.resident_bytes();
+        seg.drop_rows();
+        assert_eq!(seg.resident_bytes(), with_rows - raw_share);
+        assert!(matches!(
+            seg.live_docs_into(&mut Vec::new()),
+            Err(MergeError::RowsDropped)
+        ));
+        // search is unaffected: only merges need the raw rows
+        let q = cfg.related_queries(&data, 41, 1).remove(0);
+        assert_eq!(seg.search(&q, &SearchParams::new(5)).len(), 5);
     }
 }

@@ -207,18 +207,78 @@ fn cmd_serve(prog: &str, rest: &[String]) -> i32 {
         .flag("shards", "8", "shard count")
         .flag("queries", "200", "queries to drive")
         .flag("h", "20", "result count")
-        .flag("seed", "5", "seed");
+        .flag("seed", "5", "seed")
+        .flag(
+            "snapshot-dir",
+            "",
+            "restore from this snapshot dir if it has a manifest, else \
+             build + snapshot into it (empty = no persistence)",
+        )
+        .flag(
+            "retention",
+            "memory",
+            "raw-row retention: memory | disk | drop",
+        );
     let args = parse_or_exit(spec, prog, rest);
+    let retention = match args.str_("retention") {
+        "memory" => hybrid_ip::hybrid::RowRetention::InMemory,
+        "disk" => hybrid_ip::hybrid::RowRetention::OnDisk,
+        "drop" => hybrid_ip::hybrid::RowRetention::Drop,
+        other => {
+            eprintln!("unknown --retention '{other}' (memory|disk|drop)");
+            return 2;
+        }
+    };
+    let snapshot_dir = match args.str_("snapshot-dir") {
+        "" => None,
+        d => Some(std::path::PathBuf::from(d)),
+    };
+    let server_cfg = ServerConfig {
+        n_shards: args.usize("shards"),
+        row_retention: retention,
+        snapshot_dir: snapshot_dir.clone(),
+        ..Default::default()
+    };
     let cfg = QuerySimConfig::scaled(args.usize("n"));
     let data = cfg.generate(args.u64("seed"));
     let t = std::time::Instant::now();
-    let server = Server::start(
-        &data,
-        &ServerConfig {
-            n_shards: args.usize("shards"),
-            ..Default::default()
-        },
-    );
+    let has_manifest = snapshot_dir
+        .as_ref()
+        .is_some_and(|d| {
+            d.join(hybrid_ip::coordinator::server::MANIFEST_FILE).exists()
+        });
+    let server = if has_manifest {
+        match Server::restore(&server_cfg) {
+            Ok(s) => {
+                println!(
+                    "restored {} shards ({} docs) from snapshot in {:.1}s",
+                    s.n_shards(),
+                    s.len(),
+                    t.elapsed().as_secs_f64()
+                );
+                s
+            }
+            Err(e) => {
+                eprintln!("restore failed: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let s = Server::start(&data, &server_cfg);
+        if snapshot_dir.is_some() {
+            match s.save_snapshot() {
+                Ok(bytes) => println!(
+                    "snapshot written: {:.1} MB",
+                    bytes as f64 / (1 << 20) as f64
+                ),
+                Err(e) => {
+                    eprintln!("snapshot failed: {e}");
+                    return 1;
+                }
+            }
+        }
+        s
+    };
     println!(
         "started {} shards over {} points in {:.1}s",
         server.n_shards(),

@@ -113,10 +113,21 @@ impl InvertedIndex {
     /// Build from the CSR sparse component (counting-sort transpose).
     pub fn build(sparse: &CsrMatrix) -> Self {
         let csc = sparse.transpose();
+        Self::from_csc(csc)
+    }
+
+    /// Rebuild from an already-transposed CSC view (snapshot load path);
+    /// `dim_nnz` is re-derived, not trusted from the caller.
+    pub fn from_csc(csc: CscMatrix) -> Self {
         let dim_nnz = (0..csc.n_cols())
             .map(|j| (csc.colptr[j + 1] - csc.colptr[j]))
             .collect();
         InvertedIndex { csc, dim_nnz }
+    }
+
+    /// The backing CSC view (for persistence).
+    pub fn csc(&self) -> &CscMatrix {
+        &self.csc
     }
 
     pub fn n_rows(&self) -> usize {

@@ -1,45 +1,82 @@
-//! Versioned little-endian binary (de)serialization for index persistence
-//! (offline substitute for serde/bincode).
+//! Versioned little-endian binary (de)serialization — the on-disk
+//! substrate of the index snapshot format (offline substitute for
+//! serde/bincode).
 //!
-//! Layout: `MAGIC (8) | VERSION (4) | payload`. All integers are LE; slices
-//! are length-prefixed with u64. Used by `hybrid::index` save/load and the
-//! CLI `build`/`search` subcommands.
+//! Layout: `MAGIC (8) | VERSION (4) | kind (1) | payload`. All integers
+//! are LE; slices are length-prefixed with u64. The v3 payloads are
+//! defined by `hybrid::persist` (field-by-field sections for
+//! `HybridIndex`, `Segment`, `MutableHybridIndex`) and the coordinator
+//! snapshot manifest; see `hybrid/persist.rs` for the section order and
+//! ARCHITECTURE.md "Persistence & memory governance" for the layer map.
+//!
+//! Robustness contract (load paths parse untrusted bytes): every length
+//! prefix is validated against the remaining input before any
+//! allocation, `u64 → usize` conversions are checked (32-bit hosts), and
+//! slice reads fill their buffers in bounded chunks so a corrupt prefix
+//! can never trigger a multi-gigabyte allocation before the truncation
+//! is noticed. Malformed input yields `io::ErrorKind::InvalidData` (or
+//! `UnexpectedEof` from the underlying reader), never a panic or abort.
 
-use std::io::{self, Read, Write};
+use std::io::{self, Read, Seek, SeekFrom, Write};
 
 pub const MAGIC: &[u8; 8] = b"HYBIDX01";
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
+
+/// Hard ceiling on any single decoded slice when the total input size is
+/// unknown (raw readers over streams). File-backed readers use the
+/// actual remaining byte count instead, which is always tighter.
+const UNBOUNDED_SLICE_CAP: u64 = 1 << 40;
+
+/// Fill granularity for slice reads: corrupt lengths fail at the first
+/// missing chunk instead of after one huge up-front allocation.
+const READ_CHUNK: usize = 1 << 22; // 4 MiB
 
 pub struct BinWriter<W: Write> {
     w: W,
+    written: u64,
 }
 
 impl<W: Write> BinWriter<W> {
     pub fn new(mut w: W) -> io::Result<Self> {
         w.write_all(MAGIC)?;
         w.write_all(&VERSION.to_le_bytes())?;
-        Ok(BinWriter { w })
+        Ok(BinWriter { w, written: (MAGIC.len() + 4) as u64 })
     }
 
     /// Writer without header (for nested sections).
     pub fn raw(w: W) -> Self {
-        BinWriter { w }
+        BinWriter { w, written: 0 }
+    }
+
+    /// Total bytes written so far (header included for `new`).
+    pub fn bytes_written(&self) -> u64 {
+        self.written
+    }
+
+    fn put(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.w.write_all(bytes)?;
+        self.written += bytes.len() as u64;
+        Ok(())
     }
 
     pub fn u8(&mut self, v: u8) -> io::Result<()> {
-        self.w.write_all(&[v])
+        self.put(&[v])
     }
 
     pub fn u32(&mut self, v: u32) -> io::Result<()> {
-        self.w.write_all(&v.to_le_bytes())
+        self.put(&v.to_le_bytes())
     }
 
     pub fn u64(&mut self, v: u64) -> io::Result<()> {
-        self.w.write_all(&v.to_le_bytes())
+        self.put(&v.to_le_bytes())
     }
 
     pub fn f32(&mut self, v: f32) -> io::Result<()> {
-        self.w.write_all(&v.to_le_bytes())
+        self.put(&v.to_le_bytes())
+    }
+
+    pub fn f64(&mut self, v: f64) -> io::Result<()> {
+        self.put(&v.to_le_bytes())
     }
 
     pub fn usize(&mut self, v: usize) -> io::Result<()> {
@@ -48,12 +85,12 @@ impl<W: Write> BinWriter<W> {
 
     pub fn str_(&mut self, s: &str) -> io::Result<()> {
         self.usize(s.len())?;
-        self.w.write_all(s.as_bytes())
+        self.put(s.as_bytes())
     }
 
     pub fn slice_u8(&mut self, v: &[u8]) -> io::Result<()> {
         self.usize(v.len())?;
-        self.w.write_all(v)
+        self.put(v)
     }
 
     pub fn slice_u32(&mut self, v: &[u32]) -> io::Result<()> {
@@ -61,6 +98,7 @@ impl<W: Write> BinWriter<W> {
         for x in v {
             self.w.write_all(&x.to_le_bytes())?;
         }
+        self.written += v.len() as u64 * 4;
         Ok(())
     }
 
@@ -69,6 +107,7 @@ impl<W: Write> BinWriter<W> {
         for x in v {
             self.w.write_all(&x.to_le_bytes())?;
         }
+        self.written += v.len() as u64 * 8;
         Ok(())
     }
 
@@ -78,7 +117,30 @@ impl<W: Write> BinWriter<W> {
         let bytes = unsafe {
             std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
         };
-        self.w.write_all(bytes)
+        self.put(bytes)
+    }
+
+    pub fn slice_f64(&mut self, v: &[f64]) -> io::Result<()> {
+        self.usize(v.len())?;
+        let bytes = unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8)
+        };
+        self.put(bytes)
+    }
+
+    /// Stream exactly `n` raw bytes from `r` into the output — for
+    /// copying an already-encoded section (e.g. a snapshot's raw-rows
+    /// payload) without decoding it. The caller owns the framing.
+    pub fn copy_from<R: Read>(&mut self, r: &mut R, n: u64) -> io::Result<()> {
+        let copied = io::copy(&mut r.take(n), &mut self.w)?;
+        if copied != n {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("raw section copy: got {copied} of {n} bytes"),
+            ));
+        }
+        self.written += n;
+        Ok(())
     }
 
     pub fn finish(mut self) -> io::Result<W> {
@@ -87,95 +149,210 @@ impl<W: Write> BinWriter<W> {
     }
 }
 
+fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
 pub struct BinReader<R: Read> {
     r: R,
+    /// Bytes the input is known to still hold, when the caller told us
+    /// the total size (file loads). `None` = unknown (raw streams).
+    remaining: Option<u64>,
+    /// Bytes consumed so far (header included for `new`/`with_limit`) —
+    /// lets callers record absolute section offsets for later seeks.
+    consumed: u64,
 }
 
 impl<R: Read> BinReader<R> {
-    pub fn new(mut r: R) -> io::Result<Self> {
+    pub fn new(r: R) -> io::Result<Self> {
+        Self::open(r, None)
+    }
+
+    /// Reader that knows the input's total byte length; every length
+    /// prefix is validated against the bytes actually left, so corrupt
+    /// headers fail fast instead of allocating.
+    pub fn with_limit(r: R, total_bytes: u64) -> io::Result<Self> {
+        Self::open(r, Some(total_bytes))
+    }
+
+    fn open(r: R, total: Option<u64>) -> io::Result<Self> {
+        let header = (MAGIC.len() + 4) as u64;
+        if let Some(t) = total {
+            if t < header {
+                return Err(invalid("input shorter than the header"));
+            }
+        }
+        let mut rd = BinReader {
+            r,
+            remaining: total.map(|t| t - header),
+            consumed: 0,
+        };
+        // Temporarily lift the limit so the header itself reads cleanly.
         let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
+        rd.r.read_exact(&mut magic)?;
         if &magic != MAGIC {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                "bad magic: not a hybrid-ip index file",
-            ));
+            return Err(invalid("bad magic: not a hybrid-ip index file"));
         }
         let mut ver = [0u8; 4];
-        r.read_exact(&mut ver)?;
+        rd.r.read_exact(&mut ver)?;
         let version = u32::from_le_bytes(ver);
         if version != VERSION {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!("index version {version} != supported {VERSION}"),
-            ));
+            return Err(invalid(format!(
+                "index version {version} != supported {VERSION}"
+            )));
         }
-        Ok(BinReader { r })
+        rd.consumed = header;
+        Ok(rd)
     }
 
     pub fn raw(r: R) -> Self {
-        BinReader { r }
+        BinReader { r, remaining: None, consumed: 0 }
+    }
+
+    /// Raw reader with a known byte budget (nested sections of known
+    /// length).
+    pub fn raw_with_limit(r: R, total_bytes: u64) -> Self {
+        BinReader { r, remaining: Some(total_bytes), consumed: 0 }
+    }
+
+    /// Bytes consumed so far (absolute offset into the input for `new`
+    /// and `with_limit`).
+    pub fn consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    fn fill(&mut self, buf: &mut [u8]) -> io::Result<()> {
+        let n = buf.len() as u64;
+        if let Some(rem) = self.remaining {
+            if n > rem {
+                return Err(invalid(format!(
+                    "truncated input: need {n} bytes, {rem} remain"
+                )));
+            }
+        }
+        self.r.read_exact(buf)?;
+        self.consumed += n;
+        if let Some(rem) = &mut self.remaining {
+            *rem -= n;
+        }
+        Ok(())
+    }
+
+    /// Discard exactly `n` bytes by reading them (works on any `Read`;
+    /// seekable inputs should prefer [`BinReader::skip_seek`]).
+    pub fn skip(&mut self, n: u64) -> io::Result<()> {
+        if let Some(rem) = self.remaining {
+            if n > rem {
+                return Err(invalid(format!(
+                    "truncated input: cannot skip {n} bytes, {rem} remain"
+                )));
+            }
+        }
+        let copied = io::copy(&mut self.r.by_ref().take(n), &mut io::sink())?;
+        if copied != n {
+            return Err(invalid(format!(
+                "truncated input: skipped {copied} of {n} bytes"
+            )));
+        }
+        self.note_skipped(n);
+        Ok(())
+    }
+
+    /// Bookkeeping shared by both skip flavours.
+    fn note_skipped(&mut self, n: u64) {
+        self.consumed += n;
+        if let Some(rem) = &mut self.remaining {
+            *rem -= n;
+        }
     }
 
     pub fn u8(&mut self) -> io::Result<u8> {
         let mut b = [0u8; 1];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(b[0])
     }
 
     pub fn u32(&mut self) -> io::Result<u32> {
         let mut b = [0u8; 4];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(u32::from_le_bytes(b))
     }
 
     pub fn u64(&mut self) -> io::Result<u64> {
         let mut b = [0u8; 8];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(u64::from_le_bytes(b))
     }
 
     pub fn f32(&mut self) -> io::Result<f32> {
         let mut b = [0u8; 4];
-        self.r.read_exact(&mut b)?;
+        self.fill(&mut b)?;
         Ok(f32::from_le_bytes(b))
     }
 
+    pub fn f64(&mut self) -> io::Result<f64> {
+        let mut b = [0u8; 8];
+        self.fill(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    /// Checked u64 → usize (a 64-bit length prefix must not silently
+    /// truncate on 32-bit hosts).
     pub fn usize(&mut self) -> io::Result<usize> {
-        Ok(self.u64()? as usize)
+        let v = self.u64()?;
+        usize::try_from(v)
+            .map_err(|_| invalid(format!("length {v} overflows usize")))
     }
 
-    fn len_checked(&mut self, elem: usize) -> io::Result<usize> {
+    /// Read and validate a slice length prefix for elements of `elem`
+    /// bytes: the implied byte count must fit the remaining input (when
+    /// known) or an absolute ceiling (when not), *and* fit a usize —
+    /// the byte count is computed in u64 and converted checked, so a
+    /// 32-bit host can never wrap `n * elem`. Returns (elements, bytes).
+    fn len_checked(&mut self, elem: usize) -> io::Result<(usize, usize)> {
         let n = self.usize()?;
-        // Guard against corrupt headers allocating petabytes.
-        if n.saturating_mul(elem) > (1 << 40) {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!("implausible slice length {n}"),
-            ));
+        let bytes64 = (n as u64)
+            .checked_mul(elem as u64)
+            .ok_or_else(|| invalid(format!("slice length {n} overflows")))?;
+        let cap = self.remaining.unwrap_or(UNBOUNDED_SLICE_CAP);
+        if bytes64 > cap {
+            return Err(invalid(format!(
+                "implausible slice length {n} ({bytes64} bytes > {cap} available)"
+            )));
         }
-        Ok(n)
+        let bytes = usize::try_from(bytes64).map_err(|_| {
+            invalid(format!("slice byte count {bytes64} overflows usize"))
+        })?;
+        Ok((n, bytes))
     }
 
-    pub fn str_(&mut self) -> io::Result<String> {
-        let n = self.len_checked(1)?;
-        let mut buf = vec![0u8; n];
-        self.r.read_exact(&mut buf)?;
-        String::from_utf8(buf)
-            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
-    }
-
-    pub fn slice_u8(&mut self) -> io::Result<Vec<u8>> {
-        let n = self.len_checked(1)?;
-        let mut buf = vec![0u8; n];
-        self.r.read_exact(&mut buf)?;
+    /// Read exactly `n` bytes, growing the buffer chunk-by-chunk so a
+    /// lying length prefix fails at the first missing chunk.
+    fn read_bytes(&mut self, n: usize) -> io::Result<Vec<u8>> {
+        let mut buf = Vec::with_capacity(n.min(READ_CHUNK));
+        while buf.len() < n {
+            let take = (n - buf.len()).min(READ_CHUNK);
+            let old = buf.len();
+            buf.resize(old + take, 0);
+            self.fill(&mut buf[old..])?;
+        }
         Ok(buf)
     }
 
+    pub fn str_(&mut self) -> io::Result<String> {
+        let (_, bytes) = self.len_checked(1)?;
+        let buf = self.read_bytes(bytes)?;
+        String::from_utf8(buf).map_err(|e| invalid(e.to_string()))
+    }
+
+    pub fn slice_u8(&mut self) -> io::Result<Vec<u8>> {
+        let (_, bytes) = self.len_checked(1)?;
+        self.read_bytes(bytes)
+    }
+
     pub fn slice_u32(&mut self) -> io::Result<Vec<u32>> {
-        let n = self.len_checked(4)?;
-        let mut buf = vec![0u8; n * 4];
-        self.r.read_exact(&mut buf)?;
+        let (_, bytes) = self.len_checked(4)?;
+        let buf = self.read_bytes(bytes)?;
         Ok(buf
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
@@ -183,9 +360,8 @@ impl<R: Read> BinReader<R> {
     }
 
     pub fn slice_u64(&mut self) -> io::Result<Vec<u64>> {
-        let n = self.len_checked(8)?;
-        let mut buf = vec![0u8; n * 8];
-        self.r.read_exact(&mut buf)?;
+        let (_, bytes) = self.len_checked(8)?;
+        let buf = self.read_bytes(bytes)?;
         Ok(buf
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
@@ -193,13 +369,42 @@ impl<R: Read> BinReader<R> {
     }
 
     pub fn slice_f32(&mut self) -> io::Result<Vec<f32>> {
-        let n = self.len_checked(4)?;
-        let mut buf = vec![0u8; n * 4];
-        self.r.read_exact(&mut buf)?;
+        let (_, bytes) = self.len_checked(4)?;
+        let buf = self.read_bytes(bytes)?;
         Ok(buf
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
+    }
+
+    pub fn slice_f64(&mut self) -> io::Result<Vec<f64>> {
+        let (_, bytes) = self.len_checked(8)?;
+        let buf = self.read_bytes(bytes)?;
+        Ok(buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+impl<R: Read + Seek> BinReader<R> {
+    /// O(1) skip for seekable inputs: jump over a section (e.g. the raw
+    /// rows a `RowRetention::OnDisk`/`Drop` load leaves on disk) without
+    /// reading it. The size guard requires a known limit or a sane `n`;
+    /// seeking past EOF would otherwise succeed silently.
+    pub fn skip_seek(&mut self, n: u64) -> io::Result<()> {
+        if let Some(rem) = self.remaining {
+            if n > rem {
+                return Err(invalid(format!(
+                    "truncated input: cannot skip {n} bytes, {rem} remain"
+                )));
+            }
+        } else if n > i64::MAX as u64 {
+            return Err(invalid(format!("implausible skip of {n} bytes")));
+        }
+        self.r.seek(SeekFrom::Current(n as i64))?;
+        self.note_skipped(n);
+        Ok(())
     }
 }
 
@@ -217,9 +422,11 @@ mod tests {
             w.u32(0xDEAD_BEEF).unwrap();
             w.u64(u64::MAX).unwrap();
             w.f32(-1.5).unwrap();
+            w.f64(std::f64::consts::PI).unwrap();
             w.str_("héllo").unwrap();
             w.slice_u32(&[1, 2, 3]).unwrap();
             w.slice_f32(&[0.1, -0.2, f32::MAX]).unwrap();
+            w.slice_f64(&[1e300, -2.5]).unwrap();
             w.slice_u8(&[9, 8]).unwrap();
             w.finish().unwrap();
         }
@@ -228,15 +435,58 @@ mod tests {
         assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
         assert_eq!(r.u64().unwrap(), u64::MAX);
         assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
         assert_eq!(r.str_().unwrap(), "héllo");
         assert_eq!(r.slice_u32().unwrap(), vec![1, 2, 3]);
         assert_eq!(r.slice_f32().unwrap(), vec![0.1, -0.2, f32::MAX]);
+        assert_eq!(r.slice_f64().unwrap(), vec![1e300, -2.5]);
         assert_eq!(r.slice_u8().unwrap(), vec![9, 8]);
     }
 
     #[test]
+    fn written_matches_consumed() {
+        let mut buf = Vec::new();
+        let mut w = BinWriter::new(&mut buf).unwrap();
+        w.u8(1).unwrap();
+        w.slice_u32(&[5, 6]).unwrap();
+        w.str_("ab").unwrap();
+        let total = w.bytes_written();
+        w.finish().unwrap();
+        assert_eq!(total, buf.len() as u64);
+        let mut r =
+            BinReader::with_limit(Cursor::new(&buf), buf.len() as u64)
+                .unwrap();
+        r.u8().unwrap();
+        r.slice_u32().unwrap();
+        r.str_().unwrap();
+        assert_eq!(r.consumed(), total);
+    }
+
+    #[test]
+    fn skip_jumps_over_sections() {
+        let mut buf = Vec::new();
+        let mut w = BinWriter::new(&mut buf).unwrap();
+        w.slice_f32(&[1.0, 2.0, 3.0]).unwrap();
+        w.u32(77).unwrap();
+        w.finish().unwrap();
+        let mut r = BinReader::new(Cursor::new(&buf)).unwrap();
+        // slice section = 8-byte length + 3 * 4 bytes payload
+        r.skip(8 + 12).unwrap();
+        assert_eq!(r.u32().unwrap(), 77);
+        // skipping past the end is an error, not a silent short read
+        assert!(r.skip(1).is_err());
+        // seek-based skip lands in the same place
+        let mut r =
+            BinReader::with_limit(Cursor::new(&buf), buf.len() as u64)
+                .unwrap();
+        r.skip_seek(8 + 12).unwrap();
+        assert_eq!(r.u32().unwrap(), 77);
+        assert!(r.skip_seek(1).is_err(), "past-EOF seek skip rejected");
+    }
+
+    #[test]
     fn rejects_bad_magic() {
-        let buf = b"NOTMAGIC\x01\x00\x00\x00".to_vec();
+        let buf = b"NOTMAGIC\x03\x00\x00\x00".to_vec();
         assert!(BinReader::new(Cursor::new(&buf)).is_err());
     }
 
@@ -256,6 +506,12 @@ mod tests {
         buf.truncate(buf.len() - 4);
         let mut r = BinReader::new(Cursor::new(&buf)).unwrap();
         assert!(r.slice_u32().is_err());
+        // and with the size known, the length check itself trips
+        let mut r =
+            BinReader::with_limit(Cursor::new(&buf), buf.len() as u64)
+                .unwrap();
+        let err = r.slice_u32().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
     }
 
     #[test]
@@ -265,5 +521,24 @@ mod tests {
         buf.extend_from_slice(&u64::MAX.to_le_bytes());
         let mut r = BinReader::new(Cursor::new(&buf)).unwrap();
         assert!(r.slice_f32().is_err());
+    }
+
+    #[test]
+    fn sized_reader_rejects_lying_length_before_allocating() {
+        // length prefix claims 1 GiB of f32s but the input holds 12 bytes
+        let mut buf = MAGIC.to_vec();
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(1u64 << 28).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 12]);
+        let mut r =
+            BinReader::with_limit(Cursor::new(&buf), buf.len() as u64)
+                .unwrap();
+        let err = r.slice_f32().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn sized_reader_rejects_short_input() {
+        assert!(BinReader::with_limit(Cursor::new(b"HY"), 2).is_err());
     }
 }

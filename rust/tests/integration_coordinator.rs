@@ -176,7 +176,7 @@ fn cluster_mutates_online_while_serving() {
     assert_eq!(server.len(), n);
 
     // 4. flush barrier: buffers seal, count survives, recall intact
-    assert_eq!(server.flush(), n);
+    assert_eq!(server.flush().expect("cluster flush"), n);
     let mut recall = 0.0;
     for q in &queries {
         let got: Vec<u32> =

@@ -75,7 +75,7 @@ fn upserts_then_merge_match_static_rebuild() {
     assert_eq!(mutable.n_segments(), 2, "base + sealed delta");
     // pre-merge sanity: the delta rows are searchable
     assert!(mutable.contains(450));
-    mutable.merge();
+    mutable.merge().expect("merge with retained rows");
     assert_eq!(mutable.n_segments(), 1);
     assert_eq!(mutable.len(), 500);
 
@@ -103,7 +103,7 @@ fn deletes_then_merge_match_static_rebuild() {
     for id in 400..500u32 {
         assert!(mutable.delete(id));
     }
-    mutable.merge();
+    mutable.merge().expect("merge with retained rows");
     assert_eq!(mutable.len(), 400);
 
     let static_idx = HybridIndex::build(
@@ -135,7 +135,7 @@ fn upsert_replacements_then_merge_match_static_rebuild() {
         assert!(mutable.upsert(i as u32, s, d), "replacement reported");
     }
     assert_eq!(mutable.len(), 400, "replacement must not grow the corpus");
-    mutable.merge();
+    mutable.merge().expect("merge with retained rows");
 
     // the logical corpus: rows 0..50 replaced, 50..400 original
     let modified = {
@@ -228,7 +228,7 @@ fn tombstoned_ids_never_surface_in_any_state() {
         check(&mutable, &deleted, &format!("round {round}"));
         match round {
             0 => mutable.flush(),
-            1 => mutable.merge(),
+            1 => mutable.merge().expect("merge with retained rows"),
             _ => {}
         }
         check(&mutable, &deleted, &format!("round {round} after compaction"));
@@ -304,9 +304,12 @@ fn background_merge_reconciles_racing_mutations() {
     }
     mutable.flush();
 
-    assert!(mutable.start_background_merge());
+    assert!(mutable.start_background_merge().expect("bg merge"));
     assert!(mutable.is_merging());
-    assert!(!mutable.start_background_merge(), "no concurrent merges");
+    assert!(
+        !mutable.start_background_merge().expect("bg merge"),
+        "no concurrent merges"
+    );
     // race the merge: delete snapshot ids, replace others, insert fresh
     for id in 0..20u32 {
         assert!(mutable.delete(id));
@@ -337,7 +340,7 @@ fn background_merge_reconciles_racing_mutations() {
 
     // after a final full merge, state is bit-identical to a static build
     // of the model corpus
-    mutable.merge();
+    mutable.merge().expect("merge with retained rows");
     let mut ids: Vec<u32> = model.keys().copied().collect();
     ids.sort_unstable();
     let logical = {
@@ -372,6 +375,50 @@ fn background_merge_reconciles_racing_mutations() {
 }
 
 #[test]
+fn pure_upsert_growth_compacts_via_absolute_floor() {
+    // Regression: an index grown purely from upserts (empty `new()` +
+    // upserts, buffer never reaching delta_seal_rows) used to report
+    // needs_merge() == false forever — no base segment meant no
+    // threshold — so it served brute-force from the buffer no matter
+    // how large it grew. The absolute `merge_floor_rows` floor now
+    // compacts it into a k-means-trained base.
+    let cfg = tiny(80);
+    let data = cfg.generate(91);
+    let queries = cfg.related_queries(&data, 92, 6);
+    let params = SearchParams::new(10);
+    let mut mutable = MutableHybridIndex::new(
+        data.sparse_dim(),
+        data.dense_dim(),
+        MutableConfig {
+            delta_seal_rows: 10_000, // never auto-seals
+            merge_floor_rows: 60,
+            ..Default::default()
+        },
+    );
+    for i in 0..80 {
+        let (s, d) = payload(&data, i);
+        mutable.upsert(i as u32, s, d);
+    }
+    assert_eq!(mutable.n_segments(), 0, "nothing sealed yet");
+    assert!(
+        mutable.needs_merge(),
+        "80 buffered rows must cross the 60-row floor with no base"
+    );
+    mutable.maybe_merge().expect("merge with retained rows");
+    assert_eq!(mutable.n_segments(), 1, "compacted into a trained base");
+    assert_eq!(mutable.buffered_rows(), 0);
+    assert!(!mutable.needs_merge());
+
+    // and the compacted state is bit-identical to a static build
+    let static_idx = HybridIndex::build(&data, &IndexConfig::default());
+    for (qi, q) in queries.iter().enumerate() {
+        let got = mutable.search(q, &params);
+        let want = search(&static_idx, q, &params);
+        assert_hits_identical(&got, &want, &format!("floor, query {qi}"));
+    }
+}
+
+#[test]
 fn queries_against_empty_and_tiny_states() {
     let cfg = QuerySimConfig::tiny();
     let data = cfg.generate(71);
@@ -392,6 +439,6 @@ fn queries_against_empty_and_tiny_states() {
     assert_eq!(hits[0].score.to_bits(), exact.to_bits());
     idx.flush();
     assert_eq!(idx.search(&q, &params).len(), 1);
-    idx.merge();
+    idx.merge().expect("merge with retained rows");
     assert_eq!(idx.search(&q, &params).len(), 1);
 }

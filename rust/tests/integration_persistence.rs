@@ -1,0 +1,471 @@
+//! Integration: durable index snapshots + the raw-row retention knob.
+//!
+//! The load-bearing claim is *bit-identical restore*: a
+//! `MutableHybridIndex` in an arbitrary state (base + delta segments +
+//! non-empty write buffer + tombstones in all three tiers) that is
+//! snapshotted and restored returns byte-for-byte identical `(id,
+//! score)` lists for a query battery, in both sequential and batch
+//! engine modes — no k-means retraining, no re-sealing, no f32 drift.
+//! On top of that: `RowRetention::Drop` sheds exactly the raw-row share
+//! of resident memory and turns merges into loud errors instead of
+//! silent retrains on lossy reconstructions; `RowRetention::OnDisk`
+//! sheds the same bytes while keeping merges possible by re-reading the
+//! snapshot; corrupt snapshot files fail with clean errors; and the
+//! whole coordinator (shards + router + manifest) round-trips through
+//! `Server::save_snapshot` / `Server::restore`.
+
+use std::path::PathBuf;
+
+use hybrid_ip::coordinator::server::MANIFEST_FILE;
+use hybrid_ip::coordinator::{Server, ServerConfig};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::hybrid::config::SearchParams;
+use hybrid_ip::hybrid::mutable::{
+    MutableConfig, MutableHybridIndex, RowRetention,
+};
+use hybrid_ip::hybrid::search::SearchHit;
+use hybrid_ip::hybrid::segment::MergeError;
+use hybrid_ip::types::hybrid::{HybridDataset, HybridQuery};
+use hybrid_ip::types::sparse::SparseVector;
+
+fn tiny(n: usize) -> QuerySimConfig {
+    let mut cfg = QuerySimConfig::tiny();
+    cfg.n = n;
+    cfg
+}
+
+fn payload(data: &HybridDataset, i: usize) -> (SparseVector, Vec<f32>) {
+    (data.sparse.row_vec(i), data.dense.row(i).to_vec())
+}
+
+fn subset(data: &HybridDataset, rows: std::ops::Range<usize>) -> HybridDataset {
+    let sparse_rows: Vec<SparseVector> =
+        rows.clone().map(|i| data.sparse.row_vec(i)).collect();
+    let sparse = hybrid_ip::types::csr::CsrMatrix::from_rows(
+        &sparse_rows,
+        data.sparse_dim(),
+    );
+    let mut dense = hybrid_ip::types::dense::DenseMatrix::zeros(
+        rows.len(),
+        data.dense_dim(),
+    );
+    for (new_i, i) in rows.enumerate() {
+        dense.row_mut(new_i).copy_from_slice(data.dense.row(i));
+    }
+    HybridDataset::new(sparse, dense)
+}
+
+fn assert_hits_identical(a: &[SearchHit], b: &[SearchHit], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{ctx}: id diverged");
+        assert_eq!(
+            x.score.to_bits(),
+            y.score.to_bits(),
+            "{ctx}: score bits diverged for id {}",
+            x.id
+        );
+    }
+}
+
+/// Fresh per-test snapshot directory under the system temp dir.
+fn snapshot_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("hybrid_ip_snap_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The acceptance-state fixture: sealed base (rows 0..300), sealed delta
+/// (300..400), live buffer (400..450), tombstones punched into all
+/// three tiers.
+fn segmented_state(
+    data: &HybridDataset,
+    retention: RowRetention,
+) -> MutableHybridIndex {
+    let mut idx = MutableHybridIndex::from_dataset(
+        &subset(data, 0..300),
+        0,
+        MutableConfig {
+            delta_seal_rows: 100,
+            row_retention: retention,
+            ..Default::default()
+        },
+    );
+    for i in 300..450 {
+        let (s, d) = payload(data, i);
+        idx.upsert(i as u32, s, d);
+    }
+    assert_eq!(idx.n_segments(), 2, "base + one sealed delta");
+    assert_eq!(idx.buffered_rows(), 50);
+    for id in [5u32, 17, 123, 299, 310, 377, 405, 449] {
+        assert!(idx.delete(id));
+    }
+    idx
+}
+
+/// Raw-row share of the fixture's *sealed* rows (0..400): what the
+/// retention knob is supposed to shed. Buffer rows are unsealed and
+/// always resident.
+fn sealed_raw_share(data: &HybridDataset) -> usize {
+    let nnz: usize = (0..400).map(|i| data.sparse.row(i).0.len()).sum();
+    nnz * 8 + 400 * data.dense_dim() * 4
+}
+
+#[test]
+fn mutable_roundtrip_bit_identical_sequential_and_batch() {
+    let cfg = tiny(450);
+    let data = cfg.generate(101);
+    let queries = cfg.related_queries(&data, 102, 10);
+    let params = SearchParams::new(10).with_alpha(20.0).with_beta(8.0);
+    let mut idx = segmented_state(&data, RowRetention::InMemory);
+
+    let dir = snapshot_dir("roundtrip");
+    let path = dir.join("index.snap");
+    let bytes = idx.save(&path).unwrap();
+    assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+    assert!(bytes > 0);
+
+    let restored = MutableHybridIndex::load(
+        &path,
+        MutableConfig {
+            delta_seal_rows: 100,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(restored.len(), idx.len());
+    assert_eq!(restored.n_segments(), idx.n_segments());
+    assert_eq!(restored.buffered_rows(), idx.buffered_rows());
+    assert_eq!(restored.memory_bytes(), idx.memory_bytes());
+    assert!(restored.contains(303) && !restored.contains(5));
+
+    // sequential battery: bit-identical
+    for (qi, q) in queries.iter().enumerate() {
+        let got = restored.search(q, &params);
+        let want = idx.search(q, &params);
+        assert_hits_identical(&got, &want, &format!("seq, query {qi}"));
+    }
+    // batch battery: bit-identical (and itself equal to sequential)
+    let got_b = restored.search_batch(&queries, &params);
+    let want_b = idx.search_batch(&queries, &params);
+    for (qi, (g, w)) in got_b.iter().zip(&want_b).enumerate() {
+        assert_hits_identical(g, w, &format!("batch, query {qi}"));
+    }
+
+    // divergence check after restore: identical mutations keep the two
+    // states identical (same base artifacts, same seal behaviour)
+    let mut idx = idx;
+    let mut restored = restored;
+    let (s, d) = payload(&data, 7);
+    idx.upsert(1000, s.clone(), d.clone());
+    restored.upsert(1000, s, d);
+    idx.flush();
+    restored.flush();
+    for (qi, q) in queries.iter().enumerate() {
+        assert_hits_identical(
+            &restored.search(q, &params),
+            &idx.search(q, &params),
+            &format!("post-restore mutation, query {qi}"),
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn drop_retention_sheds_raw_rows_and_rejects_merge() {
+    let cfg = tiny(450);
+    let data = cfg.generate(103);
+    let queries = cfg.related_queries(&data, 104, 6);
+    let params = SearchParams::new(10);
+    let mut idx = segmented_state(&data, RowRetention::InMemory);
+
+    let dir = snapshot_dir("dropret");
+    let path = dir.join("index.snap");
+    idx.save(&path).unwrap();
+
+    let full = MutableHybridIndex::load(
+        &path,
+        MutableConfig { delta_seal_rows: 100, ..Default::default() },
+    )
+    .unwrap();
+    let lean = MutableHybridIndex::load(
+        &path,
+        MutableConfig {
+            delta_seal_rows: 100,
+            row_retention: RowRetention::Drop,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // residency shrinks by exactly the sealed raw-row share
+    assert_eq!(
+        full.memory_bytes() - lean.memory_bytes(),
+        sealed_raw_share(&data),
+        "Drop must shed exactly the sealed raw rows"
+    );
+    // serving is unaffected, bit for bit
+    for (qi, q) in queries.iter().enumerate() {
+        assert_hits_identical(
+            &lean.search(q, &params),
+            &full.search(q, &params),
+            &format!("drop-vs-full, query {qi}"),
+        );
+    }
+    // a merge is rejected, not silently wrong
+    let mut lean = lean;
+    assert!(!lean.needs_merge(), "Drop never asks for a merge");
+    assert!(matches!(lean.merge(), Err(MergeError::RowsDropped)));
+    assert!(matches!(
+        lean.start_background_merge(),
+        Err(MergeError::RowsDropped)
+    ));
+    // ...and the index still serves after the rejection
+    assert_eq!(lean.search(&queries[0], &params).len(), params.h);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ondisk_retention_sheds_rows_but_merges_from_snapshot() {
+    let cfg = tiny(450);
+    let data = cfg.generate(105);
+    let queries = cfg.related_queries(&data, 106, 6);
+    let params = SearchParams::new(10).with_alpha(20.0);
+    let mut idx = segmented_state(&data, RowRetention::InMemory);
+
+    let dir = snapshot_dir("ondisk");
+    let path = dir.join("index.snap");
+    idx.save(&path).unwrap();
+
+    let mut ondisk = MutableHybridIndex::load(
+        &path,
+        MutableConfig {
+            delta_seal_rows: 100,
+            row_retention: RowRetention::OnDisk,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // sheds the same bytes as Drop...
+    assert_eq!(
+        idx.memory_bytes() - ondisk.memory_bytes(),
+        sealed_raw_share(&data)
+    );
+    // ...but a merge works: raw rows come back from the snapshot, and
+    // the merged index is bit-identical to merging the fully-resident
+    // twin of the same state.
+    ondisk.merge().expect("merge re-reads rows from the snapshot");
+    idx.merge().expect("in-memory merge");
+    assert_eq!(ondisk.n_segments(), 1);
+    assert_eq!(ondisk.len(), idx.len());
+    for (qi, q) in queries.iter().enumerate() {
+        assert_hits_identical(
+            &ondisk.search(q, &params),
+            &idx.search(q, &params),
+            &format!("ondisk-merge, query {qi}"),
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn save_under_ondisk_evicts_resident_rows() {
+    let cfg = tiny(450);
+    let data = cfg.generate(107);
+    // Sealed under OnDisk: rows stay resident until the first save...
+    let mut idx = segmented_state(&data, RowRetention::OnDisk);
+    let resident_before = idx.memory_bytes();
+
+    let dir = snapshot_dir("evict");
+    let path = dir.join("index.snap");
+    idx.save(&path).unwrap();
+    // ...which sheds them without a restart.
+    assert_eq!(
+        resident_before - idx.memory_bytes(),
+        sealed_raw_share(&data),
+        "save must evict sealed raw rows under OnDisk"
+    );
+    // merging after eviction re-reads the file this save just wrote
+    idx.merge().expect("merge from freshly-written snapshot");
+    assert_eq!(idx.n_segments(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_snapshots_fail_with_clean_errors() {
+    let cfg = tiny(450);
+    let data = cfg.generate(109);
+    let mut idx = segmented_state(&data, RowRetention::InMemory);
+    let dir = snapshot_dir("corrupt");
+    let path = dir.join("index.snap");
+    idx.save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let load = |bytes: &[u8]| {
+        let p = dir.join("corrupt.snap");
+        std::fs::write(&p, bytes).unwrap();
+        MutableHybridIndex::load(&p, MutableConfig::default())
+    };
+
+    // truncations at several depths: always Err, never a panic or an
+    // absurd allocation
+    for eighths in [0usize, 1, 3, 5, 7] {
+        let cut = (good.len() * eighths / 8).min(good.len() - 1);
+        assert!(
+            load(&good[..cut]).is_err(),
+            "truncation at {cut}/{} must fail",
+            good.len()
+        );
+    }
+    // bad magic
+    let mut bad = good.clone();
+    bad[0] ^= 0xFF;
+    assert!(load(&bad).is_err());
+    // wrong version
+    let mut bad = good.clone();
+    bad[8] = 0xEE;
+    assert!(load(&bad).is_err());
+    // wrong kind byte
+    let mut bad = good.clone();
+    bad[12] = 0x7F;
+    assert!(load(&bad).is_err());
+    // a lying length prefix deep in the payload: flip the first segment
+    // count field to something enormous
+    let mut bad = good.clone();
+    // payload starts at 13: sparse_dims(8) dense_dims(8) serial(8) then
+    // segment count — overwrite it with u64::MAX
+    bad[37..45].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(load(&bad).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn server_snapshot_restore_bit_identical_and_routable() {
+    let mut qcfg = tiny(400);
+    qcfg.sparse_dims = 2048;
+    qcfg.avg_nnz = 20;
+    let data = qcfg.generate(111);
+    let queries = qcfg.related_queries(&data, 112, 8);
+    let params = SearchParams::new(10).with_alpha(20.0).with_beta(6.0);
+    let dir = snapshot_dir("server");
+    let config = ServerConfig {
+        n_shards: 3,
+        snapshot_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let mut server = Server::start(&data, &config);
+    // mutate before the snapshot so the saved state isn't a fresh build
+    let n = data.len();
+    for i in 0..20 {
+        let (s, d) = payload(&data, i);
+        server.upsert((n + i) as u32, s, d);
+    }
+    for id in [3u32, 77, 200] {
+        assert!(server.delete(id));
+    }
+    let bytes = server.save_snapshot().unwrap();
+    assert!(bytes > 0);
+    for i in 0..3 {
+        assert!(dir.join("epoch-0").join(format!("shard-{i}.snap")).exists());
+    }
+    assert!(dir.join(MANIFEST_FILE).exists());
+    // publish the snapshot size for the CI artifact
+    std::fs::create_dir_all("target").ok();
+    std::fs::write(
+        "target/snapshot_size.txt",
+        format!(
+            "cluster_snapshot_bytes={bytes}\nshards=3\ndocs={}\n",
+            server.len()
+        ),
+    )
+    .unwrap();
+
+    let restored = Server::restore(&config).unwrap();
+    assert_eq!(restored.n_shards(), server.n_shards());
+    assert_eq!(restored.len(), server.len());
+
+    // bit-identical serving, single and batch paths
+    for (qi, q) in queries.iter().enumerate() {
+        let a = server.search(q, &params);
+        let b = restored.search(q, &params);
+        assert_eq!(a.len(), b.len(), "query {qi}");
+        for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {
+            assert_eq!(ia, ib, "query {qi}: id diverged");
+            assert_eq!(
+                sa.to_bits(),
+                sb.to_bits(),
+                "query {qi}: score bits diverged"
+            );
+        }
+    }
+    let ab = server.search_batch(&queries, &params);
+    let bb = restored.search_batch(&queries, &params);
+    for (qi, (la, lb)) in ab.iter().zip(&bb).enumerate() {
+        assert_eq!(la.len(), lb.len());
+        for ((ia, sa), (ib, sb)) in la.iter().zip(lb) {
+            assert_eq!(ia, ib, "batch query {qi}: id diverged");
+            assert_eq!(sa.to_bits(), sb.to_bits(), "batch query {qi}");
+        }
+    }
+
+    // the restored cluster keeps routing mutations identically: the same
+    // id lands on the same shard (flush acks the same totals)
+    let mut restored = restored;
+    let (s, d) = payload(&data, 5);
+    restored.upsert(5, s, d); // replace on its owner shard
+    assert_eq!(restored.len(), server.len());
+    assert_eq!(restored.flush().expect("cluster flush"), server.len());
+
+    // a second snapshot lands in a fresh epoch, the manifest moves to
+    // it, and the stale epoch is pruned — a failure mid-save could
+    // never have clobbered epoch-0's files
+    restored.save_snapshot().unwrap();
+    assert!(dir.join("epoch-1").join("shard-0.snap").exists());
+    assert!(!dir.join("epoch-0").exists(), "old epoch pruned");
+    let again = Server::restore(&config).unwrap();
+    assert_eq!(again.len(), restored.len());
+    let a = restored.search(&queries[0], &params);
+    let b = again.search(&queries[0], &params);
+    assert_eq!(a.len(), b.len());
+    for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {
+        assert_eq!(ia, ib);
+        assert_eq!(sa.to_bits(), sb.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn drop_retention_cluster_serves_with_less_memory() {
+    let mut qcfg = tiny(300);
+    qcfg.sparse_dims = 2048;
+    qcfg.avg_nnz = 20;
+    let data = qcfg.generate(113);
+    let queries = qcfg.related_queries(&data, 114, 5);
+    let params = SearchParams::new(10).with_alpha(20.0).with_beta(6.0);
+    let dir = snapshot_dir("server_drop");
+    let base_cfg = ServerConfig {
+        n_shards: 2,
+        snapshot_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let server = Server::start(&data, &base_cfg);
+    server.save_snapshot().unwrap();
+
+    // restore the same snapshot read-only with dropped rows
+    let lean_cfg = ServerConfig {
+        row_retention: RowRetention::Drop,
+        ..base_cfg.clone()
+    };
+    let lean = Server::restore(&lean_cfg).unwrap();
+    for (qi, q) in queries.iter().enumerate() {
+        let a = server.search(q, &params);
+        let b = lean.search(q, &params);
+        assert_eq!(a.len(), b.len(), "query {qi}");
+        for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {
+            assert_eq!(ia, ib, "query {qi}: id diverged");
+            assert_eq!(sa.to_bits(), sb.to_bits(), "query {qi}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -317,8 +317,8 @@ fn prop_mutable_interleavings_deterministic() {
                     b.flush();
                 }
                 MutOp::Merge => {
-                    a.merge();
-                    b.merge();
+                    a.merge().expect("merge with retained rows");
+                    b.merge().expect("merge with retained rows");
                 }
                 MutOp::Search(q) => {
                     let ha = a.search(q, &params);

@@ -87,7 +87,7 @@ fn mutable_index_recall_matches_static_after_merge() {
             data.dense.row(i).to_vec(),
         );
     }
-    mutable.merge();
+    mutable.merge().expect("merge with retained rows");
     for q in &queries {
         let a: Vec<u32> =
             search(&static_idx, q, &params).iter().map(|h| h.id).collect();
