@@ -1,0 +1,190 @@
+//! Network serving loadgen: queries/sec through the TCP front door with
+//! concurrent pipelined clients, coalesced (the batcher's max-batch /
+//! max-delay policy) versus direct (max_batch = 1), versus the
+//! in-process ceiling — the serving-side claim behind §7.2's online
+//! system, now measured across a real socket. Cross-checks that every
+//! wire configuration returns hits bit-identical to in-process search.
+//!
+//!     cargo bench --bench net_loadgen
+//!     BENCH_N=100000 BENCH_Q=512 BENCH_CLIENTS=16 cargo bench --bench net_loadgen
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hybrid_ip::benchkit::{self, Table};
+use hybrid_ip::coordinator::batcher::BatchPolicy;
+use hybrid_ip::coordinator::net::{Client, NetConfig, NetServer};
+use hybrid_ip::coordinator::{Server, ServerConfig};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::hybrid::config::SearchParams;
+use hybrid_ip::types::hybrid::HybridQuery;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Drive `queries` through `addr` from `n_clients` threads, each
+/// pipelining `depth` requests per wave. Returns (wall time, all
+/// (query index, hits) pairs for the identity cross-check).
+fn drive(
+    addr: std::net::SocketAddr,
+    queries: &[HybridQuery],
+    params: &SearchParams,
+    n_clients: usize,
+    depth: usize,
+) -> (Duration, Vec<(usize, Vec<(u32, f32)>)>) {
+    let t = Instant::now();
+    let results = std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                sc.spawn(move || {
+                    let mut client =
+                        Client::connect(addr).expect("connect loadgen client");
+                    let mut out = Vec::new();
+                    // Client c owns queries c, c+n_clients, ...
+                    let mine: Vec<(usize, &HybridQuery)> = queries
+                        .iter()
+                        .enumerate()
+                        .skip(c)
+                        .step_by(n_clients)
+                        .collect();
+                    for wave in mine.chunks(depth) {
+                        let tickets: Vec<(usize, u64)> = wave
+                            .iter()
+                            .map(|&(qi, q)| {
+                                (qi, client.send_search(q, params).unwrap())
+                            })
+                            .collect();
+                        for (qi, ticket) in tickets {
+                            let resp = client.wait(ticket).unwrap();
+                            match resp {
+                                hybrid_ip::coordinator::net::Response::Hits(
+                                    h,
+                                ) => out.push((qi, h)),
+                                other => {
+                                    panic!("unexpected response {other:?}")
+                                }
+                            }
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("loadgen client thread"))
+            .collect::<Vec<_>>()
+    });
+    (t.elapsed(), results)
+}
+
+fn main() {
+    let n = env_usize("BENCH_N", 20_000);
+    let n_queries = env_usize("BENCH_Q", 256);
+    let n_clients = env_usize("BENCH_CLIENTS", 8);
+    let depth = env_usize("BENCH_PIPELINE", 8);
+    benchkit::preamble(
+        "net_loadgen",
+        &format!(
+            "n={n} queries={n_queries} clients={n_clients} pipeline={depth} \
+             (BENCH_N/BENCH_Q/BENCH_CLIENTS/BENCH_PIPELINE to change)"
+        ),
+    );
+    let cfg = QuerySimConfig::scaled(n);
+    let data = cfg.generate(0x7C9);
+    let queries = cfg.related_queries(&data, 0x7CA, n_queries);
+    let params = SearchParams::new(20);
+    let t = Instant::now();
+    let server = Arc::new(Server::start(
+        &data,
+        &ServerConfig {
+            n_shards: 4,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+            },
+            ..Default::default()
+        },
+    ));
+    println!(
+        "[net_loadgen] cluster up ({} shards) in {:.1}s",
+        server.n_shards(),
+        t.elapsed().as_secs_f64()
+    );
+
+    // In-process reference answers (also the bit-identity oracle).
+    let reference: Vec<Vec<(u32, f32)>> =
+        queries.iter().map(|q| server.search(q, &params)).collect();
+    let t = Instant::now();
+    for q in &queries {
+        std::hint::black_box(server.search(q, &params));
+    }
+    let inproc = t.elapsed();
+
+    // Two listeners over the same cluster: coalesced vs direct.
+    let coalesced = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&server),
+        NetConfig { max_connections: n_clients + 4, ..Default::default() },
+    )
+    .expect("bind coalesced listener");
+    let direct = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&server),
+        NetConfig {
+            max_connections: n_clients + 4,
+            batch_override: Some(BatchPolicy {
+                max_batch: 1,
+                max_delay: Duration::ZERO,
+            }),
+            ..Default::default()
+        },
+    )
+    .expect("bind direct listener");
+
+    let mut table = Table::new(
+        "TCP serving throughput (pipelined clients)",
+        &["path", "wall ms", "qps", "vs in-process"],
+    );
+    let inproc_qps = n_queries as f64 / inproc.as_secs_f64().max(1e-9);
+    table.row(&[
+        "in-process (1 thread)".into(),
+        format!("{:.1}", inproc.as_secs_f64() * 1e3),
+        format!("{inproc_qps:.0}"),
+        "1.00x".into(),
+    ]);
+    for (label, addr) in [
+        ("tcp direct (max_batch=1)", direct.local_addr()),
+        ("tcp coalesced (max_batch=8)", coalesced.local_addr()),
+    ] {
+        let (wall, results) =
+            drive(addr, &queries, &params, n_clients, depth);
+        // Bit-identity: every wire answer equals the in-process answer.
+        assert_eq!(results.len(), queries.len(), "{label}: lost answers");
+        for (qi, hits) in &results {
+            let want = &reference[*qi];
+            assert_eq!(hits.len(), want.len(), "{label}: q{qi} length");
+            for ((id, s), (wid, ws)) in hits.iter().zip(want) {
+                assert_eq!(id, wid, "{label}: q{qi} id diverged");
+                assert_eq!(
+                    s.to_bits(),
+                    ws.to_bits(),
+                    "{label}: q{qi} score bits diverged"
+                );
+            }
+        }
+        let qps = n_queries as f64 / wall.as_secs_f64().max(1e-9);
+        table.row(&[
+            label.into(),
+            format!("{:.1}", wall.as_secs_f64() * 1e3),
+            format!("{qps:.0}"),
+            format!("{:.2}x", qps / inproc_qps.max(1e-12)),
+        ]);
+    }
+    table.print();
+    println!("[net_loadgen] bit-identity: wire == in-process for all paths");
+}

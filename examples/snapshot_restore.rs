@@ -39,7 +39,7 @@ fn main() {
 
     println!("[snap] cold start: building {shards} shard indices ...");
     let t = Instant::now();
-    let mut server = Server::start(&data, &config);
+    let server = Server::start(&data, &config);
     let build_s = t.elapsed().as_secs_f64();
     println!("[snap] built in {build_s:.1}s; mutating online ...");
     for i in 0..200 {

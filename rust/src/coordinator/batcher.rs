@@ -26,6 +26,31 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// A policy the batcher can actually serve. `max_batch == 0` is the
+    /// classic dead knob: the size trigger can never be "reached", so a
+    /// config typo silently degenerates — reject it loudly instead.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err(
+                "BatchPolicy::max_batch == 0 can never fill a batch \
+                 (use max_batch = 1 to disable coalescing)"
+                    .to_string(),
+            );
+        }
+        Ok(())
+    }
+
+    /// The nearest valid policy, for callers that must keep serving
+    /// (the server logs the correction instead of dying mid-start).
+    pub fn normalized(mut self) -> BatchPolicy {
+        if self.max_batch == 0 {
+            self.max_batch = 1;
+        }
+        self
+    }
+}
+
 /// Incrementally built batch with deadline tracking.
 pub struct Batcher<T> {
     policy: BatchPolicy,
@@ -34,8 +59,18 @@ pub struct Batcher<T> {
 }
 
 impl<T> Batcher<T> {
+    /// Panics on an invalid policy (see [`BatchPolicy::validate`]);
+    /// callers with operator-supplied config should validate or
+    /// [`BatchPolicy::normalized`] first.
     pub fn new(policy: BatchPolicy) -> Self {
+        if let Err(why) = policy.validate() {
+            panic!("Batcher::new: {why}");
+        }
         Batcher { policy, pending: Vec::new(), oldest: None }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
     }
 
     /// Add an item; returns a full batch if the size trigger fired.
@@ -119,6 +154,59 @@ mod tests {
         b.push(1);
         assert_eq!(b.take().unwrap(), vec![1]);
         assert!(b.take().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch == 0")]
+    fn zero_max_batch_rejected() {
+        let _ = Batcher::<i32>::new(BatchPolicy {
+            max_batch: 0,
+            max_delay: Duration::from_millis(1),
+        });
+    }
+
+    #[test]
+    fn zero_max_batch_normalizes_to_passthrough() {
+        let p = BatchPolicy {
+            max_batch: 0,
+            max_delay: Duration::from_millis(1),
+        };
+        assert!(p.validate().is_err());
+        let p = p.normalized();
+        assert_eq!(p.max_batch, 1);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn max_batch_one_flushes_every_push() {
+        // Coalescing disabled: each push is a complete batch, nothing
+        // ever waits on the delay trigger.
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1,
+            max_delay: Duration::from_secs(10),
+        });
+        for i in 0..5 {
+            assert_eq!(b.push(i).unwrap(), vec![i]);
+            assert!(b.is_empty());
+            assert!(b.deadline().is_none(), "nothing pending, no deadline");
+        }
+        assert!(b.poll().is_none());
+    }
+
+    #[test]
+    fn zero_max_delay_flushes_on_first_poll() {
+        // A zero delay means "flush at the first opportunity": the
+        // deadline is immediately expired, so poll() drains without any
+        // sleep in between.
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::ZERO,
+        });
+        b.push(1);
+        b.push(2);
+        assert_eq!(b.deadline().unwrap(), Duration::ZERO);
+        assert_eq!(b.poll().unwrap(), vec![1, 2]);
+        assert!(b.poll().is_none(), "nothing pending after the flush");
     }
 
     #[test]

@@ -4,13 +4,18 @@
 //! The paper's 200-server cluster is reproduced in-process: one worker
 //! thread per shard, each owning a `HybridIndex` over its slice of the
 //! dataset; a router broadcasts queries, gathers per-shard top-h lists
-//! and merges them; a batcher amortizes dispatch overhead (max-batch /
-//! max-delay policy); metrics track latency percentiles and QPS.
+//! and merges them; a batcher coalesces single-query traffic into batch
+//! flushes (max-batch / max-delay policy); metrics track latency
+//! percentiles and QPS in O(1) memory; and a TCP front door ([`net`])
+//! serves the whole thing over a length-prefixed binary wire protocol
+//! with a pipelining [`net::Client`].
 
 pub mod batcher;
 pub mod metrics;
+pub mod net;
 pub mod router;
 pub mod server;
 pub mod shard;
 
+pub use net::{Client, NetConfig, NetServer};
 pub use server::{Server, ServerConfig};

@@ -1,0 +1,1082 @@
+//! TCP serving layer: the cluster's front door (paper §7.2 serves the
+//! online system from ~200 machines; this is the wire between them and
+//! the world).
+//!
+//! # Wire protocol
+//!
+//! Every message is one [`binio`](crate::util::binio) frame —
+//! `u32 LE length | payload` — and every payload starts with a `u8`
+//! kind and a `u64` request id chosen by the client (ids ≥ 1; id 0 is
+//! reserved for connection-level errors). Bodies reuse the binio/
+//! persist encoders, so a query travels in exactly the bytes the
+//! snapshot format already defines:
+//!
+//! | kind                | body                                        |
+//! |---------------------|---------------------------------------------|
+//! | `REQ_SEARCH`        | params, query (sparse dims/vals, dense)     |
+//! | `REQ_SEARCH_BATCH`  | params, n, then n queries                   |
+//! | `REQ_UPSERT`        | doc id (u32), sparse, dense                 |
+//! | `REQ_DELETE`        | doc id (u32)                                |
+//! | `REQ_FLUSH`         | —                                           |
+//! | `REQ_SNAPSHOT`      | —                                           |
+//! | `REQ_METRICS`       | —                                           |
+//! | `RESP_HITS`         | n, then n × (u32 id, f32 score)             |
+//! | `RESP_BATCH_HITS`   | n, then n hit lists                         |
+//! | `RESP_UPSERT`       | u8 outcome (0 ins / 1 repl / 2 rej)         |
+//! | `RESP_DELETE`       | u8 applied                                  |
+//! | `RESP_FLUSH`        | u64 live docs                               |
+//! | `RESP_SNAPSHOT`     | u64 snapshot bytes                          |
+//! | `RESP_METRICS`      | counts + durations (u64 nanos) + QPS (f64)  |
+//! | `RESP_ERROR`        | string message                              |
+//!
+//! # Admission control
+//!
+//! Two knobs bound what an arbitrary peer can cost the server
+//! (mirroring the snapshot loader's hardening): `max_frame_bytes` caps
+//! the length prefix *before* any allocation — a malformed or hostile
+//! prefix is answered with an error frame and the connection closed —
+//! and `max_connections` caps concurrent sockets; excess connects get
+//! an error frame and an immediate close. A frame whose *payload* is
+//! malformed gets an error response but keeps the connection (frame
+//! boundaries are intact, so the stream isn't desynced); a broken
+//! *length prefix* poisons the stream and closes it.
+//!
+//! # Coalescing (the batcher, finally wired)
+//!
+//! Single-query `REQ_SEARCH` frames from *all* connections flow into
+//! one [`Batcher`] owned by a dedicated thread: its size trigger flushes
+//! on `max_batch`, its [`Batcher::deadline`] drives the `recv_timeout`
+//! that implements the delay trigger, and each flush becomes one
+//! [`Server::search_batch`] call whose results are demultiplexed back to
+//! the per-connection writers. Batch results are bit-identical to
+//! unbatched serving (the engine guarantees batch == sequential), so
+//! coalescing is invisible except in throughput. Queries with different
+//! `SearchParams` never share a flush; explicit `REQ_SEARCH_BATCH`
+//! requests bypass the coalescer (the client already chose its batch).
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::server::Server;
+use crate::coordinator::shard::UpsertOutcome;
+use crate::hybrid::config::SearchParams;
+use crate::hybrid::persist;
+use crate::types::hybrid::HybridQuery;
+use crate::util::binio::{
+    read_frame, write_frame, BinReader, BinWriter, DEFAULT_MAX_FRAME,
+};
+
+pub const REQ_SEARCH: u8 = 1;
+pub const REQ_SEARCH_BATCH: u8 = 2;
+pub const REQ_UPSERT: u8 = 3;
+pub const REQ_DELETE: u8 = 4;
+pub const REQ_FLUSH: u8 = 5;
+pub const REQ_SNAPSHOT: u8 = 6;
+pub const REQ_METRICS: u8 = 7;
+
+pub const RESP_HITS: u8 = 0x81;
+pub const RESP_BATCH_HITS: u8 = 0x82;
+pub const RESP_UPSERT: u8 = 0x83;
+pub const RESP_DELETE: u8 = 0x84;
+pub const RESP_FLUSH: u8 = 0x85;
+pub const RESP_SNAPSHOT: u8 = 0x86;
+pub const RESP_METRICS: u8 = 0x87;
+pub const RESP_ERROR: u8 = 0xFF;
+
+/// Request id reserved for connection-level errors (capacity rejection,
+/// desynced stream): the error belongs to the connection, not to any
+/// request the client issued.
+pub const CONN_ERROR_ID: u64 = 0;
+
+fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+// ------------------------------------------------------------ encoding
+
+/// Build one frame payload: kind, id, then `body` fields. Writing into
+/// a `Vec` cannot fail, so the io::Results inside are infallible.
+fn encode_frame(
+    kind: u8,
+    id: u64,
+    body: impl FnOnce(&mut BinWriter<&mut Vec<u8>>) -> io::Result<()>,
+) -> Vec<u8> {
+    let mut buf = Vec::new();
+    let mut w = BinWriter::raw(&mut buf);
+    w.u8(kind).expect("vec write");
+    w.u64(id).expect("vec write");
+    body(&mut w).expect("vec write");
+    drop(w);
+    buf
+}
+
+fn error_frame(id: u64, msg: &str) -> Vec<u8> {
+    encode_frame(RESP_ERROR, id, |w| w.str_(msg))
+}
+
+fn write_params<W: io::Write>(
+    w: &mut BinWriter<W>,
+    p: &SearchParams,
+) -> io::Result<()> {
+    w.usize(p.h)?;
+    w.f32(p.alpha)?;
+    w.f32(p.beta)
+}
+
+/// Ceiling on the stage-1/stage-2 candidate counts a wire request may
+/// ask for (αh / βh). This is what actually bounds server-side work and
+/// allocation (top-k heaps are sized from it), so it — not just the
+/// frame length — is the search admission control.
+const MAX_WIRE_OVERFETCH: usize = 1 << 22; // ~4M candidates
+
+fn read_params<R: io::Read>(
+    r: &mut BinReader<R>,
+) -> io::Result<SearchParams> {
+    let h = r.usize()?;
+    let alpha = r.f32()?;
+    let beta = r.f32()?;
+    if h == 0 || h > (1 << 16) {
+        return Err(invalid(format!("implausible result count h={h}")));
+    }
+    if !alpha.is_finite() || alpha < 0.0 || !beta.is_finite() || beta < 0.0
+    {
+        return Err(invalid("overfetch factors must be finite and >= 0"));
+    }
+    let params = SearchParams { h, alpha, beta };
+    // Bound the *derived* candidate counts: they size per-shard top-k
+    // heaps, so a hostile (h, α) pair in a tiny frame must not be able
+    // to demand a multi-gigabyte allocation. (`ceil() as usize` is a
+    // saturating cast, so an overflowing product lands at usize::MAX
+    // and trips this check.)
+    if params.alpha_h() > MAX_WIRE_OVERFETCH
+        || params.beta_h() > MAX_WIRE_OVERFETCH
+    {
+        return Err(invalid(format!(
+            "overfetch alpha_h={} / beta_h={} exceeds wire cap {}",
+            params.alpha_h(),
+            params.beta_h(),
+            MAX_WIRE_OVERFETCH
+        )));
+    }
+    Ok(params)
+}
+
+fn write_query<W: io::Write>(
+    w: &mut BinWriter<W>,
+    q: &HybridQuery,
+) -> io::Result<()> {
+    persist::write_sparse_vec(w, &q.sparse)?;
+    w.slice_f32(&q.dense)
+}
+
+fn read_query<R: io::Read>(r: &mut BinReader<R>) -> io::Result<HybridQuery> {
+    let sparse = persist::read_sparse_vec(r)?;
+    let dense = r.slice_f32()?;
+    Ok(HybridQuery { sparse, dense })
+}
+
+fn write_hits<W: io::Write>(
+    w: &mut BinWriter<W>,
+    hits: &[(u32, f32)],
+) -> io::Result<()> {
+    w.usize(hits.len())?;
+    for &(id, score) in hits {
+        w.u32(id)?;
+        w.f32(score)?;
+    }
+    Ok(())
+}
+
+/// Element-count sanity check for hand-rolled loops: `n` records of
+/// `elem` bytes must fit the reader's remaining budget (always known
+/// here — frame payloads carry their length).
+fn check_count<R: io::Read>(
+    r: &BinReader<R>,
+    n: usize,
+    elem: u64,
+    what: &str,
+) -> io::Result<()> {
+    if let Some(rem) = r.remaining() {
+        if (n as u64).saturating_mul(elem) > rem {
+            return Err(invalid(format!(
+                "{what}: count {n} overruns {rem} remaining bytes"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn read_hits<R: io::Read>(
+    r: &mut BinReader<R>,
+) -> io::Result<Vec<(u32, f32)>> {
+    let n = r.usize()?;
+    check_count(r, n, 8, "hit list")?;
+    let mut hits = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = r.u32()?;
+        let score = r.f32()?;
+        hits.push((id, score));
+    }
+    Ok(hits)
+}
+
+fn upsert_outcome_byte(o: UpsertOutcome) -> u8 {
+    match o {
+        UpsertOutcome::Inserted => 0,
+        UpsertOutcome::Replaced => 1,
+        UpsertOutcome::Rejected => 2,
+    }
+}
+
+// ----------------------------------------------------------- responses
+
+/// Latency/throughput summary as served over the wire (durations in
+/// their original resolution, QPS both windowed and lifetime — see
+/// `coordinator::metrics`).
+#[derive(Clone, Copy, Debug)]
+pub struct WireMetrics {
+    pub count: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+    pub qps: f64,
+    pub lifetime_qps: f64,
+}
+
+/// A decoded server response (exposed so tests and tooling can speak
+/// the protocol without a [`Client`]).
+#[derive(Clone, Debug)]
+pub enum Response {
+    Hits(Vec<(u32, f32)>),
+    BatchHits(Vec<Vec<(u32, f32)>>),
+    Upsert(UpsertOutcome),
+    Deleted(bool),
+    Flushed(usize),
+    Snapshotted(u64),
+    Metrics(WireMetrics),
+    Error(String),
+}
+
+/// Decode one response frame payload into `(request id, response)`.
+pub fn decode_response(payload: &[u8]) -> io::Result<(u64, Response)> {
+    let mut r = BinReader::raw_with_limit(payload, payload.len() as u64);
+    let kind = r.u8()?;
+    let id = r.u64()?;
+    let resp = match kind {
+        RESP_HITS => Response::Hits(read_hits(&mut r)?),
+        RESP_BATCH_HITS => {
+            let n = r.usize()?;
+            // Each list is at least its 8-byte count; cap the
+            // pre-allocation so a lying n can't amplify past the frame.
+            check_count(&r, n, 8, "batch hit lists")?;
+            let mut lists = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                lists.push(read_hits(&mut r)?);
+            }
+            Response::BatchHits(lists)
+        }
+        RESP_UPSERT => Response::Upsert(match r.u8()? {
+            0 => UpsertOutcome::Inserted,
+            1 => UpsertOutcome::Replaced,
+            2 => UpsertOutcome::Rejected,
+            b => return Err(invalid(format!("bad upsert outcome {b}"))),
+        }),
+        RESP_DELETE => Response::Deleted(r.u8()? != 0),
+        RESP_FLUSH => Response::Flushed(r.usize()?),
+        RESP_SNAPSHOT => Response::Snapshotted(r.u64()?),
+        RESP_METRICS => Response::Metrics(WireMetrics {
+            count: r.u64()?,
+            mean: Duration::from_nanos(r.u64()?),
+            p50: Duration::from_nanos(r.u64()?),
+            p95: Duration::from_nanos(r.u64()?),
+            p99: Duration::from_nanos(r.u64()?),
+            max: Duration::from_nanos(r.u64()?),
+            qps: r.f64()?,
+            lifetime_qps: r.f64()?,
+        }),
+        RESP_ERROR => Response::Error(r.str_()?),
+        k => return Err(invalid(format!("unknown response kind {k:#x}"))),
+    };
+    Ok((id, resp))
+}
+
+// -------------------------------------------------------------- server
+
+/// Network front-door knobs. The coalescing policy itself lives on
+/// [`Server`] (`ServerConfig::batch`) — `batch_override` exists for
+/// tools that front one cluster with differently-batched listeners
+/// (e.g. the loadgen bench comparing coalesced vs direct).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Concurrent connections admitted; excess connects are answered
+    /// with a connection-level error frame and closed.
+    pub max_connections: usize,
+    /// Ceiling on any single frame's length prefix — checked before
+    /// any payload allocation.
+    pub max_frame_bytes: u32,
+    /// `Some(policy)` overrides the server's own batch policy for this
+    /// listener (validated like the server's).
+    pub batch_override: Option<BatchPolicy>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_connections: 64,
+            max_frame_bytes: DEFAULT_MAX_FRAME,
+            batch_override: None,
+        }
+    }
+}
+
+/// One pending single-query search, parked in the coalescer.
+struct PendingSearch {
+    id: u64,
+    params: SearchParams,
+    query: HybridQuery,
+    /// The owning connection's writer channel (pre-encoded frames).
+    reply: Sender<Vec<u8>>,
+}
+
+/// A running TCP listener fronting one [`Server`].
+///
+/// Threads: one accept loop, one coalescing batcher, and a
+/// reader/writer pair per admitted connection. Dropping (or
+/// [`NetServer::shutdown`]) stops the accept loop, severs every open
+/// connection, drains the batcher, and joins all of it.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    accept_join: Option<JoinHandle<()>>,
+    batch_join: Option<JoinHandle<()>>,
+    batch_tx: Option<Sender<PendingSearch>>,
+}
+
+impl NetServer {
+    /// Bind and start serving `server` on `addr` (use port 0 for an
+    /// ephemeral port; [`NetServer::local_addr`] reports the real one).
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        server: Arc<Server>,
+        config: NetConfig,
+    ) -> io::Result<NetServer> {
+        let policy = config
+            .batch_override
+            .unwrap_or_else(|| server.batch_policy());
+        policy.validate().map_err(|why| {
+            io::Error::new(io::ErrorKind::InvalidInput, why)
+        })?;
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let active = Arc::new(AtomicUsize::new(0));
+        let (batch_tx, batch_rx) = channel::<PendingSearch>();
+
+        let batch_join = {
+            let server = Arc::clone(&server);
+            std::thread::Builder::new()
+                .name("net-batcher".into())
+                .spawn(move || batcher_loop(&server, policy, &batch_rx))
+                .expect("spawn net batcher")
+        };
+
+        let accept_join = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let batch_tx = batch_tx.clone();
+            let config = config.clone();
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || {
+                    accept_loop(
+                        &listener, &server, &config, &stop, &conns, &active,
+                        &batch_tx,
+                    );
+                })
+                .expect("spawn net accept loop")
+        };
+
+        Ok(NetServer {
+            addr,
+            stop,
+            conns,
+            accept_join: Some(accept_join),
+            batch_join: Some(batch_join),
+            batch_tx: Some(batch_tx),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block on the accept loop (the `serve --listen` foreground mode);
+    /// returns after [`NetServer::shutdown`] from another thread or a
+    /// fatal listener error.
+    pub fn serve_forever(&mut self) {
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Stop accepting, sever open connections, drain and join every
+    /// thread. Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // The accept loop is parked in accept(): poke it awake.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        for (_, s) in self.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        // Reader threads drop their batcher senders as their sockets
+        // die; releasing ours lets the batcher loop disconnect.
+        self.batch_tx.take();
+        if let Some(j) = self.batch_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: &TcpListener,
+    server: &Arc<Server>,
+    config: &NetConfig,
+    stop: &Arc<AtomicBool>,
+    conns: &Arc<Mutex<HashMap<u64, TcpStream>>>,
+    active: &Arc<AtomicUsize>,
+    batch_tx: &Sender<PendingSearch>,
+) {
+    let next_conn = AtomicU64::new(1);
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        if active.load(Ordering::SeqCst) >= config.max_connections {
+            // Admission control: a full house answers, it never hangs.
+            let mut w = BufWriter::new(stream);
+            let _ = write_frame(
+                &mut w,
+                &error_frame(CONN_ERROR_ID, "server at connection capacity"),
+            );
+            let _ = w.flush();
+            continue;
+        }
+        let _ = stream.set_nodelay(true);
+        let conn_id = next_conn.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            conns.lock().unwrap().insert(conn_id, clone);
+        }
+        active.fetch_add(1, Ordering::SeqCst);
+        let server = Arc::clone(server);
+        let batch_tx = batch_tx.clone();
+        let conns = Arc::clone(conns);
+        let active = Arc::clone(active);
+        let max_frame = config.max_frame_bytes;
+        let spawned = std::thread::Builder::new()
+            .name(format!("net-conn-{conn_id}"))
+            .spawn(move || {
+                serve_connection(stream, &server, &batch_tx, max_frame);
+                conns.lock().unwrap().remove(&conn_id);
+                active.fetch_sub(1, Ordering::SeqCst);
+            });
+        if spawned.is_err() {
+            conns.lock().unwrap().remove(&conn_id);
+            active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Per-connection reader: parse frames, dispatch requests, feed the
+/// writer thread. Returns when the peer hangs up, the stream desyncs,
+/// or the server shuts the socket down.
+fn serve_connection(
+    stream: TcpStream,
+    server: &Arc<Server>,
+    batch_tx: &Sender<PendingSearch>,
+    max_frame: u32,
+) {
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (resp_tx, resp_rx) = channel::<Vec<u8>>();
+    let writer_join = std::thread::Builder::new()
+        .name("net-conn-writer".into())
+        .spawn(move || writer_loop(writer_stream, &resp_rx))
+        .expect("spawn connection writer");
+    let mut r = BufReader::new(stream);
+    loop {
+        let payload = match read_frame(&mut r, max_frame) {
+            Ok(Some(p)) => p,
+            // Clean hangup between frames.
+            Ok(None) => break,
+            // Oversized prefix or mid-frame death: the byte stream can
+            // no longer be trusted — answer (best effort) and close.
+            Err(e) => {
+                let _ = resp_tx
+                    .send(error_frame(CONN_ERROR_ID, &format!("bad frame: {e}")));
+                break;
+            }
+        };
+        handle_request(&payload, server, batch_tx, &resp_tx);
+    }
+    drop(resp_tx);
+    let _ = writer_join.join();
+}
+
+/// Dispatch one well-framed request payload. Malformed payloads get an
+/// error response but do NOT kill the connection: the framing kept the
+/// stream in sync.
+fn handle_request(
+    payload: &[u8],
+    server: &Arc<Server>,
+    batch_tx: &Sender<PendingSearch>,
+    resp_tx: &Sender<Vec<u8>>,
+) {
+    let mut r = BinReader::raw_with_limit(payload, payload.len() as u64);
+    let header = (|| -> io::Result<(u8, u64)> {
+        Ok((r.u8()?, r.u64()?))
+    })();
+    let (kind, id) = match header {
+        Ok(h) => h,
+        Err(_) => {
+            let _ = resp_tx.send(error_frame(
+                CONN_ERROR_ID,
+                "frame shorter than kind+id header",
+            ));
+            return;
+        }
+    };
+    let result: io::Result<()> = (|| {
+        match kind {
+            REQ_SEARCH => {
+                let params = read_params(&mut r)?;
+                let query = read_query(&mut r)?;
+                // Into the coalescer; the flush path answers later. If
+                // the batcher is gone the server is shutting down.
+                batch_tx
+                    .send(PendingSearch {
+                        id,
+                        params,
+                        query,
+                        reply: resp_tx.clone(),
+                    })
+                    .map_err(|_| {
+                        io::Error::new(
+                            io::ErrorKind::BrokenPipe,
+                            "server shutting down",
+                        )
+                    })?;
+            }
+            REQ_SEARCH_BATCH => {
+                let params = read_params(&mut r)?;
+                let n = r.usize()?;
+                // A minimal encoded query is three slice prefixes
+                // (24 bytes); checking against that keeps a lying
+                // count's pre-allocation proportional to the frame.
+                check_count(&r, n, 24, "query batch")?;
+                let mut queries = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    queries.push(read_query(&mut r)?);
+                }
+                let results = server.search_batch(&queries, &params);
+                let _ = resp_tx.send(encode_frame(RESP_BATCH_HITS, id, |w| {
+                    w.usize(results.len())?;
+                    for hits in &results {
+                        write_hits(w, hits)?;
+                    }
+                    Ok(())
+                }));
+            }
+            REQ_UPSERT => {
+                let doc = r.u32()?;
+                let sparse = persist::read_sparse_vec(&mut r)?;
+                let dense = r.slice_f32()?;
+                let outcome = server.upsert(doc, sparse, dense);
+                let _ = resp_tx.send(encode_frame(RESP_UPSERT, id, |w| {
+                    w.u8(upsert_outcome_byte(outcome))
+                }));
+            }
+            REQ_DELETE => {
+                let doc = r.u32()?;
+                let applied = server.delete(doc);
+                let _ = resp_tx.send(encode_frame(RESP_DELETE, id, |w| {
+                    w.u8(applied as u8)
+                }));
+            }
+            REQ_FLUSH => {
+                let live = server.flush()?;
+                let _ = resp_tx.send(
+                    encode_frame(RESP_FLUSH, id, |w| w.usize(live)),
+                );
+            }
+            REQ_SNAPSHOT => {
+                let bytes = server.save_snapshot()?;
+                let _ = resp_tx.send(
+                    encode_frame(RESP_SNAPSHOT, id, |w| w.u64(bytes)),
+                );
+            }
+            REQ_METRICS => {
+                let m = server.snapshot();
+                let _ = resp_tx.send(encode_frame(RESP_METRICS, id, |w| {
+                    w.u64(m.count as u64)?;
+                    w.u64(m.mean.as_nanos() as u64)?;
+                    w.u64(m.p50.as_nanos() as u64)?;
+                    w.u64(m.p95.as_nanos() as u64)?;
+                    w.u64(m.p99.as_nanos() as u64)?;
+                    w.u64(m.max.as_nanos() as u64)?;
+                    w.f64(m.qps)?;
+                    w.f64(m.lifetime_qps)
+                }));
+            }
+            k => {
+                return Err(invalid(format!("unknown request kind {k:#x}")));
+            }
+        }
+        Ok(())
+    })();
+    if let Err(e) = result {
+        let _ = resp_tx.send(error_frame(id, &e.to_string()));
+    }
+}
+
+/// Connection writer: frame + flush responses, batching whatever is
+/// already queued into one syscall.
+fn writer_loop(stream: TcpStream, rx: &Receiver<Vec<u8>>) {
+    let mut w = BufWriter::new(stream);
+    while let Ok(frame) = rx.recv() {
+        if write_frame(&mut w, &frame).is_err() {
+            return;
+        }
+        while let Ok(next) = rx.try_recv() {
+            if write_frame(&mut w, &next).is_err() {
+                return;
+            }
+        }
+        if w.flush().is_err() {
+            return;
+        }
+    }
+}
+
+/// `SearchParams` equality for coalescing (bit-compare the floats: two
+/// queries share a flush only if the engine would treat them
+/// identically).
+fn same_params(a: &SearchParams, b: &SearchParams) -> bool {
+    a.h == b.h
+        && a.alpha.to_bits() == b.alpha.to_bits()
+        && a.beta.to_bits() == b.beta.to_bits()
+}
+
+/// The coalescer: one thread, one [`Batcher`], flushes driven by the
+/// size trigger (`push`) and the deadline (`recv_timeout` + `poll`).
+fn batcher_loop(
+    server: &Server,
+    policy: BatchPolicy,
+    rx: &Receiver<PendingSearch>,
+) {
+    let mut batcher: Batcher<PendingSearch> = Batcher::new(policy);
+    let mut cur_params: Option<SearchParams> = None;
+    loop {
+        let msg = match batcher.deadline() {
+            // Nothing pending: park until traffic or shutdown.
+            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+            Some(d) => rx.recv_timeout(d),
+        };
+        match msg {
+            Ok(item) => {
+                // Params define the flush unit: mixing h/α/β in one
+                // engine call would change results. Close out the
+                // current batch before admitting a different shape.
+                if cur_params.is_some_and(|p| !same_params(&p, &item.params))
+                {
+                    if let (Some(batch), Some(p)) =
+                        (batcher.take(), cur_params)
+                    {
+                        flush_batch(server, &p, batch);
+                    }
+                }
+                cur_params = Some(item.params);
+                if let Some(batch) = batcher.push(item) {
+                    flush_batch(server, &cur_params.expect("params set"), batch);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let (Some(batch), Some(p)) = (batcher.poll(), cur_params) {
+                    flush_batch(server, &p, batch);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if let (Some(batch), Some(p)) = (batcher.take(), cur_params) {
+                    flush_batch(server, &p, batch);
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// One coalesced flush → one `search_batch` → demux per connection.
+fn flush_batch(
+    server: &Server,
+    params: &SearchParams,
+    batch: Vec<PendingSearch>,
+) {
+    let mut meta = Vec::with_capacity(batch.len());
+    let mut queries = Vec::with_capacity(batch.len());
+    for p in batch {
+        meta.push((p.id, p.reply));
+        queries.push(p.query);
+    }
+    let results = server.search_batch(&queries, params);
+    debug_assert_eq!(results.len(), meta.len());
+    for ((id, reply), hits) in meta.into_iter().zip(results) {
+        // A dead connection just drops its answers.
+        let _ = reply.send(encode_frame(RESP_HITS, id, |w| {
+            write_hits(w, &hits)
+        }));
+    }
+}
+
+// -------------------------------------------------------------- client
+
+/// Blocking client with request pipelining.
+///
+/// Every request gets a fresh id; `send_*` enqueue without waiting
+/// (buffered — the bytes go out at the next [`Client::wait`] or
+/// explicit flush), and [`Client::wait`] demultiplexes responses that
+/// arrive out of order (coalesced searches answer when their batch
+/// flushes, mutations answer immediately). The convenience wrappers
+/// (`search`, `upsert`, …) are send + wait in one call.
+pub struct Client {
+    w: BufWriter<TcpStream>,
+    r: BufReader<TcpStream>,
+    next_id: u64,
+    /// Responses read while waiting for a different ticket.
+    pending: BTreeMap<u64, Response>,
+    max_frame_bytes: u32,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        Self::connect_with(addr, DEFAULT_MAX_FRAME)
+    }
+
+    pub fn connect_with<A: ToSocketAddrs>(
+        addr: A,
+        max_frame_bytes: u32,
+    ) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let w = BufWriter::new(stream.try_clone()?);
+        Ok(Client {
+            w,
+            r: BufReader::new(stream),
+            next_id: 1,
+            pending: BTreeMap::new(),
+            max_frame_bytes,
+        })
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn send(
+        &mut self,
+        kind: u8,
+        body: impl FnOnce(&mut BinWriter<&mut Vec<u8>>) -> io::Result<()>,
+    ) -> io::Result<u64> {
+        let id = self.fresh_id();
+        let frame = encode_frame(kind, id, body);
+        write_frame(&mut self.w, &frame)?;
+        Ok(id)
+    }
+
+    /// Push buffered requests to the server now (wait() does this
+    /// implicitly; explicit flush lets a pipeline overlap with other
+    /// client-side work).
+    pub fn flush_pipeline(&mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+
+    /// Enqueue a single-query search; returns the ticket for
+    /// [`Client::wait`]. On the server these coalesce across
+    /// connections into shared batch flushes.
+    pub fn send_search(
+        &mut self,
+        q: &HybridQuery,
+        params: &SearchParams,
+    ) -> io::Result<u64> {
+        self.send(REQ_SEARCH, |w| {
+            write_params(w, params)?;
+            write_query(w, q)
+        })
+    }
+
+    pub fn send_search_batch(
+        &mut self,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+    ) -> io::Result<u64> {
+        self.send(REQ_SEARCH_BATCH, |w| {
+            write_params(w, params)?;
+            w.usize(queries.len())?;
+            for q in queries {
+                write_query(w, q)?;
+            }
+            Ok(())
+        })
+    }
+
+    /// Block until the response for `ticket` arrives, stashing any
+    /// other responses read along the way for their own `wait` calls.
+    pub fn wait(&mut self, ticket: u64) -> io::Result<Response> {
+        if let Some(resp) = self.pending.remove(&ticket) {
+            return Ok(resp);
+        }
+        self.w.flush()?;
+        loop {
+            let payload = read_frame(&mut self.r, self.max_frame_bytes)?
+                .ok_or_else(|| {
+                    io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "server closed the connection",
+                    )
+                })?;
+            let (id, resp) = decode_response(&payload)?;
+            if id == CONN_ERROR_ID {
+                let msg = match resp {
+                    Response::Error(m) => m,
+                    _ => "connection-level error".to_string(),
+                };
+                return Err(io::Error::new(io::ErrorKind::ConnectionAborted, msg));
+            }
+            if id == ticket {
+                return Ok(resp);
+            }
+            self.pending.insert(id, resp);
+        }
+    }
+
+    fn expect_hits(resp: Response) -> io::Result<Vec<(u32, f32)>> {
+        match resp {
+            Response::Hits(h) => Ok(h),
+            Response::Error(e) => Err(io::Error::other(e)),
+            other => Err(invalid(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Search and wait (single round trip).
+    pub fn search(
+        &mut self,
+        q: &HybridQuery,
+        params: &SearchParams,
+    ) -> io::Result<Vec<(u32, f32)>> {
+        let t = self.send_search(q, params)?;
+        let resp = self.wait(t)?;
+        Self::expect_hits(resp)
+    }
+
+    /// Explicit batch search (bypasses the server-side coalescer).
+    pub fn search_batch(
+        &mut self,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+    ) -> io::Result<Vec<Vec<(u32, f32)>>> {
+        let t = self.send_search_batch(queries, params)?;
+        match self.wait(t)? {
+            Response::BatchHits(lists) => Ok(lists),
+            Response::Error(e) => Err(io::Error::other(e)),
+            other => Err(invalid(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn upsert(
+        &mut self,
+        id: u32,
+        sparse: &crate::types::sparse::SparseVector,
+        dense: &[f32],
+    ) -> io::Result<UpsertOutcome> {
+        let t = self.send(REQ_UPSERT, |w| {
+            w.u32(id)?;
+            persist::write_sparse_vec(w, sparse)?;
+            w.slice_f32(dense)
+        })?;
+        match self.wait(t)? {
+            Response::Upsert(o) => Ok(o),
+            Response::Error(e) => Err(io::Error::other(e)),
+            other => Err(invalid(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn delete(&mut self, id: u32) -> io::Result<bool> {
+        let t = self.send(REQ_DELETE, |w| w.u32(id))?;
+        match self.wait(t)? {
+            Response::Deleted(b) => Ok(b),
+            Response::Error(e) => Err(io::Error::other(e)),
+            other => Err(invalid(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Cluster-wide flush barrier; returns the live doc count.
+    pub fn flush(&mut self) -> io::Result<usize> {
+        let t = self.send(REQ_FLUSH, |_| Ok(()))?;
+        match self.wait(t)? {
+            Response::Flushed(n) => Ok(n),
+            Response::Error(e) => Err(io::Error::other(e)),
+            other => Err(invalid(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Ask the server to persist a snapshot; returns bytes written.
+    pub fn save_snapshot(&mut self) -> io::Result<u64> {
+        let t = self.send(REQ_SNAPSHOT, |_| Ok(()))?;
+        match self.wait(t)? {
+            Response::Snapshotted(b) => Ok(b),
+            Response::Error(e) => Err(io::Error::other(e)),
+            other => Err(invalid(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn metrics(&mut self) -> io::Result<WireMetrics> {
+        let t = self.send(REQ_METRICS, |_| Ok(()))?;
+        match self.wait(t)? {
+            Response::Metrics(m) => Ok(m),
+            Response::Error(e) => Err(io::Error::other(e)),
+            other => Err(invalid(format!("unexpected response {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::ServerConfig;
+    use crate::data::synthetic::QuerySimConfig;
+
+    fn tiny_cluster(n: usize, seed: u64) -> (QuerySimConfig, Arc<Server>) {
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = n;
+        let data = cfg.generate(seed);
+        let server = Arc::new(Server::start(
+            &data,
+            &ServerConfig { n_shards: 2, ..Default::default() },
+        ));
+        (cfg, server)
+    }
+
+    #[test]
+    fn query_and_params_roundtrip_the_wire_encoding() {
+        let q = HybridQuery {
+            sparse: crate::types::sparse::SparseVector::new(
+                vec![1, 5, 9],
+                vec![0.25, -1.5, 3.0],
+            ),
+            dense: vec![0.5, -0.5, 2.0],
+        };
+        let params = SearchParams::new(7).with_alpha(3.5).with_beta(1.5);
+        let mut buf = Vec::new();
+        {
+            let mut w = BinWriter::raw(&mut buf);
+            write_params(&mut w, &params).unwrap();
+            write_query(&mut w, &q).unwrap();
+        }
+        let mut r = BinReader::raw_with_limit(&buf[..], buf.len() as u64);
+        let p2 = read_params(&mut r).unwrap();
+        let q2 = read_query(&mut r).unwrap();
+        assert_eq!(p2.h, 7);
+        assert_eq!(p2.alpha, 3.5);
+        assert_eq!(p2.beta, 1.5);
+        assert_eq!(q2.sparse, q.sparse);
+        assert_eq!(q2.dense, q.dense);
+    }
+
+    #[test]
+    fn malformed_payload_answers_error_and_keeps_connection() {
+        // A frame whose payload is garbage (unknown kind) must get an
+        // error response on the same connection, after which a valid
+        // request on that SAME connection still serves: frame
+        // boundaries isolate payload damage.
+        let (cfg, server) = tiny_cluster(120, 31);
+        let mut net =
+            NetServer::bind("127.0.0.1:0", Arc::clone(&server), NetConfig::default())
+                .unwrap();
+        let stream = TcpStream::connect(net.local_addr()).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        // kind 0x63 does not exist; id = 5
+        let garbage = encode_frame(0x63, 5, |w| w.u32(0xDEAD));
+        write_frame(&mut w, &garbage).unwrap();
+        w.flush().unwrap();
+        let resp = read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        let (id, resp) = decode_response(&resp).unwrap();
+        assert_eq!(id, 5);
+        assert!(matches!(resp, Response::Error(_)));
+        // Same connection, now a well-formed metrics request.
+        let req = encode_frame(REQ_METRICS, 6, |_| Ok(()));
+        write_frame(&mut w, &req).unwrap();
+        w.flush().unwrap();
+        let resp = read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        let (id, resp) = decode_response(&resp).unwrap();
+        assert_eq!(id, 6);
+        assert!(matches!(resp, Response::Metrics(_)));
+        // And the cluster still answers real queries.
+        let mut client = Client::connect(net.local_addr()).unwrap();
+        let q = cfg.generate_queries(32, 1).remove(0);
+        let hits = client.search(&q, &SearchParams::new(5)).unwrap();
+        assert_eq!(hits.len(), 5);
+        drop(client);
+        net.shutdown();
+    }
+
+    #[test]
+    fn truncated_body_payload_answers_error_with_request_id() {
+        // Well-framed but the body lies: REQ_DELETE with no doc id.
+        let (_, server) = tiny_cluster(80, 33);
+        let mut net =
+            NetServer::bind("127.0.0.1:0", server, NetConfig::default())
+                .unwrap();
+        let stream = TcpStream::connect(net.local_addr()).unwrap();
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        let mut r = BufReader::new(stream);
+        let req = encode_frame(REQ_DELETE, 9, |_| Ok(())); // missing u32
+        write_frame(&mut w, &req).unwrap();
+        w.flush().unwrap();
+        let resp = read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().unwrap();
+        let (id, resp) = decode_response(&resp).unwrap();
+        assert_eq!(id, 9);
+        assert!(matches!(resp, Response::Error(_)));
+        net.shutdown();
+    }
+}

@@ -4,6 +4,7 @@
 
 use std::io;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 use crate::coordinator::batcher::BatchPolicy;
@@ -98,8 +99,32 @@ impl Default for ServerConfig {
 pub struct Server {
     router: Router,
     pub metrics: LatencyRecorder,
-    n: usize,
+    /// Cluster-wide live doc count. Atomic so mutations work through a
+    /// shared `&self` (the network layer serves one `Arc<Server>` from
+    /// many connection threads).
+    n: AtomicUsize,
     snapshot_dir: Option<PathBuf>,
+    /// Coalescing policy the network front door serves with (see
+    /// `coordinator::net`): single-query requests from concurrent
+    /// connections accumulate under it before flushing as one
+    /// `search_batch`.
+    batch: BatchPolicy,
+}
+
+/// Validate the operator-supplied batch policy; keep serving on a bad
+/// value but say so (a silent `max_batch = 0` was the classic dead
+/// knob).
+fn checked_policy(p: BatchPolicy) -> BatchPolicy {
+    match p.validate() {
+        Ok(()) => p,
+        Err(why) => {
+            eprintln!(
+                "[server] invalid ServerConfig::batch ({why}); \
+                 coalescing disabled (max_batch = 1)"
+            );
+            p.normalized()
+        }
+    }
 }
 
 /// The per-shard mutability knobs a [`ServerConfig`] implies.
@@ -138,8 +163,9 @@ impl Server {
         Server {
             router: Router::new(shards),
             metrics: LatencyRecorder::new(),
-            n,
+            n: AtomicUsize::new(n),
             snapshot_dir: config.snapshot_dir.clone(),
+            batch: checked_policy(config.batch),
         }
     }
 
@@ -193,8 +219,9 @@ impl Server {
         Ok(Server {
             router: Router::new(shards?),
             metrics: LatencyRecorder::new(),
-            n: live,
+            n: AtomicUsize::new(live),
             snapshot_dir: Some(dir.clone()),
+            batch: checked_policy(config.batch),
         })
     }
 
@@ -255,11 +282,16 @@ impl Server {
     }
 
     pub fn len(&self) -> usize {
-        self.n
+        self.n.load(Ordering::Relaxed)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.n == 0
+        self.len() == 0
+    }
+
+    /// The (validated) coalescing policy this cluster serves with.
+    pub fn batch_policy(&self) -> BatchPolicy {
+        self.batch
     }
 
     /// Serve a single query (latency recorded).
@@ -303,23 +335,23 @@ impl Server {
     /// write buffer until the next seal). Malformed payloads (dimension
     /// mismatch) are rejected without touching the cluster.
     pub fn upsert(
-        &mut self,
+        &self,
         id: u32,
         sparse: SparseVector,
         dense: Vec<f32>,
     ) -> UpsertOutcome {
         let outcome = self.router.upsert(id, sparse, dense);
         if outcome == UpsertOutcome::Inserted {
-            self.n += 1;
+            self.n.fetch_add(1, Ordering::Relaxed);
         }
         outcome
     }
 
     /// Delete document `id`; returns false if it wasn't present.
-    pub fn delete(&mut self, id: u32) -> bool {
+    pub fn delete(&self, id: u32) -> bool {
         let applied = self.router.delete(id);
         if applied {
-            self.n -= 1;
+            self.n.fetch_sub(1, Ordering::Relaxed);
         }
         applied
     }

@@ -6,13 +6,15 @@
 //!   table3      run the QuerySim-sim comparison (paper Table 3)
 //!   fig4        print the cache-line cost model curves (paper Figure 4)
 //!   fig5        print QuerySim-sim statistics (paper Figure 5 / Table 1)
-//!   serve       start the sharded serving engine and drive load
+//!   serve       start the sharded serving engine; drive load in-process
+//!               or listen on TCP (--listen)
+//!   query       drive a remote hybrid-ip server over TCP
 //!   runtime     smoke-test the AOT XLA artifacts through PJRT
 //!
 //! Every subcommand takes `--help`.
 
 use hybrid_ip::benchkit::Table;
-use hybrid_ip::coordinator::{Server, ServerConfig};
+use hybrid_ip::coordinator::{Client, NetConfig, NetServer, Server, ServerConfig};
 use hybrid_ip::data::stats;
 use hybrid_ip::data::synthetic::QuerySimConfig;
 use hybrid_ip::eval::tables::{render, run_table, TableSpec};
@@ -32,10 +34,11 @@ fn main() {
         "fig4" => cmd_fig4(prog, rest),
         "fig5" => cmd_fig5(prog, rest),
         "serve" => cmd_serve(prog, rest),
+        "query" => cmd_query(prog, rest),
         "runtime" => cmd_runtime(prog, rest),
         _ => {
             eprintln!(
-                "usage: {prog} <gen-data|table2|table3|fig4|fig5|serve|runtime> [flags]\n\
+                "usage: {prog} <gen-data|table2|table3|fig4|fig5|serve|query|runtime> [flags]\n\
                  run `{prog} <cmd> --help` for details"
             );
             2
@@ -209,6 +212,19 @@ fn cmd_serve(prog: &str, rest: &[String]) -> i32 {
         .flag("h", "20", "result count")
         .flag("seed", "5", "seed")
         .flag(
+            "listen",
+            "",
+            "serve over TCP on this address (e.g. 127.0.0.1:7411) \
+             instead of driving load in-process; `query` is the client",
+        )
+        .flag("max-conns", "64", "TCP connection cap (with --listen)")
+        .flag("max-batch", "8", "coalescer size trigger (with --listen)")
+        .flag(
+            "max-delay-us",
+            "2000",
+            "coalescer delay trigger, microseconds (with --listen)",
+        )
+        .flag(
             "snapshot-dir",
             "",
             "restore from this snapshot dir if it has a manifest, else \
@@ -237,6 +253,12 @@ fn cmd_serve(prog: &str, rest: &[String]) -> i32 {
         n_shards: args.usize("shards"),
         row_retention: retention,
         snapshot_dir: snapshot_dir.clone(),
+        batch: hybrid_ip::coordinator::batcher::BatchPolicy {
+            max_batch: args.usize("max-batch"),
+            max_delay: std::time::Duration::from_micros(
+                args.u64("max-delay-us"),
+            ),
+        },
         ..Default::default()
     };
     let cfg = QuerySimConfig::scaled(args.usize("n"));
@@ -285,16 +307,121 @@ fn cmd_serve(prog: &str, rest: &[String]) -> i32 {
         server.len(),
         t.elapsed().as_secs_f64()
     );
-    let queries = cfg.related_queries(
-        &data,
-        args.u64("seed") ^ 9,
-        args.usize("queries"),
-    );
-    let params = SearchParams::new(args.usize("h"));
-    for q in &queries {
-        server.search(q, &params);
+    match args.str_("listen") {
+        "" => {
+            // Classic in-process load drive.
+            let queries = cfg.related_queries(
+                &data,
+                args.u64("seed") ^ 9,
+                args.usize("queries"),
+            );
+            let params = SearchParams::new(args.usize("h"));
+            for q in &queries {
+                server.search(q, &params);
+            }
+            println!("latency: {}", server.snapshot().line());
+            0
+        }
+        addr => {
+            // TCP front door; runs until killed.
+            let server = std::sync::Arc::new(server);
+            let net_cfg = NetConfig {
+                max_connections: args.usize("max-conns"),
+                ..Default::default()
+            };
+            match NetServer::bind(addr, server, net_cfg) {
+                Ok(mut net) => {
+                    println!(
+                        "listening on {} (batch policy: max_batch={} \
+                         max_delay={}us; `{prog} query --addr {}` to drive)",
+                        net.local_addr(),
+                        args.usize("max-batch"),
+                        args.u64("max-delay-us"),
+                        net.local_addr(),
+                    );
+                    net.serve_forever();
+                    0
+                }
+                Err(e) => {
+                    eprintln!("bind {addr} failed: {e}");
+                    1
+                }
+            }
+        }
     }
-    println!("latency: {}", server.snapshot().line());
+}
+
+fn cmd_query(prog: &str, rest: &[String]) -> i32 {
+    let spec = CliSpec::new(
+        "drive a remote hybrid-ip server (see `serve --listen`)",
+    )
+    .flag("addr", "127.0.0.1:7411", "server address")
+    .flag("n", "50000", "dataset scale the server was started with \
+          (shapes the synthetic queries)")
+    .flag("queries", "200", "queries to send")
+    .flag("h", "20", "result count")
+    .flag("seed", "5", "query seed")
+    .flag("pipeline", "16", "requests in flight per wave")
+    .switch("metrics", "fetch server-side metrics afterwards");
+    let args = parse_or_exit(spec, prog, rest);
+    let cfg = QuerySimConfig::scaled(args.usize("n"));
+    let queries =
+        cfg.generate_queries(args.u64("seed") ^ 9, args.usize("queries"));
+    let params = SearchParams::new(args.usize("h"));
+    let depth = args.usize("pipeline").max(1);
+    let mut client = match Client::connect(args.str_("addr")) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect {} failed: {e}", args.str_("addr"));
+            return 1;
+        }
+    };
+    let t = std::time::Instant::now();
+    let mut got = 0usize;
+    for wave in queries.chunks(depth) {
+        let mut tickets = Vec::with_capacity(wave.len());
+        for q in wave {
+            match client.send_search(q, &params) {
+                Ok(ticket) => tickets.push(ticket),
+                Err(e) => {
+                    eprintln!("send failed: {e}");
+                    return 1;
+                }
+            }
+        }
+        for ticket in tickets {
+            match client.wait(ticket) {
+                Ok(hybrid_ip::coordinator::net::Response::Hits(h)) => {
+                    got += usize::from(!h.is_empty());
+                }
+                Ok(other) => {
+                    eprintln!("unexpected response: {other:?}");
+                    return 1;
+                }
+                Err(e) => {
+                    eprintln!("request failed: {e}");
+                    return 1;
+                }
+            }
+        }
+    }
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "{got}/{} queries answered in {secs:.2}s ({:.0} qps, pipeline \
+         depth {depth})",
+        queries.len(),
+        queries.len() as f64 / secs.max(1e-9),
+    );
+    if args.bool("metrics") {
+        match client.metrics() {
+            Ok(m) => println!(
+                "server: n={} mean={:?} p50={:?} p99={:?} qps={:.1} \
+                 (lifetime {:.1})",
+                m.count, m.mean, m.p50, m.p99, m.qps, m.lifetime_qps
+            ),
+            Err(e) => eprintln!("metrics fetch failed: {e}"),
+        }
+    }
     0
 }
 

@@ -16,6 +16,14 @@
 //! can never trigger a multi-gigabyte allocation before the truncation
 //! is noticed. Malformed input yields `io::ErrorKind::InvalidData` (or
 //! `UnexpectedEof` from the underlying reader), never a panic or abort.
+//!
+//! On top of the file format, [`write_frame`]/[`read_frame`] give the
+//! same substrate a *stream* shape: `u32 LE length | payload` frames
+//! over any `Read`/`Write` (the network layer's unit of exchange, see
+//! `coordinator::net`). The reader enforces a caller-chosen ceiling on
+//! the length prefix **before** allocating, so a malformed or hostile
+//! prefix can never trigger an absurd allocation, and fills the payload
+//! in bounded chunks like the slice readers.
 
 use std::io::{self, Read, Seek, SeekFrom, Write};
 
@@ -30,6 +38,66 @@ const UNBOUNDED_SLICE_CAP: u64 = 1 << 40;
 /// Fill granularity for slice reads: corrupt lengths fail at the first
 /// missing chunk instead of after one huge up-front allocation.
 const READ_CHUNK: usize = 1 << 22; // 4 MiB
+
+/// Default ceiling on a single wire frame (32 MiB) — generous for a
+/// query batch, far below anything that could pressure the allocator.
+pub const DEFAULT_MAX_FRAME: u32 = 32 << 20;
+
+/// Write one length-prefixed frame: `u32 LE length | payload`. The
+/// caller flushes (frames are usually batched into one syscall).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(payload.len()).map_err(|_| {
+        invalid(format!("frame payload {} bytes > u32::MAX", payload.len()))
+    })?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)
+}
+
+/// Read one length-prefixed frame from a stream.
+///
+/// * `Ok(None)` — the stream ended *cleanly* before a new frame began
+///   (the peer hung up between frames).
+/// * `Ok(Some(payload))` — one complete frame.
+/// * `Err(InvalidData)` — the length prefix exceeds `max_len`
+///   (admission control: rejected before any payload allocation).
+/// * `Err(UnexpectedEof)` — the stream died mid-frame (truncated length
+///   prefix or payload).
+///
+/// The payload is filled in [`READ_CHUNK`] steps, so even an accepted
+/// length only allocates as the bytes actually arrive.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    max_len: u32,
+) -> io::Result<Option<Vec<u8>>> {
+    let mut len_bytes = [0u8; 4];
+    // First byte decides "clean EOF" vs "truncated frame".
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    len_bytes[0] = first[0];
+    r.read_exact(&mut len_bytes[1..])?;
+    let len = u32::from_le_bytes(len_bytes);
+    if len > max_len {
+        return Err(invalid(format!(
+            "frame length {len} exceeds cap {max_len}"
+        )));
+    }
+    let n = len as usize;
+    let mut buf = Vec::with_capacity(n.min(READ_CHUNK));
+    while buf.len() < n {
+        let take = (n - buf.len()).min(READ_CHUNK);
+        let old = buf.len();
+        buf.resize(old + take, 0);
+        r.read_exact(&mut buf[old..])?;
+    }
+    Ok(Some(buf))
+}
 
 pub struct BinWriter<W: Write> {
     w: W,
@@ -219,6 +287,13 @@ impl<R: Read> BinReader<R> {
     /// and `with_limit`).
     pub fn consumed(&self) -> u64 {
         self.consumed
+    }
+
+    /// Bytes the input is known to still hold (`None` when the total
+    /// size wasn't declared). Decoders over untrusted input use this to
+    /// sanity-check element counts before looping.
+    pub fn remaining(&self) -> Option<u64> {
+        self.remaining
     }
 
     fn fill(&mut self, buf: &mut [u8]) -> io::Result<()> {
@@ -540,5 +615,79 @@ mod tests {
     #[test]
     fn sized_reader_rejects_short_input() {
         assert!(BinReader::with_limit(Cursor::new(b"HY"), 2).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_multiple() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"alpha").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        write_frame(&mut wire, &[7u8; 300]).unwrap();
+        let mut r = Cursor::new(&wire);
+        assert_eq!(
+            read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().unwrap(),
+            b"alpha"
+        );
+        assert_eq!(
+            read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().unwrap(),
+            b""
+        );
+        assert_eq!(
+            read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().unwrap(),
+            vec![7u8; 300]
+        );
+        // clean end-of-stream between frames
+        assert!(read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_oversized_length_rejected_before_allocation() {
+        // Length prefix claims 1 GiB; cap is 1 KiB — must fail as
+        // InvalidData without touching (nonexistent) payload bytes.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&wire), 1024).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn frame_truncated_payload_is_unexpected_eof() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[1u8; 64]).unwrap();
+        wire.truncate(wire.len() - 10);
+        let err = read_frame(&mut Cursor::new(&wire), DEFAULT_MAX_FRAME)
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn frame_truncated_length_prefix_is_unexpected_eof() {
+        // 2 of the 4 length bytes arrived, then the peer died: that is
+        // a mid-frame disconnect, not a clean end-of-stream.
+        let wire = [0x10u8, 0x00];
+        let err = read_frame(&mut Cursor::new(&wire), DEFAULT_MAX_FRAME)
+            .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn frame_payload_parses_with_raw_limited_reader() {
+        // The intended pairing: frame payload bytes → raw_with_limit
+        // reader whose length checks are bounded by the frame size.
+        let mut payload = Vec::new();
+        {
+            let mut w = BinWriter::raw(&mut payload);
+            w.u8(3).unwrap();
+            w.slice_u32(&[4, 5, 6]).unwrap();
+        }
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &payload).unwrap();
+        let got = read_frame(&mut Cursor::new(&wire), DEFAULT_MAX_FRAME)
+            .unwrap()
+            .unwrap();
+        let mut r = BinReader::raw_with_limit(&got[..], got.len() as u64);
+        assert_eq!(r.u8().unwrap(), 3);
+        assert_eq!(r.slice_u32().unwrap(), vec![4, 5, 6]);
+        assert_eq!(r.remaining(), Some(0));
     }
 }

@@ -121,7 +121,7 @@ fn batcher_flushes_under_mixed_load() {
 #[test]
 fn cluster_mutates_online_while_serving() {
     let (cfg, data) = dataset(600, 31);
-    let mut server = Server::start(
+    let server = Server::start(
         &data,
         &ServerConfig { n_shards: 4, ..Default::default() },
     );

@@ -354,7 +354,7 @@ fn server_snapshot_restore_bit_identical_and_routable() {
         snapshot_dir: Some(dir.clone()),
         ..Default::default()
     };
-    let mut server = Server::start(&data, &config);
+    let server = Server::start(&data, &config);
     // mutate before the snapshot so the saved state isn't a fresh build
     let n = data.len();
     for i in 0..20 {
