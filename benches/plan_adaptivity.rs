@@ -1,0 +1,192 @@
+//! Plan adaptivity: Fixed vs Adaptive latency + recall across workload
+//! shapes the fixed pipeline cannot serve efficiently — dense-only
+//! traffic (nnz = 0, the sparse scan is pure waste), sparse-dominant
+//! traffic (zero dense component, the full LUT16 scan is pure waste),
+//! and well-formed mixed traffic (where Adaptive must cost nothing).
+//!
+//! Besides the printed table, writes a machine-readable
+//! `target/BENCH_plan.json` so CI accumulates a bench trajectory:
+//! per (workload, mode): median ms, qps, recall@10, plan-kind counts.
+//!
+//!     cargo bench --bench plan_adaptivity
+//!     BENCH_N=200000 BENCH_Q=256 cargo bench --bench plan_adaptivity
+
+use std::collections::BTreeMap;
+
+use hybrid_ip::benchkit::{self, bench, BenchConfig, Table};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::eval::ground_truth::exact_top_k;
+use hybrid_ip::eval::recall::recall_at;
+use hybrid_ip::hybrid::batch::BatchEngine;
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::plan::PlanMode;
+use hybrid_ip::types::hybrid::HybridQuery;
+use hybrid_ip::types::sparse::SparseVector;
+use hybrid_ip::util::json::Json;
+use hybrid_ip::util::threadpool::default_threads;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn main() {
+    let n = env_usize("BENCH_N", 50_000);
+    let n_queries = env_usize("BENCH_Q", 128);
+    benchkit::preamble(
+        "plan_adaptivity",
+        &format!("n={n} batch={n_queries} (BENCH_N/BENCH_Q to change)"),
+    );
+    let cfg = QuerySimConfig::scaled(n);
+    let data = cfg.generate(0x9A11);
+    let t = std::time::Instant::now();
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    println!(
+        "[plan_adaptivity] index built in {:.1}s \
+         (alpha_fit={:.2}, E[lines] sorted/unsorted = {:.0}/{:.0})",
+        t.elapsed().as_secs_f64(),
+        index.stats.alpha_fit,
+        index.stats.expected_lines_sorted,
+        index.stats.expected_lines_unsorted,
+    );
+
+    // Three workload shapes over the same corpus.
+    let mixed = cfg.related_queries(&data, 0x9A12, n_queries);
+    let dense_only: Vec<HybridQuery> = cfg
+        .generate_queries(0x9A13, n_queries)
+        .into_iter()
+        .map(|mut q| {
+            q.sparse = SparseVector::default();
+            q
+        })
+        .collect();
+    let sparse_only: Vec<HybridQuery> = (0..n_queries)
+        .map(|i| HybridQuery {
+            sparse: data.sparse.row_vec(i % data.len()),
+            dense: vec![0.0; data.dense_dim()],
+        })
+        .collect();
+    let workloads: [(&str, &[HybridQuery]); 3] = [
+        ("mixed", &mixed),
+        ("dense_only", &dense_only),
+        ("sparse_only", &sparse_only),
+    ];
+
+    let engine = BatchEngine::new(&index, default_threads());
+    let base = SearchParams::new(10).with_alpha(5.0);
+    let bcfg = BenchConfig::default();
+    let mut table = Table::new(
+        "Plan adaptivity: Fixed vs Adaptive per workload shape",
+        &["workload", "mode", "med ms/batch", "qps", "recall@10", "plans f/h/d/s"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for (name, queries) in workloads {
+        // Ground truth once per workload.
+        let truth: Vec<Vec<u32>> =
+            queries.iter().map(|q| exact_top_k(&data, q, 10)).collect();
+        let mut fixed_hits = None;
+        for mode in [PlanMode::Fixed, PlanMode::Adaptive] {
+            let params = base.with_plan_mode(mode);
+            let out = engine.search_batch(&index, queries, &params);
+            let plans = out.stats.per_query.plans;
+            let mut recall = 0.0;
+            for (t, hs) in truth.iter().zip(&out.hits) {
+                let ids: Vec<u32> = hs.iter().map(|h| h.id).collect();
+                recall += recall_at(t, &ids, 10);
+            }
+            recall /= queries.len() as f64;
+            // Identity guard: on the degenerate workloads the skips are
+            // lossless by construction, and on mixed traffic Adaptive
+            // plans Hybrid — so hits must be bit-identical to Fixed.
+            if let Some(want) = &fixed_hits {
+                for (qi, (a, b)) in want.iter().zip(&out.hits).enumerate()
+                {
+                    assert_eq!(
+                        a.len(),
+                        b.len(),
+                        "{name} query {qi}: result length diverged"
+                    );
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.id, y.id, "{name} q{qi}");
+                        assert_eq!(
+                            x.score.to_bits(),
+                            y.score.to_bits(),
+                            "{name} q{qi}"
+                        );
+                    }
+                }
+            } else {
+                fixed_hits = Some(out.hits);
+            }
+            let stats = bench(
+                &format!("{name}/{mode:?}"),
+                bcfg,
+                || {
+                    std::hint::black_box(
+                        engine.search_batch(&index, queries, &params),
+                    );
+                },
+            );
+            let qps = stats.throughput(queries.len() as f64);
+            table.row(&[
+                name.to_string(),
+                format!("{mode:?}"),
+                format!("{:.2}", stats.median_ms()),
+                format!("{qps:.0}"),
+                format!("{recall:.3}"),
+                format!(
+                    "{}/{}/{}/{}",
+                    plans.fixed,
+                    plans.hybrid,
+                    plans.dense_only,
+                    plans.sparse_only
+                ),
+            ]);
+            let mut plan_obj = BTreeMap::new();
+            plan_obj.insert("fixed".into(), num(plans.fixed as f64));
+            plan_obj.insert("hybrid".into(), num(plans.hybrid as f64));
+            plan_obj
+                .insert("dense_only".into(), num(plans.dense_only as f64));
+            plan_obj
+                .insert("sparse_only".into(), num(plans.sparse_only as f64));
+            let mut row = BTreeMap::new();
+            row.insert("workload".into(), Json::Str(name.into()));
+            row.insert("mode".into(), Json::Str(format!("{mode:?}")));
+            row.insert("median_ms".into(), num(stats.median_ms()));
+            row.insert("qps".into(), num(qps));
+            row.insert("recall_at_10".into(), num(recall));
+            row.insert("plans".into(), Json::Obj(plan_obj));
+            rows.push(Json::Obj(row));
+        }
+    }
+    table.print();
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("plan_adaptivity".into()));
+    doc.insert("n".into(), num(n as f64));
+    doc.insert("queries".into(), num(n_queries as f64));
+    doc.insert("threads".into(), num(default_threads() as f64));
+    doc.insert("alpha_fit".into(), num(index.stats.alpha_fit));
+    doc.insert(
+        "expected_lines_sorted".into(),
+        num(index.stats.expected_lines_sorted),
+    );
+    doc.insert(
+        "expected_lines_unsorted".into(),
+        num(index.stats.expected_lines_unsorted),
+    );
+    doc.insert("rows".into(), Json::Arr(rows));
+    std::fs::create_dir_all("target").ok();
+    let path = "target/BENCH_plan.json";
+    std::fs::write(path, Json::Obj(doc).to_string())
+        .expect("write BENCH_plan.json");
+    println!("[plan_adaptivity] wrote {path}");
+}

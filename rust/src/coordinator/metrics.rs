@@ -10,10 +10,49 @@
 //! QPS is *windowed* (since the previous snapshot) so an idle stretch
 //! doesn't dilute it forever; the lifetime rate is reported alongside.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::hybrid::plan::PlanCounts;
 use crate::util::rng::Rng;
+
+/// Shared per-plan-kind counters (lifetime totals): bumped by the
+/// router as shard replies are gathered, read into
+/// [`MetricsSnapshot::plans`]. One count per stage-1 pipeline execution,
+/// i.e. per (query × segment × shard) — the unit the planner decides at.
+#[derive(Debug, Default)]
+pub struct PlanCounters {
+    fixed: AtomicU64,
+    hybrid: AtomicU64,
+    dense_only: AtomicU64,
+    sparse_only: AtomicU64,
+}
+
+impl PlanCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, c: &PlanCounts) {
+        // Relaxed: monotone counters, no ordering dependencies.
+        self.fixed.fetch_add(c.fixed as u64, Ordering::Relaxed);
+        self.hybrid.fetch_add(c.hybrid as u64, Ordering::Relaxed);
+        self.dense_only
+            .fetch_add(c.dense_only as u64, Ordering::Relaxed);
+        self.sparse_only
+            .fetch_add(c.sparse_only as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PlanCounts {
+        PlanCounts {
+            fixed: self.fixed.load(Ordering::Relaxed) as usize,
+            hybrid: self.hybrid.load(Ordering::Relaxed) as usize,
+            dense_only: self.dense_only.load(Ordering::Relaxed) as usize,
+            sparse_only: self.sparse_only.load(Ordering::Relaxed) as usize,
+        }
+    }
+}
 
 /// Reservoir slots kept by [`LatencyRecorder::new`]. Enough for stable
 /// tail percentiles (p99 rests on ~40 samples) at 32 KiB resident.
@@ -141,6 +180,7 @@ impl LatencyRecorder {
             max: s.max,
             qps: s.window_count as f64 / window_secs,
             lifetime_qps: s.seen as f64 / lifetime_secs,
+            plans: PlanCounts::default(),
         };
         s.window_count = 0;
         s.window_start = now;
@@ -162,6 +202,9 @@ pub struct MetricsSnapshot {
     pub qps: f64,
     /// Throughput since construction.
     pub lifetime_qps: f64,
+    /// Lifetime per-plan-kind pipeline execution counts (filled by the
+    /// serving engine — a bare `LatencyRecorder` reports zeros).
+    pub plans: PlanCounts,
 }
 
 impl MetricsSnapshot {
@@ -169,7 +212,7 @@ impl MetricsSnapshot {
         use crate::util::timer::fmt_duration;
         format!(
             "n={} mean={} p50={} p95={} p99={} max={} qps={:.1} \
-             (lifetime {:.1})",
+             (lifetime {:.1}) plans[fixed={} hybrid={} dense={} sparse={}]",
             self.count,
             fmt_duration(self.mean),
             fmt_duration(self.p50),
@@ -177,7 +220,11 @@ impl MetricsSnapshot {
             fmt_duration(self.p99),
             fmt_duration(self.max),
             self.qps,
-            self.lifetime_qps
+            self.lifetime_qps,
+            self.plans.fixed,
+            self.plans.hybrid,
+            self.plans.dense_only,
+            self.plans.sparse_only,
         )
     }
 }
@@ -254,6 +301,25 @@ mod tests {
         assert_eq!(sa.p95, sb.p95);
         assert_eq!(sa.p99, sb.p99);
         assert!(a.samples_held() <= 64);
+    }
+
+    #[test]
+    fn plan_counters_accumulate_and_snapshot() {
+        let c = PlanCounters::new();
+        c.add(&PlanCounts { fixed: 2, hybrid: 1, ..Default::default() });
+        c.add(&PlanCounts {
+            dense_only: 3,
+            sparse_only: 4,
+            ..Default::default()
+        });
+        let s = c.snapshot();
+        assert_eq!(s.fixed, 2);
+        assert_eq!(s.hybrid, 1);
+        assert_eq!(s.dense_only, 3);
+        assert_eq!(s.sparse_only, 4);
+        assert_eq!(s.total(), 10);
+        // a bare recorder reports zero plan counts
+        assert_eq!(LatencyRecorder::new().snapshot().plans.total(), 0);
     }
 
     #[test]

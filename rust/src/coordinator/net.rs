@@ -13,8 +13,8 @@
 //!
 //! | kind                | body                                        |
 //! |---------------------|---------------------------------------------|
-//! | `REQ_SEARCH`        | params, query (sparse dims/vals, dense)     |
-//! | `REQ_SEARCH_BATCH`  | params, n, then n queries                   |
+//! | `REQ_SEARCH`        | params (incl. u8 plan mode), query          |
+//! | `REQ_SEARCH_BATCH`  | params (incl. u8 plan mode), n, n queries   |
 //! | `REQ_UPSERT`        | doc id (u32), sparse, dense                 |
 //! | `REQ_DELETE`        | doc id (u32)                                |
 //! | `REQ_FLUSH`         | —                                           |
@@ -26,8 +26,17 @@
 //! | `RESP_DELETE`       | u8 applied                                  |
 //! | `RESP_FLUSH`        | u64 live docs                               |
 //! | `RESP_SNAPSHOT`     | u64 snapshot bytes                          |
-//! | `RESP_METRICS`      | counts + durations (u64 nanos) + QPS (f64)  |
+//! | `RESP_METRICS`      | counts + durations (u64 nanos) + QPS (f64) + 4 × u64 per-plan-kind counts |
 //! | `RESP_ERROR`        | string message                              |
+//!
+//! # Versioning
+//!
+//! The wire protocol is version-locked to the binary: client and
+//! server are expected to come from the same build (the `serve` and
+//! `query` subcommands of one binary), and request/response bodies may
+//! change shape between commits without negotiation — unlike the
+//! snapshot format, which carries a version header and a compat
+//! window. Mixed-build peers fail with a decode error, not silently.
 //!
 //! # Admission control
 //!
@@ -68,6 +77,7 @@ use crate::coordinator::server::Server;
 use crate::coordinator::shard::UpsertOutcome;
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::persist;
+use crate::hybrid::plan::{PlanCounts, PlanMode};
 use crate::types::hybrid::HybridQuery;
 use crate::util::binio::{
     read_frame, write_frame, BinReader, BinWriter, DEFAULT_MAX_FRAME,
@@ -127,7 +137,11 @@ fn write_params<W: io::Write>(
 ) -> io::Result<()> {
     w.usize(p.h)?;
     w.f32(p.alpha)?;
-    w.f32(p.beta)
+    w.f32(p.beta)?;
+    w.u8(match p.plan_mode {
+        PlanMode::Fixed => 0,
+        PlanMode::Adaptive => 1,
+    })
 }
 
 /// Ceiling on the stage-1/stage-2 candidate counts a wire request may
@@ -142,6 +156,11 @@ fn read_params<R: io::Read>(
     let h = r.usize()?;
     let alpha = r.f32()?;
     let beta = r.f32()?;
+    let plan_mode = match r.u8()? {
+        0 => PlanMode::Fixed,
+        1 => PlanMode::Adaptive,
+        b => return Err(invalid(format!("unknown plan mode byte {b}"))),
+    };
     if h == 0 || h > (1 << 16) {
         return Err(invalid(format!("implausible result count h={h}")));
     }
@@ -149,7 +168,7 @@ fn read_params<R: io::Read>(
     {
         return Err(invalid("overfetch factors must be finite and >= 0"));
     }
-    let params = SearchParams { h, alpha, beta };
+    let params = SearchParams { h, alpha, beta, plan_mode };
     // Bound the *derived* candidate counts: they size per-shard top-k
     // heaps, so a hostile (h, α) pair in a tiny frame must not be able
     // to demand a multi-gigabyte allocation. (`ceil() as usize` is a
@@ -250,6 +269,8 @@ pub struct WireMetrics {
     pub max: Duration,
     pub qps: f64,
     pub lifetime_qps: f64,
+    /// Cluster-wide per-plan-kind pipeline executions (lifetime).
+    pub plans: PlanCounts,
 }
 
 /// A decoded server response (exposed so tests and tooling can speak
@@ -302,6 +323,12 @@ pub fn decode_response(payload: &[u8]) -> io::Result<(u64, Response)> {
             max: Duration::from_nanos(r.u64()?),
             qps: r.f64()?,
             lifetime_qps: r.f64()?,
+            plans: PlanCounts {
+                fixed: r.u64()? as usize,
+                hybrid: r.u64()? as usize,
+                dense_only: r.u64()? as usize,
+                sparse_only: r.u64()? as usize,
+            },
         }),
         RESP_ERROR => Response::Error(r.str_()?),
         k => return Err(invalid(format!("unknown response kind {k:#x}"))),
@@ -654,7 +681,11 @@ fn handle_request(
                     w.u64(m.p99.as_nanos() as u64)?;
                     w.u64(m.max.as_nanos() as u64)?;
                     w.f64(m.qps)?;
-                    w.f64(m.lifetime_qps)
+                    w.f64(m.lifetime_qps)?;
+                    w.u64(m.plans.fixed as u64)?;
+                    w.u64(m.plans.hybrid as u64)?;
+                    w.u64(m.plans.dense_only as u64)?;
+                    w.u64(m.plans.sparse_only as u64)
                 }));
             }
             k => {
@@ -689,11 +720,12 @@ fn writer_loop(stream: TcpStream, rx: &Receiver<Vec<u8>>) {
 
 /// `SearchParams` equality for coalescing (bit-compare the floats: two
 /// queries share a flush only if the engine would treat them
-/// identically).
+/// identically — plan mode included, since it changes the stage set).
 fn same_params(a: &SearchParams, b: &SearchParams) -> bool {
     a.h == b.h
         && a.alpha.to_bits() == b.alpha.to_bits()
         && a.beta.to_bits() == b.beta.to_bits()
+        && a.plan_mode == b.plan_mode
 }
 
 /// The coalescer: one thread, one [`Batcher`], flushes driven by the
@@ -1005,7 +1037,8 @@ mod tests {
             ),
             dense: vec![0.5, -0.5, 2.0],
         };
-        let params = SearchParams::new(7).with_alpha(3.5).with_beta(1.5);
+        let params =
+            SearchParams::new(7).with_alpha(3.5).with_beta(1.5).adaptive();
         let mut buf = Vec::new();
         {
             let mut w = BinWriter::raw(&mut buf);
@@ -1018,8 +1051,20 @@ mod tests {
         assert_eq!(p2.h, 7);
         assert_eq!(p2.alpha, 3.5);
         assert_eq!(p2.beta, 1.5);
+        assert_eq!(p2.plan_mode, PlanMode::Adaptive);
         assert_eq!(q2.sparse, q.sparse);
         assert_eq!(q2.dense, q.dense);
+        // an unknown plan-mode byte is rejected, not defaulted
+        let mut bad = Vec::new();
+        {
+            let mut w = BinWriter::raw(&mut bad);
+            w.usize(7).unwrap();
+            w.f32(1.0).unwrap();
+            w.f32(1.0).unwrap();
+            w.u8(9).unwrap();
+        }
+        let mut r = BinReader::raw_with_limit(&bad[..], bad.len() as u64);
+        assert!(read_params(&mut r).is_err());
     }
 
     #[test]

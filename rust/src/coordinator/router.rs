@@ -11,11 +11,13 @@ use std::sync::mpsc::channel;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::coordinator::metrics::PlanCounters;
 use crate::coordinator::shard::{
     ShardBatchRequest, ShardDelete, ShardFlush, ShardHandle, ShardRequest,
     ShardSnapshot, ShardUpsert, UpsertOutcome,
 };
 use crate::hybrid::config::SearchParams;
+use crate::hybrid::plan::PlanCounts;
 use crate::hybrid::topk::merge_topk;
 use crate::types::hybrid::HybridQuery;
 use crate::types::sparse::SparseVector;
@@ -23,12 +25,25 @@ use crate::types::sparse::SparseVector;
 pub struct Router {
     shards: Vec<ShardHandle>,
     next_tag: AtomicU64,
+    /// Cluster-wide per-plan-kind counters, folded in from shard
+    /// replies as they are gathered (surfaced in `MetricsSnapshot`).
+    plans: PlanCounters,
 }
 
 impl Router {
     pub fn new(shards: Vec<ShardHandle>) -> Self {
         assert!(!shards.is_empty());
-        Router { shards, next_tag: AtomicU64::new(0) }
+        Router {
+            shards,
+            next_tag: AtomicU64::new(0),
+            plans: PlanCounters::new(),
+        }
+    }
+
+    /// Lifetime per-plan-kind pipeline execution counts across every
+    /// gathered search reply.
+    pub fn plan_counts(&self) -> PlanCounts {
+        self.plans.snapshot()
     }
 
     pub fn n_shards(&self) -> usize {
@@ -78,6 +93,7 @@ impl Router {
         let mut lists = Vec::with_capacity(self.shards.len());
         while let Ok(reply) = reply_rx.recv() {
             debug_assert_eq!(reply.tag, tag);
+            self.plans.add(&reply.plan_counts);
             lists.push(reply.hits);
         }
         self.check_gather(lists.len(), "search");
@@ -114,6 +130,7 @@ impl Router {
             vec![Vec::with_capacity(self.shards.len()); queries.len()];
         while let Ok(reply) = reply_rx.recv() {
             debug_assert_eq!(reply.tag, tag);
+            self.plans.add(&reply.plan_counts);
             replies += 1;
             for (i, hits) in reply.hits.into_iter().enumerate() {
                 lists_per_query[i].push(hits);

@@ -363,8 +363,13 @@ impl Server {
         self.router.flush()
     }
 
+    /// Latency/throughput summary plus the cluster-wide per-plan-kind
+    /// counters (lifetime totals: one count per stage-1 pipeline
+    /// execution, i.e. per query × segment × shard).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut m = self.metrics.snapshot();
+        m.plans = self.router.plan_counts();
+        m
     }
 }
 
@@ -423,6 +428,40 @@ mod tests {
         }
         // batch metrics recorded one sample per query
         assert_eq!(server.snapshot().count, 2 * queries.len());
+    }
+
+    #[test]
+    fn adaptive_serving_counts_plans_and_matches_fixed() {
+        use crate::types::sparse::SparseVector;
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 300;
+        let data = cfg.generate(17);
+        let server = Server::start(
+            &data,
+            &ServerConfig { n_shards: 3, ..Default::default() },
+        );
+        let mut queries = cfg.related_queries(&data, 18, 4);
+        queries.push(crate::types::hybrid::HybridQuery {
+            sparse: SparseVector::default(),
+            dense: vec![0.2; data.dense_dim()],
+        });
+        queries.push(crate::types::hybrid::HybridQuery {
+            sparse: data.sparse.row_vec(0),
+            dense: vec![0.0; data.dense_dim()],
+        });
+        let fixed = SearchParams::new(10).with_alpha(3.0);
+        let adaptive = fixed.adaptive();
+        for q in &queries {
+            let a = server.search(q, &fixed);
+            let b = server.search(q, &adaptive);
+            assert_eq!(a, b, "adaptive serving must match fixed here");
+        }
+        let m = server.snapshot();
+        // each query planned once per shard, in both modes
+        assert_eq!(m.plans.total(), 2 * queries.len() * 3);
+        assert_eq!(m.plans.fixed, queries.len() * 3);
+        assert!(m.plans.dense_only >= 3, "nnz=0 query skipped per shard");
+        assert!(m.plans.sparse_only >= 1, "zero-dense query skipped");
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::thread::JoinHandle;
 
 use crate::hybrid::config::{IndexConfig, SearchParams};
 use crate::hybrid::mutable::{MutableConfig, MutableHybridIndex};
+use crate::hybrid::plan::PlanCounts;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
 use crate::types::sparse::SparseVector;
 
@@ -36,6 +37,10 @@ pub struct ShardReply {
     pub shard_id: usize,
     /// (global id, score), best first.
     pub hits: Vec<(u32, f32)>,
+    /// Per-plan-kind pipeline executions this request caused on the
+    /// shard (one per segment searched); the router folds these into
+    /// the cluster counters.
+    pub plan_counts: PlanCounts,
 }
 
 /// A whole query batch routed to one shard (the batcher's flush unit).
@@ -53,6 +58,8 @@ pub struct ShardBatchReply {
     pub shard_id: usize,
     /// `hits[i]` answers `queries[i]`: (global id, score), best first.
     pub hits: Vec<Vec<(u32, f32)>>,
+    /// Aggregated per-plan-kind pipeline executions for the batch.
+    pub plan_counts: PlanCounts,
 }
 
 /// Insert-or-replace one document (global id) on its owner shard.
@@ -229,8 +236,9 @@ impl ShardHandle {
                     index.try_install_merge();
                     match msg {
                         ShardMsg::One(req) => {
-                            let hits = index
-                                .search(&req.query, &req.params)
+                            let (hits, stats) = index
+                                .search_stats(&req.query, &req.params);
+                            let hits = hits
                                 .into_iter()
                                 .map(|h| (h.id, h.score))
                                 .collect();
@@ -238,11 +246,15 @@ impl ShardHandle {
                                 tag: req.tag,
                                 shard_id,
                                 hits,
+                                plan_counts: stats.plans,
                             });
                         }
                         ShardMsg::Batch(req) => {
-                            let hits = index
-                                .search_batch(&req.queries, &req.params)
+                            let (hits, stats) = index.search_batch_stats(
+                                &req.queries,
+                                &req.params,
+                            );
+                            let hits = hits
                                 .into_iter()
                                 .map(|hs| {
                                     hs.into_iter()
@@ -254,6 +266,7 @@ impl ShardHandle {
                                 tag: req.tag,
                                 shard_id,
                                 hits,
+                                plan_counts: stats.plans,
                             });
                         }
                         ShardMsg::Upsert(req) => {

@@ -35,9 +35,10 @@ use crate::dense::adc_lut16::{self, BLOCK};
 use crate::dense::lut::{QuantizedLut, QueryLut};
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::index::HybridIndex;
+use crate::hybrid::plan::QueryPlan;
 use crate::hybrid::search::{
-    rerank, search_with_filter, select_alpha, SearchHit, SearchScratch,
-    SearchStats,
+    rerank, search_with_filter, select_alpha, select_alpha_sparse,
+    SearchHit, SearchScratch, SearchStats,
 };
 use crate::hybrid::segment::Tombstones;
 use crate::hybrid::topk::TopK;
@@ -251,29 +252,46 @@ impl BatchEngine {
         let n = index.n;
         let n_blocks = index.dense_codes.n_blocks;
         let workers = self.threads.min(n_blocks).max(1);
-        let alpha_h = params.alpha_h().min(n);
-        // Over-select by the dead count so tombstones can't eat into the
-        // live αh budget — mirrors `search_with_filter` exactly, keeping
-        // the two modes bit-identical.
-        let fetch = match tombstones {
-            Some(t) => (alpha_h + t.dead()).min(n),
-            None => alpha_h,
-        };
 
-        // Per-query dense transform + quantized LUT, built once on the
-        // calling thread (one in-place f32 LUT rebuild per query) and
-        // shared read-only by every worker — workers never redo query
-        // preprocessing.
+        // Per-query plan + dense transform + quantized LUT, built once
+        // on the calling thread (one in-place f32 LUT rebuild per
+        // query) and shared read-only by every worker — workers never
+        // redo query preprocessing or planning. Planning from the whole
+        // index *before* range-sharding is what keeps the stage set
+        // homogeneous across a query's range workers; `fetch`
+        // over-selects by the dead count so tombstones can't eat into
+        // the live αh budget — mirroring `search_with_plan` exactly,
+        // keeping the two modes bit-identical.
+        struct Prep {
+            qd: Vec<f32>,
+            qlut: Option<QuantizedLut>,
+            plan: QueryPlan,
+            fetch: usize,
+        }
         let mut lut =
             QueryLut::with_shape(index.codebooks.k, index.codebooks.l);
-        let prep: Vec<(Vec<f32>, QuantizedLut)> = queries
+        let prep: Vec<Prep> = queries
             .iter()
             .map(|q| {
+                let plan = index.plan(q, params);
                 let qd = index.query_dense(q);
-                lut.rebuild(&index.codebooks, &qd);
-                (qd, QuantizedLut::build(&lut))
+                let qlut = plan.run_dense.then(|| {
+                    lut.rebuild(&index.codebooks, &qd);
+                    QuantizedLut::build(&lut)
+                });
+                let fetch = match tombstones {
+                    Some(t) => (plan.alpha_h + t.dead()).min(n),
+                    None => plan.alpha_h.min(n),
+                };
+                Prep { qd, qlut, plan, fetch }
             })
             .collect();
+        // Plan homogeneity across range workers: every worker executes
+        // prep[qi].plan, the single plan computed above from whole-index
+        // statistics — workers never re-plan, so a query's stage set
+        // cannot vary by range and desynchronize the partial top-k
+        // merge below. (Planner purity itself is covered by the
+        // plan-determinism tests.)
 
         // ---- Stage 1 fan-out: partials[qi * workers + w] holds worker
         // w's range-local top-αh for query qi. Worker scan time is summed
@@ -298,34 +316,64 @@ impl BatchEngine {
                 let mut guard = self.scratches[w].lock().unwrap();
                 let scratch = &mut *guard;
                 for (qi, q) in queries.iter().enumerate() {
-                    adc_lut16::scan_blocks(
-                        &index.dense_codes,
-                        &prep[qi].1,
-                        &mut scratch.dense_scores,
-                        b0,
-                        b1,
-                    );
-                    scratch.acc.reset();
-                    index.sparse_index.scan_range(
-                        &q.sparse,
-                        &mut scratch.acc,
-                        row0 as u32,
-                        row1 as u32,
-                    );
-                    lines.fetch_add(
-                        scratch.acc.lines_touched(),
-                        Ordering::Relaxed,
-                    );
-                    scratch.overlay.clear();
-                    let (acc, overlay) =
-                        (&mut scratch.acc, &mut scratch.overlay);
-                    acc.drain_scores(|r, s| overlay.push((r, s)));
-                    let part = select_alpha(
-                        &scratch.dense_scores[row0..row1],
-                        &scratch.overlay,
-                        row0 as u32,
-                        fetch.min(row1 - row0),
-                    );
+                    let p = &prep[qi];
+                    let range_fetch = p.fetch.min(row1 - row0);
+                    if p.plan.run_dense {
+                        adc_lut16::scan_blocks(
+                            &index.dense_codes,
+                            p.qlut.as_ref().expect("dense plan has a LUT"),
+                            &mut scratch.dense_scores,
+                            b0,
+                            b1,
+                        );
+                    }
+                    if p.plan.run_sparse {
+                        scratch.acc.reset();
+                        index.sparse_index.scan_range(
+                            &q.sparse,
+                            &mut scratch.acc,
+                            row0 as u32,
+                            row1 as u32,
+                        );
+                        lines.fetch_add(
+                            scratch.acc.lines_touched(),
+                            Ordering::Relaxed,
+                        );
+                        scratch.overlay.clear();
+                        let (acc, overlay) =
+                            (&mut scratch.acc, &mut scratch.overlay);
+                        acc.drain_scores(|r, s| overlay.push((r, s)));
+                    }
+                    let part = match (p.plan.run_dense, p.plan.run_sparse)
+                    {
+                        (true, true) => select_alpha(
+                            &scratch.dense_scores[row0..row1],
+                            &scratch.overlay,
+                            row0 as u32,
+                            range_fetch,
+                        ),
+                        // Sparse skipped: an unrelated query's overlay
+                        // may linger in the scratch — pass the provably
+                        // empty one explicitly.
+                        (true, false) => select_alpha(
+                            &scratch.dense_scores[row0..row1],
+                            &[],
+                            row0 as u32,
+                            range_fetch,
+                        ),
+                        // Dense skipped: range-local overlay rows plus
+                        // the range's implicit zero-score rows, exactly
+                        // as in the sequential sparse-only merge.
+                        (false, true) => select_alpha_sparse(
+                            &scratch.overlay,
+                            row0 as u32,
+                            row1 as u32,
+                            range_fetch,
+                        ),
+                        (false, false) => {
+                            unreachable!("plan must run at least one scan")
+                        }
+                    };
                     // SAFETY: slot (qi, w) is written by exactly one
                     // worker; slots are disjoint and outlive the scope.
                     unsafe {
@@ -347,9 +395,11 @@ impl BatchEngine {
         // sets contains the global top-αh), then the O(αh) stages 2–3.
         let mut hits = Vec::with_capacity(m);
         for (qi, q) in queries.iter().enumerate() {
+            let p = &prep[qi];
             let mut stats = SearchStats::default();
+            stats.plans.bump(p.plan.kind);
             let t1 = Instant::now();
-            let mut top = TopK::new(fetch);
+            let mut top = TopK::new(p.fetch);
             for part in &partials[qi * workers..(qi + 1) * workers] {
                 for &(r, s) in part {
                     top.push(r, s);
@@ -359,15 +409,16 @@ impl BatchEngine {
             if let Some(t) = tombstones {
                 alpha_candidates
                     .retain(|&(r, _)| !t.get(index.original_id(r)));
-                alpha_candidates.truncate(alpha_h);
+                alpha_candidates.truncate(p.plan.alpha_h);
             }
             stats.candidates_alpha = alpha_candidates.len();
             stats.stage1_select_us = t1.elapsed().as_secs_f64() * 1e6;
             hits.push(rerank(
                 index,
-                &prep[qi].0,
+                &p.qd,
                 q,
                 params,
+                &p.plan,
                 alpha_candidates,
                 &mut stats,
             ));
@@ -461,6 +512,38 @@ mod tests {
             out.stats.per_query.candidates_alpha,
             queries.len() * params.alpha_h().min(index.n)
         );
+    }
+
+    #[test]
+    fn adaptive_mode_matches_sequential_in_both_shard_modes() {
+        use crate::types::sparse::SparseVector;
+        let (data, mut queries, index) = setup(400);
+        // mix in degenerate shapes: nnz = 0 and zero-dense
+        queries.push(HybridQuery {
+            sparse: SparseVector::default(),
+            dense: vec![0.4; data.dense_dim()],
+        });
+        queries.push(HybridQuery {
+            sparse: data.sparse.row_vec(3),
+            dense: vec![0.0; data.dense_dim()],
+        });
+        let params = SearchParams::new(10).with_alpha(3.0).adaptive();
+        for mode in [ShardMode::ByQuery, ShardMode::ByData] {
+            let engine = BatchEngine::with_config(
+                &index,
+                EngineConfig { threads: 4, mode },
+            );
+            let out = engine.search_batch(&index, &queries, &params);
+            for (q, got) in queries.iter().zip(&out.hits) {
+                let want = search(&index, q, &params);
+                assert_hits_identical(got, &want);
+            }
+            // plan counters aggregated across the batch, one per query
+            assert_eq!(out.stats.per_query.plans.total(), queries.len());
+            assert!(out.stats.per_query.plans.dense_only >= 1);
+            assert!(out.stats.per_query.plans.sparse_only >= 1);
+            assert_eq!(out.stats.per_query.plans.fixed, 0);
+        }
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Index + search configuration, defaulting to the paper's §6.1 parameter
 //! selection.
 
+use crate::hybrid::plan::PlanMode;
+
 /// How the hybrid index is built.
 #[derive(Clone, Debug)]
 pub struct IndexConfig {
@@ -62,7 +64,7 @@ impl IndexConfig {
     }
 }
 
-/// How a query is executed (§5's overfetch factors).
+/// How a query is executed (§5's overfetch factors + the plan mode).
 #[derive(Clone, Copy, Debug)]
 pub struct SearchParams {
     /// Final result count h.
@@ -71,13 +73,17 @@ pub struct SearchParams {
     pub alpha: f32,
     /// Stage-2 retain: keep βh after dense-residual reordering.
     pub beta: f32,
+    /// Stage-1 planning mode (see [`crate::hybrid::plan`]). `Fixed`
+    /// (default) is bit-identical to the historical pipeline;
+    /// `Adaptive` lets the planner skip provably useless scans.
+    pub plan_mode: PlanMode,
 }
 
 impl SearchParams {
     pub fn new(h: usize) -> Self {
         // §5.1: "α is empirically ≤ 10 to achieve ≥ 90% recall"; β sits
         // between α and 1.
-        SearchParams { h, alpha: 10.0, beta: 3.0 }
+        SearchParams { h, alpha: 10.0, beta: 3.0, plan_mode: PlanMode::Fixed }
     }
 
     pub fn with_alpha(mut self, a: f32) -> Self {
@@ -88,6 +94,16 @@ impl SearchParams {
     pub fn with_beta(mut self, b: f32) -> Self {
         self.beta = b;
         self
+    }
+
+    pub fn with_plan_mode(mut self, m: PlanMode) -> Self {
+        self.plan_mode = m;
+        self
+    }
+
+    /// Shorthand for `with_plan_mode(PlanMode::Adaptive)`.
+    pub fn adaptive(self) -> Self {
+        self.with_plan_mode(PlanMode::Adaptive)
     }
 
     pub fn alpha_h(&self) -> usize {
@@ -112,6 +128,8 @@ mod tests {
         let s = SearchParams::new(20);
         assert_eq!(s.alpha_h(), 200);
         assert_eq!(s.beta_h(), 60);
+        assert_eq!(s.plan_mode, PlanMode::Fixed, "Fixed is the default");
+        assert_eq!(s.adaptive().plan_mode, PlanMode::Adaptive);
     }
 
     #[test]

@@ -13,7 +13,8 @@
 use crate::dense::adc_lut16::Lut16Codes;
 use crate::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
 use crate::dense::whitening::Whitening;
-use crate::hybrid::config::IndexConfig;
+use crate::hybrid::config::{IndexConfig, SearchParams};
+use crate::hybrid::plan::{IndexStats, Planner, QueryPlan};
 use crate::sparse::cache_sort::cache_sort;
 use crate::sparse::inverted_index::InvertedIndex;
 use crate::sparse::pruning::{prune_matrix, PruneThresholds};
@@ -60,6 +61,10 @@ pub struct HybridIndex {
     pub n: usize,
     pub dense_dim: usize,
     pub config: IndexConfig,
+    /// Build-time corpus statistics feeding the query planner (see
+    /// [`crate::hybrid::plan`]); persisted in v4 snapshots, recomputed
+    /// when loading older ones.
+    pub stats: IndexStats,
 }
 
 impl HybridIndex {
@@ -119,6 +124,9 @@ impl HybridIndex {
         let working = data.permute(&perm);
         let sparse_index =
             InvertedIndex::build(&pruned.kept.permute_rows(&perm));
+        // Planner statistics come from the scan structure the planner
+        // budgets for — the pruned, permuted inverted index.
+        let stats = IndexStats::compute(&sparse_index);
         let pruned = crate::sparse::pruning::PrunedSparse {
             kept: CsrMatrix::default(), // consumed above
             residual: pruned.residual.permute_rows(&perm),
@@ -178,7 +186,14 @@ impl HybridIndex {
             n,
             dense_dim: dense_mat.dim,
             config: config.clone(),
+            stats,
         }
+    }
+
+    /// Plan one query against this index (see [`crate::hybrid::plan`]):
+    /// a pure function of (index, query, params).
+    pub fn plan(&self, q: &HybridQuery, params: &SearchParams) -> QueryPlan {
+        Planner::new(self).plan(q, params)
     }
 
     /// Convenience search with the §5.1 default overfetch parameters.

@@ -1,16 +1,19 @@
 //! The hybrid search engine (paper §5–§6): index construction (pruned
-//! sparse + PQ dense, each with a residual index), the three-stage
-//! residual-reordering search pipeline, the parallel batch engine that
-//! fans query batches across per-worker scratches, the mutable
-//! segmented index (base + delta segments + tombstones + merge) that
-//! serves upserts/deletes online, and the versioned snapshot format
-//! that persists all of it.
+//! sparse + PQ dense, each with a residual index), the cost-model-driven
+//! query planner that chooses each query's stage-1 scans, the
+//! three-stage residual-reordering search pipeline decomposed into
+//! plan-driven stage executors, the parallel batch engine that fans
+//! query batches across per-worker scratches, the mutable segmented
+//! index (base + delta segments + tombstones + merge) that serves
+//! upserts/deletes online, and the versioned snapshot format that
+//! persists all of it (planner statistics included).
 
 pub mod batch;
 pub mod config;
 pub mod index;
 pub mod mutable;
 pub mod persist;
+pub mod plan;
 pub mod search;
 pub mod segment;
 pub mod topk;
@@ -19,5 +22,8 @@ pub use batch::{BatchEngine, BatchOutput, BatchStats, EngineConfig, ShardMode};
 pub use config::{IndexConfig, SearchParams};
 pub use index::{DenseArtifacts, HybridIndex};
 pub use mutable::{MutableConfig, MutableHybridIndex, RowRetention};
+pub use plan::{
+    IndexStats, PlanCounts, PlanKind, PlanMode, Planner, QueryPlan,
+};
 pub use search::SearchHit;
 pub use segment::{Doc, MergeError, RowStore, Segment, Tombstones};

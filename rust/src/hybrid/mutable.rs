@@ -44,7 +44,7 @@ use std::thread::JoinHandle;
 use crate::hybrid::config::{IndexConfig, SearchParams};
 use crate::hybrid::index::DenseArtifacts;
 use crate::hybrid::persist;
-use crate::hybrid::search::SearchHit;
+use crate::hybrid::search::{SearchHit, SearchStats};
 use crate::hybrid::segment::{Doc, MergeError, RowStore, Segment};
 use crate::hybrid::topk::TopK;
 use crate::types::dense;
@@ -632,16 +632,26 @@ impl MutableHybridIndex {
     /// full pipeline (tombstones filtered before stage 2), the buffer is
     /// scored exactly, and the per-segment top-h lists merge under the
     /// `TopK` total order. Hits carry external ids, best first.
-    /// Delegates to [`Self::search_batch`] so there is exactly one copy
-    /// of the segment-fan/merge logic.
+    /// Delegates to [`Self::search_batch_stats`] so there is exactly
+    /// one copy of the segment-fan/merge logic.
     pub fn search(
         &self,
         q: &HybridQuery,
         params: &SearchParams,
     ) -> Vec<SearchHit> {
-        self.search_batch(std::slice::from_ref(q), params)
-            .pop()
-            .unwrap_or_default()
+        self.search_stats(q, params).0
+    }
+
+    /// As [`MutableHybridIndex::search`], also returning the aggregated
+    /// per-segment pipeline stats (per-plan-kind counters included).
+    pub fn search_stats(
+        &self,
+        q: &HybridQuery,
+        params: &SearchParams,
+    ) -> (Vec<SearchHit>, SearchStats) {
+        let (mut lists, stats) =
+            self.search_batch_stats(std::slice::from_ref(q), params);
+        (lists.pop().unwrap_or_default(), stats)
     }
 
     /// Batch search over the segmented corpus; per query, each
@@ -652,13 +662,28 @@ impl MutableHybridIndex {
         queries: &[HybridQuery],
         params: &SearchParams,
     ) -> Vec<Vec<SearchHit>> {
+        self.search_batch_stats(queries, params).0
+    }
+
+    /// As [`MutableHybridIndex::search_batch`], also returning the
+    /// stats aggregated across every sealed segment's pipeline runs.
+    /// Each segment plans queries against its own statistics, so a
+    /// query contributes one plan count per segment searched (the
+    /// buffer's exact brute-force scan plans nothing).
+    pub fn search_batch_stats(
+        &self,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+    ) -> (Vec<Vec<SearchHit>>, SearchStats) {
+        let mut agg = SearchStats::default();
         let mut per_query: Vec<TopK> =
             (0..queries.len()).map(|_| TopK::new(params.h)).collect();
         for e in &self.segments {
             if e.seg.live() == 0 {
                 continue;
             }
-            let lists = e.seg.search_batch(queries, params);
+            let (lists, stats) = e.seg.search_batch_stats(queries, params);
+            agg.accumulate(&stats);
             for (top, hs) in per_query.iter_mut().zip(lists) {
                 for h in hs {
                     top.push(h.id, h.score);
@@ -668,7 +693,7 @@ impl MutableHybridIndex {
         for (top, q) in per_query.iter_mut().zip(queries) {
             self.score_buffer(q, |id, s| top.push(id, s));
         }
-        per_query
+        let hits = per_query
             .into_iter()
             .map(|t| {
                 t.into_sorted()
@@ -676,7 +701,8 @@ impl MutableHybridIndex {
                     .map(|(id, score)| SearchHit { id, score })
                     .collect()
             })
-            .collect()
+            .collect();
+        (hits, agg)
     }
 
     /// Write the full index state — every segment (ids, tombstones,

@@ -426,11 +426,26 @@ pub fn read_whitening<R: Read>(r: &mut BinReader<R>) -> io::Result<Whitening> {
 // ----------------------------------------------------------- HybridIndex
 
 impl HybridIndex {
-    /// Serialize the full sealed index as a nested section of `w`.
+    /// Serialize the full sealed index as a nested section of `w`: the
+    /// v3 core fields, then the v4 planner-statistics section — a
+    /// length-prefixed byte blob (`slice_u8`) so a reader that does not
+    /// understand it can skip it wholesale.
     pub fn write_into<W: Write>(
         &self,
         w: &mut BinWriter<W>,
     ) -> io::Result<()> {
+        self.write_core(w)?;
+        let mut buf = Vec::new();
+        let mut sw = BinWriter::raw(&mut buf);
+        self.stats.write_into(&mut sw)?;
+        drop(sw);
+        w.slice_u8(&buf)
+    }
+
+    /// The v3 field set (everything except the planner-statistics
+    /// section) — split out so the version-compat tests can author a
+    /// genuine v3 payload.
+    fn write_core<W: Write>(&self, w: &mut BinWriter<W>) -> io::Result<()> {
         write_config(w, &self.config)?;
         w.usize(self.n)?;
         w.usize(self.dense_dim)?;
@@ -460,8 +475,13 @@ impl HybridIndex {
     }
 
     /// Deserialize an index section written by
-    /// [`HybridIndex::write_into`], re-validating cross-field invariants.
+    /// [`HybridIndex::write_into`], re-validating cross-field
+    /// invariants. v3 inputs (no planner-statistics section) recompute
+    /// the statistics from the inverted index — `IndexStats::compute`
+    /// is deterministic, so a recomputed planner is identical to a
+    /// persisted one.
     pub fn read_from<R: Read>(r: &mut BinReader<R>) -> io::Result<Self> {
+        let has_stats_section = r.version() >= 4;
         let config = read_config(r)?;
         let n = r.usize()?;
         let dense_dim = r.usize()?;
@@ -552,6 +572,27 @@ impl HybridIndex {
                 Some(t)
             }
         };
+        let stats = if has_stats_section {
+            let buf = r.slice_u8()?;
+            let mut sr =
+                BinReader::raw_with_limit(&buf[..], buf.len() as u64);
+            let stats = crate::hybrid::plan::IndexStats::read_from(&mut sr)?;
+            if stats.n != n {
+                return Err(invalid(format!(
+                    "planner stats rows {} != index rows {n}",
+                    stats.n
+                )));
+            }
+            if stats.total_postings != sparse_index.nnz() as u64 {
+                return Err(invalid(
+                    "planner stats postings disagree with inverted index",
+                ));
+            }
+            stats
+        } else {
+            // v3 snapshot: the section predates the planner; recompute.
+            crate::hybrid::plan::IndexStats::compute(&sparse_index)
+        };
         Ok(HybridIndex {
             perm,
             sparse_index,
@@ -564,6 +605,7 @@ impl HybridIndex {
             n,
             dense_dim,
             config,
+            stats,
         })
     }
 
@@ -615,6 +657,57 @@ mod tests {
                 assert_eq!(x.score.to_bits(), y.score.to_bits());
             }
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v3_snapshot_without_stats_section_loads_with_recompute() {
+        // A v3 file predates the planner-statistics section; loading it
+        // must recompute identical stats and serve identical results.
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(9);
+        let idx = HybridIndex::build(&data, &IndexConfig::default());
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(crate::util::binio::MAGIC);
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        {
+            let mut w = BinWriter::raw(&mut buf);
+            w.u8(SNAP_HYBRID_INDEX).unwrap();
+            idx.write_core(&mut w).unwrap();
+        }
+        let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v3.snap");
+        std::fs::write(&path, &buf).unwrap();
+        let back = HybridIndex::load(&path).unwrap();
+        assert_eq!(back.stats, idx.stats, "recomputed stats must match");
+        let q = cfg.related_queries(&data, 10, 1).remove(0);
+        let a = idx.search(&q, 10);
+        let b = back.search(&q, 10);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_stats_section_rejected() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(11);
+        let idx = HybridIndex::build(&data, &IndexConfig::default());
+        let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("badstats.snap");
+        idx.save(&path).unwrap();
+        // The stats section is the trailing slice_u8 blob; flip a byte
+        // in its histogram region (well after the u64 scalar header).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = bytes.len() - 16;
+        bytes[at] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(HybridIndex::load(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 

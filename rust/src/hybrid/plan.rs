@@ -1,0 +1,613 @@
+//! Cost-model-driven query planning — §3 used *online*.
+//!
+//! The §3.3 cache-line cost model and the corpus statistics it feeds on
+//! existed in-tree only to regenerate Figure 4 offline, while every
+//! query paid the identical fixed three-stage pipeline: a dense-only
+//! query (nnz = 0) still reset and drained the sparse accumulator, and a
+//! sparse-dominant query (zero dense component) still ran the full
+//! LUT16 ADC scan over all N rows just to add exact zeros. This module
+//! closes that gap:
+//!
+//! * [`IndexStats`] — per-index statistics gathered at build time (and
+//!   persisted in the v4 snapshot as a skippable section): the
+//!   dim-frequency histogram, the per-row nnz distribution, the fitted
+//!   power-law exponent of dimension activity, and the [`CostModel`]
+//!   expected accumulator cache-lines per query (Eqs. 4–5).
+//! * [`Planner`] — combines those statistics with per-query features
+//!   (sparse nnz → exact posting counts via the inverted lists, dense
+//!   norm) into a [`QueryPlan`]: which stage-1 scans run, the resolved
+//!   per-query `alpha_h`/`beta_h`, and the planner's work estimates.
+//! * [`PlanMode`] — the [`SearchParams`] knob.
+//!   [`PlanMode::Fixed`] (default) always produces the full two-scan
+//!   plan and is **bit-identical** to the historical pipeline;
+//!   [`PlanMode::Adaptive`] applies *provably lossless* skips:
+//!
+//!   - **sparse scan skipped** when the query's posting count is zero
+//!     (nnz = 0, or every nonzero dim has an empty inverted list): the
+//!     scan could only have produced an empty overlay, so results are
+//!     bit-identical to `Fixed`.
+//!   - **dense scan skipped** for sparse-dominant queries (every dense
+//!     component exactly `±0.0`, tested element-wise — a squared-norm
+//!     test would underflow on tiny nonzero values): a zero query
+//!     quantizes to an all-zero LUT that dequantizes every row to
+//!     exactly `+0.0`, and the sparse-only selector feeds the implicit
+//!     zero-score rows back in (`select_alpha_sparse`), so candidate
+//!     selection — including negative overlay scores and tombstone
+//!     over-fetch — matches the fixed merge bit for bit.
+//!
+//! Determinism contract: a plan is a pure function of (index, query,
+//! params) — no clocks, no RNG, no load feedback — so the same query
+//! against the same index (including one restored from a snapshot)
+//! always gets the same plan. `tests/integration_plan.rs` and the
+//! `plan` proptests assert this, plus the Fixed bit-identity and the
+//! Adaptive recall bound, at every serving layer.
+
+use std::io::{self, Read, Write};
+
+use crate::hybrid::config::SearchParams;
+use crate::hybrid::index::HybridIndex;
+use crate::sparse::cost_model::CostModel;
+use crate::sparse::inverted_index::InvertedIndex;
+use crate::types::hybrid::HybridQuery;
+use crate::util::binio::{BinReader, BinWriter};
+use crate::util::simd::F32_PER_LINE;
+
+/// How stage-1 execution is chosen per query (a [`SearchParams`] field).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlanMode {
+    /// Always run both stage-1 scans with the configured α/β — the
+    /// historical pipeline, bit-identical to pre-planner behaviour.
+    #[default]
+    Fixed,
+    /// Let the [`Planner`] skip provably useless stage-1 work per query.
+    /// Deterministic given the index; recall is never more than the
+    /// quantization floor below `Fixed` (lossless skips only).
+    Adaptive,
+}
+
+/// What the planner decided for one query (the per-plan-kind counter
+/// key surfaced in `MetricsSnapshot`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanKind {
+    /// `PlanMode::Fixed` pass-through: both scans, configured α/β.
+    Fixed,
+    /// Adaptive, but the query genuinely needs both scans.
+    Hybrid,
+    /// Adaptive: the sparse scan is skipped (no postings to stream).
+    DenseOnly,
+    /// Adaptive: the dense scan is skipped (zero dense component,
+    /// enough guaranteed sparse candidates).
+    SparseOnly,
+}
+
+/// Per-plan-kind execution counters. One bump per stage-1 pipeline
+/// execution — i.e. per (query × segment), since each sealed segment
+/// plans against its own statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCounts {
+    pub fixed: usize,
+    pub hybrid: usize,
+    pub dense_only: usize,
+    pub sparse_only: usize,
+}
+
+impl PlanCounts {
+    pub fn bump(&mut self, kind: PlanKind) {
+        match kind {
+            PlanKind::Fixed => self.fixed += 1,
+            PlanKind::Hybrid => self.hybrid += 1,
+            PlanKind::DenseOnly => self.dense_only += 1,
+            PlanKind::SparseOnly => self.sparse_only += 1,
+        }
+    }
+
+    pub fn merge(&mut self, other: &PlanCounts) {
+        self.fixed += other.fixed;
+        self.hybrid += other.hybrid;
+        self.dense_only += other.dense_only;
+        self.sparse_only += other.sparse_only;
+    }
+
+    pub fn total(&self) -> usize {
+        self.fixed + self.hybrid + self.dense_only + self.sparse_only
+    }
+}
+
+/// The planner's decision for one (index, query, params) triple: which
+/// stage-1 scans run, the resolved candidate budgets, and the work
+/// estimates that justified the choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueryPlan {
+    pub kind: PlanKind,
+    /// Run the LUT16 ADC scan over all rows.
+    pub run_dense: bool,
+    /// Run the inverted-index accumulation.
+    pub run_sparse: bool,
+    /// Stage-1 keep count, already capped to the index size.
+    pub alpha_h: usize,
+    /// Stage-2 keep count.
+    pub beta_h: usize,
+    /// Exact postings the sparse scan would stream for this query
+    /// (Σ list lengths over the query's nonzero dims). Always 0 under
+    /// `PlanMode::Fixed`, which skips feature extraction entirely so
+    /// the default path stays feature-free.
+    pub est_postings: u64,
+    /// Estimated accumulator cache-lines the sparse scan touches:
+    /// Σ min(list_len, total_lines) per dim, scaled by the build-time
+    /// `E[C_sort]/E[C_unsort]` ratio when the index is cache-sorted.
+    /// Always 0 under `PlanMode::Fixed` (see `est_postings`).
+    pub est_sparse_lines: u64,
+}
+
+/// Number of log2 buckets in the [`IndexStats`] histograms.
+pub const HIST_BUCKETS: usize = 32;
+
+#[inline]
+fn log2_bucket(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Build-time corpus statistics backing the planner — derivable from
+/// the inverted index alone, so v3 snapshots (which predate the stats
+/// section) recompute them on load bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IndexStats {
+    /// Rows in the index.
+    pub n: usize,
+    /// Dimensions with a nonempty inverted list.
+    pub active_dims: usize,
+    /// Total postings across all inverted lists.
+    pub total_postings: u64,
+    /// Longest inverted list.
+    pub max_list_len: u64,
+    /// log2 histogram of per-row kept-nnz (bucket 0 = rows with no
+    /// kept sparse entries) — the nnz distribution.
+    pub row_nnz_hist: [u64; HIST_BUCKETS],
+    /// log2 histogram of inverted-list lengths over active dims — the
+    /// dim-frequency histogram.
+    pub dim_list_hist: [u64; HIST_BUCKETS],
+    /// Power-law exponent fitted to the sorted dim-activity curve
+    /// (Fig. 5a's α; 0.0 when the corpus is too small to fit).
+    pub alpha_fit: f64,
+    /// [`CostModel`] E[C_unsort] at (n, α_fit, B=16, active_dims).
+    pub expected_lines_unsorted: f64,
+    /// [`CostModel`] E[C_sort] bound at the same parameters.
+    pub expected_lines_sorted: f64,
+}
+
+impl IndexStats {
+    /// Gather statistics from a built inverted index (the build path
+    /// *and* the v3-snapshot recompute path — both must agree exactly).
+    pub fn compute(index: &InvertedIndex) -> IndexStats {
+        let n = index.n_rows();
+        let mut row_nnz = vec![0u32; n];
+        let mut dim_list_hist = [0u64; HIST_BUCKETS];
+        let mut active_dims = 0usize;
+        let mut total_postings = 0u64;
+        let mut max_list_len = 0u64;
+        for j in 0..index.n_dims() {
+            let len = index.dim_nnz[j];
+            if len == 0 {
+                continue;
+            }
+            active_dims += 1;
+            total_postings += len;
+            max_list_len = max_list_len.max(len);
+            dim_list_hist[log2_bucket(len)] += 1;
+            let (rows, _) = index.list(j);
+            for &r in rows {
+                row_nnz[r as usize] += 1;
+            }
+        }
+        let mut row_nnz_hist = [0u64; HIST_BUCKETS];
+        for &c in &row_nnz {
+            row_nnz_hist[log2_bucket(c as u64)] += 1;
+        }
+        let mut sorted = index.dim_nnz.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        while sorted.last() == Some(&0) {
+            sorted.pop();
+        }
+        let alpha_fit = crate::data::stats::fit_power_law(&sorted);
+        // Eq. 4/5 need α > 1 to converge; outside the fit's trustworthy
+        // range fall back to the paper's QuerySim setting (α = 2).
+        let alpha_model = if alpha_fit.is_finite() && alpha_fit > 1.0 {
+            alpha_fit.min(8.0)
+        } else {
+            2.0
+        };
+        let model = CostModel::new(n, alpha_model, F32_PER_LINE, active_dims);
+        IndexStats {
+            n,
+            active_dims,
+            total_postings,
+            max_list_len,
+            row_nnz_hist,
+            dim_list_hist,
+            alpha_fit,
+            expected_lines_unsorted: model.expected_unsorted(),
+            expected_lines_sorted: model.expected_sorted(),
+        }
+    }
+
+    /// `E[C_sort]/E[C_unsort]` — the build-time cache-sort saving factor
+    /// applied to per-query line estimates (1.0 when unknown).
+    pub fn sort_ratio(&self) -> f64 {
+        if self.expected_lines_unsorted > 0.0 {
+            (self.expected_lines_sorted / self.expected_lines_unsorted)
+                .clamp(0.0, 1.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Serialize as the v4 snapshot's planner-statistics payload.
+    pub fn write_into<W: Write>(
+        &self,
+        w: &mut BinWriter<W>,
+    ) -> io::Result<()> {
+        w.usize(self.n)?;
+        w.usize(self.active_dims)?;
+        w.u64(self.total_postings)?;
+        w.u64(self.max_list_len)?;
+        w.f64(self.alpha_fit)?;
+        w.f64(self.expected_lines_unsorted)?;
+        w.f64(self.expected_lines_sorted)?;
+        w.slice_u64(&self.row_nnz_hist)?;
+        w.slice_u64(&self.dim_list_hist)
+    }
+
+    /// Deserialize a payload written by [`IndexStats::write_into`].
+    pub fn read_from<R: Read>(r: &mut BinReader<R>) -> io::Result<Self> {
+        let n = r.usize()?;
+        let active_dims = r.usize()?;
+        let total_postings = r.u64()?;
+        let max_list_len = r.u64()?;
+        let alpha_fit = r.f64()?;
+        let expected_lines_unsorted = r.f64()?;
+        let expected_lines_sorted = r.f64()?;
+        let row_hist = r.slice_u64()?;
+        let dim_hist = r.slice_u64()?;
+        let invalid = |m: &str| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("stats: {m}"))
+        };
+        if row_hist.len() != HIST_BUCKETS || dim_hist.len() != HIST_BUCKETS {
+            return Err(invalid("histogram bucket count mismatch"));
+        }
+        if !alpha_fit.is_finite()
+            || !expected_lines_unsorted.is_finite()
+            || !expected_lines_sorted.is_finite()
+            || expected_lines_unsorted < 0.0
+            || expected_lines_sorted < 0.0
+        {
+            return Err(invalid("non-finite or negative model values"));
+        }
+        // u128 sums: corrupt bucket values near u64::MAX must fail the
+        // mass check, not overflow it (debug panic / release wraparound).
+        if row_hist.iter().map(|&v| v as u128).sum::<u128>() != n as u128 {
+            return Err(invalid("row histogram mass != n"));
+        }
+        if dim_hist.iter().map(|&v| v as u128).sum::<u128>()
+            != active_dims as u128
+        {
+            return Err(invalid("dim histogram mass != active dims"));
+        }
+        let mut row_nnz_hist = [0u64; HIST_BUCKETS];
+        row_nnz_hist.copy_from_slice(&row_hist);
+        let mut dim_list_hist = [0u64; HIST_BUCKETS];
+        dim_list_hist.copy_from_slice(&dim_hist);
+        Ok(IndexStats {
+            n,
+            active_dims,
+            total_postings,
+            max_list_len,
+            row_nnz_hist,
+            dim_list_hist,
+            alpha_fit,
+            expected_lines_unsorted,
+            expected_lines_sorted,
+        })
+    }
+}
+
+/// Per-query features the planner extracts before deciding.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QueryFeatures {
+    /// Nonzeros in the query's sparse component.
+    pub nnz: usize,
+    /// Squared L2 norm of the dense component (observability only — the
+    /// skip decision uses [`QueryFeatures::dense_all_zero`], because a
+    /// sum of squares underflows to 0.0 on tiny nonzero components).
+    pub dense_norm2: f32,
+    /// Every dense component is exactly `±0.0` — the lossless
+    /// precondition for skipping the dense scan.
+    pub dense_all_zero: bool,
+    /// Exact postings the sparse scan would stream (Σ list lengths).
+    pub postings: u64,
+    /// Longest single inverted list among the query's dims — a lower
+    /// bound on the distinct rows the sparse overlay will contain.
+    pub max_list_len: u64,
+    /// Σ min(list_len, total accumulator lines) per dim — the Eq. 4
+    /// style per-query line bound, before the cache-sort correction.
+    pub lines_bound: u64,
+}
+
+/// Stateless planning front-end over one index's statistics.
+pub struct Planner<'i> {
+    index: &'i HybridIndex,
+}
+
+impl<'i> Planner<'i> {
+    pub fn new(index: &'i HybridIndex) -> Self {
+        Planner { index }
+    }
+
+    pub fn stats(&self) -> &IndexStats {
+        &self.index.stats
+    }
+
+    /// Extract the per-query features (exact, via the inverted lists).
+    pub fn features(&self, q: &HybridQuery) -> QueryFeatures {
+        let inv = &self.index.sparse_index;
+        let total_lines =
+            self.index.n.div_ceil(F32_PER_LINE) as u64;
+        let mut postings = 0u64;
+        let mut max_list_len = 0u64;
+        let mut lines_bound = 0u64;
+        for (dim, _) in q.sparse.iter() {
+            let j = dim as usize;
+            if j >= inv.n_dims() {
+                continue;
+            }
+            let len = inv.dim_nnz[j];
+            postings += len;
+            max_list_len = max_list_len.max(len);
+            lines_bound += len.min(total_lines);
+        }
+        // One pass over the dense component for both dense features.
+        let mut dense_norm2 = 0.0f32;
+        let mut dense_all_zero = true;
+        for &v in &q.dense {
+            dense_norm2 += v * v;
+            dense_all_zero &= v == 0.0;
+        }
+        QueryFeatures {
+            nnz: q.sparse.nnz(),
+            dense_norm2,
+            dense_all_zero,
+            postings,
+            max_list_len,
+            lines_bound,
+        }
+    }
+
+    /// Produce the plan for one query. Pure function of (index, query,
+    /// params): no clocks, no RNG — asserted by the determinism tests.
+    pub fn plan(&self, q: &HybridQuery, params: &SearchParams) -> QueryPlan {
+        let n = self.index.n;
+        let alpha_h = params.alpha_h().min(n);
+        let beta_h = params.beta_h();
+        if params.plan_mode == PlanMode::Fixed {
+            // The fixed pipeline ignores per-query features — return
+            // before extracting any, so the default mode costs nothing
+            // it didn't cost before the planner existed.
+            return QueryPlan {
+                kind: PlanKind::Fixed,
+                run_dense: true,
+                run_sparse: true,
+                alpha_h,
+                beta_h,
+                est_postings: 0,
+                est_sparse_lines: 0,
+            };
+        }
+        let f = self.features(q);
+        // Cache sorting concentrates list rows into fewer lines; apply
+        // the build-time model ratio to the per-query bound.
+        let est_sparse_lines = if self.index.config.cache_sort {
+            (f.lines_bound as f64 * self.index.stats.sort_ratio()).round()
+                as u64
+        } else {
+            f.lines_bound
+        };
+        let (kind, run_dense, run_sparse) = if f.postings == 0 {
+            // nnz = 0, or every query dim has an empty list: the scan
+            // provably produces an empty overlay.
+            (PlanKind::DenseOnly, true, false)
+        } else if f.dense_all_zero {
+            // Exactly-zero dense component: the scan would add exact
+            // +0.0 to every row, and the sparse-only selector
+            // re-supplies those implicit zeros, so the skip is
+            // bit-identical however thin the overlay is.
+            (PlanKind::SparseOnly, false, true)
+        } else {
+            (PlanKind::Hybrid, true, true)
+        };
+        QueryPlan {
+            kind,
+            run_dense,
+            run_sparse,
+            alpha_h,
+            beta_h,
+            est_postings: f.postings,
+            est_sparse_lines,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+    use crate::hybrid::config::IndexConfig;
+    use crate::types::sparse::SparseVector;
+
+    fn setup() -> (crate::types::hybrid::HybridDataset, HybridIndex) {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(71);
+        let idx = HybridIndex::build(&data, &IndexConfig::default());
+        (data, idx)
+    }
+
+    fn zero_sparse_query(dense_dims: usize) -> HybridQuery {
+        HybridQuery {
+            sparse: SparseVector::default(),
+            dense: vec![0.25; dense_dims],
+        }
+    }
+
+    #[test]
+    fn stats_mass_accounts_for_every_row_and_list() {
+        let (data, idx) = setup();
+        let s = &idx.stats;
+        assert_eq!(s.n, data.len());
+        assert_eq!(s.row_nnz_hist.iter().sum::<u64>(), data.len() as u64);
+        assert_eq!(
+            s.dim_list_hist.iter().sum::<u64>(),
+            s.active_dims as u64
+        );
+        assert_eq!(s.total_postings, idx.sparse_index.nnz() as u64);
+        assert!(s.max_list_len as usize <= s.n);
+        assert!(s.expected_lines_sorted <= s.expected_lines_unsorted + 1e-9);
+        assert!((0.0..=1.0).contains(&s.sort_ratio()));
+    }
+
+    #[test]
+    fn fixed_mode_always_full_plan() {
+        let (data, idx) = setup();
+        let cfg = QuerySimConfig::tiny();
+        let params = SearchParams::new(10);
+        let planner = Planner::new(&idx);
+        for q in &cfg.related_queries(&data, 72, 4) {
+            let p = planner.plan(q, &params);
+            assert_eq!(p.kind, PlanKind::Fixed);
+            assert!(p.run_dense && p.run_sparse);
+            assert_eq!(p.alpha_h, params.alpha_h().min(idx.n));
+            assert_eq!(p.beta_h, params.beta_h());
+        }
+        // even for degenerate queries, Fixed stays fixed
+        let p = planner
+            .plan(&zero_sparse_query(data.dense_dim()), &params);
+        assert_eq!(p.kind, PlanKind::Fixed);
+        assert!(p.run_sparse);
+    }
+
+    #[test]
+    fn adaptive_skips_sparse_scan_for_empty_queries() {
+        let (data, idx) = setup();
+        let params = SearchParams::new(10).adaptive();
+        let p = Planner::new(&idx)
+            .plan(&zero_sparse_query(data.dense_dim()), &params);
+        assert_eq!(p.kind, PlanKind::DenseOnly);
+        assert!(p.run_dense && !p.run_sparse);
+        assert_eq!(p.est_postings, 0);
+    }
+
+    #[test]
+    fn adaptive_skips_dense_scan_when_sparse_dominant() {
+        let (data, idx) = setup();
+        // a data row's own sparse part hits long (head-dim) lists
+        let q = HybridQuery {
+            sparse: data.sparse.row_vec(0),
+            dense: vec![0.0; data.dense_dim()],
+        };
+        let params = SearchParams::new(5).with_alpha(2.0).adaptive();
+        let p = Planner::new(&idx).plan(&q, &params);
+        assert_eq!(p.kind, PlanKind::SparseOnly);
+        assert!(!p.run_dense && p.run_sparse);
+        assert!(p.est_postings > 0);
+        // with a nonzero dense part the same query needs both scans
+        let q2 = HybridQuery { sparse: q.sparse.clone(), dense: vec![0.5; data.dense_dim()] };
+        assert_eq!(Planner::new(&idx).plan(&q2, &params).kind, PlanKind::Hybrid);
+    }
+
+    #[test]
+    fn thin_overlay_dense_skip_still_matches_fixed() {
+        use crate::hybrid::search::{search_with, SearchScratch};
+        let (data, idx) = setup();
+        // Zero dense and the only queried dim has a list far shorter
+        // than alpha_h: the skip still applies, and the sparse-only
+        // selector's implicit zero-score padding must reproduce the
+        // fixed pipeline's candidate backfill bit for bit. A negative
+        // query value also ranks the overlay rows *below* the implicit
+        // zeros, exercising that ordering.
+        let params = SearchParams::new(5).adaptive(); // alpha_h = 50
+        let alpha_h = params.alpha_h();
+        let j = (0..idx.sparse_index.n_dims())
+            .find(|&j| {
+                let len = idx.sparse_index.dim_nnz[j];
+                len > 0 && (len as usize) < alpha_h / 2
+            })
+            .expect("power-law corpus has a short tail list");
+        for val in [1.0f32, -1.0] {
+            let q = HybridQuery {
+                sparse: SparseVector::new(vec![j as u32], vec![val]),
+                dense: vec![0.0; data.dense_dim()],
+            };
+            let p = Planner::new(&idx).plan(&q, &params);
+            assert_eq!(p.kind, PlanKind::SparseOnly);
+            let mut scratch = SearchScratch::new(&idx);
+            let fixed_params =
+                SearchParams::new(5).with_plan_mode(PlanMode::Fixed);
+            let (a, _) =
+                search_with(&idx, &q, &fixed_params, &mut scratch);
+            let (b, _) = search_with(&idx, &q, &params, &mut scratch);
+            assert_eq!(a.len(), b.len(), "val {val}");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id, "val {val}");
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let (data, idx) = setup();
+        let cfg = QuerySimConfig::tiny();
+        let params = SearchParams::new(10).adaptive();
+        let planner = Planner::new(&idx);
+        for q in &cfg.related_queries(&data, 73, 6) {
+            assert_eq!(planner.plan(q, &params), planner.plan(q, &params));
+        }
+    }
+
+    #[test]
+    fn stats_roundtrip_and_validation() {
+        let (_, idx) = setup();
+        let mut buf = Vec::new();
+        let mut w = BinWriter::raw(&mut buf);
+        idx.stats.write_into(&mut w).unwrap();
+        let mut r = BinReader::raw_with_limit(&buf[..], buf.len() as u64);
+        let back = IndexStats::read_from(&mut r).unwrap();
+        assert_eq!(back, idx.stats);
+        // histogram mass that disagrees with n must be rejected
+        let mut bad = idx.stats.clone();
+        bad.row_nnz_hist[0] += 1;
+        let mut buf = Vec::new();
+        let mut w = BinWriter::raw(&mut buf);
+        bad.write_into(&mut w).unwrap();
+        let mut r = BinReader::raw_with_limit(&buf[..], buf.len() as u64);
+        assert!(IndexStats::read_from(&mut r).is_err());
+    }
+
+    #[test]
+    fn plan_counts_bump_merge_total() {
+        let mut a = PlanCounts::default();
+        a.bump(PlanKind::Fixed);
+        a.bump(PlanKind::DenseOnly);
+        let mut b = PlanCounts::default();
+        b.bump(PlanKind::Hybrid);
+        b.bump(PlanKind::SparseOnly);
+        b.bump(PlanKind::SparseOnly);
+        a.merge(&b);
+        assert_eq!(a.fixed, 1);
+        assert_eq!(a.hybrid, 1);
+        assert_eq!(a.dense_only, 1);
+        assert_eq!(a.sparse_only, 2);
+        assert_eq!(a.total(), 5);
+    }
+}

@@ -1,16 +1,23 @@
-//! The three-stage residual-reordering search (paper §5):
+//! The three-stage residual-reordering search (paper §5), decomposed
+//! into plan-driven stage executors:
 //!
-//!   1. **Overfetch αh** — approximate scores from both data indices:
-//!      sparse via the cache-sorted inverted index scan, dense via the
-//!      LUT16 ADC scan; retain the αh best by the summed approximation.
+//!   1. **Overfetch αh** — approximate scores from the data indices the
+//!      [`QueryPlan`] selected: sparse via the cache-sorted inverted
+//!      index scan ([`stage1_sparse`]), dense via the LUT16 ADC scan
+//!      ([`stage1_dense`]); retain the plan's αh best by the summed
+//!      approximation ([`select_alpha`] / [`select_alpha_sparse`]).
 //!   2. **Dense residual reorder** — add q·residualᴰ (scalar-quantized
-//!      index) for the αh candidates; retain βh.
+//!      index) for the αh candidates; retain βh ([`rerank`]).
 //!   3. **Sparse residual reorder** — add q·residualˢ for the βh
-//!      candidates; return the top h.
+//!      candidates; return the top h (also [`rerank`]).
 //!
-//! Stage 1 touches all N datapoints through bandwidth-optimized scans;
-//! stages 2–3 touch only O(h) rows (§5: "less than 10% of the overall
-//! search time"), which `SearchStats` lets benches verify.
+//! Plans come from [`crate::hybrid::plan`]: `PlanMode::Fixed` always
+//! executes both scans (bit-identical to the historical pipeline);
+//! `PlanMode::Adaptive` skips a scan only when the skip is provably
+//! lossless. Stage 1 touches all N datapoints through
+//! bandwidth-optimized scans; stages 2–3 touch only O(h) rows (§5:
+//! "less than 10% of the overall search time"), which `SearchStats`
+//! lets benches verify.
 
 use std::time::Instant;
 
@@ -18,6 +25,7 @@ use crate::dense::adc_lut16;
 use crate::dense::lut::{QuantizedLut, QueryLut};
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::index::HybridIndex;
+use crate::hybrid::plan::{PlanCounts, QueryPlan};
 use crate::hybrid::segment::Tombstones;
 use crate::hybrid::topk::TopK;
 use crate::sparse::inverted_index::Accumulator;
@@ -31,7 +39,7 @@ pub struct SearchHit {
 }
 
 /// Per-stage timing + touch counts for the §5 "<10%" claim and the fig4
-/// cache-line validation.
+/// cache-line validation, plus per-plan-kind execution counters.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SearchStats {
     pub stage1_scan_us: f64,
@@ -41,6 +49,9 @@ pub struct SearchStats {
     pub accumulator_lines: usize,
     pub candidates_alpha: usize,
     pub candidates_beta: usize,
+    /// How many stage-1 pipeline executions ran under each plan kind
+    /// (one bump per query × segment).
+    pub plans: PlanCounts,
 }
 
 impl SearchStats {
@@ -48,9 +59,15 @@ impl SearchStats {
         self.stage1_scan_us + self.stage1_select_us + self.stage2_us + self.stage3_us
     }
 
-    /// Fraction of time in residual reordering (stages 2+3).
+    /// Fraction of time in residual reordering (stages 2+3). Exactly
+    /// 0.0 when nothing ran yet — an empty aggregate must not divide by
+    /// (or round up to) a fake denominator.
     pub fn reorder_fraction(&self) -> f64 {
-        (self.stage2_us + self.stage3_us) / self.total_us().max(1e-9)
+        let total = self.total_us();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        (self.stage2_us + self.stage3_us) / total
     }
 
     /// Fold another query's stats into this aggregate (batch reporting).
@@ -62,6 +79,7 @@ impl SearchStats {
         self.accumulator_lines += other.accumulator_lines;
         self.candidates_alpha += other.candidates_alpha;
         self.candidates_beta += other.candidates_beta;
+        self.plans.merge(&other.plans);
     }
 }
 
@@ -115,7 +133,8 @@ pub fn search_with(
 /// row, the id space of `HybridIndex::original_id`): dead rows are
 /// dropped from the stage-1 candidate list *before* the reorder stages,
 /// so a deleted/upserted row can never reach stage 2 or the results.
-/// This is the per-segment entry point of the mutable index.
+/// This is the per-segment entry point of the mutable index. Plans the
+/// query per `params.plan_mode` and executes the planned stages.
 pub fn search_with_filter(
     index: &HybridIndex,
     q: &HybridQuery,
@@ -123,28 +142,77 @@ pub fn search_with_filter(
     scratch: &mut SearchScratch,
     tombstones: Option<&Tombstones>,
 ) -> (Vec<SearchHit>, SearchStats) {
-    let mut stats = SearchStats::default();
+    let plan = index.plan(q, params);
+    search_with_plan(index, q, params, scratch, tombstones, &plan)
+}
 
-    // ---- Stage 1: approximate scans over both data indices.
-    let t0 = Instant::now();
-    let qd = index.query_dense(q);
-    // dense: LUT16 scan over all points (tables rebuilt in place)
-    scratch.lut.rebuild(&index.codebooks, &qd);
+/// Stage-1 dense executor: rebuild the per-query LUTs in place and run
+/// the LUT16 ADC scan over all rows into `scratch.dense_scores`.
+pub fn stage1_dense(
+    index: &HybridIndex,
+    qd: &[f32],
+    scratch: &mut SearchScratch,
+) {
+    scratch.lut.rebuild(&index.codebooks, qd);
     scratch.qlut.rebuild(&scratch.lut);
     adc_lut16::scan(
         &index.dense_codes,
         &scratch.qlut,
         &mut scratch.dense_scores,
     );
-    // sparse: inverted-index accumulation over pruned lists
+}
+
+/// Stage-1 sparse executor: reset the accumulator and stream the
+/// query's inverted lists into it (drain separately with
+/// [`drain_overlay`]).
+pub fn stage1_sparse(
+    index: &HybridIndex,
+    q: &HybridQuery,
+    scratch: &mut SearchScratch,
+) {
     scratch.acc.reset();
     index.sparse_index.scan(&q.sparse, &mut scratch.acc);
-    stats.accumulator_lines = scratch.acc.lines_touched();
+}
+
+/// Drain the accumulator's touched rows into the reused sparse overlay
+/// (row-ascending). The accumulator holds stale data outside touched
+/// blocks; the overlay is the masked view stage-1 selection consumes.
+pub fn drain_overlay(scratch: &mut SearchScratch) {
+    scratch.overlay.clear();
+    let (acc, overlay) = (&mut scratch.acc, &mut scratch.overlay);
+    acc.drain_scores(|r, s| overlay.push((r, s)));
+}
+
+/// Execute an already-made [`QueryPlan`] (the decomposed §5 pipeline).
+/// `search_with_filter` is the plan-then-execute convenience; the batch
+/// engine's data-sharded mode calls the executors directly with plans
+/// it computed once per query.
+pub fn search_with_plan(
+    index: &HybridIndex,
+    q: &HybridQuery,
+    params: &SearchParams,
+    scratch: &mut SearchScratch,
+    tombstones: Option<&Tombstones>,
+    plan: &QueryPlan,
+) -> (Vec<SearchHit>, SearchStats) {
+    let mut stats = SearchStats::default();
+    stats.plans.bump(plan.kind);
+
+    // ---- Stage 1: approximate scans over the planned data indices.
+    let t0 = Instant::now();
+    let qd = index.query_dense(q);
+    if plan.run_dense {
+        stage1_dense(index, &qd, scratch);
+    }
+    if plan.run_sparse {
+        stage1_sparse(index, q, scratch);
+        stats.accumulator_lines = scratch.acc.lines_touched();
+    }
     stats.stage1_scan_us = t0.elapsed().as_secs_f64() * 1e6;
 
     // select αh by combined approximate score
     let t1 = Instant::now();
-    let alpha_h = params.alpha_h().min(index.n);
+    let alpha_h = plan.alpha_h.min(index.n);
     // With tombstones, over-select by the dead count so dropped rows
     // don't eat into the live candidate budget: at most `dead()` of the
     // top (αh + dead) can be tombstones, so ≥ αh live rows survive the
@@ -153,13 +221,23 @@ pub fn search_with_filter(
         Some(t) => (alpha_h + t.dead()).min(index.n),
         None => alpha_h,
     };
-    // The accumulator holds stale data outside touched blocks; mask by
-    // draining touched rows into the (reused) sparse overlay.
-    scratch.overlay.clear();
-    let (acc, overlay) = (&mut scratch.acc, &mut scratch.overlay);
-    acc.drain_scores(|r, s| overlay.push((r, s)));
-    let mut alpha_candidates =
-        select_alpha(&scratch.dense_scores, &scratch.overlay, 0, fetch);
+    let mut alpha_candidates = match (plan.run_dense, plan.run_sparse) {
+        (true, true) => {
+            drain_overlay(scratch);
+            select_alpha(&scratch.dense_scores, &scratch.overlay, 0, fetch)
+        }
+        // Sparse scan skipped: the overlay is provably empty, so the
+        // dense scores compete alone (bit-identical to the merge loop
+        // over an empty overlay).
+        (true, false) => select_alpha(&scratch.dense_scores, &[], 0, fetch),
+        // Dense scan skipped: overlay rows compete against the implicit
+        // zero-score rest of the corpus, exactly as in the fixed merge.
+        (false, true) => {
+            drain_overlay(scratch);
+            select_alpha_sparse(&scratch.overlay, 0, index.n as u32, fetch)
+        }
+        (false, false) => unreachable!("plan must run at least one scan"),
+    };
     if let Some(t) = tombstones {
         alpha_candidates.retain(|&(r, _)| !t.get(index.original_id(r)));
         alpha_candidates.truncate(alpha_h);
@@ -168,7 +246,7 @@ pub fn search_with_filter(
     stats.stage1_select_us = t1.elapsed().as_secs_f64() * 1e6;
 
     // ---- Stages 2–3: residual reordering of the αh candidates.
-    let hits = rerank(index, &qd, q, params, alpha_candidates, &mut stats);
+    let hits = rerank(index, &qd, q, params, plan, alpha_candidates, &mut stats);
     (hits, stats)
 }
 
@@ -184,6 +262,15 @@ pub fn select_alpha(
     alpha_h: usize,
 ) -> Vec<(u32, f32)> {
     let mut top = TopK::new(alpha_h);
+    if overlay.is_empty() {
+        // Empty-overlay fast path (dense-only plans, pure-dense shards):
+        // no merge cursor to advance — bit-identical to the merge loop,
+        // which would add nothing to any row.
+        for (off, &ds) in dense_scores.iter().enumerate() {
+            top.push(row_base + off as u32, ds);
+        }
+        return top.into_sorted();
+    }
     let mut overlay_iter = overlay.iter().peekable();
     for (off, &ds) in dense_scores.iter().enumerate() {
         let row = row_base + off as u32;
@@ -206,21 +293,60 @@ pub fn select_alpha(
     top.into_sorted()
 }
 
+/// Stage-1 candidate selection when the dense scan was skipped
+/// (sparse-only plans): bit-identical to [`select_alpha`] over a
+/// hypothetical all-zero dense slice for rows `[row_start, row_end)`.
+/// Overlay rows score `0.0 + s` — exactly the sum the dense merge
+/// computes when every dense score is `+0.0` (this also normalizes a
+/// `-0.0` overlay score to `+0.0`, as the merge would) — and every
+/// other row in the range is an implicit zero-score candidate, so
+/// negative or underflowed-to-zero overlay scores and tombstone
+/// over-fetch behave exactly as in the fixed pipeline. The implicit
+/// zeros are fed in ascending row order and the loop stops at the first
+/// non-admissible one: under the `TopK` total order (score desc, id
+/// asc) every later zero is strictly worse, so the padding costs
+/// O(kept) whenever the overlay fills the budget with positive scores.
+pub fn select_alpha_sparse(
+    overlay: &[(u32, f32)],
+    row_start: u32,
+    row_end: u32,
+    alpha_h: usize,
+) -> Vec<(u32, f32)> {
+    let mut top = TopK::new(alpha_h);
+    for &(r, s) in overlay {
+        top.push(r, 0.0 + s);
+    }
+    let mut overlay_iter = overlay.iter().peekable();
+    for row in row_start..row_end {
+        // rows in the (row-ascending) overlay were already pushed
+        if overlay_iter.peek().is_some_and(|&&(r, _)| r == row) {
+            overlay_iter.next();
+            continue;
+        }
+        if !top.would_admit(row, 0.0) {
+            break;
+        }
+        top.push(row, 0.0);
+    }
+    top.into_sorted()
+}
+
 /// Stages 2–3 (§5): residual-reorder the stage-1 candidates and return
 /// the final hits. `qd` must be the index-space dense query (whitened if
-/// the index whitens). Shared by `search_with` and the batch engine's
-/// data-sharded path.
+/// the index whitens); the plan supplies the resolved βh. Shared by
+/// `search_with_plan` and the batch engine's data-sharded path.
 pub fn rerank(
     index: &HybridIndex,
     qd: &[f32],
     q: &HybridQuery,
     params: &SearchParams,
+    plan: &QueryPlan,
     alpha_candidates: Vec<(u32, f32)>,
     stats: &mut SearchStats,
 ) -> Vec<SearchHit> {
     // ---- Stage 2: dense residual reorder, retain βh.
     let t2 = Instant::now();
-    let beta_h = params.beta_h().min(alpha_candidates.len());
+    let beta_h = plan.beta_h.min(alpha_candidates.len());
     let beta_candidates: Vec<(u32, f32)> = match &index.dense_residual {
         Some(res) => {
             let mut t = TopK::new(beta_h);
@@ -357,6 +483,71 @@ mod tests {
         // and a warm scratch must not change results vs a fresh one
         let fresh = search(&idx, &queries[1], &params);
         assert_eq!(reused, fresh);
+    }
+
+    #[test]
+    fn empty_stats_have_no_reorder_fraction() {
+        // Zero-division guard: an empty aggregate (no stages ran) must
+        // report 0.0, not NaN or a fake tiny-denominator blow-up.
+        let s = SearchStats::default();
+        assert_eq!(s.total_us(), 0.0);
+        assert_eq!(s.reorder_fraction(), 0.0);
+        // and a stage-2-only aggregate is fully reorder time
+        let s = SearchStats { stage2_us: 5.0, ..Default::default() };
+        assert_eq!(s.reorder_fraction(), 1.0);
+    }
+
+    #[test]
+    fn accumulate_covers_plan_counters() {
+        use crate::hybrid::plan::PlanKind;
+        let mut agg = SearchStats::default();
+        let mut a = SearchStats::default();
+        a.plans.bump(PlanKind::Fixed);
+        let mut b = SearchStats::default();
+        b.plans.bump(PlanKind::DenseOnly);
+        b.plans.bump(PlanKind::SparseOnly);
+        agg.accumulate(&a);
+        agg.accumulate(&b);
+        assert_eq!(agg.plans.fixed, 1);
+        assert_eq!(agg.plans.dense_only, 1);
+        assert_eq!(agg.plans.sparse_only, 1);
+        assert_eq!(agg.plans.total(), 3);
+    }
+
+    #[test]
+    fn degenerate_queries_served_in_both_modes() {
+        use crate::hybrid::plan::PlanMode;
+        let (data, _) = setup();
+        let idx = HybridIndex::build(&data, &IndexConfig::default());
+        let mut scratch = SearchScratch::new(&idx);
+        let degenerate = [
+            // nnz = 0
+            HybridQuery {
+                sparse: crate::types::sparse::SparseVector::default(),
+                dense: vec![0.3; data.dense_dim()],
+            },
+            // all-zero dense
+            HybridQuery {
+                sparse: data.sparse.row_vec(0),
+                dense: vec![0.0; data.dense_dim()],
+            },
+            // both degenerate at once
+            HybridQuery {
+                sparse: crate::types::sparse::SparseVector::default(),
+                dense: vec![0.0; data.dense_dim()],
+            },
+        ];
+        for q in &degenerate {
+            for mode in [PlanMode::Fixed, PlanMode::Adaptive] {
+                let params =
+                    SearchParams::new(5).with_alpha(2.0).with_plan_mode(mode);
+                let (hits, st) =
+                    search_with(&idx, q, &params, &mut scratch);
+                assert_eq!(hits.len(), 5);
+                assert!(hits.windows(2).all(|w| w[0].score >= w[1].score));
+                assert_eq!(st.plans.total(), 1);
+            }
+        }
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::hybrid::batch::{BatchEngine, EngineConfig, ShardMode};
 use crate::hybrid::config::{IndexConfig, SearchParams};
 use crate::hybrid::index::{DenseArtifacts, HybridIndex};
 use crate::hybrid::persist;
-use crate::hybrid::search::SearchHit;
+use crate::hybrid::search::{SearchHit, SearchStats};
 use crate::types::csr::CsrMatrix;
 use crate::types::dense::DenseMatrix;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
@@ -350,11 +350,23 @@ impl Segment {
         queries: &[HybridQuery],
         params: &SearchParams,
     ) -> Vec<Vec<SearchHit>> {
+        self.search_batch_stats(queries, params).0
+    }
+
+    /// As [`Segment::search_batch`], also returning the engine's
+    /// aggregated per-query stats — the per-plan-kind counters flow
+    /// through here up to the coordinator's metrics.
+    pub fn search_batch_stats(
+        &self,
+        queries: &[HybridQuery],
+        params: &SearchParams,
+    ) -> (Vec<Vec<SearchHit>>, SearchStats) {
         let tomb = self.tombstones.any().then_some(&self.tombstones);
         let out = self
             .engine
             .search_batch_filtered(&self.index, queries, params, tomb);
-        out.hits
+        let hits = out
+            .hits
             .into_iter()
             .map(|hs| {
                 hs.into_iter()
@@ -364,7 +376,8 @@ impl Segment {
                     })
                     .collect()
             })
-            .collect()
+            .collect();
+        (hits, out.stats.per_query)
     }
 
     /// Resident bytes: search structures + bookkeeping + raw rows *if*

@@ -68,6 +68,27 @@ impl TopK {
         }
     }
 
+    /// Would pushing (id, score) now enter the kept set? True while the
+    /// heap is not yet full (and k > 0), or when (score, id) beats the
+    /// current worst under the total order. NaN never admits. Callers
+    /// feeding a score-tied, id-ascending stream can stop at the first
+    /// rejection: every later item is strictly worse.
+    #[inline]
+    pub fn would_admit(&self, id: u32, score: f32) -> bool {
+        if score.is_nan() || self.k == 0 {
+            return false;
+        }
+        if self.heap.len() < self.k {
+            return true;
+        }
+        match self.heap.peek() {
+            Some(min) => {
+                score > min.score || (score == min.score && id < min.id)
+            }
+            None => true,
+        }
+    }
+
     /// Current admission threshold (score of the kth item), if full.
     pub fn threshold(&self) -> Option<f32> {
         if self.heap.len() == self.k {
@@ -197,6 +218,22 @@ mod tests {
                 "push order {ord:?}"
             );
         }
+    }
+
+    #[test]
+    fn would_admit_matches_push_semantics() {
+        let mut t = TopK::new(2);
+        assert!(t.would_admit(9, 1.0), "not yet full");
+        t.push(5, 1.0);
+        t.push(2, 1.0);
+        // full of score-1.0 entries {2, 5}: better score admits, equal
+        // score admits only with a smaller id, NaN never does
+        assert!(t.would_admit(0, 2.0));
+        assert!(t.would_admit(3, 1.0), "id 3 beats kept id 5 on the tie");
+        assert!(!t.would_admit(7, 1.0), "id 7 loses the tie");
+        assert!(!t.would_admit(0, 0.5));
+        assert!(!t.would_admit(0, f32::NAN));
+        assert!(!TopK::new(0).would_admit(0, 1.0), "k = 0 admits nothing");
     }
 
     #[test]

@@ -61,6 +61,18 @@ fn parse_or_exit(
     }
 }
 
+/// Parse the `--plan` flag shared by `serve` and `query`.
+fn parse_plan_mode(raw: &str) -> hybrid_ip::hybrid::PlanMode {
+    match raw {
+        "fixed" => hybrid_ip::hybrid::PlanMode::Fixed,
+        "adaptive" => hybrid_ip::hybrid::PlanMode::Adaptive,
+        other => {
+            eprintln!("unknown --plan '{other}' (fixed|adaptive)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_gen_data(prog: &str, rest: &[String]) -> i32 {
     let spec = CliSpec::new("generate a QuerySim-like hybrid dataset")
         .flag("n", "100000", "number of datapoints")
@@ -234,8 +246,15 @@ fn cmd_serve(prog: &str, rest: &[String]) -> i32 {
             "retention",
             "memory",
             "raw-row retention: memory | disk | drop",
+        )
+        .flag(
+            "plan",
+            "fixed",
+            "query planning mode for the in-process load drive: \
+             fixed | adaptive (TCP clients choose per request)",
         );
     let args = parse_or_exit(spec, prog, rest);
+    let plan_mode = parse_plan_mode(args.str_("plan"));
     let retention = match args.str_("retention") {
         "memory" => hybrid_ip::hybrid::RowRetention::InMemory,
         "disk" => hybrid_ip::hybrid::RowRetention::OnDisk,
@@ -315,7 +334,8 @@ fn cmd_serve(prog: &str, rest: &[String]) -> i32 {
                 args.u64("seed") ^ 9,
                 args.usize("queries"),
             );
-            let params = SearchParams::new(args.usize("h"));
+            let params =
+                SearchParams::new(args.usize("h")).with_plan_mode(plan_mode);
             for q in &queries {
                 server.search(q, &params);
             }
@@ -362,12 +382,14 @@ fn cmd_query(prog: &str, rest: &[String]) -> i32 {
     .flag("h", "20", "result count")
     .flag("seed", "5", "query seed")
     .flag("pipeline", "16", "requests in flight per wave")
+    .flag("plan", "fixed", "query planning mode: fixed | adaptive")
     .switch("metrics", "fetch server-side metrics afterwards");
     let args = parse_or_exit(spec, prog, rest);
     let cfg = QuerySimConfig::scaled(args.usize("n"));
     let queries =
         cfg.generate_queries(args.u64("seed") ^ 9, args.usize("queries"));
-    let params = SearchParams::new(args.usize("h"));
+    let params = SearchParams::new(args.usize("h"))
+        .with_plan_mode(parse_plan_mode(args.str_("plan")));
     let depth = args.usize("pipeline").max(1);
     let mut client = match Client::connect(args.str_("addr")) {
         Ok(c) => c,
@@ -416,8 +438,18 @@ fn cmd_query(prog: &str, rest: &[String]) -> i32 {
         match client.metrics() {
             Ok(m) => println!(
                 "server: n={} mean={:?} p50={:?} p99={:?} qps={:.1} \
-                 (lifetime {:.1})",
-                m.count, m.mean, m.p50, m.p99, m.qps, m.lifetime_qps
+                 (lifetime {:.1}) plans[fixed={} hybrid={} dense={} \
+                 sparse={}]",
+                m.count,
+                m.mean,
+                m.p50,
+                m.p99,
+                m.qps,
+                m.lifetime_qps,
+                m.plans.fixed,
+                m.plans.hybrid,
+                m.plans.dense_only,
+                m.plans.sparse_only
             ),
             Err(e) => eprintln!("metrics fetch failed: {e}"),
         }

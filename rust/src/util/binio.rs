@@ -28,7 +28,12 @@
 use std::io::{self, Read, Seek, SeekFrom, Write};
 
 pub const MAGIC: &[u8; 8] = b"HYBIDX01";
-pub const VERSION: u32 = 3;
+/// Current snapshot version. v4 appends the skippable planner-statistics
+/// section to every `HybridIndex` payload (see `hybrid::plan`); v3 files
+/// (which lack it) still load, with the statistics recomputed.
+pub const VERSION: u32 = 4;
+/// Oldest snapshot version this build still reads.
+pub const MIN_VERSION: u32 = 3;
 
 /// Hard ceiling on any single decoded slice when the total input size is
 /// unknown (raw readers over streams). File-backed readers use the
@@ -229,6 +234,9 @@ pub struct BinReader<R: Read> {
     /// Bytes consumed so far (header included for `new`/`with_limit`) —
     /// lets callers record absolute section offsets for later seeks.
     consumed: u64,
+    /// Format version from the header (`VERSION` for raw readers, whose
+    /// bytes were produced by this build).
+    version: u32,
 }
 
 impl<R: Read> BinReader<R> {
@@ -254,6 +262,7 @@ impl<R: Read> BinReader<R> {
             r,
             remaining: total.map(|t| t - header),
             consumed: 0,
+            version: VERSION,
         };
         // Temporarily lift the limit so the header itself reads cleanly.
         let mut magic = [0u8; 8];
@@ -264,23 +273,36 @@ impl<R: Read> BinReader<R> {
         let mut ver = [0u8; 4];
         rd.r.read_exact(&mut ver)?;
         let version = u32::from_le_bytes(ver);
-        if version != VERSION {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
             return Err(invalid(format!(
-                "index version {version} != supported {VERSION}"
+                "index version {version} outside supported \
+                 {MIN_VERSION}..={VERSION}"
             )));
         }
+        rd.version = version;
         rd.consumed = header;
         Ok(rd)
     }
 
     pub fn raw(r: R) -> Self {
-        BinReader { r, remaining: None, consumed: 0 }
+        BinReader { r, remaining: None, consumed: 0, version: VERSION }
     }
 
     /// Raw reader with a known byte budget (nested sections of known
     /// length).
     pub fn raw_with_limit(r: R, total_bytes: u64) -> Self {
-        BinReader { r, remaining: Some(total_bytes), consumed: 0 }
+        BinReader {
+            r,
+            remaining: Some(total_bytes),
+            consumed: 0,
+            version: VERSION,
+        }
+    }
+
+    /// Format version the header declared (decoders branch on this for
+    /// sections that only newer versions carry).
+    pub fn version(&self) -> u32 {
+        self.version
     }
 
     /// Bytes consumed so far (absolute offset into the input for `new`
@@ -570,6 +592,27 @@ mod tests {
         let mut buf = MAGIC.to_vec();
         buf.extend_from_slice(&999u32.to_le_bytes());
         assert!(BinReader::new(Cursor::new(&buf)).is_err());
+        // below the compat window is rejected too
+        let mut buf = MAGIC.to_vec();
+        buf.extend_from_slice(&(MIN_VERSION - 1).to_le_bytes());
+        assert!(BinReader::new(Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn accepts_versions_in_compat_window() {
+        for v in MIN_VERSION..=VERSION {
+            let mut buf = MAGIC.to_vec();
+            buf.extend_from_slice(&v.to_le_bytes());
+            buf.extend_from_slice(&42u32.to_le_bytes());
+            let mut r = BinReader::new(Cursor::new(&buf)).unwrap();
+            assert_eq!(r.version(), v);
+            assert_eq!(r.u32().unwrap(), 42);
+        }
+        // writers stamp the current version
+        let mut buf = Vec::new();
+        BinWriter::new(&mut buf).unwrap().finish().unwrap();
+        let r = BinReader::new(Cursor::new(&buf)).unwrap();
+        assert_eq!(r.version(), VERSION);
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! Integration: the cost-model-driven query planner. The load-bearing
+//! claims, asserted at every serving layer (static search, batch engine
+//! in both shard modes, mutable segmented index, sharded server, TCP):
+//!
+//! * `PlanMode::Fixed` is **bit-identical** to the historical pipeline
+//!   (and to `Adaptive` on queries whose plan is the full hybrid one).
+//! * `PlanMode::Adaptive` skips the sparse scan for nnz = 0 queries and
+//!   the dense scan for sparse-dominant (zero-dense) queries — skips
+//!   that are provably lossless, so those results are bit-identical
+//!   too.
+//! * Plans are deterministic: same index + query ⇒ same plan, across
+//!   runs and across a snapshot save/load.
+//! * Per-plan-kind counters surface in `MetricsSnapshot` and over the
+//!   wire.
+
+use std::sync::Arc;
+
+use hybrid_ip::coordinator::{Client, NetConfig, NetServer, Server, ServerConfig};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::hybrid::batch::{BatchEngine, EngineConfig, ShardMode};
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::mutable::{MutableConfig, MutableHybridIndex};
+use hybrid_ip::hybrid::plan::{PlanKind, PlanMode, Planner};
+use hybrid_ip::hybrid::search::{search, search_with, SearchHit, SearchScratch};
+use hybrid_ip::types::hybrid::{HybridDataset, HybridQuery};
+use hybrid_ip::types::sparse::SparseVector;
+
+fn tiny(n: usize) -> QuerySimConfig {
+    let mut cfg = QuerySimConfig::tiny();
+    cfg.n = n;
+    cfg
+}
+
+fn assert_hits_identical(a: &[SearchHit], b: &[SearchHit], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{ctx}: id diverged");
+        assert_eq!(
+            x.score.to_bits(),
+            y.score.to_bits(),
+            "{ctx}: score bits diverged for id {}",
+            x.id
+        );
+    }
+}
+
+/// nnz = 0 (dense-only) query.
+fn dense_only_query(data: &HybridDataset, seed: u64) -> HybridQuery {
+    let cfg = QuerySimConfig::tiny();
+    let mut q = cfg.generate_queries(seed, 1).remove(0);
+    q.sparse = SparseVector::default();
+    q.dense = q.dense[..data.dense_dim()].to_vec();
+    q
+}
+
+/// Zero-dense (sparse-dominant) query built from a data row, so its
+/// dims hit the head inverted lists (every row shares the head dims).
+fn sparse_only_query(data: &HybridDataset, row: usize) -> HybridQuery {
+    HybridQuery {
+        sparse: data.sparse.row_vec(row),
+        dense: vec![0.0; data.dense_dim()],
+    }
+}
+
+/// A mixed workload: well-formed hybrid queries plus every degenerate
+/// shape.
+fn mixed_workload(
+    cfg: &QuerySimConfig,
+    data: &HybridDataset,
+    seed: u64,
+) -> Vec<HybridQuery> {
+    let mut queries = cfg.related_queries(data, seed, 6);
+    queries.push(dense_only_query(data, seed ^ 1));
+    queries.push(sparse_only_query(data, 2));
+    queries.push(HybridQuery {
+        sparse: SparseVector::default(),
+        dense: vec![0.0; data.dense_dim()],
+    });
+    queries
+}
+
+#[test]
+fn adaptive_bit_identical_to_fixed_at_static_layer() {
+    let cfg = tiny(600);
+    let data = cfg.generate(101);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let fixed = SearchParams::new(10).with_alpha(3.0);
+    let adaptive = fixed.adaptive();
+    let mut scratch = SearchScratch::new(&index);
+    for (i, q) in mixed_workload(&cfg, &data, 102).iter().enumerate() {
+        let (a, sta) = search_with(&index, q, &fixed, &mut scratch);
+        let (b, stb) = search_with(&index, q, &adaptive, &mut scratch);
+        assert_hits_identical(&a, &b, &format!("query {i}"));
+        assert_eq!(sta.plans.fixed, 1, "fixed mode counts fixed plans");
+        assert_eq!(stb.plans.fixed, 0, "adaptive never produces Fixed");
+    }
+}
+
+#[test]
+fn adaptive_skips_sparse_scan_for_nnz0_queries() {
+    let cfg = tiny(500);
+    let data = cfg.generate(103);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let q = dense_only_query(&data, 104);
+    let fixed = SearchParams::new(10);
+    let adaptive = fixed.adaptive();
+    let plan = index.plan(&q, &adaptive);
+    assert_eq!(plan.kind, PlanKind::DenseOnly);
+    assert!(!plan.run_sparse, "sparse scan must be skipped");
+    let mut scratch = SearchScratch::new(&index);
+    let (a, _) = search_with(&index, &q, &fixed, &mut scratch);
+    let (b, st) = search_with(&index, &q, &adaptive, &mut scratch);
+    assert_hits_identical(&a, &b, "nnz=0 skip is lossless");
+    assert_eq!(st.plans.dense_only, 1);
+    assert_eq!(st.accumulator_lines, 0, "no accumulator work done");
+}
+
+#[test]
+fn adaptive_skips_dense_scan_for_sparse_dominant_queries() {
+    let cfg = tiny(500);
+    let data = cfg.generate(105);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let q = sparse_only_query(&data, 0);
+    // α small enough that the head lists guarantee the budget
+    let fixed = SearchParams::new(10).with_alpha(3.0);
+    let adaptive = fixed.adaptive();
+    let plan = index.plan(&q, &adaptive);
+    assert_eq!(plan.kind, PlanKind::SparseOnly);
+    assert!(!plan.run_dense, "dense scan must be skipped");
+    assert!(plan.est_postings > 0);
+    let mut scratch = SearchScratch::new(&index);
+    let (a, _) = search_with(&index, &q, &fixed, &mut scratch);
+    let (b, st) = search_with(&index, &q, &adaptive, &mut scratch);
+    // Zero dense query ⇒ the skipped scan would have scored exact
+    // zeros, and the head lists cover ≥ αh positive candidates ⇒ the
+    // skip is lossless here, bit for bit.
+    assert_hits_identical(&a, &b, "zero-dense skip is lossless");
+    assert_eq!(st.plans.sparse_only, 1);
+}
+
+#[test]
+fn batch_engine_modes_match_sequential_under_both_plan_modes() {
+    let cfg = tiny(500);
+    let data = cfg.generate(107);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let queries = mixed_workload(&cfg, &data, 108);
+    for mode in [PlanMode::Fixed, PlanMode::Adaptive] {
+        let params =
+            SearchParams::new(10).with_alpha(3.0).with_plan_mode(mode);
+        for shard_mode in [ShardMode::ByQuery, ShardMode::ByData] {
+            let engine = BatchEngine::with_config(
+                &index,
+                EngineConfig { threads: 4, mode: shard_mode },
+            );
+            let out = engine.search_batch(&index, &queries, &params);
+            for (i, (q, got)) in queries.iter().zip(&out.hits).enumerate()
+            {
+                let want = search(&index, q, &params);
+                assert_hits_identical(
+                    got,
+                    &want,
+                    &format!("{mode:?}/{shard_mode:?} query {i}"),
+                );
+            }
+            assert_eq!(out.stats.per_query.plans.total(), queries.len());
+        }
+    }
+}
+
+#[test]
+fn mutable_index_serves_plans_across_segment_states() {
+    let cfg = tiny(400);
+    let data = cfg.generate(109);
+    let n = data.len();
+    let mut idx = MutableHybridIndex::from_dataset(
+        &data,
+        0,
+        MutableConfig { delta_seal_rows: 32, ..Default::default() },
+    );
+    // grow a delta segment + a live buffer tail
+    let extra = cfg.generate(110);
+    for i in 0..48 {
+        idx.upsert(
+            (n + i) as u32,
+            extra.sparse.row_vec(i),
+            extra.dense.row(i).to_vec(),
+        );
+    }
+    let fixed = SearchParams::new(10).with_alpha(3.0);
+    let adaptive = fixed.adaptive();
+    for (i, q) in mixed_workload(&cfg, &data, 111).iter().enumerate() {
+        let (a, sta) = idx.search_stats(q, &fixed);
+        let (b, stb) = idx.search_stats(q, &adaptive);
+        assert_hits_identical(&a, &b, &format!("mutable query {i}"));
+        // one plan per sealed segment (buffer rows plan nothing)
+        assert_eq!(sta.plans.total(), idx.n_segments());
+        assert_eq!(stb.plans.total(), idx.n_segments());
+        assert_eq!(stb.plans.fixed, 0);
+    }
+    // degenerate upsert/delete churn around degenerate queries
+    assert!(idx.delete(0));
+    let q = dense_only_query(&data, 112);
+    assert_eq!(idx.search(&q, &adaptive).len(), 10);
+    // tombstones + zero-dense: the dead-count over-fetch must behave
+    // identically whether or not the dense scan was skipped
+    let zq = sparse_only_query(&data, 1);
+    assert_hits_identical(
+        &idx.search(&zq, &fixed),
+        &idx.search(&zq, &adaptive),
+        "tombstoned zero-dense",
+    );
+}
+
+#[test]
+fn plans_are_deterministic_across_runs_and_snapshots() {
+    let cfg = tiny(400);
+    let data = cfg.generate(113);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let params = SearchParams::new(10).adaptive();
+    let queries = mixed_workload(&cfg, &data, 114);
+    let dir = std::env::temp_dir().join("hybrid_ip_plan_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("index.snap");
+    index.save(&path).unwrap();
+    let restored = HybridIndex::load(&path).unwrap();
+    assert_eq!(restored.stats, index.stats, "stats survive the snapshot");
+    let planner = Planner::new(&index);
+    let restored_planner = Planner::new(&restored);
+    for q in &queries {
+        let p1 = planner.plan(q, &params);
+        let p2 = planner.plan(q, &params);
+        let p3 = restored_planner.plan(q, &params);
+        assert_eq!(p1, p2, "same run determinism");
+        assert_eq!(p1, p3, "determinism across save/load");
+    }
+    // and a rebuilt index from the same data plans identically
+    let rebuilt = HybridIndex::build(&data, &IndexConfig::default());
+    for q in &queries {
+        assert_eq!(
+            planner.plan(q, &params),
+            Planner::new(&rebuilt).plan(q, &params)
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn mutable_snapshot_roundtrip_preserves_adaptive_results() {
+    let cfg = tiny(300);
+    let data = cfg.generate(115);
+    let mut idx = MutableHybridIndex::from_dataset(
+        &data,
+        0,
+        MutableConfig { delta_seal_rows: 32, ..Default::default() },
+    );
+    let extra = cfg.generate(116);
+    for i in 0..40 {
+        idx.upsert(
+            (data.len() + i) as u32,
+            extra.sparse.row_vec(i),
+            extra.dense.row(i).to_vec(),
+        );
+    }
+    let dir = std::env::temp_dir().join("hybrid_ip_plan_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mutable.snap");
+    idx.save(&path).unwrap();
+    let restored =
+        MutableHybridIndex::load(&path, MutableConfig::default()).unwrap();
+    let params = SearchParams::new(10).with_alpha(3.0).adaptive();
+    for (i, q) in mixed_workload(&cfg, &data, 117).iter().enumerate() {
+        assert_hits_identical(
+            &idx.search(q, &params),
+            &restored.search(q, &params),
+            &format!("restored mutable query {i}"),
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn cluster_and_wire_serve_degenerate_queries_with_plan_counters() {
+    let cfg = tiny(300);
+    let data = cfg.generate(119);
+    let server = Arc::new(Server::start(
+        &data,
+        &ServerConfig { n_shards: 2, ..Default::default() },
+    ));
+    let mut net = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&server),
+        NetConfig::default(),
+    )
+    .unwrap();
+    let mut client = Client::connect(net.local_addr()).unwrap();
+    let fixed = SearchParams::new(8).with_alpha(3.0);
+    let adaptive = fixed.adaptive();
+    for (i, q) in mixed_workload(&cfg, &data, 120).iter().enumerate() {
+        // wire results must match in-process, in both modes
+        let in_proc_fixed = server.search(q, &fixed);
+        let in_proc_adaptive = server.search(q, &adaptive);
+        assert_eq!(
+            in_proc_fixed, in_proc_adaptive,
+            "query {i}: adaptive in-process deviates"
+        );
+        let wire = client.search(q, &adaptive).unwrap();
+        assert_eq!(wire, in_proc_adaptive, "query {i}: wire deviates");
+    }
+    // plan counters travel the wire
+    let m = client.metrics().unwrap();
+    assert!(m.plans.fixed > 0, "fixed executions counted");
+    assert!(m.plans.dense_only > 0, "nnz=0 skips counted");
+    assert!(m.plans.sparse_only > 0, "zero-dense skips counted");
+    assert_eq!(
+        m.plans.fixed
+            + m.plans.hybrid
+            + m.plans.dense_only
+            + m.plans.sparse_only,
+        m.plans.total()
+    );
+    // batch request path with adaptive params over the wire
+    let queries = mixed_workload(&cfg, &data, 121);
+    let wire_batch = client.search_batch(&queries, &adaptive).unwrap();
+    for (q, got) in queries.iter().zip(&wire_batch) {
+        assert_eq!(got, &server.search(q, &adaptive));
+    }
+    drop(client);
+    net.shutdown();
+}

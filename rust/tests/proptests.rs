@@ -454,3 +454,100 @@ fn prop_cache_sort_never_increases_touched_lines() {
         );
     });
 }
+
+// ---------------------------------------------------------------- planner
+
+/// Skewed synthetic workload for the planner properties: power-law dims
+/// (the QuerySim generator), with degenerate query shapes mixed in.
+fn skewed_workload(
+    g: &mut Gen,
+    cfg: &hybrid_ip::data::synthetic::QuerySimConfig,
+    data: &HybridDataset,
+) -> Vec<HybridQuery> {
+    let mut queries = cfg.related_queries(data, g.case_seed ^ 0x9A17, 4);
+    // nnz = 0
+    queries.push(HybridQuery {
+        sparse: SparseVector::default(),
+        dense: (0..data.dense_dim()).map(|_| g.rng.gauss_f32()).collect(),
+    });
+    // zero dense, sparse from a random data row (hits the head lists)
+    let row = g.usize_in(0, data.len() - 1);
+    queries.push(HybridQuery {
+        sparse: data.sparse.row_vec(row),
+        dense: vec![0.0; data.dense_dim()],
+    });
+    // both degenerate
+    queries.push(HybridQuery {
+        sparse: SparseVector::default(),
+        dense: vec![0.0; data.dense_dim()],
+    });
+    queries
+}
+
+#[test]
+fn prop_adaptive_recall_at_least_fixed_minus_epsilon() {
+    use hybrid_ip::eval::ground_truth::exact_top_k;
+    use hybrid_ip::eval::recall::recall_at;
+    forall(8, 0x9F1A6, |g| {
+        let mut cfg = hybrid_ip::data::synthetic::QuerySimConfig::tiny();
+        cfg.n = g.usize_in(150, 400);
+        cfg.alpha = 1.5 + g.rng.f64(); // skew varies per case
+        let data = cfg.generate(g.case_seed);
+        let index = HybridIndex::build(&data, &IndexConfig::default());
+        let fixed = SearchParams::new(10).with_alpha(4.0);
+        let adaptive = fixed.adaptive();
+        let queries = skewed_workload(g, &cfg, &data);
+        let mut r_fixed = 0.0;
+        let mut r_adaptive = 0.0;
+        for q in &queries {
+            let truth = exact_top_k(&data, q, 10);
+            let got_f: Vec<u32> = hybrid_ip::hybrid::search::search(
+                &index, q, &fixed,
+            )
+            .iter()
+            .map(|h| h.id)
+            .collect();
+            let got_a: Vec<u32> = hybrid_ip::hybrid::search::search(
+                &index, q, &adaptive,
+            )
+            .iter()
+            .map(|h| h.id)
+            .collect();
+            r_fixed += recall_at(&truth, &got_f, 10);
+            r_adaptive += recall_at(&truth, &got_a, 10);
+        }
+        let m = queries.len() as f64;
+        let (r_fixed, r_adaptive) = (r_fixed / m, r_adaptive / m);
+        assert!(
+            r_adaptive >= r_fixed - 0.01,
+            "adaptive recall {r_adaptive} < fixed {r_fixed} - 0.01"
+        );
+    });
+}
+
+#[test]
+fn prop_plans_deterministic_and_snapshot_stable() {
+    use hybrid_ip::hybrid::plan::Planner;
+    forall(6, 0x91A5, |g| {
+        let mut cfg = hybrid_ip::data::synthetic::QuerySimConfig::tiny();
+        cfg.n = g.usize_in(100, 250);
+        let data = cfg.generate(g.case_seed);
+        let index = HybridIndex::build(&data, &IndexConfig::default());
+        let params = SearchParams::new(g.usize_in(1, 12)).adaptive();
+        let queries = skewed_workload(g, &cfg, &data);
+        let dir = std::env::temp_dir().join("hybrid_ip_plan_prop");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("case-{:x}.snap", g.case_seed));
+        index.save(&path).unwrap();
+        let restored = HybridIndex::load(&path).unwrap();
+        assert_eq!(restored.stats, index.stats);
+        let p = Planner::new(&index);
+        let pr = Planner::new(&restored);
+        for q in &queries {
+            let a = p.plan(q, &params);
+            assert_eq!(a, p.plan(q, &params), "same-run determinism");
+            assert_eq!(a, pr.plan(q, &params), "snapshot determinism");
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
