@@ -7,7 +7,14 @@
 //! LUT256-style f32 in-memory scan, u8 in-memory scan, and the XLA
 //! artifact backend.
 //!
+//! Besides the printed tables, writes a machine-readable
+//! `target/BENCH_adc.json` so CI accumulates a bench trajectory:
+//! per variant median ms / lookup-accumulates per second / code GB/s,
+//! plus the batch-amortization curve.
+//!
 //!     cargo bench --bench micro_adc
+
+use std::collections::BTreeMap;
 
 use hybrid_ip::benchkit::{self, bench, BenchConfig, Table};
 use hybrid_ip::dense::adc_lut16::{self, Lut16Codes};
@@ -15,6 +22,7 @@ use hybrid_ip::dense::adc_scalar;
 use hybrid_ip::dense::lut::{QuantizedLut, QueryLut};
 use hybrid_ip::dense::pq::{PqCodebooks, PqIndex};
 use hybrid_ip::types::dense::DenseMatrix;
+use hybrid_ip::util::json::{num, str_, Json};
 use hybrid_ip::util::rng::Rng;
 use hybrid_ip::util::simd::has_avx2;
 
@@ -62,6 +70,7 @@ fn main() {
     );
     let bytes = pq.codes.len() as f64;
 
+    let mut variant_rows: Vec<Json> = Vec::new();
     let mut row = |name: &str, stats: &hybrid_ip::benchkit::Stats| {
         let s = stats.median.as_secs_f64();
         table.row(&[
@@ -70,6 +79,12 @@ fn main() {
             format!("{:.2e}", lookups / s),
             format!("{:.2}", bytes / s / 1e9),
         ]);
+        let mut r = BTreeMap::new();
+        r.insert("variant".into(), str_(name));
+        r.insert("median_ms".into(), num(s * 1e3));
+        r.insert("lookups_per_s".into(), num(lookups / s));
+        r.insert("code_gb_per_s".into(), num(bytes / s / 1e9));
+        variant_rows.push(Json::Obj(r));
     };
 
     if has_avx2() {
@@ -125,6 +140,7 @@ fn main() {
         "batch scaling (LUT build + scan per query)",
         &["batch", "ms/query"],
     );
+    let mut batch_rows: Vec<Json> = Vec::new();
     for &batch in &[1usize, 2, 4, 8] {
         let qs: Vec<Vec<f32>> = (0..batch)
             .map(|_| (0..dim).map(|_| rng.gauss_f32()).collect())
@@ -137,10 +153,25 @@ fn main() {
             }
             std::hint::black_box(&out);
         });
-        t.row(&[
-            batch.to_string(),
-            format!("{:.3}", st.median.as_secs_f64() * 1e3 / batch as f64),
-        ]);
+        let ms_per_query = st.median.as_secs_f64() * 1e3 / batch as f64;
+        t.row(&[batch.to_string(), format!("{ms_per_query:.3}")]);
+        let mut r = BTreeMap::new();
+        r.insert("batch".into(), num(batch as f64));
+        r.insert("ms_per_query".into(), num(ms_per_query));
+        batch_rows.push(Json::Obj(r));
     }
     t.print();
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), str_("micro_adc"));
+    doc.insert("n".into(), num(n as f64));
+    doc.insert("k".into(), num(k as f64));
+    doc.insert("avx2".into(), Json::Bool(has_avx2()));
+    doc.insert("variants".into(), Json::Arr(variant_rows));
+    doc.insert("batch_scaling".into(), Json::Arr(batch_rows));
+    std::fs::create_dir_all("target").ok();
+    let path = "target/BENCH_adc.json";
+    std::fs::write(path, Json::Obj(doc).to_string())
+        .expect("write BENCH_adc.json");
+    println!("[micro_adc] wrote {path}");
 }

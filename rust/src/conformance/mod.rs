@@ -1,0 +1,439 @@
+//! Model-based differential conformance support (the ISSUE-6 tentpole).
+//!
+//! The repo's correctness story is a chain of bit-identity claims, each
+//! layer advertising equivalence to a simpler oracle below it:
+//!
+//! ```text
+//! naive exact scorer (ReferenceModel)       — ground truth, O(n·d)
+//!   └─ scalar LUT16 ADC scan                — approximate, deterministic
+//!        └─ AVX2 LUT16 ADC scan             — bit-identical to scalar
+//!             └─ sequential pipeline        — consumes either kernel
+//!                  └─ batch engine          — bit-identical to sequential
+//!                       └─ mutable segments — merge == fresh static build
+//!                            └─ snapshots   — restored == original
+//!                                 └─ wire   — coalesced == direct
+//! ```
+//!
+//! This module holds the pieces `rust/tests/conformance.rs` drives:
+//! a [`ReferenceModel`] (BTreeMap mirror of the live corpus scored by
+//! brute force — the single oracle), random document/query generators,
+//! bit-exact comparison helpers, and a LUT16 kernel differential that
+//! exercises the scalar/AVX2 pair across dispatch-override states.
+//!
+//! Everything here is deterministic in the seeds it is handed; failing
+//! runs report the seed so they replay exactly.
+
+use std::collections::BTreeMap;
+
+use crate::dense::adc_lut16::{self, Lut16Codes};
+use crate::dense::lut::{QuantizedLut, QueryLut};
+use crate::dense::pq::{PqCodebooks, PqIndex};
+use crate::hybrid::search::SearchHit;
+use crate::types::dense::{self, DenseMatrix};
+use crate::types::hybrid::{HybridDataset, HybridQuery};
+use crate::types::sparse::SparseVector;
+use crate::util::rng::Rng;
+use crate::util::simd::{has_avx2, set_force_scalar};
+
+/// The naive exact scorer: every conformance assertion bottoms out here.
+/// Holds the live corpus as plain payloads keyed by external id and
+/// scores queries by brute-force inner products — no index structures,
+/// no quantization, nothing shared with the code under test.
+pub struct ReferenceModel {
+    sparse_dims: usize,
+    dense_dims: usize,
+    docs: BTreeMap<u32, (SparseVector, Vec<f32>)>,
+}
+
+impl ReferenceModel {
+    pub fn new(sparse_dims: usize, dense_dims: usize) -> Self {
+        ReferenceModel { sparse_dims, dense_dims, docs: BTreeMap::new() }
+    }
+
+    /// Mirror of [`crate::hybrid::MutableHybridIndex::from_dataset`]:
+    /// row `i` becomes external id `base_id + i`.
+    pub fn from_dataset(data: &HybridDataset, base_id: u32) -> Self {
+        let mut m = Self::new(data.sparse_dim(), data.dense_dim());
+        for i in 0..data.len() {
+            m.docs.insert(
+                base_id + i as u32,
+                (data.sparse.row_vec(i), data.dense.row(i).to_vec()),
+            );
+        }
+        m
+    }
+
+    pub fn sparse_dims(&self) -> usize {
+        self.sparse_dims
+    }
+
+    pub fn dense_dims(&self) -> usize {
+        self.dense_dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.docs.contains_key(&id)
+    }
+
+    /// Insert or replace; returns true when an existing doc was replaced
+    /// (same contract as the index's upsert).
+    pub fn upsert(
+        &mut self,
+        id: u32,
+        sparse: SparseVector,
+        dense: Vec<f32>,
+    ) -> bool {
+        self.docs.insert(id, (sparse, dense)).is_some()
+    }
+
+    /// Returns false if `id` wasn't present (same contract as delete).
+    pub fn delete(&mut self, id: u32) -> bool {
+        self.docs.remove(&id).is_some()
+    }
+
+    /// Exact inner product of live doc `id` against `q`.
+    pub fn exact_score(&self, id: u32, q: &HybridQuery) -> Option<f32> {
+        self.docs.get(&id).map(|(s, d)| {
+            s.dot(&q.sparse) + dense::dot(d, &q.dense)
+        })
+    }
+
+    /// Brute-force top-h: score every live doc, sort by (score desc,
+    /// id asc). This is the ground truth recall is measured against.
+    pub fn exact_top(&self, q: &HybridQuery, h: usize) -> Vec<(u32, f32)> {
+        let mut scored: Vec<(u32, f32)> = self
+            .docs
+            .iter()
+            .map(|(&id, (s, d))| {
+                (id, s.dot(&q.sparse) + dense::dot(d, &q.dense))
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        scored.truncate(h);
+        scored
+    }
+
+    /// A uniformly random live id, if any.
+    pub fn random_live_id(&self, rng: &mut Rng) -> Option<u32> {
+        if self.docs.is_empty() {
+            return None;
+        }
+        let i = rng.below(self.docs.len());
+        self.docs.keys().nth(i).copied()
+    }
+
+    /// A query perturbed off a random live doc (value jitter only, so
+    /// the sparse dims stay sorted/valid) — guarantees a strong true
+    /// neighbor exists, like the paper's "identify similar queries"
+    /// setup.
+    pub fn related_query(&self, rng: &mut Rng) -> Option<HybridQuery> {
+        let id = self.random_live_id(rng)?;
+        let (s, d) = &self.docs[&id];
+        let vals: Vec<f32> = s
+            .vals
+            .iter()
+            .map(|v| v * (1.0 + 0.2 * (rng.f32() - 0.5)))
+            .collect();
+        let sparse = SparseVector::new(s.dims.clone(), vals);
+        let mut dense = d.clone();
+        for v in &mut dense {
+            *v += 0.2 * rng.gauss_f32();
+        }
+        Some(HybridQuery { sparse, dense })
+    }
+}
+
+/// Random well-formed payload: ≤ `max_nnz` distinct sorted sparse dims
+/// in range, gaussian values, exact-width dense row. Satisfies
+/// `MutableHybridIndex::payload_fits` by construction.
+pub fn random_doc(
+    rng: &mut Rng,
+    sparse_dims: usize,
+    dense_dims: usize,
+    max_nnz: usize,
+) -> (SparseVector, Vec<f32>) {
+    let nnz = rng.below(max_nnz.min(sparse_dims) + 1);
+    let mut dims: Vec<u32> = rng
+        .sample_indices(sparse_dims, nnz)
+        .into_iter()
+        .map(|d| d as u32)
+        .collect();
+    dims.sort_unstable();
+    let vals: Vec<f32> = (0..dims.len())
+        .map(|_| {
+            let v = rng.gauss_f32();
+            if v == 0.0 {
+                1e-3
+            } else {
+                v
+            }
+        })
+        .collect();
+    let dense: Vec<f32> =
+        (0..dense_dims).map(|_| rng.gauss_f32()).collect();
+    (SparseVector::new(dims, vals), dense)
+}
+
+/// Degenerate query shapes the adaptive planner provably skips stages
+/// for — the Fixed-vs-Adaptive identity must hold on these too.
+pub fn dense_only_query(rng: &mut Rng, dense_dims: usize) -> HybridQuery {
+    HybridQuery {
+        sparse: SparseVector::default(),
+        dense: (0..dense_dims).map(|_| rng.gauss_f32()).collect(),
+    }
+}
+
+pub fn sparse_only_query(
+    rng: &mut Rng,
+    sparse_dims: usize,
+    dense_dims: usize,
+) -> HybridQuery {
+    let (sparse, _) = random_doc(rng, sparse_dims, dense_dims, 12);
+    HybridQuery { sparse, dense: vec![0.0; dense_dims] }
+}
+
+/// Bit-exact comparison of two hit lists (ids and f32 payloads compared
+/// via `to_bits`, so `-0.0` vs `0.0` or NaN drift cannot slip through).
+pub fn assert_hits_identical(a: &[SearchHit], b: &[SearchHit], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: hit count diverged");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.id, y.id, "{ctx}: id diverged at rank {i}");
+        assert_eq!(
+            x.score.to_bits(),
+            y.score.to_bits(),
+            "{ctx}: score diverged at rank {i} ({} vs {})",
+            x.score,
+            y.score
+        );
+    }
+}
+
+/// Bit-exact comparison of `(id, score)` pair lists (the server/wire
+/// result shape).
+pub fn assert_pairs_identical(
+    a: &[(u32, f32)],
+    b: &[(u32, f32)],
+    ctx: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{ctx}: hit count diverged");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.0, y.0, "{ctx}: id diverged at rank {i}");
+        assert_eq!(
+            x.1.to_bits(),
+            y.1.to_bits(),
+            "{ctx}: score diverged at rank {i} ({} vs {})",
+            x.1,
+            y.1
+        );
+    }
+}
+
+pub fn hits_as_pairs(hits: &[SearchHit]) -> Vec<(u32, f32)> {
+    hits.iter().map(|h| (h.id, h.score)).collect()
+}
+
+/// Structural oracle checks every returned hit list must satisfy,
+/// regardless of approximation quality:
+///
+/// * no more hits than requested, and no more than live docs exist;
+/// * scores finite and non-increasing;
+/// * ids unique and **live in the model** — a tombstoned or never-
+///   inserted id surfacing is the classic delete/merge bug.
+pub fn assert_hits_sane(
+    model: &ReferenceModel,
+    hits: &[SearchHit],
+    h: usize,
+    ctx: &str,
+) {
+    assert!(
+        hits.len() <= h.min(model.len()),
+        "{ctx}: {} hits for h={h} over {} live docs",
+        hits.len(),
+        model.len()
+    );
+    let mut seen = std::collections::BTreeSet::new();
+    for (i, hit) in hits.iter().enumerate() {
+        assert!(
+            hit.score.is_finite(),
+            "{ctx}: non-finite score at rank {i}"
+        );
+        assert!(seen.insert(hit.id), "{ctx}: duplicate id {}", hit.id);
+        assert!(
+            model.contains(hit.id),
+            "{ctx}: hit id {} is not live (deleted or never inserted)",
+            hit.id
+        );
+        if i > 0 {
+            assert!(
+                hits[i - 1].score >= hit.score,
+                "{ctx}: scores not sorted at rank {i}"
+            );
+        }
+    }
+}
+
+/// Random PQ fixture for the kernel differential: `n` points over
+/// `k` subspaces (dim = 2k), codes packed for LUT16.
+pub fn lut16_fixture(
+    seed: u64,
+    n: usize,
+    k: usize,
+) -> (Lut16Codes, QuantizedLut) {
+    let mut rng = Rng::new(seed);
+    let dim = k * 2;
+    let train_rows = n.clamp(20, 64);
+    let rows: Vec<Vec<f32>> = (0..train_rows)
+        .map(|_| (0..dim).map(|_| rng.gauss_f32()).collect())
+        .collect();
+    let data = DenseMatrix::from_rows(&rows);
+    let cb = PqCodebooks::train(&data, k, 16, 3, seed);
+    let mut pq = PqIndex::build(&data, cb.clone());
+    if pq.n != n {
+        // Synthesize codes out to n rows (training data is a sample):
+        // random bytes are valid nibble-packed codes for l = 16.
+        let row_bytes = pq.row_bytes;
+        let mut codes = vec![0u8; n * row_bytes];
+        for b in codes.iter_mut() {
+            *b = (rng.next_u32() & 0xFF) as u8;
+        }
+        pq.codes = codes;
+        pq.n = n;
+    }
+    let blocked = Lut16Codes::from_pq_index(&pq);
+    let q: Vec<f32> = (0..dim).map(|_| rng.gauss_f32()).collect();
+    let lut = QueryLut::build(&cb, &q);
+    let qlut = QuantizedLut::build(&lut);
+    (blocked, qlut)
+}
+
+/// The SIMD==scalar leg of the oracle chain, for one (seed, n, k)
+/// shape: scalar scan vs direct AVX2 scan (when the host has it) vs the
+/// public dispatcher under **both** force-scalar override states, plus
+/// a split block-range scan — all byte-for-byte equal.
+///
+/// Leaves the dispatch override cleared (scalar not forced).
+pub fn assert_lut16_paths_identical(seed: u64, n: usize, k: usize) {
+    let (blocked, qlut) = lut16_fixture(seed, n, k);
+    let ctx = format!("lut16 seed={seed:#x} n={n} k={k}");
+
+    let mut scalar = vec![0.0f32; n];
+    adc_lut16::scan_scalar(&blocked, &qlut, &mut scalar);
+
+    #[cfg(target_arch = "x86_64")]
+    if has_avx2() {
+        let mut simd = vec![0.0f32; n];
+        unsafe { adc_lut16::scan_avx2(&blocked, &qlut, &mut simd) };
+        for i in 0..n {
+            assert_eq!(
+                scalar[i].to_bits(),
+                simd[i].to_bits(),
+                "{ctx}: avx2 != scalar at row {i} ({} vs {})",
+                scalar[i],
+                simd[i]
+            );
+        }
+    }
+
+    // Dispatcher under both override states must reproduce the oracle.
+    for forced in [true, false] {
+        set_force_scalar(forced);
+        let mut out = vec![0.0f32; n];
+        adc_lut16::scan(&blocked, &qlut, &mut out);
+        for i in 0..n {
+            assert_eq!(
+                scalar[i].to_bits(),
+                out[i].to_bits(),
+                "{ctx}: dispatch(force_scalar={forced}) != scalar at {i}"
+            );
+        }
+        // Split-range scan: disjoint halves fill the same buffer the
+        // full scan does (the ByData batch engine's unit of work).
+        if blocked.n_blocks > 0 {
+            let mut ranged = vec![f32::NAN; n];
+            let mid = blocked.n_blocks / 2;
+            adc_lut16::scan_blocks(&blocked, &qlut, &mut ranged, 0, mid);
+            adc_lut16::scan_blocks(
+                &blocked,
+                &qlut,
+                &mut ranged,
+                mid,
+                blocked.n_blocks,
+            );
+            for i in 0..n {
+                assert_eq!(
+                    scalar[i].to_bits(),
+                    ranged[i].to_bits(),
+                    "{ctx}: ranged(force_scalar={forced}) != scalar at {i}"
+                );
+            }
+        }
+    }
+    set_force_scalar(false);
+    let _ = has_avx2(); // silence unused import on non-x86 targets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_mirrors_upsert_delete_contract() {
+        let mut rng = Rng::new(7);
+        let mut m = ReferenceModel::new(64, 8);
+        let (s, d) = random_doc(&mut rng, 64, 8, 6);
+        assert!(!m.upsert(3, s.clone(), d.clone()), "fresh insert");
+        assert!(m.upsert(3, s, d), "replace reports replacement");
+        assert_eq!(m.len(), 1);
+        assert!(m.contains(3));
+        assert!(m.delete(3));
+        assert!(!m.delete(3), "double delete reports absence");
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn exact_top_orders_by_score_then_id() {
+        let mut m = ReferenceModel::new(4, 2);
+        // Two docs with identical payloads (tied scores): id breaks tie.
+        let s = SparseVector::new(vec![0], vec![1.0]);
+        m.upsert(9, s.clone(), vec![1.0, 0.0]);
+        m.upsert(2, s.clone(), vec![1.0, 0.0]);
+        m.upsert(5, SparseVector::default(), vec![0.0, 0.0]);
+        let q = HybridQuery { sparse: s, dense: vec![1.0, 0.0] };
+        let top = m.exact_top(&q, 3);
+        assert_eq!(top[0].0, 2, "tie broken by ascending id");
+        assert_eq!(top[1].0, 9);
+        assert_eq!(top[2].0, 5);
+        assert_eq!(m.exact_score(2, &q), Some(top[0].1));
+    }
+
+    #[test]
+    fn random_doc_is_always_well_formed() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let (s, d) = random_doc(&mut rng, 50, 4, 10);
+            assert_eq!(s.dims.len(), s.vals.len());
+            assert!(s.dims.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.dims.iter().all(|&j| (j as usize) < 50));
+            assert_eq!(d.len(), 4);
+        }
+    }
+
+    #[test]
+    fn lut16_differential_smoke() {
+        // Tiny shapes here; the wide sweep lives in tests/conformance.rs
+        // and tests/proptests.rs.
+        assert_lut16_paths_identical(0xD1FF, 33, 7);
+    }
+}

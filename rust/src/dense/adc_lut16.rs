@@ -28,7 +28,7 @@
 
 use crate::dense::lut::QuantizedLut;
 use crate::dense::pq::PqIndex;
-use crate::util::simd::has_avx2;
+use crate::util::simd::use_avx2;
 
 /// Points per block: one AVX2 register of nibble indices.
 pub const BLOCK: usize = 32;
@@ -101,9 +101,11 @@ pub fn scan_blocks(
     assert_eq!(out.len(), codes.n);
     assert_eq!(qlut.k, codes.k);
     assert!(b0 <= b1 && b1 <= codes.n_blocks, "bad block range {b0}..{b1}");
+    // use_avx2() honours the PALLAS_FORCE_SCALAR override, so the scalar
+    // oracle is reachable on AVX2 hosts (and exercised under Miri/ASan).
     #[cfg(target_arch = "x86_64")]
     {
-        if has_avx2() {
+        if use_avx2() {
             unsafe { scan_blocks_avx2(codes, qlut, out, b0, b1) };
             return;
         }
@@ -273,6 +275,7 @@ mod tests {
     use crate::dense::pq::{PqCodebooks, PqIndex};
     use crate::types::dense::DenseMatrix;
     use crate::util::rng::Rng;
+    use crate::util::simd::has_avx2;
 
     fn setup(
         seed: u64,

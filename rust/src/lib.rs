@@ -27,6 +27,7 @@
 
 pub mod baselines;
 pub mod benchkit;
+pub mod conformance;
 pub mod coordinator;
 pub mod data;
 pub mod dense;

@@ -3,6 +3,14 @@
 //! The paper's LUT16 path (§4.1.2) needs AVX2's VPSHUFB; we detect it once
 //! at startup and dispatch. The cache-line constants parameterize the §3
 //! cost model and the accumulator layout.
+//!
+//! Dispatch is overridable: `PALLAS_FORCE_SCALAR=1` (or
+//! [`set_force_scalar`] from tests) pins every kernel to the scalar
+//! oracle path, so the fallback stays testable on AVX2 hosts — and so
+//! Miri / sanitizer runs can exercise the portable path even where the
+//! intrinsics are unsupported.
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// x86 cache-line size in bytes (§3.1: "64-byte cache-lines").
 pub const CACHE_LINE_BYTES: usize = 64;
@@ -26,12 +34,48 @@ pub fn has_avx2() -> bool {
     }
 }
 
+/// Tri-state override cell: 0 = uninitialized (consult the env var on
+/// first use), 1 = scalar not forced, 2 = scalar forced.
+static FORCE_SCALAR: AtomicU8 = AtomicU8::new(0);
+
+/// True when kernel dispatch is pinned to the scalar path, either via
+/// the `PALLAS_FORCE_SCALAR` environment variable (any value except
+/// empty or `0`) or a prior [`set_force_scalar`] call.
+pub fn force_scalar() -> bool {
+    match FORCE_SCALAR.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => {
+            let forced = std::env::var("PALLAS_FORCE_SCALAR")
+                .map_or(false, |v| !v.is_empty() && v != "0");
+            FORCE_SCALAR
+                .store(if forced { 2 } else { 1 }, Ordering::Relaxed);
+            forced
+        }
+    }
+}
+
+/// Programmatic dispatch override (wins over the environment variable);
+/// lets tests drive both kernel paths in one process without racing on
+/// env mutation. Takes effect for all subsequent scans.
+pub fn set_force_scalar(forced: bool) {
+    FORCE_SCALAR.store(if forced { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// The dispatch predicate kernels consult: AVX2 present *and* not
+/// overridden to scalar.
+#[inline]
+pub fn use_avx2() -> bool {
+    has_avx2() && !force_scalar()
+}
+
 /// One-line capability summary for logs/bench headers.
 pub fn capability_string() -> String {
     format!(
-        "arch={} avx2={} threads={}",
+        "arch={} avx2={} force_scalar={} threads={}",
         std::env::consts::ARCH,
         has_avx2(),
+        force_scalar(),
         crate::util::threadpool::default_threads()
     )
 }
@@ -49,5 +93,17 @@ mod tests {
     #[test]
     fn capability_string_mentions_arch() {
         assert!(capability_string().contains("arch="));
+    }
+
+    #[test]
+    fn force_scalar_override_gates_dispatch() {
+        // Whatever the env said, the programmatic override wins and
+        // use_avx2() must honour it immediately.
+        set_force_scalar(true);
+        assert!(force_scalar());
+        assert!(!use_avx2(), "forced scalar must disable AVX2 dispatch");
+        set_force_scalar(false);
+        assert!(!force_scalar());
+        assert_eq!(use_avx2(), has_avx2());
     }
 }

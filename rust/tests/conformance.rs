@@ -1,0 +1,459 @@
+//! Cross-layer differential conformance harness (ISSUE 6 tentpole).
+//!
+//! One seeded, model-based run drives randomized operation sequences —
+//! build / upsert / delete / flush / merge / snapshot-save-restore /
+//! sequential-vs-batch (ByQuery and ByData) / TCP round-trip /
+//! Fixed-vs-Adaptive — against a [`ReferenceModel`] naive exact scorer
+//! (the single oracle), asserting the five identity invariants after
+//! every step:
+//!
+//! 1. **SIMD == scalar**: LUT16 AVX2 scan bit-identical to the scalar
+//!    kernel, across ragged tails, odd K, and the u16-overflow flush
+//!    boundary, under both `PALLAS_FORCE_SCALAR` dispatch states;
+//! 2. **batch == sequential**: the batch engine (both shard modes) and
+//!    the segmented batch path reproduce per-query sequential results;
+//! 3. **restored == original**: a snapshot round-trip serves
+//!    byte-for-byte identical results;
+//! 4. **coalesced == direct**: TCP round-trips (single, batch, and
+//!    cross-connection coalesced) match in-process serving;
+//! 5. **Adaptive == Fixed**: plan adaptivity never changes results on
+//!    this corpus (only provably lossless skips).
+//!
+//! Every failure message carries the run seed and step, so a failing
+//! sequence replays exactly.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hybrid_ip::conformance::{
+    assert_hits_identical, assert_hits_sane, assert_lut16_paths_identical,
+    assert_pairs_identical, dense_only_query, random_doc,
+    sparse_only_query, ReferenceModel,
+};
+use hybrid_ip::coordinator::{
+    Client, NetConfig, NetServer, Server, ServerConfig,
+};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::hybrid::batch::{BatchEngine, EngineConfig, ShardMode};
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::mutable::{MutableConfig, MutableHybridIndex};
+use hybrid_ip::hybrid::search::{search_with, SearchScratch};
+use hybrid_ip::types::hybrid::HybridQuery;
+use hybrid_ip::util::rng::Rng;
+
+fn tiny(n: usize) -> QuerySimConfig {
+    let mut cfg = QuerySimConfig::tiny();
+    cfg.n = n;
+    cfg
+}
+
+/// Fresh per-test scratch file path under the system temp dir.
+fn tmp_file(name: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("hybrid_ip_conf_{name}_{}", std::process::id()));
+    std::fs::remove_file(&p).ok();
+    p
+}
+
+/// The query battery checked after every model step: related queries
+/// (strong true neighbors), a dense-only and a sparse-only degenerate
+/// (the adaptive planner's skip cases), plus one pure-random probe.
+fn query_battery(
+    model: &ReferenceModel,
+    rng: &mut Rng,
+) -> Vec<HybridQuery> {
+    let mut qs = Vec::new();
+    for _ in 0..2 {
+        if let Some(q) = model.related_query(rng) {
+            qs.push(q);
+        }
+    }
+    qs.push(dense_only_query(rng, model.dense_dims()));
+    qs.push(sparse_only_query(rng, model.sparse_dims(), model.dense_dims()));
+    let (sparse, dense) =
+        random_doc(rng, model.sparse_dims(), model.dense_dims(), 12);
+    qs.push(HybridQuery { sparse, dense });
+    qs
+}
+
+/// The invariant battery for the mutable index: batch == sequential,
+/// Adaptive == Fixed, plus the structural oracle checks, over the whole
+/// query battery.
+fn check_mutable_invariants(
+    idx: &MutableHybridIndex,
+    model: &ReferenceModel,
+    queries: &[HybridQuery],
+    ctx: &str,
+) {
+    assert_eq!(idx.len(), model.len(), "{ctx}: live count diverged");
+    let fixed = SearchParams::new(10).with_alpha(20.0).with_beta(5.0);
+    let adaptive = fixed.adaptive();
+    let batched = idx.search_batch(queries, &fixed);
+    assert_eq!(batched.len(), queries.len());
+    for (qi, q) in queries.iter().enumerate() {
+        let seq = idx.search(q, &fixed);
+        assert_hits_identical(
+            &seq,
+            &batched[qi],
+            &format!("{ctx} q{qi}: batch vs sequential"),
+        );
+        let adapted = idx.search(q, &adaptive);
+        assert_hits_identical(
+            &seq,
+            &adapted,
+            &format!("{ctx} q{qi}: Adaptive vs Fixed"),
+        );
+        assert_hits_sane(model, &seq, 10, &format!("{ctx} q{qi}"));
+        // Oracle hook: any hit that is still in the unsealed write
+        // buffer was scored exactly, and every hit's id must at least
+        // map to a live doc whose exact score is finite.
+        for hit in &seq {
+            let exact = model
+                .exact_score(hit.id, q)
+                .unwrap_or_else(|| panic!("{ctx}: ghost id {}", hit.id));
+            assert!(exact.is_finite());
+        }
+    }
+}
+
+/// Tentpole: the seeded randomized operation sequence. Exercises ≥ 6
+/// operation kinds against model + index in lockstep and runs the
+/// invariant battery after every step.
+#[test]
+fn seeded_operation_sequence_upholds_invariants() {
+    for &run_seed in &[0xC0F0u64, 0xC0F1] {
+        run_sequence(run_seed);
+    }
+}
+
+fn run_sequence(run_seed: u64) {
+    let cfg = tiny(160);
+    let data = cfg.generate(run_seed);
+    let mcfg = MutableConfig {
+        delta_seal_rows: 24,
+        merge_floor_rows: 48,
+        merge_fraction: 0.3,
+        ..MutableConfig::default()
+    };
+    // Op kind: build (from_dataset seals the k-means base).
+    let mut idx =
+        MutableHybridIndex::from_dataset(&data, 0, mcfg.clone());
+    let mut model = ReferenceModel::from_dataset(&data, 0);
+    let mut rng = Rng::new(run_seed ^ 0x0515);
+    let mut next_id = data.len() as u32;
+    let mut exercised: BTreeSet<&'static str> = BTreeSet::new();
+    exercised.insert("build");
+
+    let snap = tmp_file(&format!("seq_{run_seed:x}"));
+    for step in 0..48 {
+        let ctx = format!("seed={run_seed:#x} step={step}");
+        match rng.below(10) {
+            // Upsert a brand-new id.
+            0..=2 => {
+                let (s, d) = random_doc(
+                    &mut rng,
+                    model.sparse_dims(),
+                    model.dense_dims(),
+                    12,
+                );
+                let id = next_id;
+                next_id += 1;
+                assert!(!idx.upsert(id, s.clone(), d.clone()), "{ctx}");
+                assert!(!model.upsert(id, s, d));
+                exercised.insert("upsert");
+            }
+            // Re-upsert (replace) an existing id.
+            3..=4 => {
+                if let Some(id) = model.random_live_id(&mut rng) {
+                    let (s, d) = random_doc(
+                        &mut rng,
+                        model.sparse_dims(),
+                        model.dense_dims(),
+                        12,
+                    );
+                    assert!(idx.upsert(id, s.clone(), d.clone()), "{ctx}");
+                    assert!(model.upsert(id, s, d));
+                    exercised.insert("upsert");
+                }
+            }
+            // Delete a live id (and assert double-delete reports
+            // absence, same as the model).
+            5..=6 => {
+                if let Some(id) = model.random_live_id(&mut rng) {
+                    assert!(idx.delete(id), "{ctx}: delete live {id}");
+                    assert!(model.delete(id));
+                    assert_eq!(
+                        idx.delete(id),
+                        model.delete(id),
+                        "{ctx}: double delete"
+                    );
+                    exercised.insert("delete");
+                }
+            }
+            // Flush: seal the write buffer into a delta segment.
+            7 => {
+                idx.flush();
+                exercised.insert("flush");
+            }
+            // Merge: re-seal everything into a fresh base.
+            8 => {
+                idx.merge().expect("merge with resident rows");
+                assert!(idx.n_segments() <= 1, "{ctx}: merge left deltas");
+                exercised.insert("merge");
+            }
+            // Snapshot round-trip; continue driving the RESTORED index
+            // so restore is proven to be a full state replacement.
+            _ => {
+                idx.save(&snap).expect("save snapshot");
+                let loaded = MutableHybridIndex::load(&snap, mcfg.clone())
+                    .expect("load snapshot");
+                let queries = query_battery(&model, &mut rng);
+                let fixed =
+                    SearchParams::new(10).with_alpha(20.0).with_beta(5.0);
+                for (qi, q) in queries.iter().enumerate() {
+                    assert_hits_identical(
+                        &idx.search(q, &fixed),
+                        &loaded.search(q, &fixed),
+                        &format!("{ctx} q{qi}: restored vs original"),
+                    );
+                }
+                assert_eq!(loaded.len(), idx.len(), "{ctx}");
+                idx = loaded;
+                exercised.insert("snapshot-save-restore");
+            }
+        }
+        let queries = query_battery(&model, &mut rng);
+        check_mutable_invariants(&idx, &model, &queries, &ctx);
+    }
+    std::fs::remove_file(&snap).ok();
+
+    assert!(
+        exercised.len() >= 6,
+        "sequence must exercise ≥ 6 operation kinds, got {exercised:?}"
+    );
+}
+
+/// Invariant 2 on the static engine: ByQuery and ByData shard modes and
+/// the sequential pipeline agree bit-for-bit, in both plan modes.
+#[test]
+fn static_engine_modes_agree_bitwise() {
+    let cfg = tiny(300);
+    let data = cfg.generate(0xE11E);
+    let index = HybridIndex::build(&data, &IndexConfig::default());
+    let mut rng = Rng::new(0xE11F);
+    let model = ReferenceModel::from_dataset(&data, 0);
+    let mut queries = cfg.related_queries(&data, 0xE120, 6);
+    queries.push(dense_only_query(&mut rng, data.dense_dim()));
+    queries.push(sparse_only_query(
+        &mut rng,
+        data.sparse_dim(),
+        data.dense_dim(),
+    ));
+
+    let by_query = BatchEngine::with_config(
+        &index,
+        EngineConfig { threads: 3, mode: ShardMode::ByQuery },
+    );
+    let by_data = BatchEngine::with_config(
+        &index,
+        EngineConfig { threads: 3, mode: ShardMode::ByData },
+    );
+    for mode_fixed in [true, false] {
+        let params = if mode_fixed {
+            SearchParams::new(10).with_alpha(20.0)
+        } else {
+            SearchParams::new(10).with_alpha(20.0).adaptive()
+        };
+        let a = by_query.search_batch(&index, &queries, &params);
+        let b = by_data.search_batch(&index, &queries, &params);
+        let mut scratch = SearchScratch::new(&index);
+        for (qi, q) in queries.iter().enumerate() {
+            let ctx = format!("fixed={mode_fixed} q{qi}");
+            let (seq, _) = search_with(&index, q, &params, &mut scratch);
+            assert_hits_identical(
+                &seq,
+                &a.hits[qi],
+                &format!("{ctx}: ByQuery vs sequential"),
+            );
+            assert_hits_identical(
+                &seq,
+                &b.hits[qi],
+                &format!("{ctx}: ByData vs sequential"),
+            );
+            // Pipeline hits already carry original dataset-row ids
+            // (search.rs maps through `original_id` before returning),
+            // so they key straight into the model.
+            assert_hits_sane(&model, &seq, 10, &ctx);
+        }
+    }
+}
+
+/// Invariant 1 at full width: the LUT16 kernel differential across
+/// ragged n (tail blocks), odd K (unpaired nibble), and the
+/// FLUSH_PAIRS u16-overflow boundary (k_pairs 127/128/129 ⇒ the
+/// ≤257-strip exactness window), under both dispatch-override states.
+#[test]
+fn lut16_kernel_differential_across_shapes() {
+    let shapes: &[(usize, usize)] = &[
+        (1, 1),      // single point, single subspace
+        (31, 2),     // sub-block tail only
+        (32, 2),     // exactly one block
+        (33, 7),     // tail block + odd K
+        (100, 9),    // multi-block + odd K
+        (96, 254),   // k_pairs = 127: just under the flush boundary
+        (64, 256),   // k_pairs = 128: exactly the flush window
+        (64, 258),   // k_pairs = 129: first flush + remainder
+        (70, 259),   // boundary + odd K + ragged tail together
+    ];
+    for (i, &(n, k)) in shapes.iter().enumerate() {
+        assert_lut16_paths_identical(0x51AD + i as u64, n, k);
+    }
+}
+
+/// Invariant 4: TCP round-trips — single query, explicit batch, and
+/// cross-connection coalesced singles — all bit-identical to direct
+/// in-process serving; mutations round-trip too.
+#[test]
+fn tcp_round_trip_matches_direct_serving() {
+    let cfg = tiny(200);
+    let data = cfg.generate(0x7C9);
+    let server = Arc::new(Server::start(
+        &data,
+        &ServerConfig { n_shards: 2, ..ServerConfig::default() },
+    ));
+    let mut net = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&server),
+        NetConfig::default(),
+    )
+    .expect("bind loopback");
+    let addr = net.local_addr();
+    let mut model = ReferenceModel::from_dataset(&data, 0);
+    let mut rng = Rng::new(0x7CA);
+    let params = SearchParams::new(10).with_alpha(20.0).with_beta(5.0);
+
+    let mut c1 = Client::connect(addr).expect("client 1");
+    let mut c2 = Client::connect(addr).expect("client 2");
+
+    let queries = {
+        let mut qs = cfg.related_queries(&data, 0x7CB, 4);
+        qs.push(dense_only_query(&mut rng, data.dense_dim()));
+        qs.push(sparse_only_query(
+            &mut rng,
+            data.sparse_dim(),
+            data.dense_dim(),
+        ));
+        qs
+    };
+
+    // Single-query round trips from two connections (these coalesce in
+    // the server's batcher) vs direct serving.
+    for (qi, q) in queries.iter().enumerate() {
+        let direct = server.search(q, &params);
+        let via1 = c1.search(q, &params).expect("wire search c1");
+        let via2 = c2.search(q, &params).expect("wire search c2");
+        assert_pairs_identical(
+            &direct,
+            &via1,
+            &format!("q{qi}: wire c1 vs direct"),
+        );
+        assert_pairs_identical(
+            &direct,
+            &via2,
+            &format!("q{qi}: wire c2 (coalesced) vs direct"),
+        );
+    }
+
+    // Explicit batch round trip vs direct batch vs per-query direct.
+    let direct_batch = server.search_batch(&queries, &params);
+    let wire_batch =
+        c1.search_batch(&queries, &params).expect("wire batch");
+    assert_eq!(wire_batch.len(), queries.len());
+    for (qi, q) in queries.iter().enumerate() {
+        assert_pairs_identical(
+            &direct_batch[qi],
+            &wire_batch[qi],
+            &format!("q{qi}: wire batch vs direct batch"),
+        );
+        let single = server.search(q, &params);
+        assert_pairs_identical(
+            &direct_batch[qi],
+            &single,
+            &format!("q{qi}: direct batch vs direct single"),
+        );
+    }
+
+    // Mutations over the wire, mirrored in the model; Adaptive == Fixed
+    // holds across the wire as well.
+    let (s, d) = random_doc(&mut rng, data.sparse_dim(), data.dense_dim(), 12);
+    let new_id = data.len() as u32 + 7;
+    c1.upsert(new_id, &s, &d).expect("wire upsert");
+    model.upsert(new_id, s.clone(), d.clone());
+    assert_eq!(server.len(), model.len(), "post-upsert live count");
+    let probe = HybridQuery { sparse: s, dense: d };
+    let hits = c2.search(&probe, &params).expect("probe search");
+    assert!(
+        hits.iter().any(|&(id, _)| id == new_id),
+        "fresh upsert must be searchable over the wire"
+    );
+    if let Some(&(id, score)) = hits.iter().find(|&&(id, _)| id == new_id)
+    {
+        // Buffered rows are scored exactly: the wire score must equal
+        // the oracle's brute-force inner product to the bit.
+        let exact = model.exact_score(id, &probe).unwrap();
+        assert_eq!(
+            score.to_bits(),
+            exact.to_bits(),
+            "buffered row must carry the exact score ({score} vs {exact})"
+        );
+    }
+    let adaptive_hits =
+        c2.search(&probe, &params.adaptive()).expect("adaptive probe");
+    assert_pairs_identical(
+        &hits,
+        &adaptive_hits,
+        "wire Adaptive vs Fixed",
+    );
+
+    assert!(c1.delete(new_id).expect("wire delete"));
+    model.delete(new_id);
+    assert!(!c1.delete(new_id).expect("wire double delete"));
+    assert_eq!(server.len(), model.len(), "post-delete live count");
+    c1.flush().expect("wire flush");
+    let post = c1.search(&probe, &params).expect("post-delete search");
+    assert!(
+        post.iter().all(|&(id, _)| id != new_id),
+        "deleted id must never surface again"
+    );
+    let m = c1.metrics().expect("wire metrics");
+    assert!(m.count > 0, "metrics must have recorded the round trips");
+
+    net.shutdown();
+}
+
+/// Invariant 2/5 corner: an index mutated down to emptiness serves
+/// empty results identically through every path.
+#[test]
+fn emptied_index_serves_identically_everywhere() {
+    let cfg = tiny(60);
+    let data = cfg.generate(0xE3B);
+    let mut idx = MutableHybridIndex::from_dataset(
+        &data,
+        0,
+        MutableConfig { delta_seal_rows: 16, ..MutableConfig::default() },
+    );
+    let mut model = ReferenceModel::from_dataset(&data, 0);
+    for i in 0..data.len() {
+        assert!(idx.delete(i as u32));
+        model.delete(i as u32);
+    }
+    idx.merge().expect("merge empty corpus");
+    let mut rng = Rng::new(0xE3C);
+    let queries = query_battery(&model, &mut rng);
+    check_mutable_invariants(&idx, &model, &queries, "emptied");
+    for q in &queries {
+        assert!(idx.search(q, &SearchParams::new(5)).is_empty());
+    }
+}

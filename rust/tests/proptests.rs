@@ -1,6 +1,7 @@
 //! Property-based tests over the paper's core invariants, driven by the
 //! in-tree seeded property harness (`util::proptest`).
 
+use hybrid_ip::conformance::assert_lut16_paths_identical;
 use hybrid_ip::dense::adc_lut16::{scan, Lut16Codes};
 use hybrid_ip::dense::lut::{QuantizedLut, QueryLut};
 use hybrid_ip::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
@@ -128,6 +129,28 @@ fn prop_lut16_scan_error_within_quantization_bound() {
                 qlut.max_error()
             );
         }
+    });
+}
+
+#[test]
+fn prop_lut16_simd_bitwise_equals_scalar() {
+    // The AVX2 kernels are not "close to" the scalar oracle — they are
+    // the same u16 arithmetic vectorized, so every output must match
+    // bit-for-bit. Shapes mix ragged n (partial trailing block), odd k
+    // (ghost high nibble in the last pair), and k_pairs straddling the
+    // FLUSH_PAIRS=128 accumulator-flush boundary (k = 253..=260, i.e.
+    // 127..130 code pairs per block).
+    forall(24, 0x51D0, |g| {
+        let n = g.usize_in(1, 96);
+        let k = match g.usize_in(0, 3) {
+            0 => g.usize_in(1, 40),
+            1 => g.usize_in(0, 19) * 2 + 1, // odd k
+            _ => g.usize_in(253, 260),      // flush boundary
+        };
+        // Compares scan_scalar vs scan_avx2, scan_blocks_scalar vs
+        // scan_blocks_avx2 on split ranges, and the public dispatcher
+        // under both set_force_scalar states.
+        assert_lut16_paths_identical(g.case_seed, n, k);
     });
 }
 
