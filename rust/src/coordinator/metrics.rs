@@ -27,6 +27,7 @@ pub struct PlanCounters {
     hybrid: AtomicU64,
     dense_only: AtomicU64,
     sparse_only: AtomicU64,
+    sparse_early_exit: AtomicU64,
 }
 
 impl PlanCounters {
@@ -42,6 +43,8 @@ impl PlanCounters {
             .fetch_add(c.dense_only as u64, Ordering::Relaxed);
         self.sparse_only
             .fetch_add(c.sparse_only as u64, Ordering::Relaxed);
+        self.sparse_early_exit
+            .fetch_add(c.sparse_early_exit as u64, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> PlanCounts {
@@ -50,6 +53,8 @@ impl PlanCounters {
             hybrid: self.hybrid.load(Ordering::Relaxed) as usize,
             dense_only: self.dense_only.load(Ordering::Relaxed) as usize,
             sparse_only: self.sparse_only.load(Ordering::Relaxed) as usize,
+            sparse_early_exit: self.sparse_early_exit.load(Ordering::Relaxed)
+                as usize,
         }
     }
 }
@@ -212,7 +217,8 @@ impl MetricsSnapshot {
         use crate::util::timer::fmt_duration;
         format!(
             "n={} mean={} p50={} p95={} p99={} max={} qps={:.1} \
-             (lifetime {:.1}) plans[fixed={} hybrid={} dense={} sparse={}]",
+             (lifetime {:.1}) plans[fixed={} hybrid={} dense={} sparse={} \
+             early_exit={}]",
             self.count,
             fmt_duration(self.mean),
             fmt_duration(self.p50),
@@ -225,6 +231,7 @@ impl MetricsSnapshot {
             self.plans.hybrid,
             self.plans.dense_only,
             self.plans.sparse_only,
+            self.plans.sparse_early_exit,
         )
     }
 }
@@ -310,6 +317,7 @@ mod tests {
         c.add(&PlanCounts {
             dense_only: 3,
             sparse_only: 4,
+            sparse_early_exit: 5,
             ..Default::default()
         });
         let s = c.snapshot();
@@ -317,7 +325,8 @@ mod tests {
         assert_eq!(s.hybrid, 1);
         assert_eq!(s.dense_only, 3);
         assert_eq!(s.sparse_only, 4);
-        assert_eq!(s.total(), 10);
+        assert_eq!(s.sparse_early_exit, 5);
+        assert_eq!(s.total(), 15);
         // a bare recorder reports zero plan counts
         assert_eq!(LatencyRecorder::new().snapshot().plans.total(), 0);
     }

@@ -26,7 +26,7 @@
 //! | `RESP_DELETE`       | u8 applied                                  |
 //! | `RESP_FLUSH`        | u64 live docs                               |
 //! | `RESP_SNAPSHOT`     | u64 snapshot bytes                          |
-//! | `RESP_METRICS`      | counts + durations (u64 nanos) + QPS (f64) + 4 × u64 per-plan-kind counts |
+//! | `RESP_METRICS`      | counts + durations (u64 nanos) + QPS (f64) + 5 × u64 per-plan-kind counts |
 //! | `RESP_ERROR`        | string message                              |
 //!
 //! # Versioning
@@ -79,6 +79,7 @@ use crate::hybrid::config::SearchParams;
 use crate::hybrid::persist;
 use crate::hybrid::plan::{PlanCounts, PlanMode};
 use crate::types::hybrid::HybridQuery;
+use crate::types::sparse::SparseVector;
 use crate::util::binio::{
     read_frame, write_frame, BinReader, BinWriter, DEFAULT_MAX_FRAME,
 };
@@ -141,6 +142,7 @@ fn write_params<W: io::Write>(
     w.u8(match p.plan_mode {
         PlanMode::Fixed => 0,
         PlanMode::Adaptive => 1,
+        PlanMode::Aggressive => 2,
     })
 }
 
@@ -159,6 +161,7 @@ fn read_params<R: io::Read>(
     let plan_mode = match r.u8()? {
         0 => PlanMode::Fixed,
         1 => PlanMode::Adaptive,
+        2 => PlanMode::Aggressive,
         b => return Err(invalid(format!("unknown plan mode byte {b}"))),
     };
     if h == 0 || h > (1 << 16) {
@@ -328,6 +331,7 @@ pub fn decode_response(payload: &[u8]) -> io::Result<(u64, Response)> {
                 hybrid: r.u64()? as usize,
                 dense_only: r.u64()? as usize,
                 sparse_only: r.u64()? as usize,
+                sparse_early_exit: r.u64()? as usize,
             },
         }),
         RESP_ERROR => Response::Error(r.str_()?),
@@ -645,7 +649,22 @@ fn handle_request(
             }
             REQ_UPSERT => {
                 let doc = r.u32()?;
-                let sparse = persist::read_sparse_vec(&mut r)?;
+                // Lenient sparse decode: structural reads only, no
+                // sortedness check. `SparseVector::new` merely
+                // debug-asserts ascending dims, so a malformed payload
+                // that slipped past a release-build client must reach
+                // the shard's `payload_fits` gate and come back as an
+                // `UpsertOutcome::Rejected` ack — a per-document
+                // verdict — rather than tearing down the connection
+                // with a frame-level error.
+                let dims = r.slice_u32()?;
+                let vals = r.slice_f32()?;
+                if dims.len() != vals.len() {
+                    return Err(invalid(
+                        "upsert sparse: dims/vals length mismatch",
+                    ));
+                }
+                let sparse = SparseVector { dims, vals };
                 let dense = r.slice_f32()?;
                 let outcome = server.upsert(doc, sparse, dense);
                 let _ = resp_tx.send(encode_frame(RESP_UPSERT, id, |w| {
@@ -685,7 +704,8 @@ fn handle_request(
                     w.u64(m.plans.fixed as u64)?;
                     w.u64(m.plans.hybrid as u64)?;
                     w.u64(m.plans.dense_only as u64)?;
-                    w.u64(m.plans.sparse_only as u64)
+                    w.u64(m.plans.sparse_only as u64)?;
+                    w.u64(m.plans.sparse_early_exit as u64)
                 }));
             }
             k => {
@@ -1054,6 +1074,18 @@ mod tests {
         assert_eq!(p2.plan_mode, PlanMode::Adaptive);
         assert_eq!(q2.sparse, q.sparse);
         assert_eq!(q2.dense, q.dense);
+        // the aggressive mode has its own wire byte
+        let mut buf = Vec::new();
+        {
+            let mut w = BinWriter::raw(&mut buf);
+            write_params(&mut w, &SearchParams::new(3).aggressive())
+                .unwrap();
+        }
+        let mut r = BinReader::raw_with_limit(&buf[..], buf.len() as u64);
+        assert_eq!(
+            read_params(&mut r).unwrap().plan_mode,
+            PlanMode::Aggressive
+        );
         // an unknown plan-mode byte is rejected, not defaulted
         let mut bad = Vec::new();
         {

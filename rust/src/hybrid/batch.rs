@@ -35,7 +35,7 @@ use crate::dense::adc_lut16::{self, BLOCK};
 use crate::dense::lut::{QuantizedLut, QueryLut};
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::index::HybridIndex;
-use crate::hybrid::plan::QueryPlan;
+use crate::hybrid::plan::{PlanKind, QueryPlan};
 use crate::hybrid::search::{
     rerank, search_with_filter, select_alpha, select_alpha_sparse,
     SearchHit, SearchScratch, SearchStats,
@@ -273,7 +273,18 @@ impl BatchEngine {
         let prep: Vec<Prep> = queries
             .iter()
             .map(|q| {
-                let plan = index.plan(q, params);
+                let mut plan = index.plan(q, params);
+                // Early-exit plans are whole-index constructs: each range
+                // worker's admission probe would see only its own rows
+                // and skip differently, desynchronizing the partial
+                // merge. Demote to the exact sparse-only scan — ByData
+                // stays exact under every plan mode (`est_postings`
+                // keeps the sharpened value, a lower bound on the work
+                // this mode actually does).
+                if plan.sparse_early_exit {
+                    plan.sparse_early_exit = false;
+                    plan.kind = PlanKind::SparseOnly;
+                }
                 let qd = index.query_dense(q);
                 let qlut = plan.run_dense.then(|| {
                     lut.rebuild(&index.codebooks, &qd);
@@ -342,7 +353,18 @@ impl BatchEngine {
                         scratch.overlay.clear();
                         let (acc, overlay) =
                             (&mut scratch.acc, &mut scratch.overlay);
-                        acc.drain_scores(|r, s| overlay.push((r, s)));
+                        // Range-clamped drain: an accumulator line
+                        // straddling the range boundary holds rows owned
+                        // by the neighboring worker (lazily zeroed on
+                        // touch, never scanned here). The full emit-all
+                        // drain would hand them to this worker's top-k
+                        // as 0.0-score candidates, duplicating rows
+                        // across partials at the merge.
+                        acc.drain_scores_range(
+                            row0 as u32,
+                            row1 as u32,
+                            |r, s| overlay.push((r, s)),
+                        );
                     }
                     let part = match (p.plan.run_dense, p.plan.run_sparse)
                     {
@@ -544,6 +566,52 @@ mod tests {
             assert!(out.stats.per_query.plans.sparse_only >= 1);
             assert_eq!(out.stats.per_query.plans.fixed, 0);
         }
+    }
+
+    #[test]
+    fn by_data_demotes_early_exit_and_stays_exact() {
+        use crate::sparse::compressed::SparseCompression;
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 400;
+        let data = cfg.generate(21);
+        let mut queries = cfg.related_queries(&data, 22, 8);
+        // zero-dense sparse queries: Aggressive would pick
+        // SparseEarlyExit on this compressed index
+        for q in &mut queries {
+            q.dense.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let index = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_sparse_compression(
+                SparseCompression::exact().with_block_len(8),
+            ),
+        );
+        let engine = BatchEngine::with_config(
+            &index,
+            EngineConfig { threads: 4, mode: ShardMode::ByData },
+        );
+        let out = engine.search_batch(
+            &index,
+            &queries,
+            &SearchParams::new(5).with_alpha(2.0).aggressive(),
+        );
+        // Data-sharded workers must demote every early-exit plan to the
+        // exact sparse-only scan: bit-identical to the adaptive batch
+        // and counted under the demoted kind.
+        let exact = engine.search_batch(
+            &index,
+            &queries,
+            &SearchParams::new(5).with_alpha(2.0).adaptive(),
+        );
+        for (got, want) in out.hits.iter().zip(&exact.hits) {
+            assert_hits_identical(got, want);
+        }
+        assert_eq!(out.stats.per_query.plans.sparse_early_exit, 0);
+        assert_eq!(
+            out.stats.per_query.plans.sparse_only,
+            queries.len(),
+            "demoted plans count as sparse_only"
+        );
     }
 
     #[test]

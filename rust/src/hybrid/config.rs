@@ -2,6 +2,7 @@
 //! selection.
 
 use crate::hybrid::plan::PlanMode;
+use crate::sparse::compressed::SparseCompression;
 
 /// How the hybrid index is built.
 #[derive(Clone, Debug)]
@@ -28,6 +29,15 @@ pub struct IndexConfig {
     pub whitening: bool,
     /// Training seed.
     pub seed: u64,
+    /// Compress the inverted index into impact-ordered blocks after the
+    /// build (SINDI-style; see `sparse::compressed`). `None` (default)
+    /// keeps the raw CSC backend and every historical bit-identity.
+    /// `Exact` coding shrinks the footprint with bit-identical scans;
+    /// `Q8` halves it again at a bounded stage-1 score error, and both
+    /// unlock `PlanMode::Aggressive` early termination. Not serialized
+    /// in the config section — snapshots persist the compressed blocks
+    /// themselves (v5) and restore this field from them.
+    pub sparse_compression: Option<SparseCompression>,
 }
 
 impl Default for IndexConfig {
@@ -42,6 +52,7 @@ impl Default for IndexConfig {
             cache_sort: true,
             whitening: false,
             seed: 0x5EA5C4,
+            sparse_compression: None,
         }
     }
 }
@@ -60,6 +71,11 @@ impl IndexConfig {
 
     pub fn with_whitening(mut self, on: bool) -> Self {
         self.whitening = on;
+        self
+    }
+
+    pub fn with_sparse_compression(mut self, spec: SparseCompression) -> Self {
+        self.sparse_compression = Some(spec);
         self
     }
 }
@@ -106,6 +122,12 @@ impl SearchParams {
         self.with_plan_mode(PlanMode::Adaptive)
     }
 
+    /// Shorthand for `with_plan_mode(PlanMode::Aggressive)` — opt-in
+    /// certified-bound early termination (see `hybrid::plan`).
+    pub fn aggressive(self) -> Self {
+        self.with_plan_mode(PlanMode::Aggressive)
+    }
+
     pub fn alpha_h(&self) -> usize {
         ((self.h as f32 * self.alpha).ceil() as usize).max(self.h)
     }
@@ -130,6 +152,8 @@ mod tests {
         assert_eq!(s.beta_h(), 60);
         assert_eq!(s.plan_mode, PlanMode::Fixed, "Fixed is the default");
         assert_eq!(s.adaptive().plan_mode, PlanMode::Adaptive);
+        assert_eq!(s.aggressive().plan_mode, PlanMode::Aggressive);
+        assert!(c.sparse_compression.is_none(), "raw backend is the default");
     }
 
     #[test]

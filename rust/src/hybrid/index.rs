@@ -16,6 +16,7 @@ use crate::dense::whitening::Whitening;
 use crate::hybrid::config::{IndexConfig, SearchParams};
 use crate::hybrid::plan::{IndexStats, Planner, QueryPlan};
 use crate::sparse::cache_sort::cache_sort;
+use crate::sparse::compressed::SparseCompression;
 use crate::sparse::inverted_index::InvertedIndex;
 use crate::sparse::pruning::{prune_matrix, PruneThresholds};
 use crate::types::csr::CsrMatrix;
@@ -122,11 +123,16 @@ impl HybridIndex {
             (0..n as u32).collect()
         };
         let working = data.permute(&perm);
-        let sparse_index =
+        let mut sparse_index =
             InvertedIndex::build(&pruned.kept.permute_rows(&perm));
         // Planner statistics come from the scan structure the planner
-        // budgets for — the pruned, permuted inverted index.
+        // budgets for — the pruned, permuted inverted index. Computed
+        // before compression (identical either way: stats are per-row /
+        // per-list counts, which compression preserves exactly).
         let stats = IndexStats::compute(&sparse_index);
+        if let Some(spec) = config.sparse_compression {
+            sparse_index.compress(spec);
+        }
         let pruned = crate::sparse::pruning::PrunedSparse {
             kept: CsrMatrix::default(), // consumed above
             residual: pruned.residual.permute_rows(&perm),
@@ -210,6 +216,15 @@ impl HybridIndex {
         )
     }
 
+    /// Compress the sparse backend in place (no-op rebuild of nothing
+    /// else: scans over the raw and `Exact`-coded backends are
+    /// bit-identical, see `sparse::compressed`). The intended upgrade
+    /// path for v3/v4 snapshots, which always load as raw CSC.
+    pub fn compress_sparse(&mut self, spec: SparseCompression) {
+        self.sparse_index.compress(spec);
+        self.config.sparse_compression = Some(spec);
+    }
+
     /// Transform a query's dense part to the index's dense space.
     pub fn query_dense(&self, q: &HybridQuery) -> Vec<f32> {
         match &self.whitening {
@@ -286,6 +301,28 @@ mod tests {
                 (k + r - exact).abs() < 1e-4,
                 "row {i}: {k}+{r} != {exact}"
             );
+        }
+    }
+
+    #[test]
+    fn compressed_exact_build_searches_bit_identically() {
+        let data = QuerySimConfig::tiny().generate(9);
+        let raw = HybridIndex::build(&data, &IndexConfig::default());
+        let cfg = IndexConfig::default().with_sparse_compression(
+            crate::sparse::compressed::SparseCompression::exact()
+                .with_block_len(8),
+        );
+        let comp = HybridIndex::build(&data, &cfg);
+        assert!(comp.sparse_index.is_compressed());
+        assert_eq!(raw.stats, comp.stats, "stats must ignore the backend");
+        for q in &QuerySimConfig::tiny().related_queries(&data, 10, 5) {
+            let a = raw.search(q, 5);
+            let b = comp.search(q, 5);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
         }
     }
 

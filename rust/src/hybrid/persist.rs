@@ -1,12 +1,14 @@
-//! Snapshot (de)serialization for the hybrid index family — the v3
-//! on-disk format over `util::binio`.
+//! Snapshot (de)serialization for the hybrid index family — the v3–v5
+//! on-disk formats over `util::binio`.
 //!
 //! Every snapshot file is `MAGIC | VERSION | kind (u8) | payload`:
 //!
 //! * kind [`SNAP_HYBRID_INDEX`] — one sealed [`HybridIndex`]: config,
-//!   permutation, inverted index (CSC), sparse residual (CSR), PQ
-//!   codebooks + row-major codes + LUT16 blocked codes, optional
-//!   scalar-quantized dense residual, optional whitening transform.
+//!   permutation, inverted index (v5: a backend tag byte — 0 = raw CSC,
+//!   1 = impact-ordered compressed blocks, stored verbatim; v3/v4: the
+//!   raw CSC untagged), sparse residual (CSR), PQ codebooks + row-major
+//!   codes + LUT16 blocked codes, optional scalar-quantized dense
+//!   residual, optional whitening transform.
 //! * kind `SNAP_SEGMENT` — a sealed segment: ids, tombstones, its
 //!   `HybridIndex`, then a *length-prefixed* raw-rows section that
 //!   loaders may skip (see `hybrid::segment`).
@@ -151,6 +153,9 @@ pub fn read_config<R: Read>(r: &mut BinReader<R>) -> io::Result<IndexConfig> {
         cache_sort,
         whitening,
         seed,
+        // Not part of the config codec (a v3-shaped section in every
+        // version): restored from the v5 sparse-backend tag instead.
+        sparse_compression: None,
     })
 }
 
@@ -427,14 +432,15 @@ pub fn read_whitening<R: Read>(r: &mut BinReader<R>) -> io::Result<Whitening> {
 
 impl HybridIndex {
     /// Serialize the full sealed index as a nested section of `w`: the
-    /// v3 core fields, then the v4 planner-statistics section — a
-    /// length-prefixed byte blob (`slice_u8`) so a reader that does not
-    /// understand it can skip it wholesale.
+    /// core fields (v5 layout, sparse backend tagged), then the v4
+    /// planner-statistics section — a length-prefixed byte blob
+    /// (`slice_u8`) so a reader that does not understand it can skip it
+    /// wholesale.
     pub fn write_into<W: Write>(
         &self,
         w: &mut BinWriter<W>,
     ) -> io::Result<()> {
-        self.write_core(w)?;
+        self.write_core(w, true)?;
         let mut buf = Vec::new();
         let mut sw = BinWriter::raw(&mut buf);
         self.stats.write_into(&mut sw)?;
@@ -442,15 +448,41 @@ impl HybridIndex {
         w.slice_u8(&buf)
     }
 
-    /// The v3 field set (everything except the planner-statistics
-    /// section) — split out so the version-compat tests can author a
-    /// genuine v3 payload.
-    fn write_core<W: Write>(&self, w: &mut BinWriter<W>) -> io::Result<()> {
+    /// The core field set (everything except the planner-statistics
+    /// section) — split out so the version-compat tests can author
+    /// genuine v3/v4 payloads. `tagged_sparse` selects the v5 layout
+    /// (backend tag byte before the sparse section); the legacy layout
+    /// is untagged raw CSC and therefore requires the raw backend.
+    fn write_core<W: Write>(
+        &self,
+        w: &mut BinWriter<W>,
+        tagged_sparse: bool,
+    ) -> io::Result<()> {
         write_config(w, &self.config)?;
         w.usize(self.n)?;
         w.usize(self.dense_dim)?;
         w.slice_u32(&self.perm)?;
-        write_csc(w, self.sparse_index.csc())?;
+        if tagged_sparse {
+            match self.sparse_index.raw_csc() {
+                Some(csc) => {
+                    w.u8(0)?;
+                    write_csc(w, csc)?;
+                }
+                None => {
+                    w.u8(1)?;
+                    self.sparse_index
+                        .compressed_postings()
+                        .expect("backend is raw or compressed")
+                        .write_into(w)?;
+                }
+            }
+        } else {
+            let csc = self
+                .sparse_index
+                .raw_csc()
+                .expect("legacy (v3/v4) layout requires the raw backend");
+            write_csc(w, csc)?;
+        }
         write_csr(w, &self.sparse_residual)?;
         write_codebooks(w, &self.codebooks)?;
         write_lut16(w, &self.dense_codes)?;
@@ -482,7 +514,7 @@ impl HybridIndex {
     /// persisted one.
     pub fn read_from<R: Read>(r: &mut BinReader<R>) -> io::Result<Self> {
         let has_stats_section = r.version() >= 4;
-        let config = read_config(r)?;
+        let mut config = read_config(r)?;
         let n = r.usize()?;
         let dense_dim = r.usize()?;
         let perm = r.slice_u32()?;
@@ -507,11 +539,32 @@ impl HybridIndex {
                 }
             }
         }
-        let csc = read_csc(r)?;
-        if csc.n_rows != n {
-            return Err(invalid("inverted index rows != n"));
-        }
-        let sparse_index = InvertedIndex::from_csc(csc);
+        // v5 tags the sparse section with its backend; earlier versions
+        // are always the untagged raw CSC.
+        let sparse_tag = if r.version() >= 5 { r.u8()? } else { 0 };
+        let sparse_index = match sparse_tag {
+            0 => {
+                let csc = read_csc(r)?;
+                if csc.n_rows != n {
+                    return Err(invalid("inverted index rows != n"));
+                }
+                InvertedIndex::from_csc(csc)
+            }
+            1 => {
+                let c = crate::sparse::compressed::CompressedPostings::
+                    read_from(r)?;
+                if c.n_rows() != n {
+                    return Err(invalid("inverted index rows != n"));
+                }
+                // The config codec predates compression; the persisted
+                // backend is the source of truth for the spec.
+                config.sparse_compression = Some(c.spec());
+                InvertedIndex::from_compressed(c)
+            }
+            t => {
+                return Err(invalid(format!("unknown sparse backend tag {t}")))
+            }
+        };
         let sparse_residual = read_csr(r)?;
         if sparse_residual.n_rows() != n {
             return Err(invalid("sparse residual rows != n"));
@@ -673,7 +726,7 @@ mod tests {
         {
             let mut w = BinWriter::raw(&mut buf);
             w.u8(SNAP_HYBRID_INDEX).unwrap();
-            idx.write_core(&mut w).unwrap();
+            idx.write_core(&mut w, false).unwrap();
         }
         let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
         std::fs::create_dir_all(&dir).unwrap();
@@ -688,6 +741,86 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.id, y.id);
             assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compressed_snapshot_roundtrips_backend_and_spec() {
+        use crate::sparse::compressed::SparseCompression;
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(13);
+        let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        for spec in [
+            SparseCompression::exact().with_block_len(8),
+            SparseCompression::q8().with_block_len(8),
+        ] {
+            let idx = HybridIndex::build(
+                &data,
+                &IndexConfig::default().with_sparse_compression(spec),
+            );
+            let path = dir.join("compressed.snap");
+            idx.save(&path).unwrap();
+            let back = HybridIndex::load(&path).unwrap();
+            assert!(back.sparse_index.is_compressed());
+            assert_eq!(back.config.sparse_compression, Some(spec));
+            assert_eq!(back.stats, idx.stats);
+            // blocks are stored verbatim: the restored index serves
+            // bit-identical results (for Q8 too — same codes, same scale)
+            for q in &cfg.related_queries(&data, 14, 3) {
+                let a = idx.search(q, 10);
+                let b = back.search(q, 10);
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.id, y.id);
+                    assert_eq!(x.score.to_bits(), y.score.to_bits());
+                }
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn legacy_v4_snapshot_loads_raw_and_recompresses() {
+        use crate::sparse::compressed::SparseCompression;
+        // A genuine v4 file: untagged raw CSC + stats section. It must
+        // load as the raw backend, and `compress_sparse` must then
+        // reproduce bit-identical exact-coded searches.
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(15);
+        let idx = HybridIndex::build(&data, &IndexConfig::default());
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(crate::util::binio::MAGIC);
+        buf.extend_from_slice(&4u32.to_le_bytes());
+        {
+            let mut w = BinWriter::raw(&mut buf);
+            w.u8(SNAP_HYBRID_INDEX).unwrap();
+            idx.write_core(&mut w, false).unwrap();
+            let mut sbuf = Vec::new();
+            let mut sw = BinWriter::raw(&mut sbuf);
+            idx.stats.write_into(&mut sw).unwrap();
+            drop(sw);
+            w.slice_u8(&sbuf).unwrap();
+        }
+        let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v4.snap");
+        std::fs::write(&path, &buf).unwrap();
+        let mut back = HybridIndex::load(&path).unwrap();
+        assert!(!back.sparse_index.is_compressed());
+        assert_eq!(back.config.sparse_compression, None);
+        assert_eq!(back.stats, idx.stats);
+        back.compress_sparse(SparseCompression::exact().with_block_len(4));
+        assert!(back.sparse_index.is_compressed());
+        for q in &cfg.related_queries(&data, 16, 3) {
+            let a = idx.search(q, 10);
+            let b = back.search(q, 10);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
         }
         std::fs::remove_file(&path).ok();
     }

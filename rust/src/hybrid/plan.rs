@@ -35,6 +35,17 @@
 //!     selection — including negative overlay scores and tombstone
 //!     over-fetch — matches the fixed merge bit for bit.
 //!
+//!   [`PlanMode::Aggressive`] is the explicit opt-in beyond lossless:
+//!   everything `Adaptive` does, plus — when the index carries the
+//!   block-compressed sparse backend and the query is sparse-dominant
+//!   with a posting count that dwarfs `alpha_h` — the early-terminating
+//!   sparse scan ([`PlanKind::SparseEarlyExit`]), which abandons list
+//!   tails whose per-block `|q_j| * max_abs` bound falls below
+//!   [`early_exit_eps_abs`] *and* can no longer displace the stage-1
+//!   admission threshold. Scores carry a certified absolute error bound
+//!   (see `EarlyExitStats`); the conformance battery asserts the
+//!   returned top-k matches the exact one on its workloads.
+//!
 //! Determinism contract: a plan is a pure function of (index, query,
 //! params) — no clocks, no RNG, no load feedback — so the same query
 //! against the same index (including one restored from a snapshot)
@@ -63,6 +74,14 @@ pub enum PlanMode {
     /// Deterministic given the index; recall is never more than the
     /// quantization floor below `Fixed` (lossless skips only).
     Adaptive,
+    /// `Adaptive` plus certified-bound early termination of the sparse
+    /// scan on block-compressed indexes (see [`PlanKind::SparseEarlyExit`]).
+    /// Still deterministic, but no longer bit-identical to `Fixed`:
+    /// stage-1 scores may be short by at most the certified per-row
+    /// bound. Data-sharded batch execution demotes these plans back to
+    /// the exact sparse-only scan (range-local admission thresholds
+    /// diverge), so ByData stays deterministic too.
+    Aggressive,
 }
 
 /// What the planner decided for one query (the per-plan-kind counter
@@ -78,6 +97,10 @@ pub enum PlanKind {
     /// Adaptive: the dense scan is skipped (zero dense component,
     /// enough guaranteed sparse candidates).
     SparseOnly,
+    /// Aggressive: sparse-only *and* the compressed backend's
+    /// early-terminating scan is engaged — list tails may be abandoned
+    /// under the certified per-block bound.
+    SparseEarlyExit,
 }
 
 /// Per-plan-kind execution counters. One bump per stage-1 pipeline
@@ -89,6 +112,7 @@ pub struct PlanCounts {
     pub hybrid: usize,
     pub dense_only: usize,
     pub sparse_only: usize,
+    pub sparse_early_exit: usize,
 }
 
 impl PlanCounts {
@@ -98,6 +122,7 @@ impl PlanCounts {
             PlanKind::Hybrid => self.hybrid += 1,
             PlanKind::DenseOnly => self.dense_only += 1,
             PlanKind::SparseOnly => self.sparse_only += 1,
+            PlanKind::SparseEarlyExit => self.sparse_early_exit += 1,
         }
     }
 
@@ -106,10 +131,15 @@ impl PlanCounts {
         self.hybrid += other.hybrid;
         self.dense_only += other.dense_only;
         self.sparse_only += other.sparse_only;
+        self.sparse_early_exit += other.sparse_early_exit;
     }
 
     pub fn total(&self) -> usize {
-        self.fixed + self.hybrid + self.dense_only + self.sparse_only
+        self.fixed
+            + self.hybrid
+            + self.dense_only
+            + self.sparse_only
+            + self.sparse_early_exit
     }
 }
 
@@ -137,6 +167,12 @@ pub struct QueryPlan {
     /// `E[C_sort]/E[C_unsort]` ratio when the index is cache-sorted.
     /// Always 0 under `PlanMode::Fixed` (see `est_postings`).
     pub est_sparse_lines: u64,
+    /// Run the sparse scan with early termination (compressed backend,
+    /// `PlanMode::Aggressive` only). When set, `est_postings` is the
+    /// sharpened definite-scan count: leading blocks plus tail blocks
+    /// whose bound clears [`early_exit_eps_abs`] — the probe may keep
+    /// more, never fewer.
+    pub sparse_early_exit: bool,
 }
 
 /// Number of log2 buckets in the [`IndexStats`] histograms.
@@ -198,10 +234,9 @@ impl IndexStats {
             total_postings += len;
             max_list_len = max_list_len.max(len);
             dim_list_hist[log2_bucket(len)] += 1;
-            let (rows, _) = index.list(j);
-            for &r in rows {
+            index.for_each_in_dim(j, |r, _| {
                 row_nnz[r as usize] += 1;
-            }
+            });
         }
         let mut row_nnz_hist = [0u64; HIST_BUCKETS];
         for &c in &row_nnz {
@@ -314,6 +349,63 @@ impl IndexStats {
     }
 }
 
+/// Relative skip threshold for the early-terminating sparse scan: a
+/// block bound must fall below `EARLY_EXIT_EPSILON` times the query's
+/// strongest leading-block impact before it is even considered
+/// skippable (the stage-1 admission probe must also agree). Small enough
+/// that the certified per-row error stays far below typical score
+/// margins; large enough to actually drop power-law list tails.
+pub const EARLY_EXIT_EPSILON: f32 = 1e-3;
+
+/// The absolute skip threshold `eps_abs` for one (index, query) pair:
+/// `EARLY_EXIT_EPSILON * max_j |q_j| * max|value| of list j`. A pure
+/// function of the two, shared by the planner's sharpened `est_postings`
+/// and the search executor so both price the same scan.
+pub fn early_exit_eps_abs(
+    inv: &InvertedIndex,
+    q: &crate::types::sparse::SparseVector,
+) -> f32 {
+    let mut scale = 0.0f32;
+    for (dim, qv) in q.iter() {
+        let j = dim as usize;
+        if j < inv.n_dims() {
+            scale = scale.max(qv.abs() * inv.list_max_abs(j));
+        }
+    }
+    EARLY_EXIT_EPSILON * scale
+}
+
+/// Definite postings an early-exit scan streams: every leading block,
+/// plus tail blocks whose `|q_j| * max_abs` bound exceeds `eps_abs`
+/// (bounds are non-increasing along a list, so counting stops at the
+/// first sub-threshold block). A lower bound on the true work — the
+/// admission probe can only keep extra blocks, never drop these.
+fn early_exit_est_postings(
+    inv: &InvertedIndex,
+    q: &crate::types::sparse::SparseVector,
+    eps_abs: f32,
+) -> u64 {
+    let mut est = 0u64;
+    for (dim, qv) in q.iter() {
+        let j = dim as usize;
+        if j >= inv.n_dims() {
+            continue;
+        }
+        let Some(metas) = inv.dim_block_metas(j) else {
+            est += inv.dim_nnz[j];
+            continue;
+        };
+        for (i, b) in metas.iter().enumerate() {
+            if i == 0 || qv.abs() * b.max_abs > eps_abs {
+                est += b.len as u64;
+            } else {
+                break;
+            }
+        }
+    }
+    est
+}
+
 /// Per-query features the planner extracts before deciding.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QueryFeatures {
@@ -403,6 +495,7 @@ impl<'i> Planner<'i> {
                 beta_h,
                 est_postings: 0,
                 est_sparse_lines: 0,
+                sparse_early_exit: false,
             };
         }
         let f = self.features(q);
@@ -414,7 +507,7 @@ impl<'i> Planner<'i> {
         } else {
             f.lines_bound
         };
-        let (kind, run_dense, run_sparse) = if f.postings == 0 {
+        let (mut kind, run_dense, run_sparse) = if f.postings == 0 {
             // nnz = 0, or every query dim has an empty list: the scan
             // provably produces an empty overlay.
             (PlanKind::DenseOnly, true, false)
@@ -427,14 +520,32 @@ impl<'i> Planner<'i> {
         } else {
             (PlanKind::Hybrid, true, true)
         };
+        let mut est_postings = f.postings;
+        let mut sparse_early_exit = false;
+        // Early exit pays only when the scan dominates the fetch: the
+        // leading blocks alone must already over-cover alpha_h several
+        // times, otherwise the probe threshold never engages and the
+        // bound checks are pure overhead.
+        if params.plan_mode == PlanMode::Aggressive
+            && kind == PlanKind::SparseOnly
+            && self.index.sparse_index.is_compressed()
+            && f.postings > (4 * alpha_h.max(1)) as u64
+        {
+            kind = PlanKind::SparseEarlyExit;
+            sparse_early_exit = true;
+            let inv = &self.index.sparse_index;
+            let eps_abs = early_exit_eps_abs(inv, &q.sparse);
+            est_postings = early_exit_est_postings(inv, &q.sparse, eps_abs);
+        }
         QueryPlan {
             kind,
             run_dense,
             run_sparse,
             alpha_h,
             beta_h,
-            est_postings: f.postings,
+            est_postings,
             est_sparse_lines,
+            sparse_early_exit,
         }
     }
 }
@@ -608,6 +719,63 @@ mod tests {
         assert_eq!(a.hybrid, 1);
         assert_eq!(a.dense_only, 1);
         assert_eq!(a.sparse_only, 2);
-        assert_eq!(a.total(), 5);
+        a.bump(PlanKind::SparseEarlyExit);
+        assert_eq!(a.sparse_early_exit, 1);
+        assert_eq!(a.total(), 6);
+    }
+
+    #[test]
+    fn aggressive_upgrades_sparse_only_on_compressed_backend() {
+        use crate::sparse::compressed::SparseCompression;
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(71);
+        let comp = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_sparse_compression(
+                SparseCompression::exact().with_block_len(4),
+            ),
+        );
+        let raw = HybridIndex::build(&data, &IndexConfig::default());
+        // zero dense + long head-dim lists: the SparseOnly precondition
+        let q = HybridQuery {
+            sparse: data.sparse.row_vec(0),
+            dense: vec![0.0; data.dense_dim()],
+        };
+        let params = SearchParams::new(5).with_alpha(2.0).aggressive();
+        let planner = Planner::new(&comp);
+        let full = planner.features(&q).postings;
+        assert!(full > (4 * params.alpha_h()) as u64, "workload precondition");
+        let p = planner.plan(&q, &params);
+        assert_eq!(p.kind, PlanKind::SparseEarlyExit);
+        assert!(p.sparse_early_exit && !p.run_dense && p.run_sparse);
+        // sharpened estimate: the definite-scan lower bound never
+        // exceeds the full posting count
+        assert!(p.est_postings > 0 && p.est_postings <= full);
+        // the upgrade needs all three of: Aggressive mode, a compressed
+        // backend, and a scan-dominated workload
+        let pr = Planner::new(&raw).plan(&q, &params);
+        assert_eq!(pr.kind, PlanKind::SparseOnly);
+        assert!(!pr.sparse_early_exit);
+        assert_eq!(pr.est_postings, full);
+        let pa = planner
+            .plan(&q, &SearchParams::new(5).with_alpha(2.0).adaptive());
+        assert_eq!(pa.kind, PlanKind::SparseOnly);
+        assert!(!pa.sparse_early_exit);
+        // fetch-dominated workload (a single short tail list: postings
+        // ≤ 4·alpha_h): the probe would never engage, upgrade off
+        let threshold = 4 * params.alpha_h();
+        let j = (0..comp.sparse_index.n_dims())
+            .find(|&j| {
+                let len = comp.sparse_index.dim_nnz[j];
+                len > 0 && len <= threshold as u64
+            })
+            .expect("power-law corpus has a short tail list");
+        let thin = HybridQuery {
+            sparse: SparseVector::new(vec![j as u32], vec![1.0]),
+            dense: vec![0.0; data.dense_dim()],
+        };
+        let pw = planner.plan(&thin, &params);
+        assert_eq!(pw.kind, PlanKind::SparseOnly, "fetch-dominated: no gain");
+        assert!(!pw.sparse_early_exit);
     }
 }

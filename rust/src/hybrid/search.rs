@@ -25,10 +25,10 @@ use crate::dense::adc_lut16;
 use crate::dense::lut::{QuantizedLut, QueryLut};
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::index::HybridIndex;
-use crate::hybrid::plan::{PlanCounts, QueryPlan};
+use crate::hybrid::plan::{early_exit_eps_abs, PlanCounts, QueryPlan};
 use crate::hybrid::segment::Tombstones;
 use crate::hybrid::topk::TopK;
-use crate::sparse::inverted_index::Accumulator;
+use crate::sparse::inverted_index::{Accumulator, EarlyExitStats};
 use crate::types::hybrid::HybridQuery;
 
 /// One search result (original-dataset id).
@@ -52,6 +52,17 @@ pub struct SearchStats {
     /// How many stage-1 pipeline executions ran under each plan kind
     /// (one bump per query × segment).
     pub plans: PlanCounts,
+    /// Early-termination accounting, nonzero only under
+    /// `PlanKind::SparseEarlyExit`: tail blocks priced against the probe,
+    /// how many of them were skipped, and the postings those skipped
+    /// blocks held (the scan work saved).
+    pub sparse_tail_blocks: usize,
+    pub sparse_blocks_skipped: usize,
+    pub sparse_postings_skipped: u64,
+    /// Certified per-row stage-1 score error of the *worst* query folded
+    /// into this aggregate (max, not sum — it bounds every individual
+    /// query's |approx − exact| on any single row).
+    pub sparse_error_bound: f32,
 }
 
 impl SearchStats {
@@ -80,6 +91,11 @@ impl SearchStats {
         self.candidates_alpha += other.candidates_alpha;
         self.candidates_beta += other.candidates_beta;
         self.plans.merge(&other.plans);
+        self.sparse_tail_blocks += other.sparse_tail_blocks;
+        self.sparse_blocks_skipped += other.sparse_blocks_skipped;
+        self.sparse_postings_skipped += other.sparse_postings_skipped;
+        self.sparse_error_bound =
+            self.sparse_error_bound.max(other.sparse_error_bound);
     }
 }
 
@@ -177,10 +193,52 @@ pub fn stage1_sparse(
 /// Drain the accumulator's touched rows into the reused sparse overlay
 /// (row-ascending). The accumulator holds stale data outside touched
 /// blocks; the overlay is the masked view stage-1 selection consumes.
+/// Every row of a touched line is emitted — including exact-0.0 sums —
+/// so cancelled rows stay candidates (see `Accumulator::drain_scores`).
 pub fn drain_overlay(scratch: &mut SearchScratch) {
     scratch.overlay.clear();
     let (acc, overlay) = (&mut scratch.acc, &mut scratch.overlay);
     acc.drain_scores(|r, s| overlay.push((r, s)));
+}
+
+/// Stage-1 sparse executor with certified early termination
+/// (`PlanKind::SparseEarlyExit`; compressed backend only — on a raw
+/// backend `scan_leading_blocks` degrades to the full exact scan and no
+/// tail pass runs).
+///
+/// Two-phase scan:
+/// 1. The leading (highest-impact) block of every touched list is
+///    accumulated unconditionally, then drained into a `fetch`-deep probe
+///    [`TopK`] padded with the same implicit-zero rows
+///    [`select_alpha_sparse`] competes against.
+/// 2. The remaining blocks stream in impact order; a block whose bound
+///    `|q_j|·max_abs` (an upper bound on every |contribution| it or any
+///    later block of its list could add) is both below the planner's
+///    `eps_abs` noise floor *and* rejected by the probe
+///    (`!would_admit(u32::MAX, bound)` — even the best-case score with
+///    the worst tie-break id would not enter the current top-`fetch`)
+///    is skipped along with the rest of its list.
+///
+/// The probe is a heuristic gate frozen at phase-1 state; soundness
+/// comes from the returned [`EarlyExitStats::error_bound`]: every row's
+/// missed contribution is ≤ the sum of first-skipped-block bounds, which
+/// conformance checks against the exact oracle.
+pub fn stage1_sparse_early_exit(
+    index: &HybridIndex,
+    q: &HybridQuery,
+    scratch: &mut SearchScratch,
+    fetch: usize,
+) -> EarlyExitStats {
+    let inv = &index.sparse_index;
+    let eps_abs = early_exit_eps_abs(inv, &q.sparse);
+    scratch.acc.reset();
+    inv.scan_leading_blocks(&q.sparse, &mut scratch.acc);
+    drain_overlay(scratch);
+    let probe =
+        sparse_zero_padded_topk(&scratch.overlay, 0, index.n as u32, fetch);
+    inv.scan_tail_blocks(&q.sparse, &mut scratch.acc, |bound| {
+        bound <= eps_abs && !probe.would_admit(u32::MAX, bound)
+    })
 }
 
 /// Execute an already-made [`QueryPlan`] (the decomposed §5 pipeline).
@@ -198,6 +256,17 @@ pub fn search_with_plan(
     let mut stats = SearchStats::default();
     stats.plans.bump(plan.kind);
 
+    let alpha_h = plan.alpha_h.min(index.n);
+    // With tombstones, over-select by the dead count so dropped rows
+    // don't eat into the live candidate budget: at most `dead()` of the
+    // top (αh + dead) can be tombstones, so ≥ αh live rows survive the
+    // filter whenever that many exist. Resolved before stage 1 because
+    // the early-exit probe must use the same fetch depth selection will.
+    let fetch = match tombstones {
+        Some(t) => (alpha_h + t.dead()).min(index.n),
+        None => alpha_h,
+    };
+
     // ---- Stage 1: approximate scans over the planned data indices.
     let t0 = Instant::now();
     let qd = index.query_dense(q);
@@ -205,22 +274,21 @@ pub fn search_with_plan(
         stage1_dense(index, &qd, scratch);
     }
     if plan.run_sparse {
-        stage1_sparse(index, q, scratch);
+        if plan.sparse_early_exit {
+            let ee = stage1_sparse_early_exit(index, q, scratch, fetch);
+            stats.sparse_tail_blocks = ee.tail_blocks;
+            stats.sparse_blocks_skipped = ee.blocks_skipped;
+            stats.sparse_postings_skipped = ee.postings_skipped;
+            stats.sparse_error_bound = ee.error_bound;
+        } else {
+            stage1_sparse(index, q, scratch);
+        }
         stats.accumulator_lines = scratch.acc.lines_touched();
     }
     stats.stage1_scan_us = t0.elapsed().as_secs_f64() * 1e6;
 
     // select αh by combined approximate score
     let t1 = Instant::now();
-    let alpha_h = plan.alpha_h.min(index.n);
-    // With tombstones, over-select by the dead count so dropped rows
-    // don't eat into the live candidate budget: at most `dead()` of the
-    // top (αh + dead) can be tombstones, so ≥ αh live rows survive the
-    // filter whenever that many exist.
-    let fetch = match tombstones {
-        Some(t) => (alpha_h + t.dead()).min(index.n),
-        None => alpha_h,
-    };
     let mut alpha_candidates = match (plan.run_dense, plan.run_sparse) {
         (true, true) => {
             drain_overlay(scratch);
@@ -312,7 +380,20 @@ pub fn select_alpha_sparse(
     row_end: u32,
     alpha_h: usize,
 ) -> Vec<(u32, f32)> {
-    let mut top = TopK::new(alpha_h);
+    sparse_zero_padded_topk(overlay, row_start, row_end, alpha_h).into_sorted()
+}
+
+/// The [`select_alpha_sparse`] competition, stopping before the final
+/// sort: overlay rows at `0.0 + s` plus ascending implicit-zero padding
+/// for every other row in range. Also builds the early-exit probe, whose
+/// admission threshold must match what stage-1 selection would apply.
+fn sparse_zero_padded_topk(
+    overlay: &[(u32, f32)],
+    row_start: u32,
+    row_end: u32,
+    k: usize,
+) -> TopK {
+    let mut top = TopK::new(k);
     for &(r, s) in overlay {
         top.push(r, 0.0 + s);
     }
@@ -328,7 +409,7 @@ pub fn select_alpha_sparse(
         }
         top.push(row, 0.0);
     }
-    top.into_sorted()
+    top
 }
 
 /// Stages 2–3 (§5): residual-reorder the stage-1 candidates and return
@@ -503,15 +584,21 @@ mod tests {
         let mut agg = SearchStats::default();
         let mut a = SearchStats::default();
         a.plans.bump(PlanKind::Fixed);
+        a.sparse_blocks_skipped = 3;
+        a.sparse_error_bound = 0.5;
         let mut b = SearchStats::default();
         b.plans.bump(PlanKind::DenseOnly);
         b.plans.bump(PlanKind::SparseOnly);
+        b.sparse_blocks_skipped = 2;
+        b.sparse_error_bound = 0.25;
         agg.accumulate(&a);
         agg.accumulate(&b);
         assert_eq!(agg.plans.fixed, 1);
         assert_eq!(agg.plans.dense_only, 1);
         assert_eq!(agg.plans.sparse_only, 1);
         assert_eq!(agg.plans.total(), 3);
+        assert_eq!(agg.sparse_blocks_skipped, 5, "skip counts sum");
+        assert_eq!(agg.sparse_error_bound, 0.5, "error bound is a max");
     }
 
     #[test]
@@ -557,6 +644,95 @@ mod tests {
         let p = SearchParams::new(10).with_alpha(1.0).with_beta(1.0);
         let hits = search(&idx, &queries[2], &p);
         assert_eq!(hits.len(), 10);
+    }
+
+    #[test]
+    fn aggressive_on_raw_backend_matches_adaptive() {
+        let (data, queries) = setup();
+        let idx = HybridIndex::build(&data, &IndexConfig::default());
+        let mut scratch = SearchScratch::new(&idx);
+        for q in &queries[..4] {
+            let mut q = q.clone();
+            q.dense.iter_mut().for_each(|v| *v = 0.0);
+            let (a, _) = search_with(
+                &idx,
+                &q,
+                &SearchParams::new(5).adaptive(),
+                &mut scratch,
+            );
+            let (b, st) = search_with(
+                &idx,
+                &q,
+                &SearchParams::new(5).aggressive(),
+                &mut scratch,
+            );
+            // Without a compressed backend the planner never upgrades to
+            // SparseEarlyExit, so Aggressive is exactly Adaptive.
+            assert_eq!(a, b);
+            assert_eq!(st.plans.sparse_early_exit, 0);
+            assert_eq!(st.sparse_tail_blocks, 0);
+        }
+    }
+
+    #[test]
+    fn aggressive_early_exit_skips_and_certifies_scores() {
+        use crate::sparse::compressed::SparseCompression;
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 600;
+        // Heavy-tailed values: impact-ordered lists decay far below the
+        // eps_abs noise floor, so tail blocks actually become skippable.
+        cfg.val_sigma = 3.0;
+        let data = cfg.generate(77);
+        let mut queries = cfg.related_queries(&data, 7, 10);
+        for q in &mut queries {
+            q.dense.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let idx = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_sparse_compression(
+                SparseCompression::exact().with_block_len(8),
+            ),
+        );
+        let mut scratch = SearchScratch::new(&idx);
+        let adaptive = SearchParams::new(5).with_alpha(2.0).adaptive();
+        let aggressive = SearchParams::new(5).with_alpha(2.0).aggressive();
+        let mut agg = SearchStats::default();
+        let (mut common, mut total) = (0usize, 0usize);
+        for q in &queries {
+            let (exact_hits, st_ex) =
+                search_with(&idx, q, &adaptive, &mut scratch);
+            let (fast_hits, st) =
+                search_with(&idx, q, &aggressive, &mut scratch);
+            assert_eq!(st_ex.plans.sparse_only, 1, "oracle path is exact");
+            agg.accumulate(&st);
+            assert_eq!(fast_hits.len(), exact_hits.len());
+            // Certified bound: stage-1 misses ≤ error_bound per row and
+            // the residual stages are shared, so any id both paths
+            // return scores within the certificate (+ fp slack).
+            let tol = st.sparse_error_bound + 1e-4;
+            for fh in &fast_hits {
+                if let Some(eh) =
+                    exact_hits.iter().find(|e| e.id == fh.id)
+                {
+                    assert!(
+                        (fh.score - eh.score).abs() <= tol,
+                        "id {}: {} vs {} exceeds certified {tol}",
+                        fh.id,
+                        fh.score,
+                        eh.score
+                    );
+                    common += 1;
+                }
+            }
+            total += exact_hits.len();
+        }
+        assert_eq!(agg.plans.sparse_early_exit, queries.len());
+        assert!(agg.sparse_blocks_skipped > 0, "skew must trigger skips");
+        assert!(agg.sparse_postings_skipped > 0);
+        assert!(agg.sparse_error_bound > 0.0);
+        // eps_abs is 0.1% of the top impact — the top-h barely moves
+        let overlap = common as f64 / total as f64;
+        assert!(overlap >= 0.9, "early-exit top-h overlap {overlap}");
     }
 
     #[test]

@@ -1,0 +1,659 @@
+//! Impact-ordered, block-compressed posting lists (SINDI-style).
+//!
+//! The §3 cost model says the sparse scan is bound by memory traffic, not
+//! FLOPs, so the biggest remaining lever is touching fewer bytes per
+//! posting. This module stores each inverted list as a sequence of blocks
+//! sorted by descending |value| ("impact order"):
+//!
+//! - row ids are frame-of-reference coded per block (offsets from the
+//!   block's smallest row) and bit-packed into `u64` words;
+//! - values are either exact f32 bit patterns ([`ValueCoding::Exact`]) or
+//!   8-bit block-scaled codes ([`ValueCoding::Q8`], scale = max_abs/127);
+//! - every block records `max_abs`, the largest |value| it contains.
+//!   Because postings are impact-ordered, `max_abs` is non-increasing
+//!   along a list, so `|q_j| * max_abs` is a certified upper bound on any
+//!   single row's remaining contribution from that list — the hook the
+//!   early-terminating scan and the planner's `est_postings` use.
+//!
+//! Within a block, rows are re-sorted ascending (required for offset
+//! coding); a row appears in at most one posting per list, so per-row
+//! accumulated sums are independent of block traversal order and the
+//! Exact coding reproduces the raw CSC scan bit-for-bit.
+
+use std::io::{self, Read, Write};
+
+use crate::types::csr::CscMatrix;
+use crate::util::binio::{BinReader, BinWriter};
+
+/// Default postings per block. 128 keeps per-block metadata under a byte
+/// per posting while giving the early-exit check a useful granularity.
+pub const DEFAULT_BLOCK_LEN: usize = 128;
+
+/// Upper bound on configurable block length (sanity bound for snapshots).
+pub const MAX_BLOCK_LEN: usize = 1 << 20;
+
+/// How posting values are stored inside a block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueCoding {
+    /// f32 bit patterns — decodes bit-identically to the raw postings.
+    Exact,
+    /// Signed 8-bit codes scaled by the block's `max_abs / 127` — lossy
+    /// (|error| <= max_abs/254 per posting) but 4x smaller.
+    Q8,
+}
+
+/// Compression spec: block granularity plus value coding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SparseCompression {
+    pub block_len: usize,
+    pub values: ValueCoding,
+}
+
+impl Default for SparseCompression {
+    fn default() -> Self {
+        SparseCompression {
+            block_len: DEFAULT_BLOCK_LEN,
+            values: ValueCoding::Exact,
+        }
+    }
+}
+
+impl SparseCompression {
+    pub fn exact() -> Self {
+        SparseCompression::default()
+    }
+
+    pub fn q8() -> Self {
+        SparseCompression {
+            block_len: DEFAULT_BLOCK_LEN,
+            values: ValueCoding::Q8,
+        }
+    }
+
+    pub fn with_block_len(mut self, block_len: usize) -> Self {
+        assert!((1..=MAX_BLOCK_LEN).contains(&block_len));
+        self.block_len = block_len;
+        self
+    }
+}
+
+/// Per-block metadata. Arena offsets are crate-internal; `len` and
+/// `max_abs` are the planner-visible bound surface.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockMeta {
+    pub(crate) word_start: u64,
+    pub(crate) val_start: u64,
+    pub base_row: u32,
+    pub len: u32,
+    pub bits: u8,
+    pub max_abs: f32,
+}
+
+/// Block-compressed inverted lists for a whole index (global arenas).
+#[derive(Clone, Debug)]
+pub struct CompressedPostings {
+    spec: SparseCompression,
+    n_rows: usize,
+    nnz: usize,
+    /// Per dim: blocks occupy `blocks[dim_blocks[j]..dim_blocks[j+1]]`.
+    dim_blocks: Vec<u64>,
+    blocks: Vec<BlockMeta>,
+    /// Bit-packed row offsets, one contiguous run of words per block.
+    packed: Vec<u64>,
+    /// Exact value arena (empty under Q8).
+    vals_f32: Vec<f32>,
+    /// Q8 value arena (empty under Exact).
+    vals_q8: Vec<i8>,
+}
+
+#[inline]
+fn bits_for(max_off: u32) -> u8 {
+    // At least 1: a zero-width field cannot be unpacked and a shift by
+    // the full word width is UB.
+    (32 - max_off.leading_zeros()).max(1) as u8
+}
+
+#[inline]
+fn words_for(len: usize, bits: u8) -> usize {
+    (len * bits as usize).div_ceil(64)
+}
+
+#[inline]
+fn offset_mask(bits: u8) -> u64 {
+    debug_assert!((1..=32).contains(&bits));
+    (1u64 << bits) - 1
+}
+
+impl CompressedPostings {
+    /// Compress a CSC view. Postings of each dimension are re-ordered by
+    /// descending |value| (ties: ascending row, so the layout is a pure
+    /// function of the logical postings) before blocking.
+    pub fn from_csc(csc: &CscMatrix, spec: SparseCompression) -> Self {
+        assert!((1..=MAX_BLOCK_LEN).contains(&spec.block_len));
+        let n_dims = csc.n_cols();
+        let mut out = CompressedPostings {
+            spec,
+            n_rows: csc.n_rows,
+            nnz: csc.nnz(),
+            dim_blocks: Vec::with_capacity(n_dims + 1),
+            blocks: Vec::new(),
+            packed: Vec::new(),
+            vals_f32: Vec::new(),
+            vals_q8: Vec::new(),
+        };
+        out.dim_blocks.push(0);
+        let mut postings: Vec<(u32, f32)> = Vec::new();
+        let mut chunk: Vec<(u32, f32)> = Vec::new();
+        for j in 0..n_dims {
+            let (rows, vals) = csc.col(j);
+            postings.clear();
+            postings.extend(rows.iter().copied().zip(vals.iter().copied()));
+            postings.sort_unstable_by(|a, b| {
+                b.1.abs()
+                    .total_cmp(&a.1.abs())
+                    .then_with(|| a.0.cmp(&b.0))
+            });
+            for c in postings.chunks(spec.block_len) {
+                let max_abs = c[0].1.abs();
+                chunk.clear();
+                chunk.extend_from_slice(c);
+                chunk.sort_unstable_by_key(|p| p.0);
+                out.push_block(max_abs, &chunk);
+            }
+            out.dim_blocks.push(out.blocks.len() as u64);
+        }
+        out
+    }
+
+    /// Append one block; `postings` are row-ascending and non-empty.
+    fn push_block(&mut self, max_abs: f32, postings: &[(u32, f32)]) {
+        let base_row = postings[0].0;
+        let max_off = postings.last().unwrap().0 - base_row;
+        let bits = bits_for(max_off);
+        let word_start = self.packed.len() as u64;
+        let words = words_for(postings.len(), bits);
+        self.packed.resize(self.packed.len() + words, 0);
+        for (k, &(row, _)) in postings.iter().enumerate() {
+            let off = (row - base_row) as u64;
+            let bitpos = k * bits as usize;
+            let w = word_start as usize + (bitpos >> 6);
+            let sh = bitpos & 63;
+            self.packed[w] |= off << sh;
+            if sh + bits as usize > 64 {
+                self.packed[w + 1] |= off >> (64 - sh);
+            }
+        }
+        let val_start = match self.spec.values {
+            ValueCoding::Exact => {
+                let s = self.vals_f32.len() as u64;
+                self.vals_f32.extend(postings.iter().map(|p| p.1));
+                s
+            }
+            ValueCoding::Q8 => {
+                let s = self.vals_q8.len() as u64;
+                self.vals_q8.extend(postings.iter().map(|&(_, v)| {
+                    if max_abs > 0.0 {
+                        (v / max_abs * 127.0).round().clamp(-127.0, 127.0) as i8
+                    } else {
+                        0
+                    }
+                }));
+                s
+            }
+        };
+        self.blocks.push(BlockMeta {
+            word_start,
+            val_start,
+            base_row,
+            len: postings.len() as u32,
+            bits,
+            max_abs,
+        });
+    }
+
+    pub fn spec(&self) -> SparseCompression {
+        self.spec
+    }
+
+    pub fn n_dims(&self) -> usize {
+        self.dim_blocks.len() - 1
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Postings in dimension j.
+    pub fn dim_len(&self, j: usize) -> u64 {
+        self.dim_metas(j).iter().map(|b| b.len as u64).sum()
+    }
+
+    /// Block metadata for dimension j, impact order (max_abs
+    /// non-increasing).
+    pub fn dim_metas(&self, j: usize) -> &[BlockMeta] {
+        let s = self.dim_blocks[j] as usize;
+        let e = self.dim_blocks[j + 1] as usize;
+        &self.blocks[s..e]
+    }
+
+    /// Largest |value| in dimension j's list (0.0 if empty).
+    pub fn list_max_abs(&self, j: usize) -> f32 {
+        self.dim_metas(j).first().map_or(0.0, |b| b.max_abs)
+    }
+
+    /// `(max_abs, len)` per block of dim j — the planner's bound surface.
+    pub fn block_bounds(&self, j: usize) -> impl Iterator<Item = (f32, usize)> + '_ {
+        self.dim_metas(j).iter().map(|b| (b.max_abs, b.len as usize))
+    }
+
+    /// Decode one block, emitting `(row, value)` with rows ascending.
+    pub fn for_each_in_block<F: FnMut(u32, f32)>(&self, b: &BlockMeta, mut f: F) {
+        let bits = b.bits as usize;
+        let mask = offset_mask(b.bits);
+        let words = &self.packed[b.word_start as usize..];
+        let vstart = b.val_start as usize;
+        let q8_step = b.max_abs / 127.0;
+        for k in 0..b.len as usize {
+            let bitpos = k * bits;
+            let w = bitpos >> 6;
+            let sh = bitpos & 63;
+            let mut off = words[w] >> sh;
+            if sh + bits > 64 {
+                off |= words[w + 1] << (64 - sh);
+            }
+            let row = b.base_row + (off & mask) as u32;
+            let v = match self.spec.values {
+                ValueCoding::Exact => self.vals_f32[vstart + k],
+                ValueCoding::Q8 => self.vals_q8[vstart + k] as f32 * q8_step,
+            };
+            f(row, v);
+        }
+    }
+
+    /// Decode a whole list in impact-block order (rows ascending within
+    /// each block, blocks by descending max_abs).
+    pub fn for_each_in_dim<F: FnMut(u32, f32)>(&self, j: usize, mut f: F) {
+        for b in self.dim_metas(j) {
+            self.for_each_in_block(b, &mut f);
+        }
+    }
+
+    /// Decode back to a CSC view (rows ascending per dim). Under
+    /// [`ValueCoding::Exact`] this is bit-identical to the compressed
+    /// input; under Q8 values carry the quantization error.
+    pub fn to_csc(&self) -> CscMatrix {
+        let n_dims = self.n_dims();
+        let mut colptr = Vec::with_capacity(n_dims + 1);
+        let mut rows = Vec::with_capacity(self.nnz);
+        let mut vals = Vec::with_capacity(self.nnz);
+        colptr.push(0u64);
+        let mut list: Vec<(u32, f32)> = Vec::new();
+        for j in 0..n_dims {
+            list.clear();
+            self.for_each_in_dim(j, |r, v| list.push((r, v)));
+            list.sort_unstable_by_key(|p| p.0);
+            rows.extend(list.iter().map(|p| p.0));
+            vals.extend(list.iter().map(|p| p.1));
+            colptr.push(rows.len() as u64);
+        }
+        CscMatrix { colptr, rows, vals, n_rows: self.n_rows }
+    }
+
+    /// Resident bytes of the compressed structures.
+    pub fn memory_bytes(&self) -> usize {
+        self.dim_blocks.len() * 8
+            + self.blocks.len() * std::mem::size_of::<BlockMeta>()
+            + self.packed.len() * 8
+            + self.vals_f32.len() * 4
+            + self.vals_q8.len()
+    }
+
+    /// Serialize (snapshot v5 sparse-backend section). Arena offsets are
+    /// recomputed on load, not stored.
+    pub fn write_into<W: Write>(&self, w: &mut BinWriter<W>) -> io::Result<()> {
+        w.u8(match self.spec.values {
+            ValueCoding::Exact => 0,
+            ValueCoding::Q8 => 1,
+        })?;
+        w.usize(self.spec.block_len)?;
+        w.usize(self.n_rows)?;
+        w.usize(self.nnz)?;
+        w.slice_u64(&self.dim_blocks)?;
+        w.usize(self.blocks.len())?;
+        for b in &self.blocks {
+            w.u32(b.base_row)?;
+            w.u32(b.len)?;
+            w.u8(b.bits)?;
+            w.f32(b.max_abs)?;
+        }
+        w.slice_u64(&self.packed)?;
+        match self.spec.values {
+            ValueCoding::Exact => w.slice_f32(&self.vals_f32)?,
+            ValueCoding::Q8 => {
+                let bytes: Vec<u8> =
+                    self.vals_q8.iter().map(|&v| v as u8).collect();
+                w.slice_u8(&bytes)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Deserialize with full validation: every structural invariant the
+    /// scan and the early-exit bound rely on is re-checked (O(nnz), same
+    /// bar as the raw-CSC snapshot reader).
+    pub fn read_from<R: Read>(r: &mut BinReader<R>) -> io::Result<Self> {
+        let bad = |m: &str| io::Error::new(io::ErrorKind::InvalidData, m.to_string());
+        let values = match r.u8()? {
+            0 => ValueCoding::Exact,
+            1 => ValueCoding::Q8,
+            _ => return Err(bad("compressed postings: unknown value coding")),
+        };
+        let block_len = r.usize()?;
+        if !(1..=MAX_BLOCK_LEN).contains(&block_len) {
+            return Err(bad("compressed postings: block_len out of range"));
+        }
+        let n_rows = r.usize()?;
+        if n_rows > u32::MAX as usize {
+            return Err(bad("compressed postings: n_rows exceeds u32 rows"));
+        }
+        let nnz = r.usize()?;
+        let dim_blocks = r.slice_u64()?;
+        if dim_blocks.first() != Some(&0)
+            || dim_blocks.windows(2).any(|w| w[0] > w[1])
+        {
+            return Err(bad("compressed postings: dim_blocks not monotone"));
+        }
+        let n_blocks = r.usize()?;
+        if dim_blocks.last() != Some(&(n_blocks as u64)) {
+            return Err(bad("compressed postings: dim_blocks/blocks mismatch"));
+        }
+        let mut blocks = Vec::with_capacity(n_blocks.min(1 << 20));
+        let mut word_cursor = 0u64;
+        let mut val_cursor = 0u64;
+        let mut total = 0usize;
+        for _ in 0..n_blocks {
+            let base_row = r.u32()?;
+            let len = r.u32()?;
+            let bits = r.u8()?;
+            let max_abs = r.f32()?;
+            if len == 0 || len as usize > block_len {
+                return Err(bad("compressed postings: bad block length"));
+            }
+            if !(1..=32).contains(&bits) {
+                return Err(bad("compressed postings: bad bit width"));
+            }
+            if !max_abs.is_finite() || max_abs < 0.0 {
+                return Err(bad("compressed postings: bad block bound"));
+            }
+            blocks.push(BlockMeta {
+                word_start: word_cursor,
+                val_start: val_cursor,
+                base_row,
+                len,
+                bits,
+                max_abs,
+            });
+            word_cursor += words_for(len as usize, bits) as u64;
+            val_cursor += len as u64;
+            total += len as usize;
+        }
+        if total != nnz {
+            return Err(bad("compressed postings: nnz mismatch"));
+        }
+        let packed = r.slice_u64()?;
+        if packed.len() as u64 != word_cursor {
+            return Err(bad("compressed postings: packed arena size mismatch"));
+        }
+        let (vals_f32, vals_q8) = match values {
+            ValueCoding::Exact => {
+                let v = r.slice_f32()?;
+                if v.len() != nnz {
+                    return Err(bad("compressed postings: value arena size mismatch"));
+                }
+                (v, Vec::new())
+            }
+            ValueCoding::Q8 => {
+                let bytes = r.slice_u8()?;
+                if bytes.len() != nnz {
+                    return Err(bad("compressed postings: value arena size mismatch"));
+                }
+                let q: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
+                if q.iter().any(|&c| c == i8::MIN) {
+                    // -128 would decode past max_abs and void the bound.
+                    return Err(bad("compressed postings: q8 code out of range"));
+                }
+                (Vec::new(), q)
+            }
+        };
+        let out = CompressedPostings {
+            spec: SparseCompression { block_len, values },
+            n_rows,
+            nnz,
+            dim_blocks,
+            blocks,
+            packed,
+            vals_f32,
+            vals_q8,
+        };
+        // Decode-validate: rows strictly ascending within each block and
+        // in range; bounds non-increasing along each list and honoured by
+        // every value — the early-exit proof depends on these.
+        for j in 0..out.n_dims() {
+            let metas = out.dim_metas(j);
+            for pair in metas.windows(2) {
+                if pair[1].max_abs > pair[0].max_abs {
+                    return Err(bad("compressed postings: bounds not impact-ordered"));
+                }
+            }
+            for b in metas {
+                let mut prev: Option<u32> = None;
+                let mut err: Option<&'static str> = None;
+                out.for_each_in_block(b, |row, v| {
+                    if err.is_some() {
+                        return;
+                    }
+                    if row as usize >= n_rows {
+                        err = Some("compressed postings: row out of range");
+                    } else if prev.is_some_and(|p| row <= p) {
+                        err = Some("compressed postings: rows not ascending");
+                    } else if !v.is_finite() || v.abs() > b.max_abs {
+                        err = Some("compressed postings: value exceeds block bound");
+                    }
+                    prev = Some(row);
+                });
+                if let Some(m) = err {
+                    return Err(bad(m));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::csr::CsrMatrix;
+    use crate::types::sparse::SparseVector;
+    use crate::util::rng::Rng;
+
+    fn random_csc(seed: u64, n: usize, d: usize, max_nnz: usize) -> CscMatrix {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<SparseVector> = (0..n)
+            .map(|_| {
+                let nnz = rng.below(max_nnz + 1);
+                let mut dims: Vec<u32> = rng
+                    .sample_indices(d, nnz)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                dims.sort_unstable();
+                let vals = (0..nnz).map(|_| rng.gauss_f32()).collect();
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        CsrMatrix::from_rows(&rows, d).transpose()
+    }
+
+    fn assert_csc_bit_identical(a: &CscMatrix, b: &CscMatrix) {
+        assert_eq!(a.colptr, b.colptr);
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.vals.len(), b.vals.len());
+        for (x, y) in a.vals.iter().zip(&b.vals) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.n_rows, b.n_rows);
+    }
+
+    #[test]
+    fn exact_roundtrip_is_bit_identical_across_block_boundaries() {
+        // Block lengths chosen so list lengths land below, on, and past
+        // block boundaries (ragged final blocks).
+        for block_len in [1, 2, 3, 4, 7, 128] {
+            let csc = random_csc(11, 200, 17, 6);
+            let spec = SparseCompression::exact().with_block_len(block_len);
+            let c = CompressedPostings::from_csc(&csc, spec);
+            assert_eq!(c.nnz(), csc.nnz());
+            assert_eq!(c.n_dims(), csc.n_cols());
+            assert_csc_bit_identical(&c.to_csc(), &csc);
+        }
+    }
+
+    #[test]
+    fn impact_order_bounds_are_non_increasing_and_honoured() {
+        let csc = random_csc(23, 150, 9, 5);
+        let c = CompressedPostings::from_csc(
+            &csc,
+            SparseCompression::exact().with_block_len(4),
+        );
+        for j in 0..c.n_dims() {
+            let metas = c.dim_metas(j);
+            for pair in metas.windows(2) {
+                assert!(pair[1].max_abs <= pair[0].max_abs);
+            }
+            for b in metas {
+                c.for_each_in_block(b, |_, v| assert!(v.abs() <= b.max_abs));
+            }
+        }
+    }
+
+    #[test]
+    fn q8_error_is_within_half_step() {
+        let csc = random_csc(37, 180, 11, 5);
+        let c = CompressedPostings::from_csc(
+            &csc,
+            SparseCompression::q8().with_block_len(8),
+        );
+        // Match decoded postings to originals per (dim, row).
+        for j in 0..c.n_dims() {
+            let (rows, vals) = csc.col(j);
+            let mut decoded: Vec<(u32, f32)> = Vec::new();
+            c.for_each_in_dim(j, |r, v| decoded.push((r, v)));
+            decoded.sort_unstable_by_key(|p| p.0);
+            assert_eq!(decoded.len(), rows.len());
+            for (k, &(r, v)) in decoded.iter().enumerate() {
+                assert_eq!(r, rows[k]);
+                let step = c
+                    .dim_metas(j)
+                    .iter()
+                    .find(|b| {
+                        let mut hit = false;
+                        c.for_each_in_block(b, |row, _| hit |= row == r);
+                        hit
+                    })
+                    .unwrap()
+                    .max_abs
+                    / 127.0;
+                assert!(
+                    (v - vals[k]).abs() <= step * 0.5 + 1e-6,
+                    "dim {j} row {r}: {v} vs {} (step {step})",
+                    vals[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_posting_lists() {
+        let csc = CsrMatrix::from_rows(
+            &[
+                SparseVector::default(),
+                SparseVector::new(vec![2], vec![-3.5]),
+            ],
+            4,
+        )
+        .transpose();
+        let c = CompressedPostings::from_csc(&csc, SparseCompression::exact());
+        assert_eq!(c.nnz(), 1);
+        assert_eq!(c.dim_len(0), 0);
+        assert_eq!(c.dim_len(2), 1);
+        assert_eq!(c.list_max_abs(2), 3.5);
+        assert_eq!(c.list_max_abs(0), 0.0);
+        assert_csc_bit_identical(&c.to_csc(), &csc);
+    }
+
+    #[test]
+    fn wide_row_offsets_pack_and_unpack() {
+        // Rows far apart force wide bit widths (up to 32) and multi-word
+        // straddles.
+        let csc = CscMatrix {
+            colptr: vec![0, 3],
+            rows: vec![5, 1_000_000, u32::MAX - 1],
+            vals: vec![0.25, -8.0, 2.0],
+            n_rows: u32::MAX as usize,
+        };
+        let c = CompressedPostings::from_csc(
+            &csc,
+            SparseCompression::exact().with_block_len(128),
+        );
+        assert_csc_bit_identical(&c.to_csc(), &csc);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_and_corruption_rejected() {
+        let csc = random_csc(51, 120, 13, 5);
+        for spec in [
+            SparseCompression::exact().with_block_len(4),
+            SparseCompression::q8().with_block_len(8),
+        ] {
+            let c = CompressedPostings::from_csc(&csc, spec);
+            let mut buf = Vec::new();
+            {
+                let mut w = BinWriter::raw(&mut buf);
+                c.write_into(&mut w).unwrap();
+                w.finish().unwrap();
+            }
+            let mut r = BinReader::raw(&buf[..]);
+            let back = CompressedPostings::read_from(&mut r).unwrap();
+            assert_eq!(back.spec(), spec);
+            assert_csc_bit_identical(&back.to_csc(), &c.to_csc());
+            assert_eq!(back.memory_bytes(), c.memory_bytes());
+
+            // Flipping any single byte must either fail validation or
+            // still decode to *something* — never panic. Spot-check a few
+            // offsets including the metadata header.
+            for tamper in [0usize, 9, buf.len() / 2, buf.len() - 1] {
+                let mut bad = buf.clone();
+                bad[tamper] ^= 0xFF;
+                let mut r = BinReader::raw(&bad[..]);
+                let _ = CompressedPostings::read_from(&mut r);
+            }
+        }
+    }
+
+    #[test]
+    fn q8_all_zero_values_quantize_to_zero() {
+        let csc = CscMatrix {
+            colptr: vec![0, 2],
+            rows: vec![1, 7],
+            vals: vec![0.0, 0.0],
+            n_rows: 10,
+        };
+        let c = CompressedPostings::from_csc(&csc, SparseCompression::q8());
+        c.for_each_in_dim(0, |_, v| assert_eq!(v, 0.0));
+    }
+}

@@ -9,18 +9,61 @@
 //! (B = 16 f32 slots = one cache-line) so candidate extraction skips
 //! untouched lines, and (c) pairs with `cache_sort` to make touched rows
 //! contiguous.
+//!
+//! Lists live behind a [`SparseBackend`]: either the raw CSC view or the
+//! SINDI-style block-compressed layout of [`crate::sparse::compressed`].
+//! The compressed backend additionally supports a two-phase scan
+//! ([`InvertedIndex::scan_leading_blocks`] / [`scan_tail_blocks`]) whose
+//! per-block `|q_j| * max_abs` bounds let the caller terminate lists early
+//! with a certified per-row error bound.
 
+use crate::sparse::compressed::{BlockMeta, CompressedPostings, SparseCompression};
 use crate::types::csr::{CscMatrix, CsrMatrix};
 use crate::types::sparse::SparseVector;
 use crate::util::simd::F32_PER_LINE;
 
+/// Posting storage: raw CSC arrays or impact-ordered compressed blocks.
+/// Compressing drops the raw arrays — `nnz`, `dim_nnz` and (for Exact
+/// coding) every scan result are preserved exactly.
+#[derive(Clone, Debug)]
+enum SparseBackend {
+    Raw(CscMatrix),
+    Compressed(CompressedPostings),
+}
+
+impl Default for SparseBackend {
+    fn default() -> Self {
+        SparseBackend::Raw(CscMatrix::default())
+    }
+}
+
 /// Inverted index over a sparse dataset.
 #[derive(Clone, Debug, Default)]
 pub struct InvertedIndex {
-    /// CSC view: per dimension, sorted (row, value) list.
-    csc: CscMatrix,
+    backend: SparseBackend,
     /// nnz per dimension (list lengths), kept for stats/cost model.
     pub dim_nnz: Vec<u64>,
+}
+
+/// Outcome of a tail-block scan with early termination
+/// ([`InvertedIndex::scan_tail_blocks`]). `error_bound` is the certified
+/// per-row absolute error: a row appears at most once per list, and a
+/// list is only abandoned at a block whose `|q_j| * max_abs` bound — an
+/// upper bound on every remaining posting's |contribution|, because
+/// blocks are impact-ordered — passed the caller's skip predicate; the
+/// sum of those per-list bounds therefore bounds any single row's
+/// missing mass.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EarlyExitStats {
+    /// Tail (non-leading) blocks across all scanned lists.
+    pub tail_blocks: usize,
+    /// Tail blocks skipped by the caller's predicate.
+    pub blocks_skipped: usize,
+    /// Postings inside the skipped blocks.
+    pub postings_skipped: u64,
+    /// Certified per-row absolute score error (sum of first-skipped-block
+    /// bounds over all abandoned lists).
+    pub error_bound: f32,
 }
 
 /// Reusable per-thread scan state: the accumulator array plus the dirty
@@ -93,17 +136,36 @@ impl Accumulator {
     /// order (callers merge against other row-ordered score streams;
     /// touch order follows list traversal and is arbitrary). Sorts the
     /// touched-block list in place — no allocation on the query hot path.
-    pub fn drain_scores<F: FnMut(u32, f32)>(&mut self, mut f: F) {
-        let n = self.scores.len();
+    ///
+    /// Every row of a touched block is emitted, including rows whose
+    /// contributions cancel to exactly 0.0 — a touched row with a zero
+    /// sum is a real candidate and must stay distinguishable from rows no
+    /// list reached (and the emitted count must agree with
+    /// `lines_touched`). Filtering zeros here once silently dropped
+    /// cancelled rows.
+    pub fn drain_scores<F: FnMut(u32, f32)>(&mut self, f: F) {
+        let end = self.scores.len() as u32;
+        self.drain_scores_range(0, end, f);
+    }
+
+    /// Like [`Accumulator::drain_scores`] but clamped to rows in
+    /// `[row_start, row_end)`. Data-sharded batch workers use this so a
+    /// block straddling a range boundary cannot spill rows into a
+    /// neighbouring worker's emission (each row must be emitted by
+    /// exactly one worker).
+    pub fn drain_scores_range<F: FnMut(u32, f32)>(
+        &mut self,
+        row_start: u32,
+        row_end: u32,
+        mut f: F,
+    ) {
+        let n = self.scores.len().min(row_end as usize);
         self.touched_blocks.sort_unstable();
         for &b in &self.touched_blocks {
-            let start = b as usize * F32_PER_LINE;
-            let end = (start + F32_PER_LINE).min(n);
+            let start = (b as usize * F32_PER_LINE).max(row_start as usize);
+            let end = ((b as usize + 1) * F32_PER_LINE).min(n);
             for i in start..end {
-                let s = self.scores[i];
-                if s != 0.0 {
-                    f(i as u32, s);
-                }
+                f(i as u32, self.scores[i]);
             }
         }
     }
@@ -122,29 +184,120 @@ impl InvertedIndex {
         let dim_nnz = (0..csc.n_cols())
             .map(|j| (csc.colptr[j + 1] - csc.colptr[j]))
             .collect();
-        InvertedIndex { csc, dim_nnz }
+        InvertedIndex { backend: SparseBackend::Raw(csc), dim_nnz }
     }
 
-    /// The backing CSC view (for persistence).
-    pub fn csc(&self) -> &CscMatrix {
-        &self.csc
+    /// Rebuild from compressed blocks (v5 snapshot load path).
+    pub fn from_compressed(c: CompressedPostings) -> Self {
+        let dim_nnz = (0..c.n_dims()).map(|j| c.dim_len(j)).collect();
+        InvertedIndex { backend: SparseBackend::Compressed(c), dim_nnz }
+    }
+
+    /// Swap the raw backend for block-compressed postings. Exact coding
+    /// preserves every scan bit-for-bit; Q8 perturbs stage-1 scores
+    /// within the per-block quantization bound. Re-compressing with the
+    /// spec already in place is a no-op; changing the spec of an
+    /// already-compressed index is refused (under lossy coding the
+    /// original values are gone).
+    pub fn compress(&mut self, spec: SparseCompression) {
+        match &self.backend {
+            SparseBackend::Raw(csc) => {
+                self.backend = SparseBackend::Compressed(
+                    CompressedPostings::from_csc(csc, spec),
+                );
+            }
+            SparseBackend::Compressed(c) => {
+                assert_eq!(
+                    c.spec(),
+                    spec,
+                    "cannot re-compress an already-compressed index with a different spec"
+                );
+            }
+        }
+    }
+
+    pub fn is_compressed(&self) -> bool {
+        matches!(self.backend, SparseBackend::Compressed(_))
+    }
+
+    /// Active compression spec, if the compressed backend is in use.
+    pub fn compression(&self) -> Option<SparseCompression> {
+        match &self.backend {
+            SparseBackend::Raw(_) => None,
+            SparseBackend::Compressed(c) => Some(c.spec()),
+        }
+    }
+
+    /// The raw CSC view, if this index still stores one (persistence).
+    pub fn raw_csc(&self) -> Option<&CscMatrix> {
+        match &self.backend {
+            SparseBackend::Raw(csc) => Some(csc),
+            SparseBackend::Compressed(_) => None,
+        }
+    }
+
+    /// The compressed blocks, if in use (persistence).
+    pub fn compressed_postings(&self) -> Option<&CompressedPostings> {
+        match &self.backend {
+            SparseBackend::Raw(_) => None,
+            SparseBackend::Compressed(c) => Some(c),
+        }
     }
 
     pub fn n_rows(&self) -> usize {
-        self.csc.n_rows
+        match &self.backend {
+            SparseBackend::Raw(csc) => csc.n_rows,
+            SparseBackend::Compressed(c) => c.n_rows(),
+        }
     }
 
     pub fn n_dims(&self) -> usize {
-        self.csc.n_cols()
+        match &self.backend {
+            SparseBackend::Raw(csc) => csc.n_cols(),
+            SparseBackend::Compressed(c) => c.n_dims(),
+        }
     }
 
     pub fn nnz(&self) -> usize {
-        self.csc.nnz()
+        match &self.backend {
+            SparseBackend::Raw(csc) => csc.nnz(),
+            SparseBackend::Compressed(c) => c.nnz(),
+        }
     }
 
-    /// Inverted list for dimension j.
-    pub fn list(&self, j: usize) -> (&[u32], &[f32]) {
-        self.csc.col(j)
+    /// Visit every posting of dimension j. Raw backend: ascending rows;
+    /// compressed backend: impact-block order (callers must not assume a
+    /// row order — per-row aggregates are order-independent).
+    pub fn for_each_in_dim<F: FnMut(u32, f32)>(&self, j: usize, mut f: F) {
+        match &self.backend {
+            SparseBackend::Raw(csc) => {
+                let (rows, vals) = csc.col(j);
+                for (&r, &w) in rows.iter().zip(vals) {
+                    f(r, w);
+                }
+            }
+            SparseBackend::Compressed(c) => c.for_each_in_dim(j, f),
+        }
+    }
+
+    /// Largest |value| in dimension j's list (0.0 when empty). O(1) on
+    /// the compressed backend, O(list) on raw.
+    pub fn list_max_abs(&self, j: usize) -> f32 {
+        match &self.backend {
+            SparseBackend::Raw(csc) => {
+                csc.col(j).1.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+            }
+            SparseBackend::Compressed(c) => c.list_max_abs(j),
+        }
+    }
+
+    /// Per-block metadata of dimension j (compressed backend only) — the
+    /// planner reads `max_abs`/`len` to sharpen `est_postings`.
+    pub fn dim_block_metas(&self, j: usize) -> Option<&[BlockMeta]> {
+        match &self.backend {
+            SparseBackend::Raw(_) => None,
+            SparseBackend::Compressed(c) => Some(c.dim_metas(j)),
+        }
     }
 
     /// Accumulate qˢ against all lists of q's nonzero dims (§2.2).
@@ -155,20 +308,27 @@ impl InvertedIndex {
             if j >= self.n_dims() {
                 continue;
             }
-            let (rows, vals) = self.csc.col(j);
-            // Hot loop: sequential streaming over the list; accumulator
-            // access pattern is what cache_sort optimizes.
-            for (&r, &w) in rows.iter().zip(vals) {
-                acc.add(r, qv * w);
+            match &self.backend {
+                SparseBackend::Raw(csc) => {
+                    let (rows, vals) = csc.col(j);
+                    // Hot loop: sequential streaming over the list;
+                    // accumulator access is what cache_sort optimizes.
+                    for (&r, &w) in rows.iter().zip(vals) {
+                        acc.add(r, qv * w);
+                    }
+                }
+                SparseBackend::Compressed(c) => {
+                    c.for_each_in_dim(j, |r, w| acc.add(r, qv * w));
+                }
             }
         }
     }
 
     /// Range-restricted scan: accumulate only rows in `[row_start,
-    /// row_end)`. Lists store rows ascending, so each list's contribution
-    /// is one contiguous segment located by binary search — data-sharded
-    /// batch workers walk disjoint segments of every list rather than
-    /// re-reading whole lists.
+    /// row_end)`. Raw lists store rows ascending, so each list's
+    /// contribution is one contiguous segment located by binary search;
+    /// compressed blocks are impact-ordered, so the walk filters per
+    /// posting instead.
     pub fn scan_range(
         &self,
         q: &SparseVector,
@@ -181,22 +341,99 @@ impl InvertedIndex {
             if j >= self.n_dims() {
                 continue;
             }
-            let (rows, vals) = self.csc.col(j);
-            let lo = rows.partition_point(|&r| r < row_start);
-            for (&r, &w) in rows[lo..].iter().zip(&vals[lo..]) {
-                if r >= row_end {
-                    break;
+            match &self.backend {
+                SparseBackend::Raw(csc) => {
+                    let (rows, vals) = csc.col(j);
+                    let lo = rows.partition_point(|&r| r < row_start);
+                    for (&r, &w) in rows[lo..].iter().zip(&vals[lo..]) {
+                        if r >= row_end {
+                            break;
+                        }
+                        acc.add(r, qv * w);
+                    }
                 }
-                acc.add(r, qv * w);
+                SparseBackend::Compressed(c) => {
+                    c.for_each_in_dim(j, |r, w| {
+                        if r >= row_start && r < row_end {
+                            acc.add(r, qv * w);
+                        }
+                    });
+                }
             }
         }
     }
 
-    /// Convenience: scan + extract all (row, score) pairs.
+    /// Phase 1 of the early-terminating scan: accumulate the leading
+    /// (highest-impact) block of every touched list. On the raw backend
+    /// there is no block structure — the full (exact) scan runs instead,
+    /// and [`InvertedIndex::scan_tail_blocks`] becomes a no-op, so the
+    /// two-phase protocol is safe to drive against either backend.
+    pub fn scan_leading_blocks(&self, q: &SparseVector, acc: &mut Accumulator) {
+        let SparseBackend::Compressed(c) = &self.backend else {
+            self.scan(q, acc);
+            return;
+        };
+        for (dim, qv) in q.iter() {
+            let j = dim as usize;
+            if j >= c.n_dims() {
+                continue;
+            }
+            if let Some(b) = c.dim_metas(j).first() {
+                c.for_each_in_block(b, |r, w| acc.add(r, qv * w));
+            }
+        }
+    }
+
+    /// Phase 2: walk the remaining blocks of every list in impact order,
+    /// consulting `should_skip(bound)` before each block, where `bound =
+    /// |q_j| * block.max_abs` upper-bounds every remaining |contribution|
+    /// from that list. On the first skipped block the rest of the list is
+    /// abandoned (later bounds are no larger) and the block's bound is
+    /// added to the certified per-row error (see [`EarlyExitStats`]).
+    /// Passing `|_| false` reproduces the exact scan bit-for-bit.
+    pub fn scan_tail_blocks(
+        &self,
+        q: &SparseVector,
+        acc: &mut Accumulator,
+        mut should_skip: impl FnMut(f32) -> bool,
+    ) -> EarlyExitStats {
+        let mut stats = EarlyExitStats::default();
+        let SparseBackend::Compressed(c) = &self.backend else {
+            return stats;
+        };
+        for (dim, qv) in q.iter() {
+            let j = dim as usize;
+            if j >= c.n_dims() {
+                continue;
+            }
+            let metas = c.dim_metas(j);
+            if metas.len() < 2 {
+                continue;
+            }
+            let tail = &metas[1..];
+            stats.tail_blocks += tail.len();
+            for (i, b) in tail.iter().enumerate() {
+                let bound = qv.abs() * b.max_abs;
+                if should_skip(bound) {
+                    let skipped = &tail[i..];
+                    stats.blocks_skipped += skipped.len();
+                    stats.postings_skipped +=
+                        skipped.iter().map(|m| m.len as u64).sum::<u64>();
+                    stats.error_bound += bound;
+                    break;
+                }
+                c.for_each_in_block(b, |r, w| acc.add(r, qv * w));
+            }
+        }
+        stats
+    }
+
+    /// Convenience: scan + extract all (row, score) pairs of touched
+    /// accumulator lines (zero-sum rows of touched lines included).
     pub fn scores(&self, q: &SparseVector, acc: &mut Accumulator) -> Vec<(u32, f32)> {
         acc.reset();
         self.scan(q, acc);
-        let mut out = Vec::with_capacity(acc.lines_touched() * F32_PER_LINE / 2);
+        let mut out = Vec::with_capacity(acc.lines_touched() * F32_PER_LINE);
         acc.drain_scores(|r, s| out.push((r, s)));
         out
     }
@@ -212,23 +449,28 @@ impl InvertedIndex {
             if j >= self.n_dims() {
                 continue;
             }
-            let (rows, _) = self.csc.col(j);
-            for &r in rows {
+            self.for_each_in_dim(j, |r, _| {
                 let b = r as usize / F32_PER_LINE;
                 if !seen[b] {
                     seen[b] = true;
                     count += 1;
                 }
-            }
+            });
         }
         count
     }
 
-    /// Approximate resident bytes (lists + pointers).
+    /// Resident bytes: posting storage (raw arrays or compressed blocks)
+    /// plus the per-dimension nnz table the planner reads. `dim_nnz` was
+    /// historically omitted, undercounting by 8 bytes/dim.
     pub fn memory_bytes(&self) -> usize {
-        self.csc.rows.len() * 4
-            + self.csc.vals.len() * 4
-            + self.csc.colptr.len() * 8
+        let postings = match &self.backend {
+            SparseBackend::Raw(csc) => {
+                csc.rows.len() * 4 + csc.vals.len() * 4 + csc.colptr.len() * 8
+            }
+            SparseBackend::Compressed(c) => c.memory_bytes(),
+        };
+        postings + self.dim_nnz.len() * 8
     }
 }
 
@@ -246,6 +488,24 @@ mod tests {
             SparseVector::new(vec![0], vec![4.0]),
         ];
         CsrMatrix::from_rows(&rows, 3)
+    }
+
+    fn random_matrix(seed: u64, n: usize, d: usize, max_nnz: usize) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<SparseVector> = (0..n)
+            .map(|_| {
+                let nnz = rng.below(max_nnz + 1);
+                let mut dims: Vec<u32> = rng
+                    .sample_indices(d, nnz)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                dims.sort_unstable();
+                let vals = (0..nnz).map(|_| rng.gauss_f32()).collect();
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        CsrMatrix::from_rows(&rows, d)
     }
 
     #[test]
@@ -273,30 +533,44 @@ mod tests {
         let q2 = SparseVector::new(vec![1], vec![1.0]);
         let s1 = idx.scores(&q1, &mut acc);
         let s2 = idx.scores(&q2, &mut acc);
-        // q2 scores must not contain q1 leftovers.
-        assert!(s2.iter().all(|&(r, _)| r == 1));
-        assert!(s1.iter().any(|&(r, _)| r == 0));
+        assert!(s1.contains(&(0, 1.0)) && s1.contains(&(3, 4.0)));
+        // q2 drains the whole touched line, and q1's scores on rows 0/3
+        // must have been reset — not leak through as stale values.
+        assert!(s2.contains(&(1, 3.0)));
+        assert!(
+            s2.contains(&(0, 0.0)) && s2.contains(&(3, 0.0)),
+            "stale q1 scores leaked into q2: {s2:?}"
+        );
+    }
+
+    #[test]
+    fn cancellation_emits_touched_row() {
+        // Satellite regression: +1.0 and -1.0 postings on one row cancel
+        // to exactly 0.0 — the row was touched and must still be emitted
+        // (it is distinguishable from rows no list reached), and the
+        // emitted row count must agree with lines_touched.
+        let mut rows = vec![SparseVector::default(); 6];
+        rows[5] = SparseVector::new(vec![0, 1], vec![1.0, -1.0]);
+        let m = CsrMatrix::from_rows(&rows, 2);
+        let idx = InvertedIndex::build(&m);
+        let q = SparseVector::new(vec![0, 1], vec![1.0, 1.0]);
+        let mut acc = Accumulator::new(m.n_rows());
+        acc.reset();
+        idx.scan(&q, &mut acc);
+        assert_eq!(acc.lines_touched(), 1);
+        let mut got = Vec::new();
+        acc.drain_scores(|r, s| got.push((r, s)));
+        assert_eq!(got.len(), m.n_rows(), "one full touched line of 6 rows");
+        assert!(
+            got.contains(&(5, 0.0)),
+            "cancelled-to-zero row must be emitted: {got:?}"
+        );
     }
 
     #[test]
     fn scan_range_partitions_full_scan() {
-        let mut rng = Rng::new(7);
         let n = 100;
-        let d = 20;
-        let rows: Vec<SparseVector> = (0..n)
-            .map(|_| {
-                let nnz = 1 + rng.below(5);
-                let mut dims: Vec<u32> = rng
-                    .sample_indices(d, nnz)
-                    .into_iter()
-                    .map(|x| x as u32)
-                    .collect();
-                dims.sort_unstable();
-                let vals = (0..nnz).map(|_| rng.gauss_f32()).collect();
-                SparseVector::new(dims, vals)
-            })
-            .collect();
-        let m = CsrMatrix::from_rows(&rows, d);
+        let m = random_matrix(7, n, 20, 5);
         let idx = InvertedIndex::build(&m);
         let q = SparseVector::new(vec![0, 3, 7, 11], vec![1.0, -0.5, 2.0, 0.25]);
         let mut full = Accumulator::new(n);
@@ -304,7 +578,10 @@ mod tests {
         idx.scan(&q, &mut full);
         let mut want = Vec::new();
         full.drain_scores(|r, s| want.push((r, s)));
-        // disjoint range scans must reproduce the full scan exactly
+        // Disjoint range scans with range-clamped drains must reproduce
+        // the full scan's nonzero scores exactly; the emitted-zero rows
+        // may differ (a boundary block is only drained by the ranges that
+        // touched it), which is why the nonzero set is the contract.
         let mut got = Vec::new();
         let mid = (n / 2) as u32;
         for (a, b) in [(0u32, mid), (mid, n as u32)] {
@@ -312,10 +589,14 @@ mod tests {
             acc.reset();
             idx.scan_range(&q, &mut acc, a, b);
             let before = got.len();
-            acc.drain_scores(|r, s| got.push((r, s)));
+            acc.drain_scores_range(a, b, |r, s| got.push((r, s)));
             assert!(got[before..].iter().all(|&(r, _)| r >= a && r < b));
         }
-        assert_eq!(got, want);
+        let nonzero =
+            |v: &[(u32, f32)]| -> Vec<(u32, f32)> {
+                v.iter().copied().filter(|&(_, s)| s != 0.0).collect()
+            };
+        assert_eq!(nonzero(&got), nonzero(&want));
     }
 
     #[test]
@@ -328,7 +609,12 @@ mod tests {
         acc.add(6, 2.0);
         let mut got = Vec::new();
         acc.drain_scores(|r, s| got.push((r, s)));
-        assert_eq!(got, vec![(6, 2.0)]);
+        // One touched line (rows 0..16): row 6 carries the new score and
+        // the pre-wrap score on row 5 must have been hard-reset.
+        assert_eq!(got.len(), 16);
+        assert!(got.contains(&(6, 2.0)));
+        assert!(got.contains(&(5, 0.0)), "stale pre-wrap score survived");
+        assert!(got.iter().all(|&(r, s)| r < 16 && (r == 6 || s == 0.0)));
     }
 
     #[test]
@@ -383,7 +669,10 @@ mod tests {
         let mut sorted = rows_seen.clone();
         sorted.sort_unstable();
         assert_eq!(rows_seen, sorted, "drain must be row-ascending");
-        assert_eq!(rows_seen, vec![0, 40]);
+        assert!(rows_seen.contains(&0) && rows_seen.contains(&40));
+        // Whole touched lines, and only touched lines (blocks 0 and 2).
+        assert!(rows_seen.iter().all(|&r| r < 16 || (32..41).contains(&r)));
+        assert_eq!(rows_seen.len(), 16 + 9);
     }
 
     #[test]
@@ -401,20 +690,7 @@ mod tests {
         let mut rng = Rng::new(99);
         let n = 300;
         let d = 50;
-        let rows: Vec<SparseVector> = (0..n)
-            .map(|_| {
-                let nnz = rng.below(8);
-                let mut dims: Vec<u32> = rng
-                    .sample_indices(d, nnz)
-                    .into_iter()
-                    .map(|x| x as u32)
-                    .collect();
-                dims.sort_unstable();
-                let vals = (0..nnz).map(|_| rng.gauss_f32()).collect();
-                SparseVector::new(dims, vals)
-            })
-            .collect();
-        let m = CsrMatrix::from_rows(&rows, d);
+        let m = random_matrix(98, n, d, 7);
         let idx = InvertedIndex::build(&m);
         let mut acc = Accumulator::new(n);
         for _ in 0..20 {
@@ -439,5 +715,198 @@ mod tests {
                 );
             }
         }
+    }
+
+    fn random_query(rng: &mut Rng, d: usize, max_nnz: usize) -> SparseVector {
+        let nnz = 1 + rng.below(max_nnz);
+        let mut dims: Vec<u32> = rng
+            .sample_indices(d, nnz)
+            .into_iter()
+            .map(|x| x as u32)
+            .collect();
+        dims.sort_unstable();
+        let vals: Vec<f32> = (0..nnz).map(|_| rng.gauss_f32()).collect();
+        SparseVector::new(dims, vals)
+    }
+
+    #[test]
+    fn compressed_exact_backend_is_bit_identical() {
+        let n = 250;
+        let d = 30;
+        let m = random_matrix(42, n, d, 6);
+        let raw = InvertedIndex::build(&m);
+        let mut comp = InvertedIndex::build(&m);
+        comp.compress(SparseCompression::exact().with_block_len(4));
+        assert!(comp.is_compressed());
+        assert_eq!(raw.nnz(), comp.nnz());
+        assert_eq!(raw.dim_nnz, comp.dim_nnz);
+        let mut rng = Rng::new(4242);
+        let mut acc_a = Accumulator::new(n);
+        let mut acc_b = Accumulator::new(n);
+        for _ in 0..25 {
+            let q = random_query(&mut rng, d, 6);
+            assert_eq!(raw.count_lines(&q), comp.count_lines(&q));
+            let a = raw.scores(&q, &mut acc_a);
+            let b = comp.scores(&q, &mut acc_b);
+            assert_eq!(a.len(), b.len());
+            for (&(ra, sa), &(rb, sb)) in a.iter().zip(&b) {
+                assert_eq!(ra, rb);
+                assert_eq!(sa.to_bits(), sb.to_bits(), "row {ra}: {sa} vs {sb}");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_scan_range_matches_raw() {
+        let n = 120;
+        let d = 15;
+        let m = random_matrix(77, n, d, 5);
+        let raw = InvertedIndex::build(&m);
+        let mut comp = InvertedIndex::build(&m);
+        comp.compress(SparseCompression::exact().with_block_len(3));
+        let mut rng = Rng::new(770);
+        for _ in 0..10 {
+            let q = random_query(&mut rng, d, 5);
+            let (a, b) = (30u32, 90u32);
+            let mut acc_r = Accumulator::new(n);
+            let mut acc_c = Accumulator::new(n);
+            acc_r.reset();
+            acc_c.reset();
+            raw.scan_range(&q, &mut acc_r, a, b);
+            comp.scan_range(&q, &mut acc_c, a, b);
+            let mut vr = Vec::new();
+            let mut vc = Vec::new();
+            acc_r.drain_scores_range(a, b, |r, s| vr.push((r, s.to_bits())));
+            acc_c.drain_scores_range(a, b, |r, s| vc.push((r, s.to_bits())));
+            assert_eq!(vr, vc);
+        }
+    }
+
+    #[test]
+    fn q8_scan_error_stays_within_quantization_bound() {
+        let n = 200;
+        let d = 20;
+        let m = random_matrix(55, n, d, 6);
+        let raw = InvertedIndex::build(&m);
+        let mut comp = InvertedIndex::build(&m);
+        comp.compress(SparseCompression::q8().with_block_len(8));
+        let mut rng = Rng::new(555);
+        let mut acc_a = Accumulator::new(n);
+        let mut acc_b = Accumulator::new(n);
+        for _ in 0..10 {
+            let q = random_query(&mut rng, d, 5);
+            // Per-posting error <= max_abs/254, one posting per row per
+            // list -> per-row bound sums |q_j| * list_max/254 over dims.
+            let tol: f32 = q
+                .iter()
+                .map(|(dim, qv)| {
+                    qv.abs() * raw.list_max_abs(dim as usize) / 254.0
+                })
+                .sum::<f32>()
+                + 1e-5;
+            let a: std::collections::HashMap<u32, f32> =
+                raw.scores(&q, &mut acc_a).into_iter().collect();
+            for (r, s) in comp.scores(&q, &mut acc_b) {
+                let exact = a.get(&r).copied().unwrap_or(0.0);
+                assert!(
+                    (s - exact).abs() <= tol,
+                    "row {r}: {s} vs {exact} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn two_phase_scan_without_skips_matches_exact() {
+        let n = 150;
+        let d = 12;
+        let m = random_matrix(31, n, d, 6);
+        let mut idx = InvertedIndex::build(&m);
+        idx.compress(SparseCompression::exact().with_block_len(4));
+        let mut rng = Rng::new(313);
+        for _ in 0..10 {
+            let q = random_query(&mut rng, d, 5);
+            let mut exact = Accumulator::new(n);
+            exact.reset();
+            idx.scan(&q, &mut exact);
+            let mut phased = Accumulator::new(n);
+            phased.reset();
+            idx.scan_leading_blocks(&q, &mut phased);
+            let stats = idx.scan_tail_blocks(&q, &mut phased, |_| false);
+            assert_eq!(stats.blocks_skipped, 0);
+            assert_eq!(stats.postings_skipped, 0);
+            assert_eq!(stats.error_bound, 0.0);
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            exact.drain_scores(|r, s| a.push((r, s.to_bits())));
+            phased.drain_scores(|r, s| b.push((r, s.to_bits())));
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn early_exit_error_stays_within_certified_bound() {
+        let n = 300;
+        let d = 10;
+        let m = random_matrix(83, n, d, 8);
+        let mut idx = InvertedIndex::build(&m);
+        idx.compress(SparseCompression::exact().with_block_len(2));
+        let mut rng = Rng::new(838);
+        let mut saw_skip = false;
+        for _ in 0..15 {
+            let q = random_query(&mut rng, d, 6);
+            let mut exact = Accumulator::new(n);
+            exact.reset();
+            idx.scan(&q, &mut exact);
+            let mut approx = Accumulator::new(n);
+            approx.reset();
+            idx.scan_leading_blocks(&q, &mut approx);
+            let stats =
+                idx.scan_tail_blocks(&q, &mut approx, |bound| bound < 0.4);
+            saw_skip |= stats.blocks_skipped > 0;
+            let truth: std::collections::HashMap<u32, f32> = {
+                let mut v = std::collections::HashMap::new();
+                exact.drain_scores(|r, s| {
+                    v.insert(r, s);
+                });
+                v
+            };
+            approx.drain_scores(|r, s| {
+                let t = truth.get(&r).copied().unwrap_or(0.0);
+                assert!(
+                    (s - t).abs() <= stats.error_bound + 1e-5,
+                    "row {r}: {s} vs {t}, bound {}",
+                    stats.error_bound
+                );
+            });
+        }
+        assert!(saw_skip, "threshold never triggered a skip");
+    }
+
+    #[test]
+    fn memory_bytes_accounts_for_dim_nnz_and_compression() {
+        let n = 2000;
+        let d = 20;
+        let m = random_matrix(66, n, d, 10);
+        let raw = InvertedIndex::build(&m);
+        let csc = raw.raw_csc().unwrap();
+        let expect_raw = csc.rows.len() * 4
+            + csc.vals.len() * 4
+            + csc.colptr.len() * 8
+            + raw.dim_nnz.len() * 8;
+        assert_eq!(raw.memory_bytes(), expect_raw);
+
+        let mut exact = InvertedIndex::build(&m);
+        exact.compress(SparseCompression::exact());
+        assert!(exact.memory_bytes() < raw.memory_bytes());
+
+        let mut q8 = InvertedIndex::build(&m);
+        q8.compress(SparseCompression::q8());
+        assert!(
+            raw.memory_bytes() >= 2 * q8.memory_bytes(),
+            "q8 footprint not >= 2x smaller: raw {} vs q8 {}",
+            raw.memory_bytes(),
+            q8.memory_bytes()
+        );
     }
 }

@@ -4,10 +4,12 @@
 
 pub mod brute_force;
 pub mod cache_sort;
+pub mod compressed;
 pub mod cost_model;
 pub mod inverted_index;
 pub mod pruning;
 
 pub use cache_sort::{cache_sort, gray_code_sort};
+pub use compressed::{CompressedPostings, SparseCompression, ValueCoding};
 pub use inverted_index::InvertedIndex;
 pub use pruning::PruneThresholds;

@@ -30,8 +30,11 @@ use std::io::{self, Read, Seek, SeekFrom, Write};
 pub const MAGIC: &[u8; 8] = b"HYBIDX01";
 /// Current snapshot version. v4 appends the skippable planner-statistics
 /// section to every `HybridIndex` payload (see `hybrid::plan`); v3 files
-/// (which lack it) still load, with the statistics recomputed.
-pub const VERSION: u32 = 4;
+/// (which lack it) still load, with the statistics recomputed. v5 tags
+/// the sparse-index section with its backend (raw CSC vs impact-ordered
+/// compressed blocks, see `sparse::compressed`); v3/v4 files read as
+/// raw, re-compressible after load.
+pub const VERSION: u32 = 5;
 /// Oldest snapshot version this build still reads.
 pub const MIN_VERSION: u32 = 3;
 

@@ -17,7 +17,11 @@
 //! 4. **coalesced == direct**: TCP round-trips (single, batch, and
 //!    cross-connection coalesced) match in-process serving;
 //! 5. **Adaptive == Fixed**: plan adaptivity never changes results on
-//!    this corpus (only provably lossless skips).
+//!    this corpus (only provably lossless skips);
+//! 6. **compressed == raw / early exit certified**: the exact-coded
+//!    compressed sparse backend is bit-identical to the raw CSC scan,
+//!    and Aggressive early termination never loses a true top-h id
+//!    whose exact score margin clears twice the certified error bound.
 //!
 //! Every failure message carries the run seed and step, so a failing
 //! sequence replays exactly.
@@ -456,4 +460,172 @@ fn emptied_index_serves_identically_everywhere() {
     for q in &queries {
         assert!(idx.search(q, &SearchParams::new(5)).is_empty());
     }
+}
+
+/// Invariant 6a: the exact-coded compressed sparse backend is
+/// bit-identical to the raw CSC backend — sequential pipeline and both
+/// batch shard modes, Fixed and Adaptive planning, over the full query
+/// battery (related / dense-only / sparse-only).
+#[test]
+fn compressed_exact_backend_is_bit_identical_to_raw() {
+    use hybrid_ip::sparse::compressed::SparseCompression;
+
+    let cfg = tiny(300);
+    let data = cfg.generate(0xC0DE);
+    let raw = HybridIndex::build(&data, &IndexConfig::default());
+    let comp = HybridIndex::build(
+        &data,
+        &IndexConfig::default().with_sparse_compression(
+            SparseCompression::exact().with_block_len(8),
+        ),
+    );
+    let model = ReferenceModel::from_dataset(&data, 0);
+    let mut rng = Rng::new(0xC0DF);
+    let mut queries = cfg.related_queries(&data, 0xC0E0, 6);
+    queries.push(dense_only_query(&mut rng, data.dense_dim()));
+    queries.push(sparse_only_query(
+        &mut rng,
+        data.sparse_dim(),
+        data.dense_dim(),
+    ));
+
+    let by_query = BatchEngine::with_config(
+        &comp,
+        EngineConfig { threads: 3, mode: ShardMode::ByQuery },
+    );
+    let by_data = BatchEngine::with_config(
+        &comp,
+        EngineConfig { threads: 3, mode: ShardMode::ByData },
+    );
+    let mut scratch_raw = SearchScratch::new(&raw);
+    let mut scratch_comp = SearchScratch::new(&comp);
+    for mode_fixed in [true, false] {
+        let params = if mode_fixed {
+            SearchParams::new(10).with_alpha(20.0)
+        } else {
+            SearchParams::new(10).with_alpha(20.0).adaptive()
+        };
+        let bq = by_query.search_batch(&comp, &queries, &params);
+        let bd = by_data.search_batch(&comp, &queries, &params);
+        for (qi, q) in queries.iter().enumerate() {
+            let ctx = format!("fixed={mode_fixed} q{qi}");
+            let (want, _) = search_with(&raw, q, &params, &mut scratch_raw);
+            let (got, _) = search_with(&comp, q, &params, &mut scratch_comp);
+            assert_hits_identical(
+                &want,
+                &got,
+                &format!("{ctx}: compressed vs raw (sequential)"),
+            );
+            assert_hits_identical(
+                &want,
+                &bq.hits[qi],
+                &format!("{ctx}: compressed ByQuery vs raw"),
+            );
+            assert_hits_identical(
+                &want,
+                &bd.hits[qi],
+                &format!("{ctx}: compressed ByData vs raw"),
+            );
+            assert_hits_sane(&model, &got, 10, &ctx);
+        }
+    }
+}
+
+/// Invariant 6b: Aggressive early termination is a *certified*
+/// approximation. On a skewed power-law corpus (impact-ordered list
+/// tails decay fast, so block skips actually fire):
+///
+/// - every score it returns is within the per-query certified error
+///   bound of the exact score for that id;
+/// - whenever the exact h/(h+1) score margin exceeds twice the bound,
+///   the early-exit top-h id set equals the exact top-h id set — a
+///   true top-k candidate provably cannot have been evicted;
+/// - the battery must actually exercise both block skips and at least
+///   one well-separated (strictly checked) query, so the gate cannot
+///   pass vacuously.
+#[test]
+fn early_exit_never_evicts_certified_top_k() {
+    use hybrid_ip::sparse::compressed::SparseCompression;
+
+    let mut cfg = tiny(500);
+    cfg.val_sigma = 3.0; // heavy-tailed |values| => skippable tails
+    let data = cfg.generate(0xC0E1);
+    let index = HybridIndex::build(
+        &data,
+        &IndexConfig::default().with_sparse_compression(
+            SparseCompression::exact().with_block_len(8),
+        ),
+    );
+    let model = ReferenceModel::from_dataset(&data, 0);
+    // Early exit only arms on SparseOnly plans: zero the dense halves.
+    let mut queries = cfg.related_queries(&data, 0xC0E2, 12);
+    for q in &mut queries {
+        for v in &mut q.dense {
+            *v = 0.0;
+        }
+    }
+
+    let h = 8;
+    let exact_params = SearchParams::new(h).with_alpha(4.0).adaptive();
+    let margin_params =
+        SearchParams::new(h + 1).with_alpha(4.0).adaptive();
+    let fast_params = SearchParams::new(h).with_alpha(4.0).aggressive();
+    let mut scratch = SearchScratch::new(&index);
+    let mut blocks_skipped = 0usize;
+    let mut early_exit_plans = 0usize;
+    let mut strict_checked = 0usize;
+    for (qi, q) in queries.iter().enumerate() {
+        let (exact, _) = search_with(&index, q, &exact_params, &mut scratch);
+        let (wide, _) = search_with(&index, q, &margin_params, &mut scratch);
+        let (fast, st) = search_with(&index, q, &fast_params, &mut scratch);
+        blocks_skipped += st.sparse_blocks_skipped;
+        early_exit_plans += st.plans.sparse_early_exit;
+        assert_hits_sane(&model, &fast, h, &format!("early-exit q{qi}"));
+        let bound = st.sparse_error_bound;
+        assert!(bound.is_finite() && bound >= 0.0, "q{qi}: bad bound {bound}");
+
+        // Certificate: any id both paths rank scored within the bound.
+        for fh in &fast {
+            if let Some(eh) = exact.iter().find(|e| e.id == fh.id) {
+                assert!(
+                    (fh.score - eh.score).abs() <= bound + 1e-4,
+                    "q{qi} id {}: early-exit score {} vs exact {} \
+                     breaches certified bound {bound}",
+                    fh.id,
+                    fh.score,
+                    eh.score,
+                );
+            }
+        }
+
+        // Margin-adaptive eviction gate: with the exact h/(h+1) gap
+        // wider than twice the bound, no true top-h id may be missing.
+        if wide.len() > h {
+            let margin = wide[h - 1].score - wide[h].score;
+            if margin > 2.0 * bound + 1e-4 {
+                strict_checked += 1;
+                let fast_ids: BTreeSet<u32> =
+                    fast.iter().map(|x| x.id).collect();
+                for eh in &exact {
+                    assert!(
+                        fast_ids.contains(&eh.id),
+                        "q{qi}: exact top-{h} id {} (score {}) evicted \
+                         despite margin {margin} > 2*bound {bound}",
+                        eh.id,
+                        eh.score,
+                    );
+                }
+            }
+        }
+    }
+    assert_eq!(
+        early_exit_plans,
+        queries.len(),
+        "every zero-dense query must take the SparseEarlyExit plan"
+    );
+    assert!(blocks_skipped > 0, "skewed corpus must trigger block skips");
+    assert!(
+        strict_checked > 0,
+        "battery must include well-separated queries for the strict gate"
+    );
 }

@@ -234,6 +234,58 @@ fn mutations_and_metrics_roundtrip_the_wire() {
 }
 
 #[test]
+fn unsorted_sparse_upsert_rejected_per_document_not_per_connection() {
+    use hybrid_ip::types::sparse::SparseVector;
+    // `SparseVector::new` only debug-asserts ascending dims, so a
+    // release-build client can put an out-of-order or duplicated dim
+    // list on the wire. The server must decode it leniently, let the
+    // shard's `payload_fits` gate reject it, and answer with a
+    // per-document `Rejected` ack — never a frame-level error that
+    // kills the connection, and never a corrupt row in the index.
+    let (cfg, data) = dataset(150, 91);
+    let n = data.len();
+    let server = cluster(&data, BatchPolicy::default());
+    let mut net = NetServer::bind(
+        "127.0.0.1:0",
+        Arc::clone(&server),
+        NetConfig::default(),
+    )
+    .unwrap();
+    let mut client = Client::connect(net.local_addr()).unwrap();
+    let dense = data.dense.row(0).to_vec();
+    for bad in [
+        // descending dims
+        SparseVector { dims: vec![9, 3], vals: vec![1.0, 2.0] },
+        // duplicated dim
+        SparseVector { dims: vec![3, 3], vals: vec![1.0, 2.0] },
+        // dims/vals length mismatch survives the length check server-side
+        SparseVector { dims: vec![1, 2, 4], vals: vec![1.0, 2.0] },
+    ] {
+        match client.upsert(n as u32, &bad, &dense) {
+            Ok(outcome) => assert_eq!(outcome, UpsertOutcome::Rejected),
+            // the ragged payload trips the explicit decode check; even
+            // then the error is a response frame, not a disconnect
+            Err(e) => assert!(
+                e.to_string().contains("length mismatch"),
+                "unexpected error {e}"
+            ),
+        }
+    }
+    // the rejected doc never entered the index
+    assert_eq!(client.flush().unwrap(), n);
+    // and the SAME connection still serves valid traffic
+    let good = data.sparse.row_vec(0);
+    assert_eq!(
+        client.upsert(n as u32, &good, &dense).unwrap(),
+        UpsertOutcome::Inserted
+    );
+    assert_eq!(client.flush().unwrap(), n + 1);
+    let q = cfg.generate_queries(92, 1).remove(0);
+    assert_eq!(client.search(&q, &SearchParams::new(5)).unwrap().len(), 5);
+    net.shutdown();
+}
+
+#[test]
 fn mid_request_disconnect_leaves_server_serving() {
     let (cfg, data) = dataset(200, 69);
     let server = cluster(&data, BatchPolicy::default());

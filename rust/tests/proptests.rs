@@ -574,3 +574,104 @@ fn prop_plans_deterministic_and_snapshot_stable() {
         std::fs::remove_file(&path).ok();
     });
 }
+
+// ----------------------------------------------------------- compression
+
+#[test]
+fn prop_compressed_blocks_decode_bit_identically() {
+    use hybrid_ip::sparse::compressed::{
+        CompressedPostings, SparseCompression,
+    };
+    forall(30, 0xC0B10C, |g| {
+        let n = g.usize_in(1, 120);
+        let d = g.usize_in(1, 30);
+        let m = random_csr(g, n, d);
+        let csc = m.transpose();
+        // Tiny block lengths force ragged tail blocks and 1-posting
+        // blocks; the id-offset widths vary with the row spread.
+        let block_len = g.usize_in(1, 9);
+
+        // Exact coding: delta/bit-pack decode round-trips bit-for-bit.
+        let c = CompressedPostings::from_csc(
+            &csc,
+            SparseCompression::exact().with_block_len(block_len),
+        );
+        assert_eq!(c.nnz(), csc.nnz());
+        let back = c.to_csc();
+        assert_eq!(back.colptr, csc.colptr, "colptr diverged");
+        assert_eq!(back.rows, csc.rows, "row ids diverged");
+        let got: Vec<u32> = back.vals.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = csc.vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "exact values must decode bit-identically");
+
+        // Block invariants the early-exit bound relies on: per dim the
+        // block max_abs is non-increasing, every block is non-empty and
+        // within block_len, max_abs is the true block max, and lengths
+        // tile the list exactly.
+        for j in 0..c.n_dims() {
+            let mut prev = f32::INFINITY;
+            let mut total = 0u64;
+            for bm in c.dim_metas(j) {
+                assert!(bm.len >= 1 && bm.len as usize <= block_len);
+                assert!(
+                    bm.max_abs <= prev,
+                    "dim {j}: impact order broken ({} after {prev})",
+                    bm.max_abs
+                );
+                prev = bm.max_abs;
+                total += bm.len as u64;
+                let mut block_max = 0.0f32;
+                c.for_each_in_block(bm, |_, v| block_max = block_max.max(v.abs()));
+                assert_eq!(block_max, bm.max_abs, "dim {j}: stale block max");
+            }
+            assert_eq!(total, csc.col(j).0.len() as u64, "dim {j}: lost postings");
+        }
+
+        // Q8 coding: same rows, every value within max_abs/254 of the
+        // original (round-to-nearest over 127 levels per block).
+        let cq = CompressedPostings::from_csc(
+            &csc,
+            SparseCompression::q8().with_block_len(block_len),
+        );
+        for j in 0..cq.n_dims() {
+            let (rows, vals) = csc.col(j);
+            let orig: std::collections::HashMap<u32, f32> =
+                rows.iter().copied().zip(vals.iter().copied()).collect();
+            for bm in cq.dim_metas(j) {
+                let tol = bm.max_abs / 254.0 * (1.0 + 1e-5) + 1e-7;
+                cq.for_each_in_block(bm, |r, v| {
+                    let o = orig[&r];
+                    assert!(
+                        (v - o).abs() <= tol,
+                        "dim {j} row {r}: q8 {v} vs {o} breaches {tol}"
+                    );
+                });
+            }
+        }
+
+        // End to end: an exact-compressed index scan accumulates the
+        // same per-row sums, bit for bit, as the raw CSC backend (each
+        // row appears once per dim, so within-dim order is immaterial).
+        let raw = InvertedIndex::build(&m);
+        let mut comp = InvertedIndex::build(&m);
+        comp.compress(SparseCompression::exact().with_block_len(block_len));
+        assert!(comp.is_compressed());
+        let nnzq = g.usize_in(0, d.min(8));
+        let (qd, qv) = g.sparse(d, nnzq);
+        let q = SparseVector::new(qd, qv);
+        let mut acc = Accumulator::new(n);
+        let mut a: Vec<(u32, u32)> = raw
+            .scores(&q, &mut acc)
+            .into_iter()
+            .map(|(r, s)| (r, s.to_bits()))
+            .collect();
+        let mut b: Vec<(u32, u32)> = comp
+            .scores(&q, &mut acc)
+            .into_iter()
+            .map(|(r, s)| (r, s.to_bits()))
+            .collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "compressed scan sums diverged from raw");
+    });
+}
