@@ -1,0 +1,200 @@
+//! Dense stage-1 backends head-to-head: flat LUT16 ADC scan vs
+//! HNSW-over-PQ graph traversal — latency, recall@10, and dense score
+//! evaluations per query (the flat scan always pays N; the graph pays
+//! its visited-node count) across corpus sizes and k, plus the
+//! Fixed-mode identity guard (a graph-backed index under
+//! `PlanMode::Fixed` must serve bit-identical results to a flat build).
+//!
+//! Besides the printed table, writes machine-readable
+//! `target/BENCH_graph.json` so CI accumulates a bench trajectory.
+//!
+//!     cargo bench --bench graph_stage1
+//!     BENCH_N=200000 BENCH_Q=128 cargo bench --bench graph_stage1
+
+use std::collections::BTreeMap;
+
+use hybrid_ip::benchkit::{self, bench, BenchConfig, Table};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::eval::ground_truth::exact_top_k;
+use hybrid_ip::eval::recall::recall_at;
+use hybrid_ip::hybrid::config::{IndexConfig, SearchParams};
+use hybrid_ip::hybrid::index::HybridIndex;
+use hybrid_ip::hybrid::search::{search_with, SearchScratch};
+use hybrid_ip::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn main() {
+    let n_top = env_usize("BENCH_N", 50_000);
+    let n_queries = env_usize("BENCH_Q", 64);
+    benchkit::preamble(
+        "graph_stage1",
+        &format!("n={n_top} batch={n_queries} (BENCH_N/BENCH_Q to change)"),
+    );
+    let mut sizes = vec![(n_top / 5).max(2_000), n_top];
+    sizes.dedup();
+
+    let bcfg = BenchConfig::default();
+    let mut table = Table::new(
+        "Dense stage-1: flat scan vs HNSW-over-PQ graph",
+        &[
+            "n", "k", "backend", "med ms/batch", "qps", "recall@10",
+            "evals/query", "graph plans",
+        ],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for &n in &sizes {
+        let cfg = QuerySimConfig::scaled(n);
+        let data = cfg.generate(0x6A11);
+        let t = std::time::Instant::now();
+        let flat = HybridIndex::build(&data, &IndexConfig::default());
+        let t_flat = t.elapsed().as_secs_f64();
+        let t = std::time::Instant::now();
+        let graph_idx = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_graph_backend(),
+        );
+        let g_bytes = graph_idx
+            .graph
+            .as_ref()
+            .map(|g| g.memory_bytes())
+            .unwrap_or(0);
+        println!(
+            "[graph_stage1] n={n}: flat build {t_flat:.1}s, graph build \
+             {:.1}s (+{:.1} MiB adjacency)",
+            t.elapsed().as_secs_f64(),
+            g_bytes as f64 / (1024.0 * 1024.0),
+        );
+        let queries = cfg.related_queries(&data, 0x6A12, n_queries);
+        let truth: Vec<Vec<u32>> =
+            queries.iter().map(|q| exact_top_k(&data, q, 10)).collect();
+
+        for &k in &[10usize, 50] {
+            let fixed = SearchParams::new(k).with_alpha(4.0);
+            let adaptive = fixed.adaptive();
+
+            // Identity guard: Fixed plans never consult the graph, so a
+            // graph-backed index must reproduce the flat build exactly.
+            let mut sf = SearchScratch::new(&flat);
+            let mut sg = SearchScratch::new(&graph_idx);
+            for (qi, q) in queries.iter().enumerate() {
+                let (a, _) = search_with(&flat, q, &fixed, &mut sf);
+                let (b, st) = search_with(&graph_idx, q, &fixed, &mut sg);
+                assert_eq!(
+                    st.plans.dense_graph, 0,
+                    "n={n} k={k} q{qi}: Fixed took a graph plan"
+                );
+                assert_eq!(a.len(), b.len(), "n={n} k={k} q{qi}");
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.id, y.id, "n={n} k={k} q{qi}");
+                    assert_eq!(
+                        x.score.to_bits(),
+                        y.score.to_bits(),
+                        "n={n} k={k} q{qi}"
+                    );
+                }
+            }
+
+            for (name, idx) in
+                [("flat", &flat), ("graph", &graph_idx)]
+            {
+                let mut scratch = SearchScratch::new(idx);
+                // Stats + recall pass (unmeasured).
+                let mut recall = 0.0;
+                let mut visited = 0u64;
+                let mut graph_plans = 0usize;
+                let mut dense_plans = 0usize;
+                for (t, q) in truth.iter().zip(&queries) {
+                    let (hits, st) =
+                        search_with(idx, q, &adaptive, &mut scratch);
+                    visited += st.graph_nodes_visited;
+                    graph_plans += st.plans.dense_graph;
+                    dense_plans += st.plans.hybrid + st.plans.dense_only;
+                    let ids: Vec<u32> = hits.iter().map(|h| h.id).collect();
+                    recall += recall_at(t, &ids, 10);
+                }
+                recall /= queries.len() as f64;
+                // Flat pays the whole corpus per dense scan; the graph
+                // pays its visited-node count.
+                let evals = if name == "graph" {
+                    visited as f64 / queries.len() as f64
+                } else {
+                    ((graph_plans + dense_plans) * n) as f64
+                        / queries.len() as f64
+                };
+                if name == "graph" {
+                    assert!(
+                        graph_plans > 0,
+                        "n={n} k={k}: adaptive never selected the graph"
+                    );
+                    assert!(
+                        evals < n as f64,
+                        "n={n} k={k}: graph evals/query {evals:.0} not \
+                         below the flat scan's {n}"
+                    );
+                }
+                let stats = bench(
+                    &format!("n{n}/k{k}/{name}"),
+                    bcfg,
+                    || {
+                        for q in &queries {
+                            std::hint::black_box(search_with(
+                                idx,
+                                q,
+                                &adaptive,
+                                &mut scratch,
+                            ));
+                        }
+                    },
+                );
+                let qps = stats.throughput(queries.len() as f64);
+                table.row(&[
+                    format!("{n}"),
+                    format!("{k}"),
+                    name.to_string(),
+                    format!("{:.2}", stats.median_ms()),
+                    format!("{qps:.0}"),
+                    format!("{recall:.3}"),
+                    format!("{evals:.0}"),
+                    format!("{graph_plans}"),
+                ]);
+                let mut row = BTreeMap::new();
+                row.insert("n".into(), num(n as f64));
+                row.insert("k".into(), num(k as f64));
+                row.insert("backend".into(), Json::Str(name.into()));
+                row.insert("median_ms".into(), num(stats.median_ms()));
+                row.insert("qps".into(), num(qps));
+                row.insert("recall_at_10".into(), num(recall));
+                row.insert("dense_evals_per_query".into(), num(evals));
+                row.insert("graph_plans".into(), num(graph_plans as f64));
+                row.insert(
+                    "graph_bytes".into(),
+                    num(if name == "graph" { g_bytes as f64 } else { 0.0 }),
+                );
+                rows.push(Json::Obj(row));
+            }
+        }
+    }
+    table.print();
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("graph_stage1".into()));
+    doc.insert("n".into(), num(n_top as f64));
+    doc.insert("queries".into(), num(n_queries as f64));
+    doc.insert("rows".into(), Json::Arr(rows));
+    std::fs::create_dir_all("target").ok();
+    let path = "target/BENCH_graph.json";
+    std::fs::write(path, Json::Obj(doc).to_string())
+        .expect("write BENCH_graph.json");
+    println!("[graph_stage1] wrote {path}");
+}

@@ -28,6 +28,7 @@ pub struct PlanCounters {
     dense_only: AtomicU64,
     sparse_only: AtomicU64,
     sparse_early_exit: AtomicU64,
+    dense_graph: AtomicU64,
 }
 
 impl PlanCounters {
@@ -45,6 +46,8 @@ impl PlanCounters {
             .fetch_add(c.sparse_only as u64, Ordering::Relaxed);
         self.sparse_early_exit
             .fetch_add(c.sparse_early_exit as u64, Ordering::Relaxed);
+        self.dense_graph
+            .fetch_add(c.dense_graph as u64, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> PlanCounts {
@@ -55,6 +58,7 @@ impl PlanCounters {
             sparse_only: self.sparse_only.load(Ordering::Relaxed) as usize,
             sparse_early_exit: self.sparse_early_exit.load(Ordering::Relaxed)
                 as usize,
+            dense_graph: self.dense_graph.load(Ordering::Relaxed) as usize,
         }
     }
 }
@@ -218,7 +222,7 @@ impl MetricsSnapshot {
         format!(
             "n={} mean={} p50={} p95={} p99={} max={} qps={:.1} \
              (lifetime {:.1}) plans[fixed={} hybrid={} dense={} sparse={} \
-             early_exit={}]",
+             early_exit={} graph={}]",
             self.count,
             fmt_duration(self.mean),
             fmt_duration(self.p50),
@@ -232,6 +236,7 @@ impl MetricsSnapshot {
             self.plans.dense_only,
             self.plans.sparse_only,
             self.plans.sparse_early_exit,
+            self.plans.dense_graph,
         )
     }
 }
@@ -318,6 +323,7 @@ mod tests {
             dense_only: 3,
             sparse_only: 4,
             sparse_early_exit: 5,
+            dense_graph: 6,
             ..Default::default()
         });
         let s = c.snapshot();
@@ -326,7 +332,8 @@ mod tests {
         assert_eq!(s.dense_only, 3);
         assert_eq!(s.sparse_only, 4);
         assert_eq!(s.sparse_early_exit, 5);
-        assert_eq!(s.total(), 15);
+        assert_eq!(s.dense_graph, 6);
+        assert_eq!(s.total(), 21);
         // a bare recorder reports zero plan counts
         assert_eq!(LatencyRecorder::new().snapshot().plans.total(), 0);
     }

@@ -332,6 +332,7 @@ pub fn decode_response(payload: &[u8]) -> io::Result<(u64, Response)> {
                 dense_only: r.u64()? as usize,
                 sparse_only: r.u64()? as usize,
                 sparse_early_exit: r.u64()? as usize,
+                dense_graph: r.u64()? as usize,
             },
         }),
         RESP_ERROR => Response::Error(r.str_()?),
@@ -705,7 +706,8 @@ fn handle_request(
                     w.u64(m.plans.hybrid as u64)?;
                     w.u64(m.plans.dense_only as u64)?;
                     w.u64(m.plans.sparse_only as u64)?;
-                    w.u64(m.plans.sparse_early_exit as u64)
+                    w.u64(m.plans.sparse_early_exit as u64)?;
+                    w.u64(m.plans.dense_graph as u64)
                 }));
             }
             k => {

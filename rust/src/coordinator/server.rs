@@ -11,7 +11,7 @@ use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::metrics::{LatencyRecorder, MetricsSnapshot};
 use crate::coordinator::router::Router;
 use crate::coordinator::shard::{ShardHandle, UpsertOutcome};
-use crate::hybrid::config::{IndexConfig, SearchParams};
+use crate::hybrid::config::{DenseBackend, IndexConfig, SearchParams};
 use crate::hybrid::mutable::{MutableConfig, RowRetention};
 use crate::hybrid::persist;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
@@ -77,6 +77,17 @@ pub struct ServerConfig {
     /// Directory for [`Server::save_snapshot`] / [`Server::restore`].
     /// None disables persistence.
     pub snapshot_dir: Option<PathBuf>,
+}
+
+impl ServerConfig {
+    /// Dense stage-1 backend every shard's segments are built with
+    /// (convenience passthrough to `self.index.dense_backend`; see
+    /// [`DenseBackend`]). Graph backends only change *adaptive* plans —
+    /// `PlanMode::Fixed` requests stay bit-identical flat scans.
+    pub fn with_dense_backend(mut self, b: DenseBackend) -> Self {
+        self.index.dense_backend = b;
+        self
+    }
 }
 
 impl Default for ServerConfig {

@@ -1,0 +1,856 @@
+//! HNSW over PQ codes: graph-based dense stage-1 candidate generation.
+//!
+//! The flat LUT16 ADC scan is linear in N — the latency floor no SIMD
+//! can remove at billion-row scale. This module builds a hierarchical
+//! navigable-small-world graph *directly over the packed PQ codes*, so
+//! traversal scores candidates with the same asymmetric-distance
+//! machinery the flat scan uses (`QueryLut` tables), touching
+//! `O(ef · M · log N)` rows instead of all N:
+//!
+//! * **Construction** is deterministic from a seed: a node's level is a
+//!   pure function of `(seed, id)` (geometric distribution, like
+//!   hnswlib's `-ln(U) · 1/ln(M)`), and neighbor selection follows the
+//!   repo-wide total order (score desc, id asc), so two builds of the
+//!   same corpus are bitwise-identical and an incremental build equals
+//!   a batch build of the same insertion sequence.
+//! * **Row↔row scores** during construction come from a [`CrossLut`] —
+//!   per-subspace codeword⋅codeword tables (`K · l · l` f32s) — so
+//!   inserting a node never decodes a vector.
+//! * **Query↔row scores** at search time come from the existing
+//!   [`QueryLut`] via [`adc_score`], an allocation-free nibble-unpack
+//!   over the packed code rows.
+//! * **Tombstone-aware traversal**: dead nodes stay routable (removing
+//!   them would disconnect the graph) but a caller-supplied liveness
+//!   filter keeps them out of the result set — a tombstoned row can
+//!   never surface from a graph search.
+//!
+//! The planner (`hybrid::plan`) selects this backend per query only
+//! under `Adaptive`/`Aggressive` modes when the estimated visit count
+//! undercuts the flat scan; `PlanMode::Fixed` never routes here, so the
+//! flat path's bit-identity guarantee is preserved by construction.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::io::{self, Read, Write};
+
+use crate::dense::lut::QueryLut;
+use crate::dense::pq::{PqCodebooks, PqIndex};
+use crate::hybrid::topk::TopK;
+use crate::util::binio::{BinReader, BinWriter};
+use crate::util::rng::Rng;
+
+/// Hard ceiling on hierarchy depth (a geometric level above this has
+/// probability < M^-16; also bounds what a corrupt snapshot can claim).
+pub const MAX_LEVEL: usize = 16;
+
+fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Graph construction/search knobs (the `M` / `efConstruction` / `ef`
+/// triple of the HNSW paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GraphParams {
+    /// Max out-degree on levels > 0; level 0 keeps up to `2·m` links.
+    pub m: usize,
+    /// Beam width while inserting a node.
+    pub ef_construction: usize,
+    /// Beam-width *floor* at query time; the executor widens it to the
+    /// stage-1 fetch depth when that is larger.
+    pub ef_search: usize,
+}
+
+impl Default for GraphParams {
+    fn default() -> Self {
+        GraphParams { m: 8, ef_construction: 64, ef_search: 48 }
+    }
+}
+
+impl GraphParams {
+    pub fn with_m(mut self, m: usize) -> Self {
+        self.m = m.max(2);
+        self
+    }
+
+    pub fn with_ef_construction(mut self, ef: usize) -> Self {
+        self.ef_construction = ef.max(1);
+        self
+    }
+
+    pub fn with_ef_search(mut self, ef: usize) -> Self {
+        self.ef_search = ef.max(1);
+        self
+    }
+}
+
+/// Per-subspace codeword⋅codeword inner-product tables: row↔row ADC
+/// scores for construction without decoding either row. `K·l²` f32s
+/// (~100 KB at K=100, l=16), built once per graph build.
+pub struct CrossLut {
+    table: Vec<f32>,
+    k: usize,
+    l: usize,
+}
+
+impl CrossLut {
+    pub fn new(cb: &PqCodebooks) -> Self {
+        let (k, l, sub) = (cb.k, cb.l, cb.sub);
+        let mut table = vec![0.0f32; k * l * l];
+        for ks in 0..k {
+            for a in 0..l {
+                let ca = cb.codeword(ks, a);
+                for b in 0..l {
+                    let cbw = cb.codeword(ks, b);
+                    let mut acc = 0.0f32;
+                    for j in 0..sub {
+                        acc += ca[j] * cbw[j];
+                    }
+                    table[(ks * l + a) * l + b] = acc;
+                }
+            }
+        }
+        CrossLut { table, k, l }
+    }
+
+    /// IP(φ_PQ(row u), φ_PQ(row v)) from packed codes alone.
+    #[inline]
+    pub fn row_score(&self, pq: &PqIndex, u: u32, v: u32) -> f32 {
+        let ru = pq.row_codes_packed(u as usize);
+        let rv = pq.row_codes_packed(v as usize);
+        let mut acc = 0.0f32;
+        if self.l <= 16 {
+            let mut ks = 0usize;
+            for (&bu, &bv) in ru.iter().zip(rv) {
+                let a = (bu & 0x0F) as usize;
+                let b = (bv & 0x0F) as usize;
+                acc += self.table[(ks * self.l + a) * self.l + b];
+                ks += 1;
+                if ks < self.k {
+                    let a = (bu >> 4) as usize;
+                    let b = (bv >> 4) as usize;
+                    acc += self.table[(ks * self.l + a) * self.l + b];
+                    ks += 1;
+                }
+            }
+        } else {
+            for (ks, (&a, &b)) in ru.iter().zip(rv).enumerate() {
+                acc += self.table
+                    [(ks * self.l + a as usize) * self.l + b as usize];
+            }
+        }
+        acc
+    }
+}
+
+/// Exact-LUT ADC score of one packed code row — the graph's query↔row
+/// distance, allocation-free (no `row_codes` unpack vector).
+#[inline]
+pub fn adc_score(pq: &PqIndex, lut: &QueryLut, i: u32) -> f32 {
+    let raw = pq.row_codes_packed(i as usize);
+    let mut acc = 0.0f32;
+    if pq.codebooks.l <= 16 {
+        let k = pq.codebooks.k;
+        let mut ks = 0usize;
+        for &b in raw {
+            acc += lut.get(ks, (b & 0x0F) as usize);
+            ks += 1;
+            if ks < k {
+                acc += lut.get(ks, (b >> 4) as usize);
+                ks += 1;
+            }
+        }
+    } else {
+        for (ks, &c) in raw.iter().enumerate() {
+            acc += lut.get(ks, c as usize);
+        }
+    }
+    acc
+}
+
+/// Epoch-tagged visited set: O(1) clear between traversals, no
+/// per-query allocation once warm (lives in `SearchScratch`).
+#[derive(Clone, Debug, Default)]
+pub struct VisitTags {
+    tags: Vec<u32>,
+    epoch: u32,
+}
+
+impl VisitTags {
+    /// Start a fresh traversal over nodes `0..n`.
+    pub fn begin(&mut self, n: usize) {
+        if self.tags.len() < n {
+            self.tags.resize(n, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // u32 wraparound: stale tags could alias; hard-clear once
+            // every 2^32 traversals.
+            for t in &mut self.tags {
+                *t = 0;
+            }
+            self.epoch = 1;
+        }
+    }
+
+    /// Mark `i` visited; true iff this is the first visit this epoch.
+    #[inline]
+    pub fn visit(&mut self, i: u32) -> bool {
+        let t = &mut self.tags[i as usize];
+        if *t == self.epoch {
+            false
+        } else {
+            *t = self.epoch;
+            true
+        }
+    }
+}
+
+/// Max-heap entry for the traversal frontier: pop highest score first,
+/// ties to the smaller id (deterministic expansion order).
+#[derive(Clone, Copy, Debug)]
+struct Cand {
+    score: f32,
+    id: u32,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.score
+            .total_cmp(&other.score)
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+/// The HNSW-over-PQ-codes index. Nodes are PQ row indices `0..n`;
+/// `links[i][l]` holds node i's out-neighbors on level l (node i exists
+/// on levels `0..=levels[i]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PqGraph {
+    pub params: GraphParams,
+    pub seed: u64,
+    levels: Vec<u8>,
+    links: Vec<Vec<Vec<u32>>>,
+    entry: u32,
+    max_level: u8,
+}
+
+impl PqGraph {
+    /// Empty graph ready for sequential [`PqGraph::insert`] calls.
+    pub fn empty(params: GraphParams, seed: u64) -> Self {
+        PqGraph {
+            params,
+            seed,
+            levels: Vec::new(),
+            links: Vec::new(),
+            entry: 0,
+            max_level: 0,
+        }
+    }
+
+    /// Build over every row of `pq` by inserting rows in id order —
+    /// deterministic from `seed`, and identical to growing an existing
+    /// graph over a row prefix with the remaining rows.
+    pub fn build(pq: &PqIndex, params: GraphParams, seed: u64) -> Self {
+        let mut g = PqGraph::empty(params, seed);
+        let cross = CrossLut::new(&pq.codebooks);
+        let mut visited = VisitTags::default();
+        for i in 0..pq.n {
+            g.insert(pq, &cross, i as u32, &mut visited);
+        }
+        g
+    }
+
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    /// A node's level: pure function of (seed, id) — independent of
+    /// insertion order, so delta growth reproduces batch builds.
+    fn level_for(seed: u64, i: u32, m: usize) -> u8 {
+        let mut rng = Rng::new(
+            seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let u = rng.f64().max(1e-300);
+        let mult = 1.0 / (m.max(2) as f64).ln();
+        ((-u.ln() * mult) as usize).min(MAX_LEVEL) as u8
+    }
+
+    /// Link capacity per level (2M on the base layer, M above).
+    #[inline]
+    fn cap(&self, level: usize) -> usize {
+        if level == 0 {
+            self.params.m * 2
+        } else {
+            self.params.m
+        }
+    }
+
+    #[inline]
+    fn neighbors(&self, node: u32, level: usize) -> &[u32] {
+        &self.links[node as usize][level]
+    }
+
+    /// Hill-climb on one upper level: move to the best-scoring neighbor
+    /// until no neighbor improves (ties to the smaller id, so the walk
+    /// cannot cycle).
+    fn greedy_descend(
+        &self,
+        level: usize,
+        mut cur: u32,
+        mut cur_s: f32,
+        score: &mut impl FnMut(u32) -> f32,
+        scored: &mut u64,
+    ) -> (u32, f32) {
+        loop {
+            let mut improved = false;
+            for idx in 0..self.neighbors(cur, level).len() {
+                let nb = self.links[cur as usize][level][idx];
+                let s = score(nb);
+                *scored += 1;
+                if s > cur_s || (s == cur_s && nb < cur) {
+                    cur = nb;
+                    cur_s = s;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return (cur, cur_s);
+            }
+        }
+    }
+
+    /// Beam search on one level: expand the frontier best-first, keep
+    /// the top-`ef` *kept* nodes (all nodes stay routable; `keep`
+    /// filters what may enter the result set — tombstone awareness).
+    #[allow(clippy::too_many_arguments)]
+    fn search_layer(
+        &self,
+        level: usize,
+        entry: u32,
+        entry_score: f32,
+        ef: usize,
+        score: &mut impl FnMut(u32) -> f32,
+        keep: &mut impl FnMut(u32) -> bool,
+        visited: &mut VisitTags,
+        scored: &mut u64,
+    ) -> TopK {
+        visited.begin(self.len());
+        let mut frontier = BinaryHeap::new();
+        frontier.push(Cand { score: entry_score, id: entry });
+        let mut results = TopK::new(ef);
+        visited.visit(entry);
+        if keep(entry) {
+            results.push(entry, entry_score);
+        }
+        while let Some(c) = frontier.pop() {
+            if let Some(th) = results.threshold() {
+                if c.score < th {
+                    break;
+                }
+            }
+            for idx in 0..self.neighbors(c.id, level).len() {
+                let nb = self.links[c.id as usize][level][idx];
+                if !visited.visit(nb) {
+                    continue;
+                }
+                let s = score(nb);
+                *scored += 1;
+                let admit = match results.threshold() {
+                    None => true,
+                    Some(th) => s >= th,
+                };
+                if admit {
+                    frontier.push(Cand { score: s, id: nb });
+                    if keep(nb) {
+                        results.push(nb, s);
+                    }
+                }
+            }
+        }
+        results
+    }
+
+    /// Insert node `i` (must equal the current node count — rows are
+    /// graph ids). `cross` must come from the same codebooks as `pq`.
+    pub fn insert(
+        &mut self,
+        pq: &PqIndex,
+        cross: &CrossLut,
+        i: u32,
+        visited: &mut VisitTags,
+    ) {
+        assert_eq!(
+            i as usize,
+            self.links.len(),
+            "graph nodes are PQ row ids: insert rows in order"
+        );
+        assert!((i as usize) < pq.n, "row {i} out of range for pq.n={}", pq.n);
+        let level = Self::level_for(self.seed, i, self.params.m) as usize;
+        self.links.push(vec![Vec::new(); level + 1]);
+        self.levels.push(level as u8);
+        if self.links.len() == 1 {
+            self.entry = i;
+            self.max_level = level as u8;
+            return;
+        }
+
+        let mut scored = 0u64;
+        let mut score = |x: u32| cross.row_score(pq, i, x);
+        let mut cur = self.entry;
+        let mut cur_s = score(cur);
+        let top = self.max_level as usize;
+        for l in ((level + 1)..=top).rev() {
+            (cur, cur_s) =
+                self.greedy_descend(l, cur, cur_s, &mut score, &mut scored);
+        }
+        for l in (0..=level.min(top)).rev() {
+            let found = self
+                .search_layer(
+                    l,
+                    cur,
+                    cur_s,
+                    self.params.ef_construction,
+                    &mut score,
+                    &mut |_| true,
+                    visited,
+                    &mut scored,
+                )
+                .into_sorted();
+            if let Some(&(best, best_s)) = found.first() {
+                cur = best;
+                cur_s = best_s;
+            }
+            let chosen: Vec<u32> =
+                found.iter().take(self.params.m).map(|&(id, _)| id).collect();
+            let cap = self.cap(l);
+            for &e in &chosen {
+                // e was found on level l, so it exists there.
+                let elist = &mut self.links[e as usize][l];
+                elist.push(i);
+                if elist.len() > cap {
+                    self.shrink(pq, cross, e, l, cap);
+                }
+            }
+            self.links[i as usize][l] = chosen;
+        }
+        if level > self.max_level as usize {
+            self.max_level = level as u8;
+            self.entry = i;
+        }
+    }
+
+    /// Re-select an overfull neighbor list down to `cap` by the total
+    /// order on (score to the owning node, id).
+    fn shrink(
+        &mut self,
+        pq: &PqIndex,
+        cross: &CrossLut,
+        e: u32,
+        level: usize,
+        cap: usize,
+    ) {
+        let list = std::mem::take(&mut self.links[e as usize][level]);
+        let mut t = TopK::new(cap);
+        for x in list {
+            t.push(x, cross.row_score(pq, e, x));
+        }
+        self.links[e as usize][level] =
+            t.into_sorted().into_iter().map(|(id, _)| id).collect();
+    }
+
+    /// Top-`k` live candidates by ADC score, plus the number of score
+    /// evaluations performed. `live` gates the result set only —
+    /// tombstoned nodes remain routable but can never surface. The beam
+    /// width is `max(ef_search, k)`.
+    pub fn search(
+        &self,
+        pq: &PqIndex,
+        lut: &QueryLut,
+        k: usize,
+        live: &mut impl FnMut(u32) -> bool,
+        visited: &mut VisitTags,
+    ) -> (Vec<(u32, f32)>, u64) {
+        if self.links.is_empty() || k == 0 {
+            return (Vec::new(), 0);
+        }
+        let mut scored = 1u64; // the entry point below
+        let mut score = |x: u32| adc_score(pq, lut, x);
+        let mut cur = self.entry;
+        let mut cur_s = score(cur);
+        for l in (1..=self.max_level as usize).rev() {
+            (cur, cur_s) =
+                self.greedy_descend(l, cur, cur_s, &mut score, &mut scored);
+        }
+        let ef = self.params.ef_search.max(k);
+        let results = self.search_layer(
+            0,
+            cur,
+            cur_s,
+            ef,
+            &mut score,
+            live,
+            visited,
+            &mut scored,
+        );
+        let mut hits = results.into_sorted();
+        hits.truncate(k);
+        (hits, scored)
+    }
+
+    /// Planner cost term: estimated score evaluations for one query at
+    /// beam width `ef` — the level-0 beam (`ef · m`, each expanded node
+    /// scores up to 2m neighbors but roughly half are already visited)
+    /// plus the upper-level descent (`m · log₂ n`).
+    pub fn estimated_visits(&self, ef: usize) -> u64 {
+        let n = self.len().max(2) as u64;
+        let log2n = (63 - n.leading_zeros() as u64).max(1);
+        (ef as u64) * self.params.m as u64 + self.params.m as u64 * log2n
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        let link_bytes: usize = self
+            .links
+            .iter()
+            .map(|per| {
+                per.iter().map(|l| l.len() * 4).sum::<usize>()
+                    + per.len() * std::mem::size_of::<Vec<u32>>()
+            })
+            .sum();
+        link_bytes
+            + self.links.len() * std::mem::size_of::<Vec<Vec<u32>>>()
+            + self.levels.len()
+            + std::mem::size_of::<PqGraph>()
+    }
+
+    // ------------------------------------------------------ persistence
+
+    pub fn write_into<W: Write>(
+        &self,
+        w: &mut BinWriter<W>,
+    ) -> io::Result<()> {
+        w.usize(self.links.len())?;
+        w.u32(self.params.m as u32)?;
+        w.u32(self.params.ef_construction as u32)?;
+        w.u32(self.params.ef_search as u32)?;
+        w.u64(self.seed)?;
+        w.u32(self.entry)?;
+        w.u8(self.max_level)?;
+        w.slice_u8(&self.levels)?;
+        for per in &self.links {
+            for list in per {
+                w.slice_u32(list)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut BinReader<R>) -> io::Result<PqGraph> {
+        let n = r.usize()?;
+        let m = r.u32()? as usize;
+        let ef_construction = r.u32()? as usize;
+        let ef_search = r.u32()? as usize;
+        if m < 2 || ef_construction == 0 || ef_search == 0 {
+            return Err(invalid(format!(
+                "graph params out of range: m={m} efc={ef_construction} \
+                 efs={ef_search}"
+            )));
+        }
+        let seed = r.u64()?;
+        let entry = r.u32()?;
+        let max_level = r.u8()?;
+        let levels = r.slice_u8()?;
+        if levels.len() != n {
+            return Err(invalid(format!(
+                "graph levels length {} != node count {n}",
+                levels.len()
+            )));
+        }
+        if max_level as usize > MAX_LEVEL
+            || levels.iter().any(|&l| l > max_level)
+        {
+            return Err(invalid("graph level exceeds max_level"));
+        }
+        if n > 0 {
+            if entry as usize >= n {
+                return Err(invalid(format!(
+                    "graph entry point {entry} out of range 0..{n}"
+                )));
+            }
+            if levels[entry as usize] != max_level {
+                return Err(invalid(
+                    "graph entry point is not on the top level",
+                ));
+            }
+        }
+        let mut links = Vec::with_capacity(n);
+        for (i, &lv) in levels.iter().enumerate() {
+            let mut per = Vec::with_capacity(lv as usize + 1);
+            for l in 0..=(lv as usize) {
+                let list = r.slice_u32()?;
+                let cap = if l == 0 { m * 2 } else { m };
+                if list.len() > cap {
+                    return Err(invalid(format!(
+                        "node {i} level {l}: {} links exceed cap {cap}",
+                        list.len()
+                    )));
+                }
+                for &nb in &list {
+                    if nb as usize >= n || nb as usize == i {
+                        return Err(invalid(format!(
+                            "node {i} level {l}: bad neighbor {nb}"
+                        )));
+                    }
+                    if levels[nb as usize] < l as u8 {
+                        return Err(invalid(format!(
+                            "node {i} level {l}: neighbor {nb} does not \
+                             exist on this level"
+                        )));
+                    }
+                }
+                per.push(list);
+            }
+            links.push(per);
+        }
+        Ok(PqGraph {
+            params: GraphParams { m, ef_construction, ef_search },
+            seed,
+            levels,
+            links,
+            entry,
+            max_level,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::dense::DenseMatrix;
+
+    fn fixture(seed: u64, n: usize, dim: usize) -> PqIndex {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.gauss_f32()).collect())
+            .collect();
+        let data = DenseMatrix::from_rows(&rows);
+        let cb = PqCodebooks::train(&data, dim / 2, 16, 6, seed);
+        PqIndex::build(&data, cb)
+    }
+
+    fn query_lut(pq: &PqIndex, seed: u64) -> QueryLut {
+        let mut rng = Rng::new(seed);
+        let q: Vec<f32> =
+            (0..pq.dim).map(|_| rng.gauss_f32()).collect();
+        QueryLut::build(&pq.codebooks, &q)
+    }
+
+    fn exact_adc_topk(pq: &PqIndex, lut: &QueryLut, k: usize) -> Vec<u32> {
+        let mut t = TopK::new(k);
+        for i in 0..pq.n {
+            t.push(i as u32, adc_score(pq, lut, i as u32));
+        }
+        t.into_sorted().into_iter().map(|(id, _)| id).collect()
+    }
+
+    #[test]
+    fn adc_score_matches_score_codes() {
+        let pq = fixture(1, 50, 8);
+        let lut = query_lut(&pq, 2);
+        for i in 0..pq.n {
+            let want = lut.score_codes(&pq.row_codes(i));
+            assert_eq!(adc_score(&pq, &lut, i as u32), want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn cross_lut_matches_decoded_dot() {
+        let pq = fixture(3, 40, 6);
+        let cross = CrossLut::new(&pq.codebooks);
+        for u in 0..10u32 {
+            for v in 0..10u32 {
+                let du = pq.decode_row(u as usize);
+                let dv = pq.decode_row(v as usize);
+                let want: f32 =
+                    du.iter().zip(&dv).map(|(a, b)| a * b).sum();
+                let got = cross.row_score(&pq, u, v);
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "({u},{v}): {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let pq = fixture(5, 120, 8);
+        let a = PqGraph::build(&pq, GraphParams::default(), 0xD5);
+        let b = PqGraph::build(&pq, GraphParams::default(), 0xD5);
+        assert_eq!(a, b);
+        let c = PqGraph::build(&pq, GraphParams::default(), 0xD6);
+        assert_ne!(a.links, c.links, "distinct seeds must diverge");
+    }
+
+    #[test]
+    fn incremental_insert_matches_batch_build() {
+        let pq = fixture(7, 90, 8);
+        let full = PqGraph::build(&pq, GraphParams::default(), 0x11);
+        let cross = CrossLut::new(&pq.codebooks);
+        let mut grown = PqGraph::empty(GraphParams::default(), 0x11);
+        let mut visited = VisitTags::default();
+        for i in 0..45u32 {
+            grown.insert(&pq, &cross, i, &mut visited);
+        }
+        for i in 45..90u32 {
+            grown.insert(&pq, &cross, i, &mut visited);
+        }
+        assert_eq!(full, grown);
+    }
+
+    #[test]
+    fn search_recall_with_wide_beam_is_high() {
+        let pq = fixture(9, 300, 8);
+        let g = PqGraph::build(
+            &pq,
+            GraphParams::default().with_ef_search(128),
+            0x97,
+        );
+        let mut visited = VisitTags::default();
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for qs in 0..10u64 {
+            let lut = query_lut(&pq, 0x100 + qs);
+            let truth = exact_adc_topk(&pq, &lut, 10);
+            let (got, scored) =
+                g.search(&pq, &lut, 10, &mut |_| true, &mut visited);
+            assert!(scored > 0 && scored <= pq.n as u64 * 2);
+            let got_ids: std::collections::HashSet<u32> =
+                got.iter().map(|&(id, _)| id).collect();
+            // scores returned must be the true ADC scores, bit-exact
+            for &(id, s) in &got {
+                assert_eq!(s.to_bits(), adc_score(&pq, &lut, id).to_bits());
+            }
+            total += truth.len();
+            hit += truth.iter().filter(|id| got_ids.contains(id)).count();
+        }
+        let recall = hit as f64 / total as f64;
+        assert!(recall >= 0.9, "graph recall {recall} < 0.9");
+    }
+
+    #[test]
+    fn dead_nodes_route_but_never_surface() {
+        let pq = fixture(13, 200, 8);
+        let g = PqGraph::build(
+            &pq,
+            GraphParams::default().with_ef_search(96),
+            0xDE,
+        );
+        let lut = query_lut(&pq, 0xDF);
+        let mut visited = VisitTags::default();
+        // kill every even row
+        let mut live = |id: u32| id % 2 == 1;
+        let (got, _) = g.search(&pq, &lut, 10, &mut live, &mut visited);
+        assert!(!got.is_empty(), "live rows must still be findable");
+        for &(id, _) in &got {
+            assert!(id % 2 == 1, "dead row {id} surfaced from traversal");
+        }
+        // and killing everything yields exactly nothing
+        let (none, _) =
+            g.search(&pq, &lut, 10, &mut |_| false, &mut visited);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bitwise() {
+        let pq = fixture(17, 80, 8);
+        let g = PqGraph::build(&pq, GraphParams::default(), 0x5A);
+        let mut buf = Vec::new();
+        {
+            let mut w = BinWriter::raw(&mut buf);
+            g.write_into(&mut w).unwrap();
+        }
+        let mut r =
+            BinReader::raw_with_limit(&buf[..], buf.len() as u64);
+        let back = PqGraph::read_from(&mut r).unwrap();
+        assert_eq!(g, back);
+        // identical searches after the round trip
+        let lut = query_lut(&pq, 0x5B);
+        let mut visited = VisitTags::default();
+        let (a, _) = g.search(&pq, &lut, 5, &mut |_| true, &mut visited);
+        let (b, _) =
+            back.search(&pq, &lut, 5, &mut |_| true, &mut visited);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn corrupt_graph_sections_rejected() {
+        let pq = fixture(19, 40, 8);
+        let g = PqGraph::build(&pq, GraphParams::default(), 0x77);
+        let mut buf = Vec::new();
+        {
+            let mut w = BinWriter::raw(&mut buf);
+            g.write_into(&mut w).unwrap();
+        }
+        // entry point out of range: patch the entry u32 (offset: n u64 +
+        // three u32 params + seed u64 = 8 + 12 + 8 = 28).
+        let mut bad = buf.clone();
+        bad[28..32].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = BinReader::raw_with_limit(&bad[..], bad.len() as u64);
+        assert!(PqGraph::read_from(&mut r).is_err());
+        // truncated payload
+        let cut = buf.len() / 2;
+        let mut r = BinReader::raw_with_limit(&buf[..cut], cut as u64);
+        assert!(PqGraph::read_from(&mut r).is_err());
+    }
+
+    #[test]
+    fn empty_and_singleton_graphs_are_sane() {
+        let g = PqGraph::empty(GraphParams::default(), 1);
+        assert!(g.is_empty());
+        let pq = fixture(23, 1, 4);
+        let g = PqGraph::build(&pq, GraphParams::default(), 1);
+        assert_eq!(g.len(), 1);
+        let lut = query_lut(&pq, 2);
+        let mut visited = VisitTags::default();
+        let (hits, scored) =
+            g.search(&pq, &lut, 3, &mut |_| true, &mut visited);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].0, 0);
+        assert!(scored >= 1);
+        let mut buf = Vec::new();
+        {
+            let mut w = BinWriter::raw(&mut buf);
+            g.write_into(&mut w).unwrap();
+        }
+        let mut r =
+            BinReader::raw_with_limit(&buf[..], buf.len() as u64);
+        assert_eq!(PqGraph::read_from(&mut r).unwrap(), g);
+    }
+
+    #[test]
+    fn estimated_visits_sublinear_at_scale() {
+        let pq = fixture(29, 64, 8);
+        let g = PqGraph::build(&pq, GraphParams::default(), 3);
+        // the estimate is what the planner compares against n
+        assert!(g.estimated_visits(48) > 0);
+        assert!(
+            g.estimated_visits(100) < 100_000,
+            "graph visit estimate must undercut a 100k flat scan"
+        );
+    }
+}

@@ -6,10 +6,12 @@
 pub mod adc_lut16;
 pub mod adc_scalar;
 pub mod brute_force;
+pub mod graph;
 pub mod kmeans;
 pub mod lut;
 pub mod pq;
 pub mod whitening;
 
+pub use graph::{GraphParams, PqGraph};
 pub use lut::{QuantizedLut, QueryLut};
 pub use pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};

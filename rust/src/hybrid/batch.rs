@@ -285,6 +285,18 @@ impl BatchEngine {
                     plan.sparse_early_exit = false;
                     plan.kind = PlanKind::SparseOnly;
                 }
+                // Graph plans are whole-index constructs too: an HNSW
+                // traversal can't be range-sharded (neighbors cross any
+                // row partition), so ByData demotes to the flat scan the
+                // range workers already know how to split. The plan kind
+                // reverts to what the feature split would have chosen.
+                if plan.kind == PlanKind::DenseGraph {
+                    plan.kind = if plan.run_sparse {
+                        PlanKind::Hybrid
+                    } else {
+                        PlanKind::DenseOnly
+                    };
+                }
                 let qd = index.query_dense(q);
                 let qlut = plan.run_dense.then(|| {
                     lut.rebuild(&index.codebooks, &qd);
@@ -612,6 +624,60 @@ mod tests {
             queries.len(),
             "demoted plans count as sparse_only"
         );
+    }
+
+    #[test]
+    fn by_data_demotes_graph_plans_to_flat_scan() {
+        // 600 rows so adaptive sequential planning selects DenseGraph
+        // (the visit estimate undercuts N only from ~500 rows up).
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 600;
+        let data = cfg.generate(21);
+        let queries = cfg.related_queries(&data, 22, 8);
+        let index = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_graph_backend(),
+        );
+        // alpha=4 makes the sequential planner pick DenseGraph here
+        // (see plan.rs); ByData must demote it back to the flat scan.
+        let params = SearchParams::new(10).with_alpha(4.0).adaptive();
+        assert_eq!(
+            index.plan(&queries[0], &params).kind,
+            PlanKind::DenseGraph,
+            "workload precondition"
+        );
+        let engine = BatchEngine::with_config(
+            &index,
+            EngineConfig { threads: 4, mode: ShardMode::ByData },
+        );
+        let out = engine.search_batch(&index, &queries, &params);
+        assert_eq!(out.stats.per_query.plans.dense_graph, 0);
+        assert_eq!(out.stats.per_query.plans.hybrid, queries.len());
+        assert_eq!(out.stats.per_query.graph_nodes_visited, 0);
+        // The demoted execution is the flat path: bit-identical to the
+        // same batch against a flat-built index of the same corpus.
+        let flat = HybridIndex::build(&data, &IndexConfig::default());
+        let flat_engine = BatchEngine::with_config(
+            &flat,
+            EngineConfig { threads: 4, mode: ShardMode::ByData },
+        );
+        let want = flat_engine.search_batch(&flat, &queries, &params);
+        for (got, want) in out.hits.iter().zip(&want.hits) {
+            assert_hits_identical(got, want);
+        }
+        // ByQuery runs the full sequential path per query — graph plans
+        // execute there and visits are counted.
+        let bq = BatchEngine::with_config(
+            &index,
+            EngineConfig { threads: 4, mode: ShardMode::ByQuery },
+        );
+        let out = bq.search_batch(&index, &queries, &params);
+        assert_eq!(out.stats.per_query.plans.dense_graph, queries.len());
+        assert!(out.stats.per_query.graph_nodes_visited > 0);
+        for (q, got) in queries.iter().zip(&out.hits) {
+            let want = search(&index, q, &params);
+            assert_hits_identical(got, &want);
+        }
     }
 
     #[test]

@@ -1,8 +1,23 @@
 //! Index + search configuration, defaulting to the paper's §6.1 parameter
 //! selection.
 
+use crate::dense::graph::GraphParams;
 use crate::hybrid::plan::PlanMode;
 use crate::sparse::compressed::SparseCompression;
+
+/// Which dense stage-1 candidate generator the index builds (see
+/// `hybrid::stage1`). `Flat` is the paper's LUT16 linear ADC scan and
+/// the bit-identity oracle; `Graph` additionally builds an HNSW over
+/// the PQ codes (`dense::graph`) that the planner may select per query
+/// under `Adaptive`/`Aggressive` modes when the estimated traversal
+/// undercuts the flat scan. `PlanMode::Fixed` always runs `Flat`
+/// regardless of this knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DenseBackend {
+    #[default]
+    Flat,
+    Graph(GraphParams),
+}
 
 /// How the hybrid index is built.
 #[derive(Clone, Debug)]
@@ -38,6 +53,12 @@ pub struct IndexConfig {
     /// in the config section — snapshots persist the compressed blocks
     /// themselves (v5) and restore this field from them.
     pub sparse_compression: Option<SparseCompression>,
+    /// Dense stage-1 backend. `Flat` (default) keeps the LUT16 scan
+    /// only; `Graph` also builds the HNSW-over-PQ index. Like
+    /// `sparse_compression`, not serialized in the config section —
+    /// v6 snapshots persist the adjacency lists themselves and restore
+    /// this field from them.
+    pub dense_backend: DenseBackend,
 }
 
 impl Default for IndexConfig {
@@ -53,6 +74,7 @@ impl Default for IndexConfig {
             whitening: false,
             seed: 0x5EA5C4,
             sparse_compression: None,
+            dense_backend: DenseBackend::Flat,
         }
     }
 }
@@ -77,6 +99,16 @@ impl IndexConfig {
     pub fn with_sparse_compression(mut self, spec: SparseCompression) -> Self {
         self.sparse_compression = Some(spec);
         self
+    }
+
+    pub fn with_dense_backend(mut self, backend: DenseBackend) -> Self {
+        self.dense_backend = backend;
+        self
+    }
+
+    /// Shorthand for a graph backend with default HNSW parameters.
+    pub fn with_graph_backend(self) -> Self {
+        self.with_dense_backend(DenseBackend::Graph(GraphParams::default()))
     }
 }
 
@@ -154,6 +186,20 @@ mod tests {
         assert_eq!(s.adaptive().plan_mode, PlanMode::Adaptive);
         assert_eq!(s.aggressive().plan_mode, PlanMode::Aggressive);
         assert!(c.sparse_compression.is_none(), "raw backend is the default");
+        assert_eq!(
+            c.dense_backend,
+            DenseBackend::Flat,
+            "flat scan is the default dense backend"
+        );
+    }
+
+    #[test]
+    fn graph_backend_knob_round_trips() {
+        let c = IndexConfig::default().with_graph_backend();
+        match c.dense_backend {
+            DenseBackend::Graph(p) => assert_eq!(p, GraphParams::default()),
+            DenseBackend::Flat => panic!("expected graph backend"),
+        }
     }
 
     #[test]

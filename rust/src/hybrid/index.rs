@@ -11,9 +11,10 @@
 //!     (K_V = dᴰ, l = 256).
 
 use crate::dense::adc_lut16::Lut16Codes;
+use crate::dense::graph::{GraphParams, PqGraph};
 use crate::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
 use crate::dense::whitening::Whitening;
-use crate::hybrid::config::{IndexConfig, SearchParams};
+use crate::hybrid::config::{DenseBackend, IndexConfig, SearchParams};
 use crate::hybrid::plan::{IndexStats, Planner, QueryPlan};
 use crate::sparse::cache_sort::cache_sort;
 use crate::sparse::compressed::SparseCompression;
@@ -66,6 +67,11 @@ pub struct HybridIndex {
     /// [`crate::hybrid::plan`]); persisted in v4 snapshots, recomputed
     /// when loading older ones.
     pub stats: IndexStats,
+    /// HNSW over the PQ codes (see [`crate::dense::graph`]); present iff
+    /// `config.dense_backend` is `Graph`. Persisted in v6 snapshots;
+    /// older snapshots always load as `Flat` (use
+    /// [`HybridIndex::build_graph`] to upgrade in place).
+    pub graph: Option<PqGraph>,
 }
 
 impl HybridIndex {
@@ -180,6 +186,17 @@ impl HybridIndex {
             None
         };
 
+        // 4. optional graph-based dense stage-1 over the PQ codes.
+        //    Deterministic from the build seed; delta segments get their
+        //    own graph over their own rows (internal row ids are graph
+        //    node ids).
+        let graph = match config.dense_backend {
+            DenseBackend::Flat => None,
+            DenseBackend::Graph(params) => {
+                Some(PqGraph::build(&pq_index, params, config.seed))
+            }
+        };
+
         HybridIndex {
             perm,
             sparse_index,
@@ -193,6 +210,7 @@ impl HybridIndex {
             dense_dim: dense_mat.dim,
             config: config.clone(),
             stats,
+            graph,
         }
     }
 
@@ -225,6 +243,17 @@ impl HybridIndex {
         self.config.sparse_compression = Some(spec);
     }
 
+    /// Build (or rebuild) the HNSW dense stage-1 in place — the upgrade
+    /// path for pre-v6 snapshots, which always load as `Flat`. The graph
+    /// is deterministic from the build seed, so upgrading a restored
+    /// index yields the same graph a fresh `Graph`-configured build
+    /// would have produced.
+    pub fn build_graph(&mut self, params: GraphParams) {
+        self.graph =
+            Some(PqGraph::build(&self.pq_index, params, self.config.seed));
+        self.config.dense_backend = DenseBackend::Graph(params);
+    }
+
     /// Transform a query's dense part to the index's dense space.
     pub fn query_dense(&self, q: &HybridQuery) -> Vec<f32> {
         match &self.whitening {
@@ -249,6 +278,7 @@ impl HybridIndex {
                 .as_ref()
                 .map(|r| r.memory_bytes())
                 .unwrap_or(0)
+            + self.graph.as_ref().map(|g| g.memory_bytes()).unwrap_or(0)
     }
 }
 
@@ -324,6 +354,27 @@ mod tests {
                 assert_eq!(x.score.to_bits(), y.score.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn graph_backend_builds_deterministic_graph() {
+        let data = QuerySimConfig::tiny().generate(13);
+        let cfg = IndexConfig::default().with_graph_backend();
+        let a = HybridIndex::build(&data, &cfg);
+        let b = HybridIndex::build(&data, &cfg);
+        let (ga, gb) = (a.graph.as_ref().unwrap(), b.graph.as_ref().unwrap());
+        assert_eq!(ga, gb, "graph build must be deterministic");
+        assert_eq!(ga.len(), a.n);
+        assert!(a.memory_bytes() > HybridIndex::build(
+            &data,
+            &IndexConfig::default()
+        )
+        .memory_bytes());
+        // upgrading a flat-built index in place reproduces the same graph
+        let mut flat = HybridIndex::build(&data, &IndexConfig::default());
+        assert!(flat.graph.is_none());
+        flat.build_graph(crate::dense::graph::GraphParams::default());
+        assert_eq!(flat.graph.as_ref().unwrap(), ga);
     }
 
     #[test]

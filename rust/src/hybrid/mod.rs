@@ -2,11 +2,13 @@
 //! sparse + PQ dense, each with a residual index), the cost-model-driven
 //! query planner that chooses each query's stage-1 scans, the
 //! three-stage residual-reordering search pipeline decomposed into
-//! plan-driven stage executors, the parallel batch engine that fans
-//! query batches across per-worker scratches, the mutable segmented
-//! index (base + delta segments + tombstones + merge) that serves
-//! upserts/deletes online, and the versioned snapshot format that
-//! persists all of it (planner statistics included).
+//! plan-driven stage executors with a pluggable dense stage-1 backend
+//! (flat LUT16 scan or HNSW-over-PQ graph traversal), the parallel
+//! batch engine that fans query batches across per-worker scratches,
+//! the mutable segmented index (base + delta segments + tombstones +
+//! merge) that serves upserts/deletes online, and the versioned
+//! snapshot format that persists all of it (planner statistics and
+//! graph adjacency included).
 
 pub mod batch;
 pub mod config;
@@ -16,10 +18,11 @@ pub mod persist;
 pub mod plan;
 pub mod search;
 pub mod segment;
+pub mod stage1;
 pub mod topk;
 
 pub use batch::{BatchEngine, BatchOutput, BatchStats, EngineConfig, ShardMode};
-pub use config::{IndexConfig, SearchParams};
+pub use config::{DenseBackend, IndexConfig, SearchParams};
 pub use index::{DenseArtifacts, HybridIndex};
 pub use mutable::{MutableConfig, MutableHybridIndex, RowRetention};
 pub use plan::{
@@ -27,3 +30,4 @@ pub use plan::{
 };
 pub use search::SearchHit;
 pub use segment::{Doc, MergeError, RowStore, Segment, Tombstones};
+pub use stage1::{DenseCandidates, DenseStage1, FlatScan};

@@ -1,4 +1,4 @@
-//! Snapshot (de)serialization for the hybrid index family — the v3–v5
+//! Snapshot (de)serialization for the hybrid index family — the v3–v6
 //! on-disk formats over `util::binio`.
 //!
 //! Every snapshot file is `MAGIC | VERSION | kind (u8) | payload`:
@@ -8,7 +8,9 @@
 //!   1 = impact-ordered compressed blocks, stored verbatim; v3/v4: the
 //!   raw CSC untagged), sparse residual (CSR), PQ codebooks + row-major
 //!   codes + LUT16 blocked codes, optional scalar-quantized dense
-//!   residual, optional whitening transform.
+//!   residual, optional whitening transform. v6 appends a skippable
+//!   dense-graph section (presence tag + HNSW adjacency, see
+//!   `dense::graph`) after the planner-statistics blob.
 //! * kind `SNAP_SEGMENT` — a sealed segment: ids, tombstones, its
 //!   `HybridIndex`, then a *length-prefixed* raw-rows section that
 //!   loaders may skip (see `hybrid::segment`).
@@ -30,9 +32,10 @@ use std::io::{self, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use crate::dense::adc_lut16::{Lut16Codes, BLOCK};
+use crate::dense::graph::PqGraph;
 use crate::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
 use crate::dense::whitening::Whitening;
-use crate::hybrid::config::IndexConfig;
+use crate::hybrid::config::{DenseBackend, IndexConfig};
 use crate::hybrid::index::HybridIndex;
 use crate::sparse::inverted_index::InvertedIndex;
 use crate::types::csr::{CscMatrix, CsrMatrix};
@@ -433,9 +436,9 @@ pub fn read_whitening<R: Read>(r: &mut BinReader<R>) -> io::Result<Whitening> {
 impl HybridIndex {
     /// Serialize the full sealed index as a nested section of `w`: the
     /// core fields (v5 layout, sparse backend tagged), then the v4
-    /// planner-statistics section — a length-prefixed byte blob
-    /// (`slice_u8`) so a reader that does not understand it can skip it
-    /// wholesale.
+    /// planner-statistics section, then the v6 dense-graph section —
+    /// each a length-prefixed byte blob (`slice_u8`) so a reader that
+    /// does not understand it can skip it wholesale.
     pub fn write_into<W: Write>(
         &self,
         w: &mut BinWriter<W>,
@@ -445,7 +448,19 @@ impl HybridIndex {
         let mut sw = BinWriter::raw(&mut buf);
         self.stats.write_into(&mut sw)?;
         drop(sw);
-        w.slice_u8(&buf)
+        w.slice_u8(&buf)?;
+        // v6 dense-graph section: presence tag + adjacency payload.
+        let mut gbuf = Vec::new();
+        let mut gw = BinWriter::raw(&mut gbuf);
+        match &self.graph {
+            Some(g) => {
+                gw.u8(1)?;
+                g.write_into(&mut gw)?;
+            }
+            None => gw.u8(0)?,
+        }
+        drop(gw);
+        w.slice_u8(&gbuf)
     }
 
     /// The core field set (everything except the planner-statistics
@@ -646,6 +661,38 @@ impl HybridIndex {
             // v3 snapshot: the section predates the planner; recompute.
             crate::hybrid::plan::IndexStats::compute(&sparse_index)
         };
+        // v6 appends the dense-graph section; older files are flat-scan
+        // only (the config codec predates the backend knob — the
+        // persisted graph is the source of truth, and
+        // `HybridIndex::build_graph` is the upgrade path after load).
+        let graph = if r.version() >= 6 {
+            let gbuf = r.slice_u8()?;
+            let mut gr =
+                BinReader::raw_with_limit(&gbuf[..], gbuf.len() as u64);
+            match gr.u8()? {
+                0 => None,
+                1 => {
+                    let g = PqGraph::read_from(&mut gr)?;
+                    if g.len() != n {
+                        return Err(invalid(format!(
+                            "graph nodes {} != index rows {n}",
+                            g.len()
+                        )));
+                    }
+                    Some(g)
+                }
+                t => {
+                    return Err(invalid(format!(
+                        "unknown dense-graph tag {t}"
+                    )))
+                }
+            }
+        } else {
+            None
+        };
+        if let Some(g) = &graph {
+            config.dense_backend = DenseBackend::Graph(g.params);
+        }
         Ok(HybridIndex {
             perm,
             sparse_index,
@@ -655,6 +702,7 @@ impl HybridIndex {
             dense_residual,
             whitening,
             pq_index,
+            graph,
             n,
             dense_dim,
             config,
@@ -834,13 +882,138 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("badstats.snap");
         idx.save(&path).unwrap();
-        // The stats section is the trailing slice_u8 blob; flip a byte
-        // in its histogram region (well after the u64 scalar header).
+        // The stats section sits just before the trailing dense-graph
+        // blob (9 bytes for a flat index: 8-byte length + absence tag);
+        // flip a byte in its histogram region (well after the u64
+        // scalar header).
         let mut bytes = std::fs::read(&path).unwrap();
-        let at = bytes.len() - 16;
+        let at = bytes.len() - 9 - 16;
         bytes[at] ^= 0xFF;
         std::fs::write(&path, &bytes).unwrap();
         assert!(HybridIndex::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn graph_backed_snapshot_roundtrips_search_identical() {
+        use crate::hybrid::config::SearchParams;
+        use crate::hybrid::search::{search_with, SearchScratch};
+        // 600 rows so adaptive plans actually select the graph on both
+        // sides of the roundtrip (the visit estimate must undercut N).
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 600;
+        let data = cfg.generate(17);
+        let idx = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_graph_backend(),
+        );
+        assert!(idx.graph.is_some());
+        let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("graph.snap");
+        idx.save(&path).unwrap();
+        let back = HybridIndex::load(&path).unwrap();
+        // adjacency is stored verbatim, not rebuilt
+        assert_eq!(back.graph, idx.graph);
+        assert_eq!(back.config.dense_backend, idx.config.dense_backend);
+        let adaptive = SearchParams::new(10).with_alpha(4.0).adaptive();
+        let mut sa = SearchScratch::new(&idx);
+        let mut sb = SearchScratch::new(&back);
+        let mut graph_plans = 0;
+        for q in &cfg.related_queries(&data, 18, 6) {
+            assert_eq!(
+                idx.plan(q, &adaptive).kind,
+                back.plan(q, &adaptive).kind
+            );
+            let (a, st) = search_with(&idx, q, &adaptive, &mut sa);
+            let (b, _) = search_with(&back, q, &adaptive, &mut sb);
+            graph_plans += st.plans.dense_graph;
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+        assert!(graph_plans > 0, "battery must exercise graph plans");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_v5_snapshot_loads_flat() {
+        // A genuine v5 file (no dense-graph section) must load with no
+        // graph, a Flat backend knob, and bit-identical flat searches;
+        // `build_graph` then upgrades it in place.
+        use crate::dense::graph::GraphParams;
+        use crate::hybrid::config::DenseBackend;
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(19);
+        let idx = HybridIndex::build(&data, &IndexConfig::default());
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(crate::util::binio::MAGIC);
+        buf.extend_from_slice(&5u32.to_le_bytes());
+        {
+            let mut w = BinWriter::raw(&mut buf);
+            w.u8(SNAP_HYBRID_INDEX).unwrap();
+            idx.write_core(&mut w, true).unwrap();
+            let mut sbuf = Vec::new();
+            let mut sw = BinWriter::raw(&mut sbuf);
+            idx.stats.write_into(&mut sw).unwrap();
+            drop(sw);
+            w.slice_u8(&sbuf).unwrap();
+        }
+        let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v5.snap");
+        std::fs::write(&path, &buf).unwrap();
+        let mut back = HybridIndex::load(&path).unwrap();
+        assert!(back.graph.is_none());
+        assert_eq!(back.config.dense_backend, DenseBackend::Flat);
+        let q = cfg.related_queries(&data, 20, 1).remove(0);
+        let a = idx.search(&q, 10);
+        let b = back.search(&q, 10);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+        // documented upgrade path: rebuild the graph from the stored
+        // codes (deterministic — equals a fresh graph-configured build)
+        back.build_graph(GraphParams::default());
+        let fresh = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_graph_backend(),
+        );
+        assert_eq!(back.graph, fresh.graph);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_graph_section_rejected() {
+        // A v6 file whose dense-graph section carries an unknown
+        // presence tag must be InvalidData, not a silent flat load.
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(21);
+        let idx = HybridIndex::build(&data, &IndexConfig::default());
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(crate::util::binio::MAGIC);
+        buf.extend_from_slice(&6u32.to_le_bytes());
+        {
+            let mut w = BinWriter::raw(&mut buf);
+            w.u8(SNAP_HYBRID_INDEX).unwrap();
+            idx.write_core(&mut w, true).unwrap();
+            let mut sbuf = Vec::new();
+            let mut sw = BinWriter::raw(&mut sbuf);
+            idx.stats.write_into(&mut sw).unwrap();
+            drop(sw);
+            w.slice_u8(&sbuf).unwrap();
+            w.slice_u8(&[7u8]).unwrap(); // bogus presence tag
+        }
+        let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("badgraphtag.snap");
+        std::fs::write(&path, &buf).unwrap();
+        let err = HybridIndex::load(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
         std::fs::remove_file(&path).ok();
     }
 

@@ -101,6 +101,13 @@ pub enum PlanKind {
     /// early-terminating scan is engaged — list tails may be abandoned
     /// under the certified per-block bound.
     SparseEarlyExit,
+    /// Adaptive/Aggressive on a graph-backed index: the dense stage-1
+    /// runs as an HNSW traversal over the PQ codes instead of the flat
+    /// LUT16 scan, because the estimated visit count undercuts N. The
+    /// sparse scan still runs when `run_sparse` is set (hybrid query).
+    /// Deterministic but not bit-identical to the flat scan — the
+    /// recall floor is enforced by the regression battery.
+    DenseGraph,
 }
 
 /// Per-plan-kind execution counters. One bump per stage-1 pipeline
@@ -113,6 +120,7 @@ pub struct PlanCounts {
     pub dense_only: usize,
     pub sparse_only: usize,
     pub sparse_early_exit: usize,
+    pub dense_graph: usize,
 }
 
 impl PlanCounts {
@@ -123,6 +131,7 @@ impl PlanCounts {
             PlanKind::DenseOnly => self.dense_only += 1,
             PlanKind::SparseOnly => self.sparse_only += 1,
             PlanKind::SparseEarlyExit => self.sparse_early_exit += 1,
+            PlanKind::DenseGraph => self.dense_graph += 1,
         }
     }
 
@@ -132,6 +141,7 @@ impl PlanCounts {
         self.dense_only += other.dense_only;
         self.sparse_only += other.sparse_only;
         self.sparse_early_exit += other.sparse_early_exit;
+        self.dense_graph += other.dense_graph;
     }
 
     pub fn total(&self) -> usize {
@@ -140,6 +150,7 @@ impl PlanCounts {
             + self.dense_only
             + self.sparse_only
             + self.sparse_early_exit
+            + self.dense_graph
     }
 }
 
@@ -537,6 +548,19 @@ impl<'i> Planner<'i> {
             let eps_abs = early_exit_eps_abs(inv, &q.sparse);
             est_postings = early_exit_est_postings(inv, &q.sparse, eps_abs);
         }
+        // Graph upgrade (disjoint from the early-exit branch, which only
+        // fires when run_dense is false): on a graph-backed index, run
+        // the dense stage-1 as an HNSW traversal when the fitted visit
+        // estimate (beam·M + descent) undercuts the N-row flat scan —
+        // i.e. strictly fewer dense score evaluations, by construction.
+        if run_dense {
+            if let Some(g) = &self.index.graph {
+                let ef = g.params.ef_search.max(alpha_h);
+                if g.estimated_visits(ef) < n as u64 {
+                    kind = PlanKind::DenseGraph;
+                }
+            }
+        }
         QueryPlan {
             kind,
             run_dense,
@@ -721,7 +745,53 @@ mod tests {
         assert_eq!(a.sparse_only, 2);
         a.bump(PlanKind::SparseEarlyExit);
         assert_eq!(a.sparse_early_exit, 1);
-        assert_eq!(a.total(), 6);
+        a.bump(PlanKind::DenseGraph);
+        a.bump(PlanKind::DenseGraph);
+        assert_eq!(a.dense_graph, 2);
+        assert_eq!(a.total(), 8);
+    }
+
+    #[test]
+    fn graph_backend_upgrades_dense_scan_when_cheaper() {
+        // 600 rows: the default-params visit estimate at ef=48 is ~456,
+        // so the upgrade fires; at tiny()'s 200 rows it would not.
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 600;
+        let data = cfg.generate(71);
+        let idx = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_graph_backend(),
+        );
+        assert!(idx.graph.is_some(), "graph backend must build the graph");
+        let flat = HybridIndex::build(&data, &IndexConfig::default());
+        assert!(flat.graph.is_none());
+        // alpha=4: fetch = 40 ⇒ ef = max(48, 40) = 48 ⇒ the visit
+        // estimate undercuts this small corpus and the upgrade fires.
+        let params = SearchParams::new(10).with_alpha(4.0).adaptive();
+        let q = &cfg.related_queries(&data, 74, 1)[0];
+        let p = Planner::new(&idx).plan(q, &params);
+        assert_eq!(p.kind, PlanKind::DenseGraph);
+        assert!(p.run_dense && p.run_sparse, "hybrid query keeps both");
+        let g = idx.graph.as_ref().unwrap();
+        let ef = g.params.ef_search.max(p.alpha_h);
+        assert!(
+            g.estimated_visits(ef) < idx.n as u64,
+            "upgrade implies strictly fewer dense score evaluations"
+        );
+        // Fixed mode never routes to the graph, whatever the backend.
+        let pf = Planner::new(&idx).plan(q, &SearchParams::new(10));
+        assert_eq!(pf.kind, PlanKind::Fixed);
+        // A flat-backed index never produces a graph plan.
+        assert_eq!(Planner::new(&flat).plan(q, &params).kind, PlanKind::Hybrid);
+        // A wide fetch (alpha 10 ⇒ ef 100 ⇒ est ≥ n on 600 rows) keeps
+        // the flat scan even on a graph-backed index.
+        let wide = SearchParams::new(10).adaptive();
+        assert_eq!(Planner::new(&idx).plan(q, &wide).kind, PlanKind::Hybrid);
+        // Dense-only queries upgrade too (run_sparse stays off).
+        let dq = zero_sparse_query(data.dense_dim());
+        let pd = Planner::new(&idx).plan(&dq, &params);
+        assert_eq!(pd.kind, PlanKind::DenseGraph);
+        assert!(pd.run_dense && !pd.run_sparse);
     }
 
     #[test]

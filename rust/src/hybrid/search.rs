@@ -3,9 +3,12 @@
 //!
 //!   1. **Overfetch αh** — approximate scores from the data indices the
 //!      [`QueryPlan`] selected: sparse via the cache-sorted inverted
-//!      index scan ([`stage1_sparse`]), dense via the LUT16 ADC scan
-//!      ([`stage1_dense`]); retain the plan's αh best by the summed
-//!      approximation ([`select_alpha`] / [`select_alpha_sparse`]).
+//!      index scan ([`stage1_sparse`]), dense via the plan-selected
+//!      [`crate::hybrid::stage1`] backend — the LUT16 ADC scan
+//!      ([`stage1_dense`]) or, on graph-backed indexes under
+//!      `DenseGraph` plans, the HNSW-over-PQ traversal; retain the
+//!      plan's αh best by the summed approximation ([`select_alpha`] /
+//!      [`select_alpha_sparse`] / graph-candidate union).
 //!   2. **Dense residual reorder** — add q·residualᴰ (scalar-quantized
 //!      index) for the αh candidates; retain βh ([`rerank`]).
 //!   3. **Sparse residual reorder** — add q·residualˢ for the βh
@@ -22,11 +25,15 @@
 use std::time::Instant;
 
 use crate::dense::adc_lut16;
+use crate::dense::graph::VisitTags;
 use crate::dense::lut::{QuantizedLut, QueryLut};
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::index::HybridIndex;
 use crate::hybrid::plan::{early_exit_eps_abs, PlanCounts, QueryPlan};
 use crate::hybrid::segment::Tombstones;
+use crate::hybrid::stage1::{
+    merge_graph_candidates, select_backend, DenseCandidates,
+};
 use crate::hybrid::topk::TopK;
 use crate::sparse::inverted_index::{Accumulator, EarlyExitStats};
 use crate::types::hybrid::HybridQuery;
@@ -63,6 +70,10 @@ pub struct SearchStats {
     /// into this aggregate (max, not sum — it bounds every individual
     /// query's |approx − exact| on any single row).
     pub sparse_error_bound: f32,
+    /// Dense score evaluations performed by graph traversals (nonzero
+    /// only under [`crate::hybrid::plan::PlanKind::DenseGraph`]) — the
+    /// graph-mode counterpart of "rows scanned", summed across queries.
+    pub graph_nodes_visited: u64,
 }
 
 impl SearchStats {
@@ -96,6 +107,17 @@ impl SearchStats {
         self.sparse_postings_skipped += other.sparse_postings_skipped;
         self.sparse_error_bound =
             self.sparse_error_bound.max(other.sparse_error_bound);
+        self.graph_nodes_visited += other.graph_nodes_visited;
+    }
+
+    /// Mean dense score evaluations per graph-planned execution. Exactly
+    /// 0.0 when no graph plan ran — the counter must not divide by a
+    /// zero (or fabricated) denominator.
+    pub fn mean_graph_visits(&self) -> f64 {
+        if self.plans.dense_graph == 0 {
+            return 0.0;
+        }
+        self.graph_nodes_visited as f64 / self.plans.dense_graph as f64
     }
 }
 
@@ -112,6 +134,9 @@ pub struct SearchScratch {
     pub lut: QueryLut,
     /// Per-query LUT16 u8 tables, requantized in place.
     pub qlut: QuantizedLut,
+    /// Graph-traversal visited tags (epoch-cleared, allocation-free
+    /// after warmup; unused on flat-only indexes).
+    pub visits: VisitTags,
 }
 
 impl SearchScratch {
@@ -122,6 +147,7 @@ impl SearchScratch {
             overlay: Vec::new(),
             lut: QueryLut::with_shape(index.codebooks.k, index.codebooks.l),
             qlut: QuantizedLut::with_k(index.codebooks.k),
+            visits: VisitTags::default(),
         }
     }
 }
@@ -268,11 +294,19 @@ pub fn search_with_plan(
     };
 
     // ---- Stage 1: approximate scans over the planned data indices.
+    // The dense half runs through the plan-selected backend: the flat
+    // LUT16 scan (`DenseCandidates::Full`, incl. every Fixed plan) or
+    // the HNSW-over-PQ traversal (`DenseCandidates::List`, DenseGraph
+    // plans only — see `hybrid::stage1`).
     let t0 = Instant::now();
     let qd = index.query_dense(q);
-    if plan.run_dense {
-        stage1_dense(index, &qd, scratch);
-    }
+    let dense_out = if plan.run_dense {
+        Some(select_backend(index, plan).generate(
+            index, &qd, plan, fetch, tombstones, scratch, &mut stats,
+        ))
+    } else {
+        None
+    };
     if plan.run_sparse {
         if plan.sparse_early_exit {
             let ee = stage1_sparse_early_exit(index, q, scratch, fetch);
@@ -289,22 +323,33 @@ pub fn search_with_plan(
 
     // select αh by combined approximate score
     let t1 = Instant::now();
-    let mut alpha_candidates = match (plan.run_dense, plan.run_sparse) {
-        (true, true) => {
+    let mut alpha_candidates = match (dense_out, plan.run_sparse) {
+        (Some(DenseCandidates::Full), true) => {
             drain_overlay(scratch);
             select_alpha(&scratch.dense_scores, &scratch.overlay, 0, fetch)
         }
         // Sparse scan skipped: the overlay is provably empty, so the
         // dense scores compete alone (bit-identical to the merge loop
         // over an empty overlay).
-        (true, false) => select_alpha(&scratch.dense_scores, &[], 0, fetch),
+        (Some(DenseCandidates::Full), false) => {
+            select_alpha(&scratch.dense_scores, &[], 0, fetch)
+        }
+        // Graph traversal + sparse scan: union the candidate list with
+        // the overlay (overlay-only rows get their exact-LUT dense
+        // score, so strong sparse matches survive graph recall misses).
+        (Some(DenseCandidates::List(cands)), true) => {
+            drain_overlay(scratch);
+            merge_graph_candidates(index, cands, fetch, scratch)
+        }
+        // Graph traversal alone: the list is already the top-`fetch`.
+        (Some(DenseCandidates::List(cands)), false) => cands,
         // Dense scan skipped: overlay rows compete against the implicit
         // zero-score rest of the corpus, exactly as in the fixed merge.
-        (false, true) => {
+        (None, true) => {
             drain_overlay(scratch);
             select_alpha_sparse(&scratch.overlay, 0, index.n as u32, fetch)
         }
-        (false, false) => unreachable!("plan must run at least one scan"),
+        (None, false) => unreachable!("plan must run at least one scan"),
     };
     if let Some(t) = tombstones {
         alpha_candidates.retain(|&(r, _)| !t.get(index.original_id(r)));
@@ -599,6 +644,75 @@ mod tests {
         assert_eq!(agg.plans.total(), 3);
         assert_eq!(agg.sparse_blocks_skipped, 5, "skip counts sum");
         assert_eq!(agg.sparse_error_bound, 0.5, "error bound is a max");
+    }
+
+    #[test]
+    fn graph_visit_counters_accumulate_with_guard() {
+        use crate::hybrid::plan::PlanKind;
+        // Zero-division guard: no graph plans ⇒ exactly 0.0, even with
+        // a (stale) nonzero visit count in the aggregate.
+        let s = SearchStats::default();
+        assert_eq!(s.mean_graph_visits(), 0.0);
+        let s = SearchStats { graph_nodes_visited: 7, ..Default::default() };
+        assert_eq!(s.mean_graph_visits(), 0.0, "guard must not divide by 0");
+        // Accumulation sums visits and bumps the plan denominator.
+        let mut agg = SearchStats::default();
+        let mut a = SearchStats::default();
+        a.plans.bump(PlanKind::DenseGraph);
+        a.graph_nodes_visited = 120;
+        let mut b = SearchStats::default();
+        b.plans.bump(PlanKind::DenseGraph);
+        b.graph_nodes_visited = 80;
+        agg.accumulate(&a);
+        agg.accumulate(&b);
+        assert_eq!(agg.plans.dense_graph, 2);
+        assert_eq!(agg.graph_nodes_visited, 200);
+        assert_eq!(agg.mean_graph_visits(), 100.0);
+    }
+
+    #[test]
+    fn graph_mode_search_serves_sane_hits_and_counts_visits() {
+        let (data, queries) = setup();
+        let idx = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_graph_backend(),
+        );
+        let mut scratch = SearchScratch::new(&idx);
+        // alpha=4 keeps ef·M below this corpus size so the planner
+        // actually selects the graph (see plan.rs tests).
+        let params = SearchParams::new(10).with_alpha(4.0).adaptive();
+        let mut agg = SearchStats::default();
+        for q in &queries {
+            let plan = idx.plan(q, &params);
+            assert_eq!(
+                plan.kind,
+                crate::hybrid::plan::PlanKind::DenseGraph
+            );
+            let (hits, st) = search_with(&idx, q, &params, &mut scratch);
+            agg.accumulate(&st);
+            assert_eq!(hits.len(), 10);
+            assert!(hits.windows(2).all(|w| w[0].score >= w[1].score));
+            let ids: std::collections::HashSet<u32> =
+                hits.iter().map(|h| h.id).collect();
+            assert_eq!(ids.len(), 10, "no duplicate ids");
+        }
+        assert_eq!(agg.plans.dense_graph, queries.len());
+        assert!(agg.graph_nodes_visited > 0);
+        assert!(agg.mean_graph_visits() > 0.0);
+        // Fixed mode on the same graph-backed index is bit-identical to
+        // a flat-built index: the graph is bypassed by construction.
+        let flat = HybridIndex::build(&data, &IndexConfig::default());
+        let fixed = SearchParams::new(10);
+        for q in &queries {
+            let (a, st) = search_with(&idx, q, &fixed, &mut scratch);
+            let (b, _) = search_with(&flat, q, &fixed, &mut scratch);
+            assert_eq!(st.graph_nodes_visited, 0);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
     }
 
     #[test]

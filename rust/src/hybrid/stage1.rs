@@ -1,0 +1,269 @@
+//! Pluggable dense stage-1 candidate generation.
+//!
+//! Stage 1's dense half answers one question — "which rows might matter
+//! for this query's dense component?" — and the engine historically had
+//! exactly one answer: the flat LUT16 ADC scan over all N rows. This
+//! module extracts that decision behind [`DenseStage1`] so the planner
+//! can choose per query between:
+//!
+//! * [`FlatScan`] — the paper's linear scan (`stage1_dense`), filling
+//!   `scratch.dense_scores` for every row. Unchanged behaviour; still
+//!   the bit-identity oracle every conformance gate compares against,
+//!   and the only backend `PlanMode::Fixed` ever executes.
+//! * [`PqGraph`] — HNSW traversal over the PQ codes
+//!   (`dense::graph`), returning an explicit top-`fetch` candidate
+//!   list after `O(ef·M·log N)` score evaluations. Selected only when
+//!   the plan kind is [`PlanKind::DenseGraph`], i.e. under
+//!   `Adaptive`/`Aggressive` on a graph-backed index whose visit
+//!   estimate undercuts N.
+//!
+//! The two shapes of output are captured by [`DenseCandidates`]:
+//! `Full` (scores in scratch, selection merges lazily) vs `List`
+//! (already-selected candidates, selection unions them with the sparse
+//! overlay). Dispatch is a zero-allocation `&dyn` switch
+//! ([`select_backend`]) — the flat path pays one vtable call and
+//! nothing else.
+
+use crate::dense::graph::{adc_score, PqGraph};
+use crate::hybrid::index::HybridIndex;
+use crate::hybrid::plan::{PlanKind, QueryPlan};
+use crate::hybrid::search::{stage1_dense, SearchScratch, SearchStats};
+use crate::hybrid::segment::Tombstones;
+use crate::hybrid::topk::TopK;
+
+/// What a dense stage-1 backend produced for one query.
+pub enum DenseCandidates {
+    /// Scores for *all* rows are in `scratch.dense_scores` (flat scan);
+    /// stage-1 selection streams them against the sparse overlay.
+    Full,
+    /// An explicit best-first candidate list (graph traversal); stage-1
+    /// selection unions it with the sparse overlay.
+    List(Vec<(u32, f32)>),
+}
+
+/// A dense stage-1 candidate generator. `fetch` is the stage-1 keep
+/// count (already tombstone over-fetched); `tombstones` — when present —
+/// must keep dead rows out of a `List` result (a `Full` result is
+/// filtered by the shared post-selection retain instead).
+pub trait DenseStage1 {
+    fn generate(
+        &self,
+        index: &HybridIndex,
+        qd: &[f32],
+        plan: &QueryPlan,
+        fetch: usize,
+        tombstones: Option<&Tombstones>,
+        scratch: &mut SearchScratch,
+        stats: &mut SearchStats,
+    ) -> DenseCandidates;
+}
+
+/// The paper's flat LUT16 ADC scan — delegates to [`stage1_dense`]
+/// unchanged, so `PlanMode::Fixed` executes literally the same code it
+/// did before the trait existed.
+pub struct FlatScan;
+
+impl DenseStage1 for FlatScan {
+    fn generate(
+        &self,
+        index: &HybridIndex,
+        qd: &[f32],
+        _plan: &QueryPlan,
+        _fetch: usize,
+        _tombstones: Option<&Tombstones>,
+        scratch: &mut SearchScratch,
+        _stats: &mut SearchStats,
+    ) -> DenseCandidates {
+        stage1_dense(index, qd, scratch);
+        DenseCandidates::Full
+    }
+}
+
+impl DenseStage1 for PqGraph {
+    fn generate(
+        &self,
+        index: &HybridIndex,
+        qd: &[f32],
+        _plan: &QueryPlan,
+        fetch: usize,
+        tombstones: Option<&Tombstones>,
+        scratch: &mut SearchScratch,
+        stats: &mut SearchStats,
+    ) -> DenseCandidates {
+        // The graph scores through the exact f32 LUT (not the u8
+        // quantized LUT16 tables): same asymmetric-distance model,
+        // sharper scores — graph plans are not bit-compared to the flat
+        // scan, only recall-compared.
+        scratch.lut.rebuild(&index.codebooks, qd);
+        let mut live = |r: u32| match tombstones {
+            Some(t) => !t.get(index.original_id(r)),
+            None => true,
+        };
+        let (cands, visited) = self.search(
+            &index.pq_index,
+            &scratch.lut,
+            fetch,
+            &mut live,
+            &mut scratch.visits,
+        );
+        stats.graph_nodes_visited += visited;
+        DenseCandidates::List(cands)
+    }
+}
+
+static FLAT: FlatScan = FlatScan;
+
+/// Resolve the plan's dense backend: [`PlanKind::DenseGraph`] routes to
+/// the index's graph, everything else (including `Fixed`, by
+/// construction) to the flat scan.
+pub fn select_backend<'a>(
+    index: &'a HybridIndex,
+    plan: &QueryPlan,
+) -> &'a dyn DenseStage1 {
+    if plan.kind == PlanKind::DenseGraph {
+        if let Some(g) = &index.graph {
+            return g;
+        }
+        debug_assert!(false, "DenseGraph plan against a graph-less index");
+    }
+    &FLAT
+}
+
+/// Union graph candidates with the sparse overlay into the stage-1
+/// top-`fetch`: graph rows add their overlay contribution (binary search
+/// — the overlay is row-ascending), and overlay rows the traversal
+/// missed get their exact-LUT dense score so a strong sparse match can
+/// never be lost to graph recall. Dead overlay rows are later removed by
+/// the shared tombstone retain; `fetch` already over-covers for them.
+pub fn merge_graph_candidates(
+    index: &HybridIndex,
+    cands: Vec<(u32, f32)>,
+    fetch: usize,
+    scratch: &mut SearchScratch,
+) -> Vec<(u32, f32)> {
+    if scratch.overlay.is_empty() {
+        return cands;
+    }
+    let overlay = &scratch.overlay;
+    let mut top = TopK::new(fetch);
+    let mut cand_rows: Vec<u32> = cands.iter().map(|&(r, _)| r).collect();
+    cand_rows.sort_unstable();
+    for &(r, ds) in &cands {
+        let s = match overlay.binary_search_by_key(&r, |&(row, _)| row) {
+            Ok(i) => ds + overlay[i].1,
+            Err(_) => ds,
+        };
+        top.push(r, s);
+    }
+    for &(r, sv) in overlay {
+        if cand_rows.binary_search(&r).is_ok() {
+            continue;
+        }
+        top.push(r, sv + adc_score(&index.pq_index, &scratch.lut, r));
+    }
+    top.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::QuerySimConfig;
+    use crate::hybrid::config::{IndexConfig, SearchParams};
+
+    #[test]
+    fn backend_dispatch_follows_plan_kind() {
+        // 600 rows so the planner's visit estimate undercuts N and
+        // adaptive plans actually select the graph.
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 600;
+        let data = cfg.generate(31);
+        let idx = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_graph_backend(),
+        );
+        let q = &cfg.related_queries(&data, 32, 1)[0];
+        let adaptive = SearchParams::new(10).with_alpha(4.0).adaptive();
+        let graph_plan = idx.plan(q, &adaptive);
+        assert_eq!(graph_plan.kind, PlanKind::DenseGraph);
+        let fixed_plan = idx.plan(q, &SearchParams::new(10));
+        assert_eq!(fixed_plan.kind, PlanKind::Fixed);
+        // Fixed plans resolve to the flat scan even on a graph index.
+        let mut scratch = SearchScratch::new(&idx);
+        let mut stats = SearchStats::default();
+        let qd = idx.query_dense(q);
+        let out = select_backend(&idx, &fixed_plan).generate(
+            &idx,
+            &qd,
+            &fixed_plan,
+            fixed_plan.alpha_h,
+            None,
+            &mut scratch,
+            &mut stats,
+        );
+        assert!(matches!(out, DenseCandidates::Full));
+        assert_eq!(stats.graph_nodes_visited, 0);
+        // Graph plans resolve to the traversal and count visits.
+        let out = select_backend(&idx, &graph_plan).generate(
+            &idx,
+            &qd,
+            &graph_plan,
+            graph_plan.alpha_h,
+            None,
+            &mut scratch,
+            &mut stats,
+        );
+        match out {
+            DenseCandidates::List(c) => {
+                assert!(!c.is_empty());
+                assert!(c.len() <= graph_plan.alpha_h);
+                assert!(c.windows(2).all(|w| w[0].1 >= w[1].1));
+            }
+            DenseCandidates::Full => panic!("graph backend must list"),
+        }
+        assert!(stats.graph_nodes_visited > 0);
+    }
+
+    #[test]
+    fn merge_unions_overlay_and_graph_rows() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(33);
+        let idx = HybridIndex::build(
+            &data,
+            &IndexConfig::default().with_graph_backend(),
+        );
+        let q = &cfg.related_queries(&data, 34, 1)[0];
+        let qd = idx.query_dense(q);
+        let mut scratch = SearchScratch::new(&idx);
+        scratch.lut.rebuild(&idx.codebooks, &qd);
+        crate::hybrid::search::stage1_sparse(&idx, q, &mut scratch);
+        crate::hybrid::search::drain_overlay(&mut scratch);
+        assert!(!scratch.overlay.is_empty(), "related query hits lists");
+        // a fake graph candidate list that misses every overlay row
+        let overlay_rows: std::collections::HashSet<u32> =
+            scratch.overlay.iter().map(|&(r, _)| r).collect();
+        let miss: Vec<(u32, f32)> = (0..idx.n as u32)
+            .filter(|r| !overlay_rows.contains(r))
+            .take(3)
+            .map(|r| (r, adc_score(&idx.pq_index, &scratch.lut, r)))
+            .collect();
+        let merged = merge_graph_candidates(
+            &idx,
+            miss.clone(),
+            idx.n, // wide fetch: keep everything pushed
+            &mut scratch,
+        );
+        // every graph row and every overlay row is represented
+        let got: std::collections::HashSet<u32> =
+            merged.iter().map(|&(r, _)| r).collect();
+        for &(r, _) in &miss {
+            assert!(got.contains(&r), "graph row {r} lost in merge");
+        }
+        for &(r, sv) in &scratch.overlay {
+            assert!(got.contains(&r), "overlay row {r} lost in merge");
+            // overlay-only rows carry sparse + exact-LUT dense score
+            let want = sv + adc_score(&idx.pq_index, &scratch.lut, r);
+            let s = merged.iter().find(|&&(mr, _)| mr == r).unwrap().1;
+            assert_eq!(s.to_bits(), want.to_bits());
+        }
+    }
+}

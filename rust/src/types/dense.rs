@@ -64,10 +64,30 @@ impl DenseMatrix {
     }
 }
 
-/// Unrolled dense dot product — the scalar hot loop for brute force and
-/// residual reordering. LLVM auto-vectorizes the 4-lane accumulator split.
+/// Dense dot product — the hot loop for brute force and the stage-2
+/// residual rerank. Dispatches to the AVX2+FMA kernel when the host has
+/// it and `PALLAS_FORCE_SCALAR` is not set; otherwise the unrolled
+/// scalar oracle. The two paths differ only in rounding (FMA fuses the
+/// multiply-add), so they are relative-error-bounded, not bit-compared
+/// (`PlanMode::Fixed` bit-identity claims always run both indexes
+/// through the same dispatch).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if a.len() >= 8 && crate::util::simd::use_fma() {
+            // SAFETY: use_fma() checked avx2+fma at runtime.
+            return unsafe { dot_fma(a, b) };
+        }
+    }
+    dot_scalar(a, b)
+}
+
+/// Unrolled scalar dot product — the oracle path. LLVM auto-vectorizes
+/// the 8-lane accumulator split.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let chunks = n / 8 * 8;
@@ -80,6 +100,46 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         i += 8;
     }
     let mut s = acc.iter().sum::<f32>();
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// AVX2 `_mm256_fmadd_ps` dot kernel: two 8-lane fused accumulators
+/// against unaligned loads, horizontal sum, scalar tail.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 16 <= n {
+        let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+        let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+        let a1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
+        let b1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
+        acc1 = _mm256_fmadd_ps(a1, b1, acc1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        let a0 = _mm256_loadu_ps(a.as_ptr().add(i));
+        let b0 = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc0 = _mm256_fmadd_ps(a0, b0, acc0);
+        i += 8;
+    }
+    let acc = _mm256_add_ps(acc0, acc1);
+    let quad = _mm_add_ps(
+        _mm256_castps256_ps128(acc),
+        _mm256_extractf128_ps(acc, 1),
+    );
+    let pair = _mm_add_ps(quad, _mm_movehl_ps(quad, quad));
+    let one = _mm_add_ss(pair, _mm_shuffle_ps(pair, pair, 0b01));
+    let mut s = _mm_cvtss_f32(one);
     while i < n {
         s += a[i] * b[i];
         i += 1;
@@ -148,6 +208,34 @@ mod tests {
             let b: Vec<f32> = (0..n).map(|i| 1.0 - i as f32 * 0.25).collect();
             let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - naive).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fma_kernel_matches_scalar_bounded() {
+        // Call the kernel directly (no global dispatch toggling — tests
+        // run in parallel): FMA differs from scalar only in rounding, so
+        // the error must stay within a magnitude-scaled bound.
+        #[cfg(target_arch = "x86_64")]
+        {
+            if !crate::util::simd::has_fma() {
+                return;
+            }
+            for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100, 203]
+            {
+                let a: Vec<f32> =
+                    (0..n).map(|i| (i as f32 * 0.37 - 9.0).sin()).collect();
+                let b: Vec<f32> =
+                    (0..n).map(|i| (i as f32 * 0.11 + 2.0).cos()).collect();
+                let s = dot_scalar(&a, &b);
+                let f = unsafe { dot_fma(&a, &b) };
+                let mag: f32 =
+                    a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+                assert!(
+                    (s - f).abs() <= 1e-5 * (1.0 + mag),
+                    "n={n}: scalar {s} vs fma {f}"
+                );
+            }
         }
     }
 

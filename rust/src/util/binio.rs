@@ -33,8 +33,10 @@ pub const MAGIC: &[u8; 8] = b"HYBIDX01";
 /// (which lack it) still load, with the statistics recomputed. v5 tags
 /// the sparse-index section with its backend (raw CSC vs impact-ordered
 /// compressed blocks, see `sparse::compressed`); v3/v4 files read as
-/// raw, re-compressible after load.
-pub const VERSION: u32 = 5;
+/// raw, re-compressible after load. v6 appends a skippable dense-graph
+/// section (HNSW adjacency, see `dense::graph`); v3–v5 files read as
+/// flat-scan-only, graph-upgradeable via `HybridIndex::build_graph`.
+pub const VERSION: u32 = 6;
 /// Oldest snapshot version this build still reads.
 pub const MIN_VERSION: u32 = 3;
 

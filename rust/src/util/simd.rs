@@ -34,6 +34,21 @@ pub fn has_avx2() -> bool {
     }
 }
 
+/// True when the FMA (fused multiply-add) extension is available
+/// alongside AVX2 — the exact-rerank dot kernel needs both.
+#[inline]
+pub fn has_fma() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
 /// Tri-state override cell: 0 = uninitialized (consult the env var on
 /// first use), 1 = scalar not forced, 2 = scalar forced.
 static FORCE_SCALAR: AtomicU8 = AtomicU8::new(0);
@@ -69,12 +84,20 @@ pub fn use_avx2() -> bool {
     has_avx2() && !force_scalar()
 }
 
+/// Dispatch predicate for the FMA dot kernel (stage-2 exact rerank):
+/// AVX2+FMA present *and* not overridden to scalar.
+#[inline]
+pub fn use_fma() -> bool {
+    has_fma() && !force_scalar()
+}
+
 /// One-line capability summary for logs/bench headers.
 pub fn capability_string() -> String {
     format!(
-        "arch={} avx2={} force_scalar={} threads={}",
+        "arch={} avx2={} fma={} force_scalar={} threads={}",
         std::env::consts::ARCH,
         has_avx2(),
+        has_fma(),
         force_scalar(),
         crate::util::threadpool::default_threads()
     )
@@ -102,8 +125,10 @@ mod tests {
         set_force_scalar(true);
         assert!(force_scalar());
         assert!(!use_avx2(), "forced scalar must disable AVX2 dispatch");
+        assert!(!use_fma(), "forced scalar must disable FMA dispatch");
         set_force_scalar(false);
         assert!(!force_scalar());
         assert_eq!(use_avx2(), has_avx2());
+        assert_eq!(use_fma(), has_fma());
     }
 }

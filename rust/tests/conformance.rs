@@ -21,7 +21,12 @@
 //! 6. **compressed == raw / early exit certified**: the exact-coded
 //!    compressed sparse backend is bit-identical to the raw CSC scan,
 //!    and Aggressive early termination never loses a true top-h id
-//!    whose exact score margin clears twice the certified error bound.
+//!    whose exact score margin clears twice the certified error bound;
+//! 7. **graph Fixed == flat**: a graph-backed index under
+//!    `PlanMode::Fixed` is bit-identical to a flat-built index (the
+//!    trait dispatch is by construction a no-op there), tombstoned rows
+//!    never surface from adaptive graph traversal, and a graph-backed
+//!    snapshot restores search-identical.
 //!
 //! Every failure message carries the run seed and step, so a failing
 //! sequence replays exactly.
@@ -529,6 +534,153 @@ fn compressed_exact_backend_is_bit_identical_to_raw() {
             assert_hits_sane(&model, &got, 10, &ctx);
         }
     }
+}
+
+/// Invariant 7a: `PlanMode::Fixed` on a graph-backed index is
+/// bit-identical to a flat-built index — sequential pipeline and both
+/// batch shard modes — because Fixed plans resolve to the same
+/// [`FlatScan`](hybrid_ip::hybrid::stage1::FlatScan) code path before
+/// the graph is ever consulted. Adaptive plans on the same index must
+/// actually take the graph and still serve oracle-consistent hits.
+#[test]
+fn graph_backend_fixed_mode_is_bit_identical_to_flat() {
+    // 600 rows: large enough that the planner's visit estimate
+    // undercuts N and adaptive plans select the graph.
+    let cfg = tiny(600);
+    let data = cfg.generate(0x6AF0);
+    let flat = HybridIndex::build(&data, &IndexConfig::default());
+    let graph = HybridIndex::build(
+        &data,
+        &IndexConfig::default().with_graph_backend(),
+    );
+    let model = ReferenceModel::from_dataset(&data, 0);
+    let mut rng = Rng::new(0x6AF1);
+    let mut queries = cfg.related_queries(&data, 0x6AF2, 6);
+    queries.push(dense_only_query(&mut rng, data.dense_dim()));
+    queries.push(sparse_only_query(
+        &mut rng,
+        data.sparse_dim(),
+        data.dense_dim(),
+    ));
+
+    let by_query = BatchEngine::with_config(
+        &graph,
+        EngineConfig { threads: 3, mode: ShardMode::ByQuery },
+    );
+    let by_data = BatchEngine::with_config(
+        &graph,
+        EngineConfig { threads: 3, mode: ShardMode::ByData },
+    );
+    let fixed = SearchParams::new(10).with_alpha(4.0);
+    let bq = by_query.search_batch(&graph, &queries, &fixed);
+    let bd = by_data.search_batch(&graph, &queries, &fixed);
+    let mut sf = SearchScratch::new(&flat);
+    let mut sg = SearchScratch::new(&graph);
+    for (qi, q) in queries.iter().enumerate() {
+        let (want, _) = search_with(&flat, q, &fixed, &mut sf);
+        let (got, st) = search_with(&graph, q, &fixed, &mut sg);
+        assert_eq!(
+            st.plans.dense_graph, 0,
+            "q{qi}: Fixed must never take the graph"
+        );
+        assert_eq!(st.graph_nodes_visited, 0, "q{qi}: Fixed visited nodes");
+        assert_hits_identical(
+            &want,
+            &got,
+            &format!("q{qi}: graph-backed Fixed vs flat (sequential)"),
+        );
+        assert_hits_identical(
+            &want,
+            &bq.hits[qi],
+            &format!("q{qi}: graph-backed Fixed ByQuery vs flat"),
+        );
+        assert_hits_identical(
+            &want,
+            &bd.hits[qi],
+            &format!("q{qi}: graph-backed Fixed ByData vs flat"),
+        );
+        assert_hits_sane(&model, &got, 10, &format!("q{qi}"));
+    }
+
+    let adaptive = SearchParams::new(10).with_alpha(4.0).adaptive();
+    let mut graph_plans = 0;
+    for (qi, q) in queries.iter().enumerate() {
+        let (hits, st) = search_with(&graph, q, &adaptive, &mut sg);
+        graph_plans += st.plans.dense_graph;
+        if st.plans.dense_graph > 0 {
+            assert!(st.graph_nodes_visited > 0, "q{qi}: zero visits");
+        }
+        assert_hits_sane(&model, &hits, 10, &format!("adaptive q{qi}"));
+    }
+    assert!(graph_plans > 0, "battery must exercise graph plans");
+}
+
+/// Invariant 7b: graph traversal is tombstone-aware — deleted rows stay
+/// routable inside the graph but may never surface in results — and a
+/// snapshot of the graph-backed mutable index restores search-identical
+/// under both plan modes.
+#[test]
+fn graph_backend_tombstones_and_snapshot_roundtrip() {
+    let cfg = tiny(600);
+    let data = cfg.generate(0x6AF3);
+    let mcfg = MutableConfig {
+        index: IndexConfig::default().with_graph_backend(),
+        ..MutableConfig::default()
+    };
+    let mut idx = MutableHybridIndex::from_dataset(&data, 0, mcfg.clone());
+    let mut model = ReferenceModel::from_dataset(&data, 0);
+    let mut rng = Rng::new(0x6AF4);
+    let mut dead = BTreeSet::new();
+    for _ in 0..40 {
+        if let Some(id) = model.random_live_id(&mut rng) {
+            assert!(idx.delete(id));
+            model.delete(id);
+            dead.insert(id);
+        }
+    }
+    let fixed = SearchParams::new(10).with_alpha(4.0);
+    let adaptive = fixed.adaptive();
+    let queries = {
+        let mut qs = cfg.related_queries(&data, 0x6AF5, 5);
+        qs.push(dense_only_query(&mut rng, data.dense_dim()));
+        qs
+    };
+    let mut graph_plans = 0;
+    for (qi, q) in queries.iter().enumerate() {
+        let (hits, st) = idx.search_stats(q, &adaptive);
+        graph_plans += st.plans.dense_graph;
+        for h in &hits {
+            assert!(
+                !dead.contains(&h.id),
+                "q{qi}: tombstoned id {} surfaced from graph traversal",
+                h.id
+            );
+        }
+        assert_hits_sane(
+            &model,
+            &hits,
+            10,
+            &format!("graph-tombstone q{qi}"),
+        );
+    }
+    assert!(
+        graph_plans > 0,
+        "deletes must not stop graph plans from firing"
+    );
+
+    let snap = tmp_file("graph_mut");
+    idx.save(&snap).expect("save graph-backed snapshot");
+    let loaded = MutableHybridIndex::load(&snap, mcfg).expect("load");
+    for (qi, q) in queries.iter().enumerate() {
+        for params in [&fixed, &adaptive] {
+            assert_hits_identical(
+                &idx.search(q, params),
+                &loaded.search(q, params),
+                &format!("q{qi}: restored graph-backed index vs original"),
+            );
+        }
+    }
+    std::fs::remove_file(&snap).ok();
 }
 
 /// Invariant 6b: Aggressive early termination is a *certified*

@@ -155,6 +155,29 @@ fn prop_lut16_simd_bitwise_equals_scalar() {
 }
 
 #[test]
+fn prop_fma_dot_matches_scalar_within_bound() {
+    use hybrid_ip::types::dense::{dot, dot_scalar};
+    // The dispatched dot (AVX2 FMA kernel where the host has it) is not
+    // bit-compared to the scalar oracle — FMA contracts the intermediate
+    // rounding — but the difference must stay within a magnitude-scaled
+    // bound across ragged lengths (SIMD body + scalar tail). When
+    // another test has pinned dispatch to scalar, the two sides are
+    // equal and the bound holds trivially.
+    forall(60, 0xF3A0, |g| {
+        let n = g.usize_in(0, 300);
+        let a = g.vec_gauss(n);
+        let b = g.vec_gauss(n);
+        let s = dot_scalar(&a, &b);
+        let f = dot(&a, &b);
+        let mag: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        assert!(
+            (s - f).abs() <= 1e-5 * (1.0 + mag),
+            "n={n}: scalar {s} vs dispatched {f}"
+        );
+    });
+}
+
+#[test]
 fn prop_pq_error_decreases_with_more_subspaces() {
     // Prop. 1 direction: more bits (more subspaces at fixed l) => lower
     // quantization MSE, on average.

@@ -68,6 +68,46 @@ fn recall_at_10_stays_above_recorded_baseline() {
 }
 
 #[test]
+fn graph_backend_recall_within_margin_of_flat_scan() {
+    use hybrid_ip::hybrid::search::{search_with, SearchScratch};
+    // The HNSW-over-PQ stage-1 trades the exhaustive dense scan for a
+    // beam search; its recall@10 must stay within 0.02 of the flat scan
+    // on the same corpus, queries, and overfetch params.
+    let (_cfg, data, queries) = fixture();
+    // adaptive + alpha 4 so the 600-row visit estimate undercuts N and
+    // the planner actually selects the graph (see hybrid::plan).
+    let params =
+        SearchParams::new(10).with_alpha(4.0).with_beta(5.0).adaptive();
+    let flat = HybridIndex::build(&data, &IndexConfig::default());
+    let graph = HybridIndex::build(
+        &data,
+        &IndexConfig::default().with_graph_backend(),
+    );
+    let mut sf = SearchScratch::new(&flat);
+    let mut sg = SearchScratch::new(&graph);
+    let (mut rf, mut rg) = (0.0, 0.0);
+    let mut graph_plans = 0;
+    for q in &queries {
+        let truth = exact_top_k(&data, q, 10);
+        let (hf, _) = search_with(&flat, q, &params, &mut sf);
+        let (hg, st) = search_with(&graph, q, &params, &mut sg);
+        graph_plans += st.plans.dense_graph;
+        let gf: Vec<u32> = hf.iter().map(|h| h.id).collect();
+        let gg: Vec<u32> = hg.iter().map(|h| h.id).collect();
+        rf += recall_at(&truth, &gf, 10);
+        rg += recall_at(&truth, &gg, 10);
+    }
+    let rf = rf / queries.len() as f64;
+    let rg = rg / queries.len() as f64;
+    println!("flat recall@10={rf:.4} graph recall@10={rg:.4}");
+    assert!(graph_plans > 0, "query battery must exercise graph plans");
+    assert!(
+        rg >= rf - 0.02,
+        "graph recall {rg:.4} more than 0.02 below flat scan {rf:.4}"
+    );
+}
+
+#[test]
 fn mutable_index_recall_matches_static_after_merge() {
     // The mutable path must not cost recall: building the same corpus
     // incrementally and merging yields a bit-identical index, so its
