@@ -1,0 +1,191 @@
+//! Out-of-core serving: mapped (mmap-backed) vs resident segments on
+//! the same snapshot. Measures the latency penalty of serving the hot
+//! sections (LUT16 codes, postings, SQ residuals) through the pager,
+//! the page-fault traffic of the first cold pass, and the resident-byte
+//! savings.
+//!
+//! Guards (the bench fails loudly rather than drifting):
+//!   - mapped and resident hits are bit-identical over the battery;
+//!   - the mapped index's resident bytes stay under the raw corpus
+//!     size (the out-of-core point: you can serve a corpus you could
+//!     not hold);
+//!   - mapped median latency stays within 10x of resident (page-cache
+//!     hits should keep it near 1x; the bound only catches collapse).
+//!
+//! Besides the printed table, writes machine-readable
+//! `target/BENCH_ooc.json`: per-mode median ms, the mapped/resident
+//! latency ratio, minor/major fault counts for the cold mapped pass,
+//! and the byte split.
+//!
+//!     cargo bench --bench ooc_serving
+//!     BENCH_N=200000 BENCH_Q=256 cargo bench --bench ooc_serving
+
+use std::collections::BTreeMap;
+
+use hybrid_ip::benchkit::{self, bench, BenchConfig, Table};
+use hybrid_ip::data::synthetic::QuerySimConfig;
+use hybrid_ip::hybrid::config::SearchParams;
+use hybrid_ip::hybrid::mutable::{MutableConfig, MutableHybridIndex};
+use hybrid_ip::hybrid::store::StorageMode;
+use hybrid_ip::types::hybrid::HybridQuery;
+use hybrid_ip::util::json::Json;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// (minor, major) page-fault counts of this process, from
+/// `/proc/self/stat`; (0, 0) where procfs is unavailable.
+fn fault_counts() -> (u64, u64) {
+    let Ok(stat) = std::fs::read_to_string("/proc/self/stat") else {
+        return (0, 0);
+    };
+    // Fields after the parenthesized comm (which may contain spaces):
+    // state ppid pgrp session tty tpgid flags minflt cminflt majflt ...
+    let Some(rest) = stat.rsplit(')').next() else { return (0, 0) };
+    let f: Vec<&str> = rest.split_whitespace().collect();
+    let get = |i: usize| f.get(i).and_then(|s| s.parse().ok()).unwrap_or(0);
+    (get(7), get(9))
+}
+
+fn main() {
+    let n = env_usize("BENCH_N", 40_000);
+    let n_queries = env_usize("BENCH_Q", 128);
+    benchkit::preamble(
+        "ooc_serving",
+        &format!("n={n} batch={n_queries} (BENCH_N/BENCH_Q to change)"),
+    );
+    let cfg = QuerySimConfig::scaled(n);
+    let data = cfg.generate(0x00C1);
+    let queries: Vec<HybridQuery> =
+        cfg.related_queries(&data, 0x00C2, n_queries);
+    // The size of what a naive in-memory server would pin: raw dense
+    // f32 rows + sparse postings (id + value per nonzero).
+    let corpus_bytes = (data.len() * data.dense_dim() * 4
+        + data.sparse.nnz() * 8) as u64;
+
+    let dir = std::env::temp_dir()
+        .join(format!("hybrid_ip_bench_ooc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    let snap = dir.join("ooc.snap");
+    MutableHybridIndex::from_dataset(&data, 0, MutableConfig::default())
+        .save(&snap)
+        .expect("seed snapshot");
+
+    let resident =
+        MutableHybridIndex::load(&snap, MutableConfig::default())
+            .expect("resident load");
+    let mapped = MutableHybridIndex::load(
+        &snap,
+        MutableConfig {
+            storage: StorageMode::Mapped,
+            ..MutableConfig::default()
+        },
+    )
+    .expect("mapped load");
+    assert!(mapped.mapped_bytes() > 0, "mapped load served no mapping");
+
+    let params = SearchParams::new(10).with_alpha(5.0).with_beta(3.0);
+
+    // Cold pass on the mapped index: every section faults in through
+    // the pager; count the fault traffic and check bit-identity.
+    let (min0, maj0) = fault_counts();
+    for q in &queries {
+        let a = resident.search(q, &params);
+        let b = mapped.search(q, &params);
+        assert_eq!(a.len(), b.len(), "mapped hit count diverged");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id, "mapped id diverged");
+            assert_eq!(
+                x.score.to_bits(),
+                y.score.to_bits(),
+                "mapped score bits diverged"
+            );
+        }
+    }
+    let (min1, maj1) = fault_counts();
+    let (minflt, majflt) = (min1 - min0, maj1 - maj0);
+
+    // Steady state: both serve from warm caches.
+    let bcfg = BenchConfig::default();
+    let rstats = bench("search/resident", bcfg, || {
+        for q in &queries {
+            std::hint::black_box(resident.search(q, &params));
+        }
+    });
+    let mstats = bench("search/mapped", bcfg, || {
+        for q in &queries {
+            std::hint::black_box(mapped.search(q, &params));
+        }
+    });
+    let ratio = mstats.median_ms() / rstats.median_ms().max(1e-9);
+
+    let mut table = Table::new(
+        "Out-of-core serving: resident vs mapped segments",
+        &["mode", "med ms/batch", "resident MB", "mapped MB"],
+    );
+    let mb = |b: usize| b as f64 / (1 << 20) as f64;
+    table.row(&[
+        "resident".into(),
+        format!("{:.2}", rstats.median_ms()),
+        format!("{:.2}", mb(resident.memory_bytes())),
+        format!("{:.2}", mb(resident.mapped_bytes())),
+    ]);
+    table.row(&[
+        "mapped".into(),
+        format!("{:.2}", mstats.median_ms()),
+        format!("{:.2}", mb(mapped.memory_bytes())),
+        format!("{:.2}", mb(mapped.mapped_bytes())),
+    ]);
+    table.print();
+    println!(
+        "[ooc_serving] latency ratio mapped/resident = {ratio:.2}x, cold \
+         pass faults: minor={minflt} major={majflt}, corpus ~{:.1} MB",
+        mb(corpus_bytes as usize),
+    );
+
+    // Hard guards from the ISSUE acceptance bar.
+    assert!(
+        (mapped.memory_bytes() as u64) < corpus_bytes,
+        "out-of-core bar missed: mapped residency {} B >= raw corpus {} B",
+        mapped.memory_bytes(),
+        corpus_bytes
+    );
+    assert!(
+        ratio < 10.0,
+        "mapped serving collapsed: {ratio:.2}x slower than resident"
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("ooc_serving".into()));
+    doc.insert("n".into(), num(n as f64));
+    doc.insert("queries".into(), num(n_queries as f64));
+    doc.insert("resident_median_ms".into(), num(rstats.median_ms()));
+    doc.insert("mapped_median_ms".into(), num(mstats.median_ms()));
+    doc.insert("latency_ratio".into(), num(ratio));
+    doc.insert("cold_minor_faults".into(), num(minflt as f64));
+    doc.insert("cold_major_faults".into(), num(majflt as f64));
+    doc.insert(
+        "resident_bytes_resident_mode".into(),
+        num(resident.memory_bytes() as f64),
+    );
+    doc.insert(
+        "resident_bytes_mapped_mode".into(),
+        num(mapped.memory_bytes() as f64),
+    );
+    doc.insert("mapped_bytes".into(), num(mapped.mapped_bytes() as f64));
+    doc.insert("corpus_bytes".into(), num(corpus_bytes as f64));
+    std::fs::create_dir_all("target").ok();
+    let path = "target/BENCH_ooc.json";
+    std::fs::write(path, Json::Obj(doc).to_string())
+        .expect("write BENCH_ooc.json");
+    println!("[ooc_serving] wrote {path}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -308,7 +308,7 @@ pub fn lut16_fixture(
         for b in codes.iter_mut() {
             *b = (rng.next_u32() & 0xFF) as u8;
         }
-        pq.codes = codes;
+        pq.codes = codes.into();
         pq.n = n;
     }
     let blocked = Lut16Codes::from_pq_index(&pq);

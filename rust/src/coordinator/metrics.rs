@@ -190,6 +190,8 @@ impl LatencyRecorder {
             qps: s.window_count as f64 / window_secs,
             lifetime_qps: s.seen as f64 / lifetime_secs,
             plans: PlanCounts::default(),
+            resident_bytes: 0,
+            mapped_bytes: 0,
         };
         s.window_count = 0;
         s.window_start = now;
@@ -214,6 +216,15 @@ pub struct MetricsSnapshot {
     /// Lifetime per-plan-kind pipeline execution counts (filled by the
     /// serving engine — a bare `LatencyRecorder` reports zeros).
     pub plans: PlanCounts,
+    /// Heap bytes the shards' indexes pin (filled by the serving
+    /// engine — a bare `LatencyRecorder` reports zero). Under mapped
+    /// storage this is the number that stays below the raw corpus size.
+    pub resident_bytes: u64,
+    /// Snapshot bytes served through mmap across the shards (see
+    /// `hybrid::store`); 0 under resident storage. Mapped pages are
+    /// clean and evictable, which is why they are reported separately
+    /// rather than folded into `resident_bytes`.
+    pub mapped_bytes: u64,
 }
 
 impl MetricsSnapshot {
@@ -222,7 +233,7 @@ impl MetricsSnapshot {
         format!(
             "n={} mean={} p50={} p95={} p99={} max={} qps={:.1} \
              (lifetime {:.1}) plans[fixed={} hybrid={} dense={} sparse={} \
-             early_exit={} graph={}]",
+             early_exit={} graph={}] mem[resident={} mapped={}]",
             self.count,
             fmt_duration(self.mean),
             fmt_duration(self.p50),
@@ -237,6 +248,8 @@ impl MetricsSnapshot {
             self.plans.sparse_only,
             self.plans.sparse_early_exit,
             self.plans.dense_graph,
+            self.resident_bytes,
+            self.mapped_bytes,
         )
     }
 }
@@ -334,8 +347,12 @@ mod tests {
         assert_eq!(s.sparse_early_exit, 5);
         assert_eq!(s.dense_graph, 6);
         assert_eq!(s.total(), 21);
-        // a bare recorder reports zero plan counts
-        assert_eq!(LatencyRecorder::new().snapshot().plans.total(), 0);
+        // a bare recorder reports zero plan counts and zero memory
+        let bare = LatencyRecorder::new().snapshot();
+        assert_eq!(bare.plans.total(), 0);
+        assert_eq!(bare.resident_bytes, 0);
+        assert_eq!(bare.mapped_bytes, 0);
+        assert!(bare.line().contains("mem[resident=0 mapped=0]"));
     }
 
     #[test]

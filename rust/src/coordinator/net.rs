@@ -26,7 +26,7 @@
 //! | `RESP_DELETE`       | u8 applied                                  |
 //! | `RESP_FLUSH`        | u64 live docs                               |
 //! | `RESP_SNAPSHOT`     | u64 snapshot bytes                          |
-//! | `RESP_METRICS`      | counts + durations (u64 nanos) + QPS (f64) + 5 × u64 per-plan-kind counts |
+//! | `RESP_METRICS`      | counts + durations (u64 nanos) + QPS (f64) + 6 × u64 per-plan-kind counts + 2 × u64 memory split (resident, mapped bytes) |
 //! | `RESP_ERROR`        | string message                              |
 //!
 //! # Versioning
@@ -274,6 +274,11 @@ pub struct WireMetrics {
     pub lifetime_qps: f64,
     /// Cluster-wide per-plan-kind pipeline executions (lifetime).
     pub plans: PlanCounts,
+    /// Heap bytes the cluster's shard indices pin.
+    pub resident_bytes: u64,
+    /// Snapshot bytes served through `mmap` (`StorageMode::Mapped`);
+    /// zero on a fully resident cluster.
+    pub mapped_bytes: u64,
 }
 
 /// A decoded server response (exposed so tests and tooling can speak
@@ -334,6 +339,8 @@ pub fn decode_response(payload: &[u8]) -> io::Result<(u64, Response)> {
                 sparse_early_exit: r.u64()? as usize,
                 dense_graph: r.u64()? as usize,
             },
+            resident_bytes: r.u64()?,
+            mapped_bytes: r.u64()?,
         }),
         RESP_ERROR => Response::Error(r.str_()?),
         k => return Err(invalid(format!("unknown response kind {k:#x}"))),
@@ -707,7 +714,9 @@ fn handle_request(
                     w.u64(m.plans.dense_only as u64)?;
                     w.u64(m.plans.sparse_only as u64)?;
                     w.u64(m.plans.sparse_early_exit as u64)?;
-                    w.u64(m.plans.dense_graph as u64)
+                    w.u64(m.plans.dense_graph as u64)?;
+                    w.u64(m.resident_bytes)?;
+                    w.u64(m.mapped_bytes)
                 }));
             }
             k => {

@@ -13,8 +13,8 @@ use std::sync::Arc;
 
 use crate::coordinator::metrics::PlanCounters;
 use crate::coordinator::shard::{
-    ShardBatchRequest, ShardDelete, ShardFlush, ShardHandle, ShardRequest,
-    ShardSnapshot, ShardUpsert, UpsertOutcome,
+    ShardBatchRequest, ShardDelete, ShardFlush, ShardHandle, ShardMemory,
+    ShardRequest, ShardSnapshot, ShardUpsert, UpsertOutcome,
 };
 use crate::hybrid::config::SearchParams;
 use crate::hybrid::plan::PlanCounts;
@@ -229,6 +229,31 @@ impl Router {
         Ok(total)
     }
 
+    /// Broadcast a memory probe: every shard reports its index's
+    /// `(resident_bytes, mapped_bytes)` split and the router sums them.
+    /// Resident bytes are heap-owned buffers; mapped bytes are snapshot
+    /// sections served through the pager (`StorageMode::Mapped`) whose
+    /// pages the kernel may reclaim at any time. A short gather panics
+    /// like every other broadcast.
+    pub fn memory(&self) -> (u64, u64) {
+        let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        for shard in &self.shards {
+            shard.submit_memory(ShardMemory { reply: tx.clone(), tag });
+        }
+        drop(tx);
+        let (mut resident, mut mapped) = (0u64, 0u64);
+        let mut acks = 0usize;
+        while let Ok(reply) = rx.recv() {
+            debug_assert_eq!(reply.tag, tag);
+            acks += 1;
+            resident += reply.resident_bytes;
+            mapped += reply.mapped_bytes;
+        }
+        self.check_gather(acks, "memory");
+        (resident, mapped)
+    }
+
     /// Broadcast a snapshot barrier: every shard persists its full index
     /// state into `dir` (callers flush first for a deterministic cut).
     /// Returns the total snapshot bytes across shards; any shard's save
@@ -314,6 +339,53 @@ mod tests {
     fn dead_shard_makes_flush_loud() {
         let (router, _, _) = router_with_dead_shard();
         let _ = router.flush();
+    }
+
+    #[test]
+    #[should_panic(expected = "short gather")]
+    fn dead_shard_makes_memory_loud() {
+        let (router, _, _) = router_with_dead_shard();
+        let _ = router.memory();
+    }
+
+    /// Exact accounting: the router's gathered memory split must equal
+    /// the sum over shards of the very same index-level numbers —
+    /// shard workers build deterministically from `(base, slice)`, so
+    /// an independently built replica per shard is a usable oracle.
+    #[test]
+    fn memory_gather_sums_per_shard_index_accounting() {
+        use crate::hybrid::mutable::{MutableConfig, MutableHybridIndex};
+        let mut cfg = QuerySimConfig::tiny();
+        cfg.n = 200;
+        let data = cfg.generate(17);
+        let parts = data.shard(3);
+        let (mut want_resident, mut want_mapped) = (0u64, 0u64);
+        for (base, slice) in &parts {
+            let replica = MutableHybridIndex::from_dataset(
+                slice,
+                *base as u32,
+                MutableConfig {
+                    index: IndexConfig::default(),
+                    engine_threads: 1,
+                    ..MutableConfig::default()
+                },
+            );
+            want_resident += replica.memory_bytes() as u64;
+            want_mapped += replica.mapped_bytes() as u64;
+        }
+        let shards: Vec<ShardHandle> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, (base, slice))| {
+                ShardHandle::spawn(i, base, slice, &IndexConfig::default())
+            })
+            .collect();
+        let router = Router::new(shards);
+        let (resident, mapped) = router.memory();
+        assert_eq!(resident, want_resident);
+        assert_eq!(mapped, want_mapped);
+        assert!(resident > 0, "a resident cluster pins heap bytes");
+        assert_eq!(mapped, 0, "no mappings under StorageMode::Resident");
     }
 
     #[test]

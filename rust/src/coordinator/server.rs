@@ -14,6 +14,7 @@ use crate::coordinator::shard::{ShardHandle, UpsertOutcome};
 use crate::hybrid::config::{DenseBackend, IndexConfig, SearchParams};
 use crate::hybrid::mutable::{MutableConfig, RowRetention};
 use crate::hybrid::persist;
+use crate::hybrid::store::StorageMode;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
 use crate::types::sparse::SparseVector;
 
@@ -74,6 +75,16 @@ pub struct ServerConfig {
     /// re-read the snapshot), `Drop` discards them (merges rejected —
     /// read-only / merge-never deployments at ~half the residency).
     pub row_retention: RowRetention,
+    /// Sealed-segment residency policy for every shard (the out-of-core
+    /// knob; see `hybrid::store`): `Resident` (default) loads snapshot
+    /// sections into owned heap buffers, `Mapped` serves the hot
+    /// sections (PQ codes, postings, SQ residuals) straight from the
+    /// snapshot via `mmap`, leaving paging to the kernel. Results are
+    /// bit-identical either way; only the memory split moves (see
+    /// `MetricsSnapshot::{resident_bytes, mapped_bytes}`). A freshly
+    /// built cluster is resident until its first save/restore cycle —
+    /// there is no snapshot to map before one exists.
+    pub storage: StorageMode,
     /// Directory for [`Server::save_snapshot`] / [`Server::restore`].
     /// None disables persistence.
     pub snapshot_dir: Option<PathBuf>,
@@ -102,6 +113,7 @@ impl Default for ServerConfig {
             merge_fraction: m.merge_fraction,
             auto_merge: m.auto_merge,
             row_retention: m.row_retention,
+            storage: m.storage,
             snapshot_dir: None,
         }
     }
@@ -147,6 +159,7 @@ fn shard_config(config: &ServerConfig) -> MutableConfig {
         engine_threads: config.engine_threads,
         auto_merge: config.auto_merge,
         row_retention: config.row_retention,
+        storage: config.storage,
         ..MutableConfig::default()
     }
 }
@@ -267,7 +280,13 @@ impl Server {
             w.usize(len)?;
         }
         w.finish()?;
+        // Durability: the manifest commits the epoch, so its bytes must
+        // be on disk before the rename, and the rename itself must be
+        // on disk before callers treat the snapshot as committed (each
+        // shard already fsyncs its own file + the epoch dir).
+        persist::sync_file(&tmp)?;
         std::fs::rename(&tmp, dir.join(MANIFEST_FILE))?;
+        persist::sync_dir(dir)?;
         // The committed epoch owns every live disk-backed row pointer
         // (each shard's save re-targets its segments before acking), so
         // older epochs — including leftovers of failed attempts — are
@@ -380,6 +399,9 @@ impl Server {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut m = self.metrics.snapshot();
         m.plans = self.router.plan_counts();
+        let (resident, mapped) = self.router.memory();
+        m.resident_bytes = resident;
+        m.mapped_bytes = mapped;
         m
     }
 }

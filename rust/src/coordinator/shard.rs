@@ -101,6 +101,22 @@ pub struct ShardSnapshotDone {
     pub result: Result<u64, String>,
 }
 
+/// Report the shard's index footprint, split by residency — the
+/// numbers behind `MetricsSnapshot::{resident_bytes, mapped_bytes}`.
+pub struct ShardMemory {
+    pub reply: Sender<ShardMemoryReply>,
+    pub tag: u64,
+}
+
+pub struct ShardMemoryReply {
+    pub tag: u64,
+    pub shard_id: usize,
+    /// Heap bytes the shard's index pins.
+    pub resident_bytes: u64,
+    /// Snapshot bytes it serves through mappings (see `hybrid::store`).
+    pub mapped_bytes: u64,
+}
+
 /// Mutation acknowledgement. `applied` reports whether the op touched an
 /// existing doc: true for a replacing upsert or a delete of a present
 /// id; false for a fresh insert or a delete of an absent id.
@@ -135,6 +151,7 @@ enum ShardMsg {
     Delete(ShardDelete),
     Flush(ShardFlush),
     Snapshot(ShardSnapshot),
+    Memory(ShardMemory),
 }
 
 /// Owning handle to a running shard worker.
@@ -325,6 +342,14 @@ impl ShardHandle {
                                 result,
                             });
                         }
+                        ShardMsg::Memory(req) => {
+                            let _ = req.reply.send(ShardMemoryReply {
+                                tag: req.tag,
+                                shard_id,
+                                resident_bytes: index.memory_bytes() as u64,
+                                mapped_bytes: index.mapped_bytes() as u64,
+                            });
+                        }
                     }
                 }
             })
@@ -374,6 +399,10 @@ impl ShardHandle {
 
     pub fn submit_snapshot(&self, req: ShardSnapshot) {
         self.tx.send(ShardMsg::Snapshot(req)).expect("shard worker gone");
+    }
+
+    pub fn submit_memory(&self, req: ShardMemory) {
+        self.tx.send(ShardMsg::Memory(req)).expect("shard worker gone");
     }
 }
 

@@ -28,6 +28,7 @@
 
 use crate::dense::lut::QuantizedLut;
 use crate::dense::pq::PqIndex;
+use crate::hybrid::store::ByteBuf;
 use crate::util::simd::use_avx2;
 
 /// Points per block: one AVX2 register of nibble indices.
@@ -36,8 +37,10 @@ pub const BLOCK: usize = 32;
 /// Blocked-transposed packed codes ready for the LUT16 scan.
 #[derive(Clone, Debug)]
 pub struct Lut16Codes {
-    /// [n_blocks][k_pairs][32] bytes.
-    pub data: Vec<u8>,
+    /// [n_blocks][k_pairs][32] bytes. A [`ByteBuf`]: owned when
+    /// resident, a zero-copy snapshot window when mapped — the scan
+    /// kernels consume `block()` slices either way.
+    pub data: ByteBuf,
     pub n: usize,
     pub k: usize,
     pub k_pairs: usize,
@@ -66,7 +69,7 @@ impl Lut16Codes {
                 data[(b * k_pairs + p) * BLOCK + slot] = lo | (hi << 4);
             }
         }
-        Lut16Codes { data, n, k, k_pairs, n_blocks }
+        Lut16Codes { data: data.into(), n, k, k_pairs, n_blocks }
     }
 
     #[inline]
@@ -75,8 +78,14 @@ impl Lut16Codes {
         &self.data[b * stride..(b + 1) * stride]
     }
 
+    /// Heap bytes (0 when the code section is a mapped view).
     pub fn memory_bytes(&self) -> usize {
-        self.data.len()
+        self.data.resident_bytes()
+    }
+
+    /// Snapshot bytes served through a mapping.
+    pub fn mapped_bytes(&self) -> usize {
+        self.data.mapped_bytes()
     }
 }
 

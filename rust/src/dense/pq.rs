@@ -9,6 +9,7 @@
 //!   quantization at 1/4 the original size.
 
 use crate::dense::kmeans::kmeans;
+use crate::hybrid::store::ByteBuf;
 use crate::types::dense::{DenseMatrix, dot};
 use crate::util::rng::Rng;
 
@@ -131,8 +132,9 @@ impl PqCodebooks {
 pub struct PqIndex {
     pub codebooks: PqCodebooks,
     /// Packed codes: ceil(K/2) bytes per row when l=16 (low nibble =
-    /// even subspace), K bytes per row otherwise.
-    pub codes: Vec<u8>,
+    /// even subspace), K bytes per row otherwise. A [`ByteBuf`] so a
+    /// mapped segment serves the codes straight from its snapshot.
+    pub codes: ByteBuf,
     pub row_bytes: usize,
     pub n: usize,
     /// True (unpadded) dense dimensionality.
@@ -161,7 +163,7 @@ impl PqIndex {
                 dst.copy_from_slice(&c);
             }
         }
-        PqIndex { codebooks, codes, row_bytes, n, dim: data.dim }
+        PqIndex { codebooks, codes: codes.into(), row_bytes, n, dim: data.dim }
     }
 
     #[inline]
@@ -204,8 +206,15 @@ impl PqIndex {
         out
     }
 
+    /// Heap bytes (mapped code sections pin none; codebooks always
+    /// stay resident).
     pub fn memory_bytes(&self) -> usize {
-        self.codes.len() + self.codebooks.codewords.len() * 4
+        self.codes.resident_bytes() + self.codebooks.codewords.len() * 4
+    }
+
+    /// Snapshot bytes the code section serves through a mapping.
+    pub fn mapped_bytes(&self) -> usize {
+        self.codes.mapped_bytes()
     }
 }
 
@@ -214,7 +223,7 @@ impl PqIndex {
 /// range ... exactly 1/4 the size of the original dataset").
 #[derive(Clone, Debug)]
 pub struct ScalarQuantizedResiduals {
-    pub codes: Vec<u8>,
+    pub codes: ByteBuf,
     pub dim: usize,
     /// Per-dimension affine dequantization: v = lo + code * step.
     pub lo: Vec<f32>,
@@ -254,7 +263,7 @@ impl ScalarQuantizedResiduals {
                 dst[j] = q.clamp(0.0, 255.0) as u8;
             }
         }
-        ScalarQuantizedResiduals { codes, dim, lo, step }
+        ScalarQuantizedResiduals { codes: codes.into(), dim, lo, step }
     }
 
     /// Approximate q · residual_i without materializing the residual.
@@ -278,7 +287,11 @@ impl ScalarQuantizedResiduals {
     }
 
     pub fn memory_bytes(&self) -> usize {
-        self.codes.len() + self.dim * 8
+        self.codes.resident_bytes() + self.dim * 8
+    }
+
+    pub fn mapped_bytes(&self) -> usize {
+        self.codes.mapped_bytes()
     }
 }
 

@@ -3,6 +3,7 @@
 
 use crate::dense::graph::GraphParams;
 use crate::hybrid::plan::PlanMode;
+use crate::hybrid::store::StorageMode;
 use crate::sparse::compressed::SparseCompression;
 
 /// Which dense stage-1 candidate generator the index builds (see
@@ -59,6 +60,12 @@ pub struct IndexConfig {
     /// v6 snapshots persist the adjacency lists themselves and restore
     /// this field from them.
     pub dense_backend: DenseBackend,
+    /// Residency policy for sealed-segment hot sections (see
+    /// `hybrid::store`). `Resident` (default) owns every section on the
+    /// heap exactly as before; `Mapped` serves PQ codes, postings, and
+    /// raw rows straight from the snapshot mapping. Load-time only —
+    /// not serialized; a snapshot can be opened either way.
+    pub storage: StorageMode,
 }
 
 impl Default for IndexConfig {
@@ -75,6 +82,7 @@ impl Default for IndexConfig {
             seed: 0x5EA5C4,
             sparse_compression: None,
             dense_backend: DenseBackend::Flat,
+            storage: StorageMode::Resident,
         }
     }
 }
@@ -109,6 +117,11 @@ impl IndexConfig {
     /// Shorthand for a graph backend with default HNSW parameters.
     pub fn with_graph_backend(self) -> Self {
         self.with_dense_backend(DenseBackend::Graph(GraphParams::default()))
+    }
+
+    pub fn with_storage(mut self, mode: StorageMode) -> Self {
+        self.storage = mode;
+        self
     }
 }
 
@@ -190,6 +203,11 @@ mod tests {
             c.dense_backend,
             DenseBackend::Flat,
             "flat scan is the default dense backend"
+        );
+        assert_eq!(
+            c.storage,
+            StorageMode::Resident,
+            "fully resident storage is the default"
         );
     }
 

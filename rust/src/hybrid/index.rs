@@ -15,7 +15,7 @@ use crate::dense::graph::{GraphParams, PqGraph};
 use crate::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
 use crate::dense::whitening::Whitening;
 use crate::hybrid::config::{DenseBackend, IndexConfig, SearchParams};
-use crate::hybrid::plan::{IndexStats, Planner, QueryPlan};
+use crate::hybrid::plan::{IndexStats, PlanKind, Planner, QueryPlan};
 use crate::sparse::cache_sort::cache_sort;
 use crate::sparse::compressed::SparseCompression;
 use crate::sparse::inverted_index::InvertedIndex;
@@ -279,6 +279,50 @@ impl HybridIndex {
                 .map(|r| r.memory_bytes())
                 .unwrap_or(0)
             + self.graph.as_ref().map(|g| g.memory_bytes()).unwrap_or(0)
+    }
+
+    /// Snapshot bytes the hot sections serve through a mapping (0 for a
+    /// fully resident index). Together with [`HybridIndex::memory_bytes`]
+    /// this partitions the index's data footprint: mapped pages are
+    /// clean, file-backed, and evictable, so they are deliberately *not*
+    /// counted as resident.
+    pub fn mapped_bytes(&self) -> usize {
+        self.sparse_index.mapped_bytes()
+            + self.dense_codes.mapped_bytes()
+            + self.pq_index.mapped_bytes()
+            + self
+                .dense_residual
+                .as_ref()
+                .map(|r| r.mapped_bytes())
+                .unwrap_or(0)
+    }
+
+    /// True iff any hot section is a mapping window — the cheap guard
+    /// in front of per-query prefetch hints.
+    pub fn has_mapped(&self) -> bool {
+        self.dense_codes.data.is_mapped()
+            || self.pq_index.codes.is_mapped()
+            || self.sparse_index.mapped_bytes() > 0
+    }
+
+    /// Hint the OS to fault in exactly what `plan` will scan (madvise
+    /// `WILLNEED`; mapped storage only). The flat dense stage reads the
+    /// whole LUT16 section sequentially; the sparse stage touches only
+    /// the query's posting lists; graph traversal and the reorder
+    /// stages are sparse random access and are left to demand faulting.
+    /// Purely advisory — results are bit-identical with or without it.
+    pub fn prefetch_plan(&self, q: &HybridQuery, plan: &QueryPlan) {
+        if !self.has_mapped() {
+            return;
+        }
+        if plan.run_dense && plan.kind != PlanKind::DenseGraph {
+            self.dense_codes.data.advise_all();
+        }
+        if plan.run_sparse {
+            for &j in &q.sparse.dims {
+                self.sparse_index.advise_dim(j as usize);
+            }
+        }
     }
 }
 

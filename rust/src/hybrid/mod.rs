@@ -19,6 +19,7 @@ pub mod plan;
 pub mod search;
 pub mod segment;
 pub mod stage1;
+pub mod store;
 pub mod topk;
 
 pub use batch::{BatchEngine, BatchOutput, BatchStats, EngineConfig, ShardMode};
@@ -31,3 +32,4 @@ pub use plan::{
 pub use search::SearchHit;
 pub use segment::{Doc, MergeError, RowStore, Segment, Tombstones};
 pub use stage1::{DenseCandidates, DenseStage1, FlatScan};
+pub use store::{MapSource, SectionBuf, StorageMode};

@@ -46,6 +46,7 @@ use crate::hybrid::index::DenseArtifacts;
 use crate::hybrid::persist;
 use crate::hybrid::search::{SearchHit, SearchStats};
 use crate::hybrid::segment::{Doc, MergeError, RowStore, Segment};
+use crate::hybrid::store::{MapSource, StorageMode};
 use crate::hybrid::topk::TopK;
 use crate::types::dense;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
@@ -97,6 +98,16 @@ pub struct MutableConfig {
     /// Raw-row retention policy for sealed segments (see
     /// [`RowRetention`]).
     pub row_retention: RowRetention,
+    /// Residency policy for sealed segments restored by
+    /// [`MutableHybridIndex::load`] (see `hybrid::store`): `Resident`
+    /// (default) owns every hot section on the heap; `Mapped` serves
+    /// them straight from the snapshot mapping, and
+    /// [`MutableHybridIndex::save`] remaps onto the file it just
+    /// committed. Delta segments sealed at runtime and the write
+    /// buffer are always resident; raw rows are never materialized
+    /// under `Mapped` (merges re-read them from the snapshot unless
+    /// retention is `Drop`).
+    pub storage: StorageMode,
 }
 
 impl Default for MutableConfig {
@@ -109,6 +120,7 @@ impl Default for MutableConfig {
             engine_threads: 1,
             auto_merge: false,
             row_retention: RowRetention::InMemory,
+            storage: StorageMode::Resident,
         }
     }
 }
@@ -248,6 +260,14 @@ impl MutableHybridIndex {
             .map(|d| d.sparse.nnz() * 8 + d.dense.len() * 4)
             .sum();
         seg + buf
+    }
+
+    /// Snapshot bytes served through mappings across all sealed
+    /// segments — 0 under [`StorageMode::Resident`], and always 0 for
+    /// deltas sealed since the last save (they are resident until
+    /// [`MutableHybridIndex::save`] remaps the whole state).
+    pub fn mapped_bytes(&self) -> usize {
+        self.segments.iter().map(|e| e.seg.mapped_bytes()).sum()
     }
 
     /// Insert or replace the document `id`. The old version (if any) is
@@ -729,6 +749,9 @@ impl MutableHybridIndex {
         let bytes = w.bytes_written();
         let row_offsets = match result.and_then(|ofs| {
             w.finish()?;
+            // fsync before the rename publishes the file: a crash after
+            // an unsynced rename can surface a truncated snapshot.
+            persist::sync_file(&tmp)?;
             Ok(ofs)
         }) {
             Ok(ofs) => ofs,
@@ -738,6 +761,19 @@ impl MutableHybridIndex {
             }
         };
         std::fs::rename(&tmp, path)?;
+        // The rename itself lives in the directory inode.
+        if let Some(dir) = path.parent() {
+            persist::sync_dir(dir)?;
+        }
+        if self.config.storage == StorageMode::Mapped {
+            // Remap the whole state onto the snapshot just committed.
+            // Unix keeps unlinked-but-mapped files valid, so a caller
+            // pruning the previous snapshot cannot invalidate the old
+            // mapping mid-flight; the roundtrip is bit-exact, so
+            // serving continues identically.
+            *self = Self::load(path, self.config.clone())?;
+            return Ok(bytes);
+        }
         if self.config.row_retention == RowRetention::OnDisk {
             // Re-point every segment (evicting resident rows, and moving
             // already-disk-backed pointers off the old file, which the
@@ -797,9 +833,19 @@ impl MutableHybridIndex {
         let next_serial = r.u64()?;
         let n_segments = r.usize()?;
         let source = Arc::new(path.to_path_buf());
-        let keep_rows = config.row_retention == RowRetention::InMemory;
-        let refer = (config.row_retention == RowRetention::OnDisk)
+        // Under Mapped storage raw rows are never materialized: the
+        // snapshot *is* the backing store, so rows stay disk-backed
+        // (merges re-read them) and resident bytes stay below the raw
+        // corpus size regardless of the retention knob.
+        let keep_rows = config.row_retention == RowRetention::InMemory
+            && config.storage == StorageMode::Resident;
+        let refer = (config.row_retention != RowRetention::Drop
+            && !keep_rows)
             .then_some(&source);
+        let map = match config.storage {
+            StorageMode::Mapped => Some(MapSource::open(path)?),
+            StorageMode::Resident => None,
+        };
         let mut segments: Vec<SealedEntry> = Vec::new();
         for _ in 0..n_segments {
             let serial = r.u64()?;
@@ -816,6 +862,7 @@ impl MutableHybridIndex {
                 config.engine_threads,
                 keep_rows,
                 refer,
+                map.as_ref(),
             )?;
             // dims checked unconditionally (not via the raw rows, which
             // OnDisk/Drop loads don't materialize): a segment index of
@@ -1058,6 +1105,89 @@ mod tests {
         assert_eq!(idx.n_segments(), 0);
         let q = cfg.related_queries(&data, 47, 1).remove(0);
         assert!(idx.search(&q, &SearchParams::new(5)).is_empty());
+    }
+
+    #[test]
+    fn mapped_storage_serves_identically_and_remaps_on_save() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(51);
+        let mut idx =
+            MutableHybridIndex::from_dataset(&data, 0, tiny_config());
+        // some churn so tombstones + a delta segment are in play
+        for i in 0..40 {
+            let (s, d) = doc_of(&data, i % data.len());
+            idx.upsert((1000 + i) as u32, s, d);
+        }
+        idx.delete(3);
+        let dir = std::env::temp_dir().join("hybrid_ip_mutable_mapped");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.snap");
+        idx.save(&path).unwrap();
+        let resident =
+            MutableHybridIndex::load(&path, tiny_config()).unwrap();
+        let mapped_cfg = MutableConfig {
+            storage: StorageMode::Mapped,
+            ..tiny_config()
+        };
+        let mut mapped =
+            MutableHybridIndex::load(&path, mapped_cfg).unwrap();
+        assert!(mapped.mapped_bytes() > 0, "sections must be mapped");
+        assert_eq!(resident.mapped_bytes(), 0);
+        assert!(
+            mapped.memory_bytes() < resident.memory_bytes(),
+            "mapped residency must undercut the resident load"
+        );
+        let params = SearchParams::new(10);
+        for q in &cfg.related_queries(&data, 52, 5) {
+            let a = resident.search(q, &params);
+            let b = mapped.search(q, &params);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+        // mutate + save: the index must remap onto the new snapshot and
+        // keep serving (new deltas were resident until this save)
+        let (s, d) = doc_of(&data, 5);
+        mapped.upsert(9999, s, d);
+        mapped.flush();
+        let path2 = dir.join("state2.snap");
+        mapped.save(&path2).unwrap();
+        assert!(mapped.mapped_bytes() > 0);
+        assert!(mapped.contains(9999));
+        let q = cfg.related_queries(&data, 53, 1).remove(0);
+        assert_eq!(mapped.search(&q, &params).len(), 10);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn failed_save_leaves_committed_snapshot_and_no_stray_tmp() {
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(54);
+        let mut idx =
+            MutableHybridIndex::from_dataset(&data, 0, tiny_config());
+        let dir = std::env::temp_dir().join("hybrid_ip_mutable_failsave");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.snap");
+        idx.save(&path).unwrap();
+        // Occupy the tmp path with a directory: the next save must fail
+        // without touching the committed snapshot.
+        let tmp = dir.join("state.snap.tmp");
+        std::fs::create_dir_all(&tmp).unwrap();
+        assert!(idx.save(&path).is_err());
+        let back = MutableHybridIndex::load(&path, tiny_config()).unwrap();
+        assert_eq!(back.len(), idx.len());
+        std::fs::remove_dir_all(&tmp).unwrap();
+        // nothing but the committed snapshot remains
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .collect();
+        assert_eq!(leftovers, vec![std::ffi::OsString::from("state.snap")]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -37,6 +37,7 @@ use crate::dense::pq::{PqCodebooks, PqIndex, ScalarQuantizedResiduals};
 use crate::dense::whitening::Whitening;
 use crate::hybrid::config::{DenseBackend, IndexConfig};
 use crate::hybrid::index::HybridIndex;
+use crate::hybrid::store::{self, ByteBuf, MapSource, SectionBuf, StorageMode};
 use crate::sparse::inverted_index::InvertedIndex;
 use crate::types::csr::{CscMatrix, CsrMatrix};
 use crate::types::dense::DenseMatrix;
@@ -103,6 +104,28 @@ pub fn open_file_at(
     Ok(BinReader::raw_with_limit(BufReader::new(f), total - offset))
 }
 
+/// Durably flush a freshly written file: fsync its contents before any
+/// rename that publishes it (a rename of an unsynced file can surface
+/// as an empty or truncated snapshot after a crash).
+pub fn sync_file(path: &Path) -> io::Result<()> {
+    File::open(path)?.sync_all()?;
+    Ok(())
+}
+
+/// Durably record directory mutations (renames, creates, unlinks) in
+/// `dir` — the metadata lives in the directory inode, not the files.
+/// No-op on platforms where directories cannot be opened as files.
+pub fn sync_dir(dir: &Path) -> io::Result<()> {
+    #[cfg(unix)]
+    {
+        let d = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+        File::open(d)?.sync_all()?;
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
 // ---------------------------------------------------------------- config
 
 pub fn write_config<W: Write>(
@@ -157,8 +180,12 @@ pub fn read_config<R: Read>(r: &mut BinReader<R>) -> io::Result<IndexConfig> {
         whitening,
         seed,
         // Not part of the config codec (a v3-shaped section in every
-        // version): restored from the v5 sparse-backend tag instead.
+        // version): the sparse backend is restored from the v5 tag, the
+        // dense backend from the v6 graph section, and the residency
+        // policy is a load-time choice the caller overlays.
         sparse_compression: None,
+        dense_backend: DenseBackend::Flat,
+        storage: StorageMode::Resident,
     })
 }
 
@@ -218,10 +245,32 @@ pub fn write_csc<W: Write>(
     w.usize(m.n_rows)
 }
 
-pub fn read_csc<R: Read>(r: &mut BinReader<R>) -> io::Result<CscMatrix> {
-    let colptr = r.slice_u64()?;
-    let rows = r.slice_u32()?;
-    let vals = r.slice_f32()?;
+pub fn read_csc<R: Read + Seek>(
+    r: &mut BinReader<R>,
+) -> io::Result<CscMatrix> {
+    read_csc_with(r, None)
+}
+
+/// Like [`read_csc`], but when `src` is set the three posting sections
+/// become windows into the snapshot mapping instead of heap copies
+/// (see `hybrid::store`). Structural validation runs either way — it
+/// touches each page once, and clean file-backed pages stay evictable.
+pub fn read_csc_with<R: Read + Seek>(
+    r: &mut BinReader<R>,
+    src: Option<&MapSource>,
+) -> io::Result<CscMatrix> {
+    let colptr: SectionBuf<u64> = match src {
+        Some(s) => store::read_section(r, s)?,
+        None => r.slice_u64()?.into(),
+    };
+    let rows: SectionBuf<u32> = match src {
+        Some(s) => store::read_section(r, s)?,
+        None => r.slice_u32()?.into(),
+    };
+    let vals: SectionBuf<f32> = match src {
+        Some(s) => store::read_section(r, s)?,
+        None => r.slice_f32()?.into(),
+    };
     let n_rows = r.usize()?;
     if rows.len() != vals.len() {
         return Err(invalid("csc: rows/vals length mismatch"));
@@ -364,10 +413,24 @@ pub fn write_lut16<W: Write>(
     w.slice_u8(&c.data)
 }
 
-pub fn read_lut16<R: Read>(r: &mut BinReader<R>) -> io::Result<Lut16Codes> {
+pub fn read_lut16<R: Read + Seek>(
+    r: &mut BinReader<R>,
+) -> io::Result<Lut16Codes> {
+    read_lut16_with(r, None)
+}
+
+/// Like [`read_lut16`], but `src` maps the blocked code section
+/// directly from the snapshot.
+pub fn read_lut16_with<R: Read + Seek>(
+    r: &mut BinReader<R>,
+    src: Option<&MapSource>,
+) -> io::Result<Lut16Codes> {
     let n = r.usize()?;
     let k = r.usize()?;
-    let data = r.slice_u8()?;
+    let data: ByteBuf = match src {
+        Some(s) => store::read_section(r, s)?,
+        None => r.slice_u8()?.into(),
+    };
     let k_pairs = k.div_ceil(2);
     let n_blocks = n.div_ceil(BLOCK);
     let want = n_blocks
@@ -393,11 +456,24 @@ pub fn write_sq_residuals<W: Write>(
     w.slice_f32(&s.step)
 }
 
-pub fn read_sq_residuals<R: Read>(
+pub fn read_sq_residuals<R: Read + Seek>(
     r: &mut BinReader<R>,
 ) -> io::Result<ScalarQuantizedResiduals> {
+    read_sq_residuals_with(r, None)
+}
+
+/// Like [`read_sq_residuals`], but `src` maps the code section (the
+/// per-dimension `lo`/`step` tables stay resident — they are tiny and
+/// touched on every reorder).
+pub fn read_sq_residuals_with<R: Read + Seek>(
+    r: &mut BinReader<R>,
+    src: Option<&MapSource>,
+) -> io::Result<ScalarQuantizedResiduals> {
     let dim = r.usize()?;
-    let codes = r.slice_u8()?;
+    let codes: ByteBuf = match src {
+        Some(s) => store::read_section(r, s)?,
+        None => r.slice_u8()?.into(),
+    };
     let lo = r.slice_f32()?;
     let step = r.slice_f32()?;
     if lo.len() != dim || step.len() != dim {
@@ -527,7 +603,22 @@ impl HybridIndex {
     /// the statistics from the inverted index — `IndexStats::compute`
     /// is deterministic, so a recomputed planner is identical to a
     /// persisted one.
-    pub fn read_from<R: Read>(r: &mut BinReader<R>) -> io::Result<Self> {
+    pub fn read_from<R: Read + Seek>(r: &mut BinReader<R>) -> io::Result<Self> {
+        Self::read_from_with(r, None)
+    }
+
+    /// Like [`HybridIndex::read_from`], but when `src` carries the
+    /// snapshot mapping the hot sections — inverted-index postings,
+    /// LUT16-blocked and row-major PQ codes, scalar-quantized residual
+    /// codes — are served as windows into it instead of heap copies.
+    /// `src` must map the same file `r` reads, opened at byte 0 (as
+    /// [`open_file`] does), so `BinReader::consumed` offsets are
+    /// absolute. Every cross-field validation runs identically; the
+    /// result is bit-identical to a resident load by construction.
+    pub fn read_from_with<R: Read + Seek>(
+        r: &mut BinReader<R>,
+        src: Option<&MapSource>,
+    ) -> io::Result<Self> {
         let has_stats_section = r.version() >= 4;
         let mut config = read_config(r)?;
         let n = r.usize()?;
@@ -559,7 +650,7 @@ impl HybridIndex {
         let sparse_tag = if r.version() >= 5 { r.u8()? } else { 0 };
         let sparse_index = match sparse_tag {
             0 => {
-                let csc = read_csc(r)?;
+                let csc = read_csc_with(r, src)?;
                 if csc.n_rows != n {
                     return Err(invalid("inverted index rows != n"));
                 }
@@ -567,7 +658,7 @@ impl HybridIndex {
             }
             1 => {
                 let c = crate::sparse::compressed::CompressedPostings::
-                    read_from(r)?;
+                    read_from_with(r, src)?;
                 if c.n_rows() != n {
                     return Err(invalid("inverted index rows != n"));
                 }
@@ -590,12 +681,15 @@ impl HybridIndex {
             ));
         }
         let codebooks = read_codebooks(r)?;
-        let dense_codes = read_lut16(r)?;
+        let dense_codes = read_lut16_with(r, src)?;
         if dense_codes.n != n || dense_codes.k != codebooks.k {
             return Err(invalid("lut16 shape disagrees with codebooks/n"));
         }
         let row_bytes = r.usize()?;
-        let codes = r.slice_u8()?;
+        let codes: ByteBuf = match src {
+            Some(s) => store::read_section(r, s)?,
+            None => r.slice_u8()?.into(),
+        };
         let want_rb = if codebooks.l <= 16 {
             codebooks.k.div_ceil(2)
         } else {
@@ -618,7 +712,7 @@ impl HybridIndex {
         let dense_residual = match r.u8()? {
             0 => None,
             _ => {
-                let s = read_sq_residuals(r)?;
+                let s = read_sq_residuals_with(r, src)?;
                 if s.dim != dense_dim
                     || s.codes.len()
                         != n.checked_mul(s.dim).ok_or_else(|| {
@@ -693,6 +787,9 @@ impl HybridIndex {
         if let Some(g) = &graph {
             config.dense_backend = DenseBackend::Graph(g.params);
         }
+        if src.is_some() {
+            config.storage = StorageMode::Mapped;
+        }
         Ok(HybridIndex {
             perm,
             sparse_index,
@@ -724,6 +821,16 @@ impl HybridIndex {
     pub fn load(path: &Path) -> io::Result<Self> {
         let mut r = open_file(path, SNAP_HYBRID_INDEX)?;
         Self::read_from(&mut r)
+    }
+
+    /// Load a standalone index snapshot with its hot sections served
+    /// straight from an mmap of `path` (see `hybrid::store`). Results
+    /// are bit-identical to [`HybridIndex::load`]; only residency
+    /// differs.
+    pub fn load_mapped(path: &Path) -> io::Result<Self> {
+        let src = MapSource::open(path)?;
+        let mut r = open_file(path, SNAP_HYBRID_INDEX)?;
+        Self::read_from_with(&mut r, Some(&src))
     }
 }
 
@@ -819,6 +926,51 @@ mod tests {
             for q in &cfg.related_queries(&data, 14, 3) {
                 let a = idx.search(q, 10);
                 let b = back.search(q, 10);
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.id, y.id);
+                    assert_eq!(x.score.to_bits(), y.score.to_bits());
+                }
+            }
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn mapped_load_is_bitwise_identical_to_resident() {
+        use crate::sparse::compressed::SparseCompression;
+        let cfg = QuerySimConfig::tiny();
+        let data = cfg.generate(23);
+        let dir = std::env::temp_dir().join("hybrid_ip_persist_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (tag, build) in [
+            ("raw", IndexConfig::default()),
+            (
+                "q8",
+                IndexConfig::default().with_sparse_compression(
+                    SparseCompression::q8().with_block_len(8),
+                ),
+            ),
+        ] {
+            let idx = HybridIndex::build(&data, &build);
+            let path = dir.join(format!("mapped_{tag}.snap"));
+            idx.save(&path).unwrap();
+            let resident = HybridIndex::load(&path).unwrap();
+            let mapped = HybridIndex::load_mapped(&path).unwrap();
+            assert_eq!(mapped.config.storage, StorageMode::Mapped);
+            assert!(
+                mapped.dense_codes.data.is_mapped(),
+                "LUT16 section must be a mapping window"
+            );
+            assert!(mapped.sparse_index.mapped_bytes() > 0);
+            assert_eq!(mapped.dense_codes.data, resident.dense_codes.data);
+            assert_eq!(
+                &mapped.pq_index.codes[..],
+                &resident.pq_index.codes[..]
+            );
+            for q in &cfg.related_queries(&data, 24, 4) {
+                let a = resident.search(q, 10);
+                let b = mapped.search(q, 10);
                 assert_eq!(a.len(), b.len());
                 for (x, y) in a.iter().zip(&b) {
                     assert_eq!(x.id, y.id);

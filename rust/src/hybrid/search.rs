@@ -281,6 +281,10 @@ pub fn search_with_plan(
 ) -> (Vec<SearchHit>, SearchStats) {
     let mut stats = SearchStats::default();
     stats.plans.bump(plan.kind);
+    // Mapped storage: hint the OS at the exact scan set this plan
+    // selected before the stage-1 loops start faulting it in page by
+    // page. No-op for resident indexes; never affects results.
+    index.prefetch_plan(q, plan);
 
     let alpha_h = plan.alpha_h.min(index.n);
     // With tombstones, over-select by the dead count so dropped rows

@@ -27,6 +27,7 @@ use crate::hybrid::config::{IndexConfig, SearchParams};
 use crate::hybrid::index::{DenseArtifacts, HybridIndex};
 use crate::hybrid::persist;
 use crate::hybrid::search::{SearchHit, SearchStats};
+use crate::hybrid::store::MapSource;
 use crate::types::csr::CsrMatrix;
 use crate::types::dense::DenseMatrix;
 use crate::types::hybrid::{HybridDataset, HybridQuery};
@@ -400,6 +401,13 @@ impl Segment {
         self.resident_bytes()
     }
 
+    /// Snapshot bytes the sealed index serves through a mapping (0 for
+    /// resident segments; raw rows are never mapped — disk-backed rows
+    /// are re-read on demand and accounted nowhere).
+    pub fn mapped_bytes(&self) -> usize {
+        self.index.mapped_bytes()
+    }
+
     /// Serialize: ids, tombstones, index, then a length-prefixed
     /// raw-rows section a loader can skip wholesale. Disk-backed rows
     /// are raw-copied byte-for-byte so the new snapshot is
@@ -458,12 +466,16 @@ impl Segment {
     /// loads it into RAM, `false` skips it. When skipped, `source`
     /// (the snapshot file being read, if any) turns the section into a
     /// [`RowStore::Disk`] pointer so merges can still re-read it;
-    /// without a source the rows are treated as dropped.
+    /// without a source the rows are treated as dropped. When `map`
+    /// carries a mapping of the same file, the sealed index's hot
+    /// sections are served from it instead of heap copies
+    /// (`StorageMode::Mapped` — see `hybrid::store`).
     pub fn read_from<R: Read + io::Seek>(
         r: &mut BinReader<R>,
         engine_threads: usize,
         keep_rows: bool,
         source: Option<&Arc<PathBuf>>,
+        map: Option<&MapSource>,
     ) -> io::Result<Self> {
         let ids = r.slice_u32()?;
         if ids.is_empty() {
@@ -476,7 +488,7 @@ impl Segment {
         if tombstones.len() != ids.len() {
             return Err(persist::invalid("segment: tombstones size != ids"));
         }
-        let index = HybridIndex::read_from(r)?;
+        let index = HybridIndex::read_from_with(r, map)?;
         if index.n != ids.len() {
             return Err(persist::invalid("segment: index rows != ids"));
         }

@@ -1,0 +1,461 @@
+//! The segment store: every hot section of a sealed segment — PQ codes
+//! (including the LUT16-blocked layout), sparse postings (raw CSC or
+//! compressed blocks) and scalar-quantized residual codes — is held in
+//! a [`SectionBuf`], which is either an owned buffer (`Resident`,
+//! today's behaviour, bit-identical by construction) or a typed view
+//! into a memory-mapped v6+ snapshot (`Mapped`, serving straight from
+//! the epoch directory with the page cache as the residency layer).
+//!
+//! `SectionBuf<T>` derefs to `&[T]`, so every scan kernel and decoder
+//! consumes it exactly as it consumed the former `Vec<T>` fields — the
+//! two backends cannot diverge behaviourally, only in where the bytes
+//! live. A mapped view is only taken when the on-disk payload is
+//! correctly aligned for `T` on a little-endian host (the snapshot
+//! byte order); otherwise the section silently decodes into an owned
+//! buffer, so alignment and endianness are correctness-invisible.
+//! Single-byte sections (PQ codes, LUT16 blocks, Q8 values — the bulk
+//! of a segment) always map zero-copy.
+
+use std::io::{self, Read, Seek};
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::util::binio::BinReader;
+use crate::util::mmap::Mmap;
+
+/// Residency policy for sealed segments (delta segments and the write
+/// buffer always stay resident).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StorageMode {
+    /// Owned in-memory buffers — today's behaviour.
+    #[default]
+    Resident,
+    /// Hot sections served as mapped views of the snapshot file;
+    /// resident footprint is metadata plus whatever the page cache
+    /// keeps warm.
+    Mapped,
+}
+
+impl StorageMode {
+    /// CLI spelling (`--storage resident|mapped`).
+    pub fn parse(s: &str) -> Option<StorageMode> {
+        match s {
+            "resident" => Some(StorageMode::Resident),
+            "mapped" => Some(StorageMode::Mapped),
+            _ => None,
+        }
+    }
+}
+
+/// A whole-snapshot mapping that section views borrow from. Cloning is
+/// an `Arc` bump; the mapping lives until the last view drops, so
+/// epoch pruning (unlink) can never invalidate a serving segment.
+#[derive(Clone, Debug)]
+pub struct MapSource {
+    map: Arc<Mmap>,
+}
+
+impl MapSource {
+    pub fn open(path: &Path) -> io::Result<MapSource> {
+        Ok(MapSource { map: Arc::new(Mmap::open(path)?) })
+    }
+
+    pub fn mmap(&self) -> &Arc<Mmap> {
+        &self.map
+    }
+
+    pub fn file_len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u8 {}
+    impl Sealed for i8 {}
+    impl Sealed for u32 {}
+    impl Sealed for u64 {}
+    impl Sealed for f32 {}
+}
+
+/// Element types a snapshot section can hold. Sealed: every impl must
+/// be a plain little-endian-serialized scalar whose in-memory
+/// representation matches the on-disk bytes exactly (on a
+/// little-endian host), because the `Mapped` variant reinterprets the
+/// file bytes in place.
+pub trait Pod: Copy + Send + Sync + 'static + sealed::Sealed {
+    const SIZE: usize;
+    /// Decode one element from its little-endian byte encoding (the
+    /// owned-fallback path for misaligned or big-endian reads).
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl Pod for u8 {
+    const SIZE: usize = 1;
+    fn read_le(bytes: &[u8]) -> u8 {
+        bytes[0]
+    }
+}
+
+impl Pod for i8 {
+    const SIZE: usize = 1;
+    fn read_le(bytes: &[u8]) -> i8 {
+        bytes[0] as i8
+    }
+}
+
+impl Pod for u32 {
+    const SIZE: usize = 4;
+    fn read_le(bytes: &[u8]) -> u32 {
+        u32::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+impl Pod for u64 {
+    const SIZE: usize = 8;
+    fn read_le(bytes: &[u8]) -> u64 {
+        u64::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+impl Pod for f32 {
+    const SIZE: usize = 4;
+    fn read_le(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes(bytes.try_into().unwrap())
+    }
+}
+
+/// One section of a segment: owned bytes or a typed window into a
+/// mapped snapshot. Derefs to `&[T]` either way.
+pub struct SectionBuf<T: Pod> {
+    repr: Repr<T>,
+}
+
+enum Repr<T: Pod> {
+    Owned(Vec<T>),
+    Mapped { map: Arc<Mmap>, offset: usize, len: usize },
+}
+
+/// Convenience alias for the dominant byte-coded sections.
+pub type ByteBuf = SectionBuf<u8>;
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+impl<T: Pod> SectionBuf<T> {
+    /// A view of `len` elements starting `offset` bytes into `map`.
+    /// Bounds are checked against the mapping; misaligned payloads and
+    /// big-endian hosts fall back to an owned, element-wise-decoded
+    /// copy (bit-identical contents, no mapped residency win).
+    pub fn mapped(
+        map: Arc<Mmap>,
+        offset: usize,
+        len: usize,
+    ) -> io::Result<SectionBuf<T>> {
+        let bytes = len
+            .checked_mul(T::SIZE)
+            .ok_or_else(|| invalid(format!("section of {len} elems overflows")))?;
+        let end = offset
+            .checked_add(bytes)
+            .ok_or_else(|| invalid(format!("section at {offset} overflows")))?;
+        if end > map.len() {
+            return Err(invalid(format!(
+                "section [{offset}, {end}) exceeds mapped file of {} bytes",
+                map.len()
+            )));
+        }
+        if len == 0 {
+            return Ok(SectionBuf::default());
+        }
+        let aligned = (map.as_ptr() as usize + offset)
+            % std::mem::align_of::<T>()
+            == 0;
+        if T::SIZE == 1 || (cfg!(target_endian = "little") && aligned) {
+            Ok(SectionBuf { repr: Repr::Mapped { map, offset, len } })
+        } else {
+            let owned: Vec<T> = map[offset..end]
+                .chunks_exact(T::SIZE)
+                .map(T::read_le)
+                .collect();
+            Ok(owned.into())
+        }
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.repr, Repr::Mapped { .. })
+    }
+
+    /// Heap bytes this section pins (0 when mapped — mapped pages are
+    /// clean, file-backed and evictable, i.e. page-cache, not heap).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Owned(v) => v.len() * T::SIZE,
+            Repr::Mapped { .. } => 0,
+        }
+    }
+
+    /// Snapshot bytes this section serves through the mapping.
+    pub fn mapped_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Owned(_) => 0,
+            Repr::Mapped { len, .. } => len * T::SIZE,
+        }
+    }
+
+    /// Prefetch hint for elements `[start, start + count)` — a no-op
+    /// unless mapped. Advisory only: results never depend on it.
+    pub fn advise_range(&self, start: usize, count: usize) {
+        if let Repr::Mapped { map, offset, len } = &self.repr {
+            let start = start.min(*len);
+            let count = count.min(*len - start);
+            map.advise_willneed(
+                offset + start * T::SIZE,
+                count * T::SIZE,
+            );
+        }
+    }
+
+    /// Prefetch hint for the whole section.
+    pub fn advise_all(&self) {
+        if let Repr::Mapped { len, .. } = &self.repr {
+            self.advise_range(0, *len);
+        }
+    }
+}
+
+impl<T: Pod> Deref for SectionBuf<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        match &self.repr {
+            Repr::Owned(v) => v,
+            Repr::Mapped { map, offset, len } => unsafe {
+                // Safe: `mapped` checked bounds and alignment, `T` is
+                // sealed to byte-compatible scalars, and the Arc keeps
+                // the mapping alive for the borrow's lifetime.
+                std::slice::from_raw_parts(
+                    map.as_ptr().add(*offset) as *const T,
+                    *len,
+                )
+            },
+        }
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for SectionBuf<T> {
+    fn from(v: Vec<T>) -> SectionBuf<T> {
+        SectionBuf { repr: Repr::Owned(v) }
+    }
+}
+
+impl<T: Pod> Default for SectionBuf<T> {
+    fn default() -> SectionBuf<T> {
+        SectionBuf { repr: Repr::Owned(Vec::new()) }
+    }
+}
+
+impl<T: Pod> Clone for SectionBuf<T> {
+    fn clone(&self) -> SectionBuf<T> {
+        match &self.repr {
+            Repr::Owned(v) => SectionBuf { repr: Repr::Owned(v.clone()) },
+            Repr::Mapped { map, offset, len } => SectionBuf {
+                repr: Repr::Mapped {
+                    map: map.clone(),
+                    offset: *offset,
+                    len: *len,
+                },
+            },
+        }
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for SectionBuf<T> {
+    fn eq(&self, other: &SectionBuf<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for SectionBuf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SectionBuf")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+/// Read one length-prefixed section as a mapped view: consume the u64
+/// element-count prefix, record the payload's absolute file offset,
+/// seek past the payload, and hand back a [`SectionBuf`] window into
+/// `src`. Requires a reader opened at byte 0 of the same file `src`
+/// maps (so `consumed()` is an absolute offset) — `persist::open_file`
+/// guarantees this.
+pub fn read_section<T: Pod, R: Read + Seek>(
+    r: &mut BinReader<R>,
+    src: &MapSource,
+) -> io::Result<SectionBuf<T>> {
+    let n = r.usize()?;
+    let bytes = (n as u64)
+        .checked_mul(T::SIZE as u64)
+        .ok_or_else(|| invalid(format!("section length {n} overflows")))?;
+    if let Some(rem) = r.remaining() {
+        if bytes > rem {
+            return Err(invalid(format!(
+                "truncated section: need {bytes} bytes, {rem} remain"
+            )));
+        }
+    }
+    let offset = usize::try_from(r.consumed()).map_err(|_| {
+        invalid("section offset overflows usize".to_string())
+    })?;
+    r.skip_seek(bytes)?;
+    SectionBuf::mapped(src.mmap().clone(), offset, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Cursor, Write};
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "pallas_store_{tag}_{}_{n}.bin",
+            std::process::id()
+        ))
+    }
+
+    fn write_tmp(tag: &str, bytes: &[u8]) -> PathBuf {
+        let path = tmp_path(tag);
+        std::fs::File::create(&path).unwrap().write_all(bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn owned_roundtrip_and_accounting() {
+        let buf: SectionBuf<u32> = vec![1u32, 2, 3].into();
+        assert!(!buf.is_mapped());
+        assert_eq!(&buf[..], &[1, 2, 3]);
+        assert_eq!(buf.resident_bytes(), 12);
+        assert_eq!(buf.mapped_bytes(), 0);
+        buf.advise_all(); // no-op on owned
+        let d: SectionBuf<u32> = SectionBuf::default();
+        assert!(d.is_empty());
+        assert_eq!(d.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn mapped_view_is_bitwise_equal_and_unaccounted_as_resident() {
+        let vals: Vec<u64> = (0..64).map(|i| i * 0x0123_4567_89ab).collect();
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let path = write_tmp("aligned", &bytes);
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        let buf = SectionBuf::<u64>::mapped(map, 0, vals.len()).unwrap();
+        assert!(buf.is_mapped());
+        assert_eq!(&buf[..], &vals[..]);
+        assert_eq!(buf.resident_bytes(), 0);
+        assert_eq!(buf.mapped_bytes(), vals.len() * 8);
+        buf.advise_range(10, 20);
+        buf.advise_all();
+        // owned vs mapped compare equal element-wise
+        let owned: SectionBuf<u64> = vals.clone().into();
+        assert_eq!(owned, buf);
+        let clone = buf.clone();
+        assert_eq!(&clone[..], &vals[..]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn misaligned_section_decodes_to_owned_copy() {
+        // One junk byte up front forces every 4-byte element off
+        // alignment; contents must still be bit-identical.
+        let vals: Vec<f32> = (0..33).map(|i| i as f32 * 0.37 - 3.0).collect();
+        let mut bytes = vec![0xEEu8];
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let path = write_tmp("misaligned", &bytes);
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        let buf = SectionBuf::<f32>::mapped(map, 1, vals.len()).unwrap();
+        assert!(!buf.is_mapped(), "misaligned view must fall back to owned");
+        assert_eq!(buf.resident_bytes(), vals.len() * 4);
+        for (a, b) in buf.iter().zip(&vals) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // single-byte sections map regardless of offset parity
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        let bytes_view = SectionBuf::<u8>::mapped(map, 1, 8).unwrap();
+        assert!(bytes_view.is_mapped());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mapped_bounds_are_checked() {
+        let path = write_tmp("bounds", &[0u8; 16]);
+        let map = Arc::new(Mmap::open(&path).unwrap());
+        assert!(SectionBuf::<u64>::mapped(map.clone(), 0, 2).is_ok());
+        assert!(SectionBuf::<u64>::mapped(map.clone(), 0, 3).is_err());
+        assert!(SectionBuf::<u64>::mapped(map.clone(), 16, 1).is_err());
+        assert!(SectionBuf::<u8>::mapped(map, usize::MAX, 2).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn read_section_consumes_prefix_and_windows_payload() {
+        // Layout: [u64 count][payload u32s][u64 count][payload u8s]
+        let words: Vec<u32> = (0..9).map(|i| i * 1001).collect();
+        let tail: Vec<u8> = vec![7, 8, 9];
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(words.len() as u64).to_le_bytes());
+        for w in &words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        bytes.extend_from_slice(&(tail.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&tail);
+        let path = write_tmp("section", &bytes);
+        let src = MapSource::open(&path).unwrap();
+        let mut r = BinReader::raw_with_limit(
+            Cursor::new(bytes.clone()),
+            bytes.len() as u64,
+        );
+        let w: SectionBuf<u32> = read_section(&mut r, &src).unwrap();
+        let t: SectionBuf<u8> = read_section(&mut r, &src).unwrap();
+        assert_eq!(&w[..], &words[..]);
+        assert_eq!(&t[..], &tail[..]);
+        assert!(t.is_mapped());
+        assert_eq!(r.consumed(), bytes.len() as u64);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn read_section_rejects_truncated_payload() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(1000u64).to_le_bytes());
+        bytes.extend_from_slice(&[1u8; 8]);
+        let path = write_tmp("trunc", &bytes);
+        let src = MapSource::open(&path).unwrap();
+        let mut r = BinReader::raw_with_limit(
+            Cursor::new(bytes.clone()),
+            bytes.len() as u64,
+        );
+        let got: io::Result<SectionBuf<u32>> = read_section(&mut r, &src);
+        assert!(got.is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn storage_mode_parses_cli_spellings() {
+        assert_eq!(StorageMode::parse("resident"), Some(StorageMode::Resident));
+        assert_eq!(StorageMode::parse("mapped"), Some(StorageMode::Mapped));
+        assert_eq!(StorageMode::parse("disk"), None);
+        assert_eq!(StorageMode::default(), StorageMode::Resident);
+    }
+}

@@ -248,6 +248,13 @@ fn cmd_serve(prog: &str, rest: &[String]) -> i32 {
             "raw-row retention: memory | disk | drop",
         )
         .flag(
+            "storage",
+            "resident",
+            "sealed-segment residency: resident | mapped (mapped serves \
+             hot sections via mmap from the snapshot; needs \
+             --snapshot-dir to take effect on restore)",
+        )
+        .flag(
             "plan",
             "fixed",
             "query planning mode for the in-process load drive: \
@@ -264,6 +271,18 @@ fn cmd_serve(prog: &str, rest: &[String]) -> i32 {
             return 2;
         }
     };
+    let storage = match hybrid_ip::hybrid::store::StorageMode::parse(
+        args.str_("storage"),
+    ) {
+        Some(mode) => mode,
+        None => {
+            eprintln!(
+                "unknown --storage '{}' (resident|mapped)",
+                args.str_("storage")
+            );
+            return 2;
+        }
+    };
     let snapshot_dir = match args.str_("snapshot-dir") {
         "" => None,
         d => Some(std::path::PathBuf::from(d)),
@@ -271,6 +290,7 @@ fn cmd_serve(prog: &str, rest: &[String]) -> i32 {
     let server_cfg = ServerConfig {
         n_shards: args.usize("shards"),
         row_retention: retention,
+        storage,
         snapshot_dir: snapshot_dir.clone(),
         batch: hybrid_ip::coordinator::batcher::BatchPolicy {
             max_batch: args.usize("max-batch"),
@@ -439,7 +459,7 @@ fn cmd_query(prog: &str, rest: &[String]) -> i32 {
             Ok(m) => println!(
                 "server: n={} mean={:?} p50={:?} p99={:?} qps={:.1} \
                  (lifetime {:.1}) plans[fixed={} hybrid={} dense={} \
-                 sparse={}]",
+                 sparse={}] mem[resident={} mapped={}]",
                 m.count,
                 m.mean,
                 m.p50,
@@ -449,7 +469,9 @@ fn cmd_query(prog: &str, rest: &[String]) -> i32 {
                 m.plans.fixed,
                 m.plans.hybrid,
                 m.plans.dense_only,
-                m.plans.sparse_only
+                m.plans.sparse_only,
+                m.resident_bytes,
+                m.mapped_bytes
             ),
             Err(e) => eprintln!("metrics fetch failed: {e}"),
         }

@@ -20,8 +20,9 @@
 //! accumulated sums are independent of block traversal order and the
 //! Exact coding reproduces the raw CSC scan bit-for-bit.
 
-use std::io::{self, Read, Write};
+use std::io::{self, Read, Seek, Write};
 
+use crate::hybrid::store::{self, MapSource, SectionBuf};
 use crate::types::csr::CscMatrix;
 use crate::util::binio::{BinReader, BinWriter};
 
@@ -99,11 +100,13 @@ pub struct CompressedPostings {
     dim_blocks: Vec<u64>,
     blocks: Vec<BlockMeta>,
     /// Bit-packed row offsets, one contiguous run of words per block.
-    packed: Vec<u64>,
+    /// The three arenas are [`SectionBuf`]s so a mapped segment serves
+    /// them straight from its snapshot; block metadata stays owned.
+    packed: SectionBuf<u64>,
     /// Exact value arena (empty under Q8).
-    vals_f32: Vec<f32>,
+    vals_f32: SectionBuf<f32>,
     /// Q8 value arena (empty under Exact).
-    vals_q8: Vec<i8>,
+    vals_q8: SectionBuf<i8>,
 }
 
 #[inline]
@@ -124,47 +127,17 @@ fn offset_mask(bits: u8) -> u64 {
     (1u64 << bits) - 1
 }
 
-impl CompressedPostings {
-    /// Compress a CSC view. Postings of each dimension are re-ordered by
-    /// descending |value| (ties: ascending row, so the layout is a pure
-    /// function of the logical postings) before blocking.
-    pub fn from_csc(csc: &CscMatrix, spec: SparseCompression) -> Self {
-        assert!((1..=MAX_BLOCK_LEN).contains(&spec.block_len));
-        let n_dims = csc.n_cols();
-        let mut out = CompressedPostings {
-            spec,
-            n_rows: csc.n_rows,
-            nnz: csc.nnz(),
-            dim_blocks: Vec::with_capacity(n_dims + 1),
-            blocks: Vec::new(),
-            packed: Vec::new(),
-            vals_f32: Vec::new(),
-            vals_q8: Vec::new(),
-        };
-        out.dim_blocks.push(0);
-        let mut postings: Vec<(u32, f32)> = Vec::new();
-        let mut chunk: Vec<(u32, f32)> = Vec::new();
-        for j in 0..n_dims {
-            let (rows, vals) = csc.col(j);
-            postings.clear();
-            postings.extend(rows.iter().copied().zip(vals.iter().copied()));
-            postings.sort_unstable_by(|a, b| {
-                b.1.abs()
-                    .total_cmp(&a.1.abs())
-                    .then_with(|| a.0.cmp(&b.0))
-            });
-            for c in postings.chunks(spec.block_len) {
-                let max_abs = c[0].1.abs();
-                chunk.clear();
-                chunk.extend_from_slice(c);
-                chunk.sort_unstable_by_key(|p| p.0);
-                out.push_block(max_abs, &chunk);
-            }
-            out.dim_blocks.push(out.blocks.len() as u64);
-        }
-        out
-    }
+/// Mutable arena set used during construction; sealed into the
+/// immutable [`SectionBuf`]s of a [`CompressedPostings`] when done.
+struct Builder {
+    values: ValueCoding,
+    blocks: Vec<BlockMeta>,
+    packed: Vec<u64>,
+    vals_f32: Vec<f32>,
+    vals_q8: Vec<i8>,
+}
 
+impl Builder {
     /// Append one block; `postings` are row-ascending and non-empty.
     fn push_block(&mut self, max_abs: f32, postings: &[(u32, f32)]) {
         let base_row = postings[0].0;
@@ -183,7 +156,7 @@ impl CompressedPostings {
                 self.packed[w + 1] |= off >> (64 - sh);
             }
         }
-        let val_start = match self.spec.values {
+        let val_start = match self.values {
             ValueCoding::Exact => {
                 let s = self.vals_f32.len() as u64;
                 self.vals_f32.extend(postings.iter().map(|p| p.1));
@@ -209,6 +182,58 @@ impl CompressedPostings {
             bits,
             max_abs,
         });
+    }
+}
+
+impl CompressedPostings {
+    /// Compress a CSC view. Postings of each dimension are re-ordered by
+    /// descending |value| (ties: ascending row, so the layout is a pure
+    /// function of the logical postings) before blocking.
+    pub fn from_csc(csc: &CscMatrix, spec: SparseCompression) -> Self {
+        assert!((1..=MAX_BLOCK_LEN).contains(&spec.block_len));
+        let n_dims = csc.n_cols();
+        // Build into plain vectors, then seal them into section buffers
+        // once — the arenas are append-only during construction and
+        // immutable after.
+        let mut b = Builder {
+            values: spec.values,
+            blocks: Vec::new(),
+            packed: Vec::new(),
+            vals_f32: Vec::new(),
+            vals_q8: Vec::new(),
+        };
+        let mut dim_blocks = Vec::with_capacity(n_dims + 1);
+        dim_blocks.push(0);
+        let mut postings: Vec<(u32, f32)> = Vec::new();
+        let mut chunk: Vec<(u32, f32)> = Vec::new();
+        for j in 0..n_dims {
+            let (rows, vals) = csc.col(j);
+            postings.clear();
+            postings.extend(rows.iter().copied().zip(vals.iter().copied()));
+            postings.sort_unstable_by(|a, b| {
+                b.1.abs()
+                    .total_cmp(&a.1.abs())
+                    .then_with(|| a.0.cmp(&b.0))
+            });
+            for c in postings.chunks(spec.block_len) {
+                let max_abs = c[0].1.abs();
+                chunk.clear();
+                chunk.extend_from_slice(c);
+                chunk.sort_unstable_by_key(|p| p.0);
+                b.push_block(max_abs, &chunk);
+            }
+            dim_blocks.push(b.blocks.len() as u64);
+        }
+        CompressedPostings {
+            spec,
+            n_rows: csc.n_rows,
+            nnz: csc.nnz(),
+            dim_blocks,
+            blocks: b.blocks,
+            packed: b.packed.into(),
+            vals_f32: b.vals_f32.into(),
+            vals_q8: b.vals_q8.into(),
+        }
     }
 
     pub fn spec(&self) -> SparseCompression {
@@ -300,16 +325,50 @@ impl CompressedPostings {
             vals.extend(list.iter().map(|p| p.1));
             colptr.push(rows.len() as u64);
         }
-        CscMatrix { colptr, rows, vals, n_rows: self.n_rows }
+        CscMatrix {
+            colptr: colptr.into(),
+            rows: rows.into(),
+            vals: vals.into(),
+            n_rows: self.n_rows,
+        }
     }
 
-    /// Resident bytes of the compressed structures.
+    /// Resident (heap) bytes of the compressed structures — mapped
+    /// arenas pin none; metadata always stays resident.
     pub fn memory_bytes(&self) -> usize {
         self.dim_blocks.len() * 8
             + self.blocks.len() * std::mem::size_of::<BlockMeta>()
-            + self.packed.len() * 8
-            + self.vals_f32.len() * 4
-            + self.vals_q8.len()
+            + self.packed.resident_bytes()
+            + self.vals_f32.resident_bytes()
+            + self.vals_q8.resident_bytes()
+    }
+
+    /// Snapshot bytes the arenas serve through a mapping.
+    pub fn mapped_bytes(&self) -> usize {
+        self.packed.mapped_bytes()
+            + self.vals_f32.mapped_bytes()
+            + self.vals_q8.mapped_bytes()
+    }
+
+    /// Prefetch hint for dimension `j`'s packed words and values (its
+    /// blocks occupy contiguous arena runs by construction). No-op on
+    /// resident arenas; advisory only.
+    pub fn advise_dim(&self, j: usize) {
+        let metas = self.dim_metas(j);
+        let (first, last) = match (metas.first(), metas.last()) {
+            (Some(f), Some(l)) => (f, l),
+            _ => return,
+        };
+        let w0 = first.word_start as usize;
+        let w1 =
+            last.word_start as usize + words_for(last.len as usize, last.bits);
+        self.packed.advise_range(w0, w1 - w0);
+        let v0 = first.val_start as usize;
+        let v1 = last.val_start as usize + last.len as usize;
+        match self.spec.values {
+            ValueCoding::Exact => self.vals_f32.advise_range(v0, v1 - v0),
+            ValueCoding::Q8 => self.vals_q8.advise_range(v0, v1 - v0),
+        }
     }
 
     /// Serialize (snapshot v5 sparse-backend section). Arena offsets are
@@ -345,7 +404,18 @@ impl CompressedPostings {
     /// Deserialize with full validation: every structural invariant the
     /// scan and the early-exit bound rely on is re-checked (O(nnz), same
     /// bar as the raw-CSC snapshot reader).
-    pub fn read_from<R: Read>(r: &mut BinReader<R>) -> io::Result<Self> {
+    pub fn read_from<R: Read + Seek>(r: &mut BinReader<R>) -> io::Result<Self> {
+        Self::read_from_with(r, None)
+    }
+
+    /// As [`CompressedPostings::read_from`], optionally serving the
+    /// packed-word and value arenas as mapped views of `src` instead of
+    /// owned copies. Validation is identical either way (it touches the
+    /// mapped pages once; they stay clean and evictable).
+    pub fn read_from_with<R: Read + Seek>(
+        r: &mut BinReader<R>,
+        src: Option<&MapSource>,
+    ) -> io::Result<Self> {
         let bad = |m: &str| io::Error::new(io::ErrorKind::InvalidData, m.to_string());
         let values = match r.u8()? {
             0 => ValueCoding::Exact,
@@ -404,31 +474,54 @@ impl CompressedPostings {
         if total != nnz {
             return Err(bad("compressed postings: nnz mismatch"));
         }
-        let packed = r.slice_u64()?;
+        let packed: SectionBuf<u64> = match src {
+            Some(s) => store::read_section(r, s)?,
+            None => r.slice_u64()?.into(),
+        };
         if packed.len() as u64 != word_cursor {
             return Err(bad("compressed postings: packed arena size mismatch"));
         }
-        let (vals_f32, vals_q8) = match values {
-            ValueCoding::Exact => {
-                let v = r.slice_f32()?;
-                if v.len() != nnz {
-                    return Err(bad("compressed postings: value arena size mismatch"));
+        let (vals_f32, vals_q8): (SectionBuf<f32>, SectionBuf<i8>) =
+            match values {
+                ValueCoding::Exact => {
+                    let v: SectionBuf<f32> = match src {
+                        Some(s) => store::read_section(r, s)?,
+                        None => r.slice_f32()?.into(),
+                    };
+                    if v.len() != nnz {
+                        return Err(bad(
+                            "compressed postings: value arena size mismatch",
+                        ));
+                    }
+                    (v, SectionBuf::default())
                 }
-                (v, Vec::new())
-            }
-            ValueCoding::Q8 => {
-                let bytes = r.slice_u8()?;
-                if bytes.len() != nnz {
-                    return Err(bad("compressed postings: value arena size mismatch"));
+                ValueCoding::Q8 => {
+                    // On disk the codes are u8 casts of the i8 values —
+                    // the identical bit patterns — so an i8 view maps
+                    // the section zero-copy.
+                    let q: SectionBuf<i8> = match src {
+                        Some(s) => store::read_section(r, s)?,
+                        None => r
+                            .slice_u8()?
+                            .into_iter()
+                            .map(|b| b as i8)
+                            .collect::<Vec<i8>>()
+                            .into(),
+                    };
+                    if q.len() != nnz {
+                        return Err(bad(
+                            "compressed postings: value arena size mismatch",
+                        ));
+                    }
+                    if q.iter().any(|&c| c == i8::MIN) {
+                        // -128 would decode past max_abs and void the bound.
+                        return Err(bad(
+                            "compressed postings: q8 code out of range",
+                        ));
+                    }
+                    (SectionBuf::default(), q)
                 }
-                let q: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
-                if q.iter().any(|&c| c == i8::MIN) {
-                    // -128 would decode past max_abs and void the bound.
-                    return Err(bad("compressed postings: q8 code out of range"));
-                }
-                (Vec::new(), q)
-            }
-        };
+            };
         let out = CompressedPostings {
             spec: SparseCompression { block_len, values },
             n_rows,
@@ -601,9 +694,9 @@ mod tests {
         // Rows far apart force wide bit widths (up to 32) and multi-word
         // straddles.
         let csc = CscMatrix {
-            colptr: vec![0, 3],
-            rows: vec![5, 1_000_000, u32::MAX - 1],
-            vals: vec![0.25, -8.0, 2.0],
+            colptr: vec![0, 3].into(),
+            rows: vec![5, 1_000_000, u32::MAX - 1].into(),
+            vals: vec![0.25, -8.0, 2.0].into(),
             n_rows: u32::MAX as usize,
         };
         let c = CompressedPostings::from_csc(
@@ -627,7 +720,7 @@ mod tests {
                 c.write_into(&mut w).unwrap();
                 w.finish().unwrap();
             }
-            let mut r = BinReader::raw(&buf[..]);
+            let mut r = BinReader::raw(std::io::Cursor::new(&buf[..]));
             let back = CompressedPostings::read_from(&mut r).unwrap();
             assert_eq!(back.spec(), spec);
             assert_csc_bit_identical(&back.to_csc(), &c.to_csc());
@@ -639,7 +732,7 @@ mod tests {
             for tamper in [0usize, 9, buf.len() / 2, buf.len() - 1] {
                 let mut bad = buf.clone();
                 bad[tamper] ^= 0xFF;
-                let mut r = BinReader::raw(&bad[..]);
+                let mut r = BinReader::raw(std::io::Cursor::new(&bad[..]));
                 let _ = CompressedPostings::read_from(&mut r);
             }
         }
@@ -648,9 +741,9 @@ mod tests {
     #[test]
     fn q8_all_zero_values_quantize_to_zero() {
         let csc = CscMatrix {
-            colptr: vec![0, 2],
-            rows: vec![1, 7],
-            vals: vec![0.0, 0.0],
+            colptr: vec![0, 2].into(),
+            rows: vec![1, 7].into(),
+            vals: vec![0.0, 0.0].into(),
             n_rows: 10,
         };
         let c = CompressedPostings::from_csc(&csc, SparseCompression::q8());

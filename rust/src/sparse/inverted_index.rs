@@ -465,12 +465,31 @@ impl InvertedIndex {
     /// historically omitted, undercounting by 8 bytes/dim.
     pub fn memory_bytes(&self) -> usize {
         let postings = match &self.backend {
-            SparseBackend::Raw(csc) => {
-                csc.rows.len() * 4 + csc.vals.len() * 4 + csc.colptr.len() * 8
-            }
+            SparseBackend::Raw(csc) => csc.resident_bytes(),
             SparseBackend::Compressed(c) => c.memory_bytes(),
         };
         postings + self.dim_nnz.len() * 8
+    }
+
+    /// Snapshot bytes the posting sections serve through a mapping
+    /// (0 for fully resident indexes).
+    pub fn mapped_bytes(&self) -> usize {
+        match &self.backend {
+            SparseBackend::Raw(csc) => csc.mapped_bytes(),
+            SparseBackend::Compressed(c) => c.mapped_bytes(),
+        }
+    }
+
+    /// Prefetch hint for dimension `j`'s posting storage (mapped
+    /// backends only; advisory, never affects results).
+    pub fn advise_dim(&self, j: usize) {
+        if j >= self.n_dims() {
+            return;
+        }
+        match &self.backend {
+            SparseBackend::Raw(csc) => csc.advise_col(j),
+            SparseBackend::Compressed(c) => c.advise_dim(j),
+        }
     }
 }
 

@@ -2,6 +2,7 @@
 //! component Xˢ, and (transposed) the backing of the inverted index I
 //! (§2.2: the inverted index *is* the CSC view of Xˢ).
 
+use crate::hybrid::store::SectionBuf;
 use crate::types::sparse::SparseVector;
 
 /// CSR: row `i` occupies `indices/values[indptr[i]..indptr[i+1]]`.
@@ -121,7 +122,12 @@ impl CsrMatrix {
                 cursor[d as usize] += 1;
             }
         }
-        CscMatrix { colptr, rows, vals, n_rows }
+        CscMatrix {
+            colptr: colptr.into(),
+            rows: rows.into(),
+            vals: vals.into(),
+            n_rows,
+        }
     }
 
     /// Apply a row permutation: new row `i` = old row `perm[i]`.
@@ -142,12 +148,14 @@ impl CsrMatrix {
 }
 
 /// CSC: column `j` occupies `rows/vals[colptr[j]..colptr[j+1]]`, rows
-/// sorted ascending — exactly the paper's inverted list I_j.
+/// sorted ascending — exactly the paper's inverted list I_j. The three
+/// sections are [`SectionBuf`]s so a sealed segment can serve them
+/// straight from a mapped snapshot.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CscMatrix {
-    pub colptr: Vec<u64>,
-    pub rows: Vec<u32>,
-    pub vals: Vec<f32>,
+    pub colptr: SectionBuf<u64>,
+    pub rows: SectionBuf<u32>,
+    pub vals: SectionBuf<f32>,
     pub n_rows: usize,
 }
 
@@ -165,6 +173,34 @@ impl CscMatrix {
         let s = self.colptr[j] as usize;
         let e = self.colptr[j + 1] as usize;
         (&self.rows[s..e], &self.vals[s..e])
+    }
+
+    /// Heap bytes pinned by the three sections (0 for mapped ones).
+    pub fn resident_bytes(&self) -> usize {
+        self.colptr.resident_bytes()
+            + self.rows.resident_bytes()
+            + self.vals.resident_bytes()
+    }
+
+    /// Snapshot bytes served through a mapping (0 when resident).
+    pub fn mapped_bytes(&self) -> usize {
+        self.colptr.mapped_bytes()
+            + self.rows.mapped_bytes()
+            + self.vals.mapped_bytes()
+    }
+
+    /// Prefetch hint for column `j`'s posting list (mapped backends
+    /// only; advisory, never affects results).
+    pub fn advise_col(&self, j: usize) {
+        if j + 1 >= self.colptr.len() {
+            return;
+        }
+        let s = self.colptr[j] as usize;
+        let e = self.colptr[j + 1] as usize;
+        if e > s {
+            self.rows.advise_range(s, e - s);
+            self.vals.advise_range(s, e - s);
+        }
     }
 }
 

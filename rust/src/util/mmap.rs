@@ -1,0 +1,276 @@
+//! Read-only memory-mapped files through thin `extern "C"` FFI — the
+//! workspace is zero-dependency, so no `libc` crate. Unix targets map
+//! the file `PROT_READ`/`MAP_SHARED` and expose `madvise(WILLNEED)`
+//! for planner-driven prefetch; other targets degrade to reading the
+//! whole file into an owned buffer (identical API and results, no
+//! out-of-core benefit).
+//!
+//! Safety model: mappings are strictly read-only and live as long as
+//! the [`Mmap`] value. Callers (see `hybrid::store::SectionBuf`) keep
+//! an `Arc<Mmap>` alongside every raw view so the mapping can never be
+//! unmapped while a slice into it exists. On unix an unlinked file
+//! keeps its mapping valid, so snapshot-epoch pruning cannot
+//! invalidate a live mapping. Mutating a snapshot file that is being
+//! served `Mapped` is undefined behaviour by contract — snapshots are
+//! write-once (tmp + rename), which the persistence layer guarantees.
+
+pub use imp::Mmap;
+
+#[cfg(unix)]
+mod imp {
+    use std::fs::File;
+    use std::io;
+    use std::ops::Deref;
+    use std::os::unix::io::AsRawFd;
+    use std::path::Path;
+
+    #[allow(non_camel_case_types)]
+    type c_int = i32;
+    #[allow(non_camel_case_types)]
+    type c_void = core::ffi::c_void;
+    #[allow(non_camel_case_types)]
+    type off_t = i64;
+
+    const PROT_READ: c_int = 1;
+    const MAP_SHARED: c_int = 1;
+    const MADV_WILLNEED: c_int = 3;
+    const MAP_FAILED: usize = usize::MAX;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: off_t,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+
+    /// Page granularity used to align `madvise` ranges. 4 KiB is the
+    /// page size everywhere this repo's CI runs; on larger-page
+    /// systems a misaligned hint fails with `EINVAL` and is ignored
+    /// (prefetch is advisory — correctness never depends on it).
+    const PAGE: usize = 4096;
+
+    /// A read-only, shared, whole-file memory mapping.
+    pub struct Mmap {
+        ptr: *const u8,
+        len: usize,
+    }
+
+    // Read-only mapping of an immutable snapshot file: shared access
+    // from any thread is safe.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        /// Map an open file in its entirety.
+        pub fn map(file: &File) -> io::Result<Mmap> {
+            let len = file.metadata()?.len();
+            let len = usize::try_from(len).map_err(|_| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "file too large to map on this platform",
+                )
+            })?;
+            if len == 0 {
+                // mmap(len = 0) is EINVAL; an empty mapping needs no
+                // syscall at all.
+                return Ok(Mmap {
+                    ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(),
+                    len: 0,
+                });
+            }
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_SHARED,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as usize == MAP_FAILED {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Mmap { ptr: ptr as *const u8, len })
+        }
+
+        /// Open `path` read-only and map it.
+        pub fn open(path: &Path) -> io::Result<Mmap> {
+            Mmap::map(&File::open(path)?)
+        }
+
+        pub fn len(&self) -> usize {
+            self.len
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.len == 0
+        }
+
+        pub fn as_ptr(&self) -> *const u8 {
+            self.ptr
+        }
+
+        /// Hint the kernel to fault in `[offset, offset + len)` ahead
+        /// of the scan that is about to stream it. Best-effort: the
+        /// range is clamped to the mapping, aligned down to [`PAGE`],
+        /// and any `madvise` failure is ignored.
+        pub fn advise_willneed(&self, offset: usize, len: usize) {
+            if self.len == 0 || len == 0 || offset >= self.len {
+                return;
+            }
+            let end = offset.saturating_add(len).min(self.len);
+            let start = offset - (offset % PAGE);
+            unsafe {
+                madvise(
+                    self.ptr.add(start) as *mut c_void,
+                    end - start,
+                    MADV_WILLNEED,
+                );
+            }
+        }
+    }
+
+    impl Deref for Mmap {
+        type Target = [u8];
+
+        fn deref(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            if self.len > 0 {
+                unsafe {
+                    munmap(self.ptr as *mut c_void, self.len);
+                }
+            }
+        }
+    }
+
+    impl std::fmt::Debug for Mmap {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Mmap").field("len", &self.len).finish()
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    use std::fs::File;
+    use std::io::{self, Read};
+    use std::ops::Deref;
+    use std::path::Path;
+
+    /// Portable fallback: the whole file read into an owned buffer.
+    /// Same API as the unix mapping, without the out-of-core benefit.
+    #[derive(Debug)]
+    pub struct Mmap {
+        buf: Vec<u8>,
+    }
+
+    impl Mmap {
+        pub fn map(file: &File) -> io::Result<Mmap> {
+            let mut buf = Vec::new();
+            let mut f = file.try_clone()?;
+            f.read_to_end(&mut buf)?;
+            Ok(Mmap { buf })
+        }
+
+        pub fn open(path: &Path) -> io::Result<Mmap> {
+            Mmap::map(&File::open(path)?)
+        }
+
+        pub fn len(&self) -> usize {
+            self.buf.len()
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.buf.is_empty()
+        }
+
+        pub fn as_ptr(&self) -> *const u8 {
+            self.buf.as_ptr()
+        }
+
+        pub fn advise_willneed(&self, _offset: usize, _len: usize) {}
+    }
+
+    impl Deref for Mmap {
+        type Target = [u8];
+
+        fn deref(&self) -> &[u8] {
+            &self.buf
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Mmap;
+    use std::io::Write;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "pallas_mmap_{tag}_{}_{n}.bin",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn maps_file_contents_bytewise() {
+        let path = tmp_path("contents");
+        let bytes: Vec<u8> = (0..4096u32).map(|i| (i * 7) as u8).collect();
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&bytes)
+            .unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert_eq!(map.len(), bytes.len());
+        assert_eq!(&map[..], &bytes[..]);
+        // Prefetch hints must be accepted anywhere in (or past) range.
+        map.advise_willneed(0, map.len());
+        map.advise_willneed(100, 50);
+        map.advise_willneed(map.len(), 10);
+        map.advise_willneed(0, usize::MAX);
+        drop(map);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let path = tmp_path("empty");
+        std::fs::File::create(&path).unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(&map[..], &[] as &[u8]);
+        map.advise_willneed(0, 1);
+        drop(map);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mapping_survives_unlink() {
+        // Epoch pruning may delete a snapshot file that is still
+        // mapped; the mapping must stay readable.
+        let path = tmp_path("unlink");
+        std::fs::File::create(&path)
+            .unwrap()
+            .write_all(&[42u8; 512])
+            .unwrap();
+        let map = Mmap::open(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert!(map.iter().all(|&b| b == 42));
+    }
+}

@@ -5,6 +5,7 @@
 pub mod binio;
 pub mod cli;
 pub mod json;
+pub mod mmap;
 pub mod proptest;
 pub mod rng;
 pub mod simd;

@@ -244,6 +244,205 @@ fn run_sequence(run_seed: u64) {
     );
 }
 
+/// Out-of-core gate (ISSUE 9): the seeded randomized operation sequence
+/// again, but serving from a **mapped base segment** — the index is
+/// restored with `StorageMode::Mapped` so its sealed sections come
+/// straight off the snapshot through the pager — with a resident twin
+/// restored from the same snapshot driven in lockstep. Every step must
+/// keep the two bit-identical across the query battery (Fixed, Adaptive,
+/// Aggressive) while the full invariant battery holds on the mapped
+/// side.
+#[test]
+fn mapped_base_segment_sequence_matches_resident() {
+    for &run_seed in &[0x0CF0u64, 0x0CF1] {
+        run_mapped_sequence(run_seed);
+    }
+}
+
+fn run_mapped_sequence(run_seed: u64) {
+    use hybrid_ip::hybrid::store::StorageMode;
+    let cfg = tiny(160);
+    let data = cfg.generate(run_seed);
+    let mcfg = MutableConfig {
+        delta_seal_rows: 24,
+        merge_floor_rows: 48,
+        merge_fraction: 0.3,
+        ..MutableConfig::default()
+    };
+    let mapped_cfg =
+        MutableConfig { storage: StorageMode::Mapped, ..mcfg.clone() };
+    // Seed a snapshot, then restore it twice: once through the pager,
+    // once into owned buffers.
+    let base_snap = tmp_file(&format!("ooc_base_{run_seed:x}"));
+    MutableHybridIndex::from_dataset(&data, 0, mcfg.clone())
+        .save(&base_snap)
+        .expect("seed snapshot");
+    let mut idx = MutableHybridIndex::load(&base_snap, mapped_cfg.clone())
+        .expect("mapped restore");
+    let mut twin = MutableHybridIndex::load(&base_snap, mcfg.clone())
+        .expect("resident restore");
+    assert!(idx.mapped_bytes() > 0, "base segment must be mapped");
+    assert_eq!(twin.mapped_bytes(), 0);
+    let mut model = ReferenceModel::from_dataset(&data, 0);
+    let mut rng = Rng::new(run_seed ^ 0x00C0);
+    let mut next_id = data.len() as u32;
+
+    let snap = tmp_file(&format!("ooc_seq_{run_seed:x}"));
+    for step in 0..32 {
+        let ctx = format!("mapped seed={run_seed:#x} step={step}");
+        match rng.below(10) {
+            0..=2 => {
+                let (s, d) = random_doc(
+                    &mut rng,
+                    model.sparse_dims(),
+                    model.dense_dims(),
+                    12,
+                );
+                let id = next_id;
+                next_id += 1;
+                assert!(!idx.upsert(id, s.clone(), d.clone()), "{ctx}");
+                assert!(!twin.upsert(id, s.clone(), d.clone()), "{ctx}");
+                assert!(!model.upsert(id, s, d));
+            }
+            3..=4 => {
+                if let Some(id) = model.random_live_id(&mut rng) {
+                    let (s, d) = random_doc(
+                        &mut rng,
+                        model.sparse_dims(),
+                        model.dense_dims(),
+                        12,
+                    );
+                    assert!(idx.upsert(id, s.clone(), d.clone()), "{ctx}");
+                    assert!(twin.upsert(id, s.clone(), d.clone()), "{ctx}");
+                    assert!(model.upsert(id, s, d));
+                }
+            }
+            5..=6 => {
+                if let Some(id) = model.random_live_id(&mut rng) {
+                    assert!(idx.delete(id), "{ctx}: delete live {id}");
+                    assert!(twin.delete(id), "{ctx}");
+                    assert!(model.delete(id));
+                }
+            }
+            7 => {
+                idx.flush();
+                twin.flush();
+            }
+            8 => {
+                // Mapped merges re-read rows through the segment's disk
+                // pointers into the snapshot (no resident raw rows).
+                idx.merge().expect("merge with mapped base");
+                twin.merge().expect("merge resident twin");
+                assert!(idx.n_segments() <= 1, "{ctx}: merge left deltas");
+            }
+            // Snapshot round trip under the pager: save fsyncs, renames,
+            // and *remaps* onto the fresh snapshot before serving again.
+            _ => {
+                idx.save(&snap).expect("save mapped snapshot");
+                let loaded =
+                    MutableHybridIndex::load(&snap, mapped_cfg.clone())
+                        .expect("mapped reload");
+                assert!(loaded.mapped_bytes() > 0, "{ctx}: remap lost");
+                idx = loaded;
+            }
+        }
+        let queries = query_battery(&model, &mut rng);
+        check_mutable_invariants(&idx, &model, &queries, &ctx);
+        // Lockstep: mapped serving == resident serving, bit for bit, in
+        // every plan mode (Aggressive included — its certified early
+        // exit must make the same skip decisions from mapped blocks).
+        let fixed = SearchParams::new(10).with_alpha(20.0).with_beta(5.0);
+        for (qi, q) in queries.iter().enumerate() {
+            for (mode, params) in [
+                ("fixed", fixed),
+                ("adaptive", fixed.adaptive()),
+                ("aggressive", fixed.aggressive()),
+            ] {
+                assert_hits_identical(
+                    &idx.search(q, &params),
+                    &twin.search(q, &params),
+                    &format!("{ctx} q{qi} {mode}: mapped vs resident"),
+                );
+            }
+        }
+    }
+    std::fs::remove_file(&base_snap).ok();
+    std::fs::remove_file(&snap).ok();
+}
+
+/// Out-of-core gate (ISSUE 9), static engine: a mapped index under both
+/// batch shard modes and the sequential pipeline is bit-identical to
+/// the resident load of the same snapshot, in Fixed, Adaptive, and
+/// Aggressive plan modes (exact-coded compressed postings so Aggressive
+/// early exit actually arms over mapped block arenas).
+#[test]
+fn mapped_static_engine_modes_agree_bitwise() {
+    use hybrid_ip::sparse::compressed::SparseCompression;
+    let cfg = tiny(300);
+    let data = cfg.generate(0x0CF2);
+    let built = HybridIndex::build(
+        &data,
+        &IndexConfig::default().with_sparse_compression(
+            SparseCompression::exact().with_block_len(8),
+        ),
+    );
+    let snap = tmp_file("ooc_static");
+    built.save(&snap).expect("save");
+    let resident = HybridIndex::load(&snap).expect("resident load");
+    let mapped = HybridIndex::load_mapped(&snap).expect("mapped load");
+    assert!(mapped.mapped_bytes() > 0);
+
+    let mut rng = Rng::new(0x0CF3);
+    let mut queries = cfg.related_queries(&data, 0x0CF4, 6);
+    queries.push(dense_only_query(&mut rng, data.dense_dim()));
+    queries.push(sparse_only_query(
+        &mut rng,
+        data.sparse_dim(),
+        data.dense_dim(),
+    ));
+
+    let by_query = BatchEngine::with_config(
+        &mapped,
+        EngineConfig { threads: 3, mode: ShardMode::ByQuery },
+    );
+    let by_data = BatchEngine::with_config(
+        &mapped,
+        EngineConfig { threads: 3, mode: ShardMode::ByData },
+    );
+    let mut sr = SearchScratch::new(&resident);
+    let mut sm = SearchScratch::new(&mapped);
+    let base = SearchParams::new(10).with_alpha(20.0);
+    for (mode, params) in [
+        ("fixed", base),
+        ("adaptive", base.adaptive()),
+        ("aggressive", base.aggressive()),
+    ] {
+        let bq = by_query.search_batch(&mapped, &queries, &params);
+        let bd = by_data.search_batch(&mapped, &queries, &params);
+        for (qi, q) in queries.iter().enumerate() {
+            let ctx = format!("{mode} q{qi}");
+            let (want, _) = search_with(&resident, q, &params, &mut sr);
+            let (got, _) = search_with(&mapped, q, &params, &mut sm);
+            assert_hits_identical(
+                &want,
+                &got,
+                &format!("{ctx}: mapped vs resident (sequential)"),
+            );
+            assert_hits_identical(
+                &want,
+                &bq.hits[qi],
+                &format!("{ctx}: mapped ByQuery vs resident"),
+            );
+            assert_hits_identical(
+                &want,
+                &bd.hits[qi],
+                &format!("{ctx}: mapped ByData vs resident"),
+            );
+        }
+    }
+    std::fs::remove_file(&snap).ok();
+}
+
 /// Invariant 2 on the static engine: ByQuery and ByData shard modes and
 /// the sequential pipeline agree bit-for-bit, in both plan modes.
 #[test]

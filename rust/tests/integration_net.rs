@@ -221,6 +221,10 @@ fn mutations_and_metrics_roundtrip_the_wire() {
     let m1 = client.metrics().unwrap();
     assert!(m1.count >= 1);
     assert!(m1.lifetime_qps > 0.0);
+    // The memory split rides the same frame: a resident cluster pins
+    // heap bytes and maps nothing.
+    assert!(m1.resident_bytes > 0);
+    assert_eq!(m1.mapped_bytes, 0);
     let m2 = client.metrics().unwrap();
     assert_eq!(m2.qps, 0.0, "no traffic between snapshots");
     assert!(m2.count >= m1.count);

@@ -469,3 +469,79 @@ fn drop_retention_cluster_serves_with_less_memory() {
     }
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn mapped_cluster_serves_bit_identical_with_less_resident_memory() {
+    use hybrid_ip::hybrid::store::StorageMode;
+    let mut qcfg = tiny(400);
+    qcfg.sparse_dims = 2048;
+    qcfg.avg_nnz = 20;
+    let data = qcfg.generate(115);
+    let queries = qcfg.related_queries(&data, 116, 6);
+    let params = SearchParams::new(10).with_alpha(20.0).with_beta(6.0);
+    let dir = snapshot_dir("server_mapped");
+    let base_cfg = ServerConfig {
+        n_shards: 2,
+        snapshot_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let server = Server::start(&data, &base_cfg);
+    server.save_snapshot().unwrap();
+
+    // restore the same snapshot out-of-core: hot sections served via
+    // mmap straight from the epoch's shard files
+    let mapped_cfg = ServerConfig {
+        storage: StorageMode::Mapped,
+        ..base_cfg.clone()
+    };
+    let mapped = Server::restore(&mapped_cfg).unwrap();
+
+    // the memory split must move: mappings appear, resident shrinks
+    let mr = server.snapshot();
+    let mm = mapped.snapshot();
+    assert!(mm.mapped_bytes > 0, "mapped cluster reports mappings");
+    assert_eq!(mr.mapped_bytes, 0, "resident cluster has none");
+    assert!(
+        mm.resident_bytes < mr.resident_bytes,
+        "mapped resident {} must undercut resident {}",
+        mm.resident_bytes,
+        mr.resident_bytes
+    );
+
+    // bit-identical serving, single and batch paths
+    for (qi, q) in queries.iter().enumerate() {
+        let a = server.search(q, &params);
+        let b = mapped.search(q, &params);
+        assert_eq!(a.len(), b.len(), "query {qi}");
+        for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {
+            assert_eq!(ia, ib, "query {qi}: id diverged");
+            assert_eq!(sa.to_bits(), sb.to_bits(), "query {qi}");
+        }
+    }
+    let ab = server.search_batch(&queries, &params);
+    let bb = mapped.search_batch(&queries, &params);
+    for (qi, (la, lb)) in ab.iter().zip(&bb).enumerate() {
+        assert_eq!(la.len(), lb.len());
+        for ((ia, sa), (ib, sb)) in la.iter().zip(lb) {
+            assert_eq!(ia, ib, "batch query {qi}: id diverged");
+            assert_eq!(sa.to_bits(), sb.to_bits(), "batch query {qi}");
+        }
+    }
+
+    // the mapped cluster stays mutable: upserts land in resident delta
+    // tiers, and the next snapshot remaps onto the fresh epoch
+    let n = data.len();
+    for i in 0..10 {
+        let (s, d) = payload(&data, i);
+        mapped.upsert((n + i) as u32, s, d);
+    }
+    mapped.flush().unwrap();
+    mapped.save_snapshot().unwrap();
+    assert!(dir.join("epoch-1").join("shard-0.snap").exists());
+    assert!(!dir.join("epoch-0").exists(), "old epoch pruned");
+    let m2 = mapped.snapshot();
+    assert!(m2.mapped_bytes > 0, "still mapped after remap");
+    let hits = mapped.search(&queries[0], &params);
+    assert_eq!(hits.len(), 10);
+    std::fs::remove_dir_all(&dir).ok();
+}

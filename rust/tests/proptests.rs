@@ -698,3 +698,169 @@ fn prop_compressed_blocks_decode_bit_identically() {
         assert_eq!(a, b, "compressed scan sums diverged from raw");
     });
 }
+
+// ------------------------------------------------------------ out-of-core
+
+#[test]
+fn prop_mapped_reads_bitwise_equal_resident() {
+    use hybrid_ip::hybrid::store::StorageMode;
+    use hybrid_ip::sparse::compressed::SparseCompression;
+    forall(10, 0x00C0FE, |g| {
+        let sd = g.usize_in(4, 48);
+        let dd = g.usize_in(1, 5) * 2;
+        // Random sparse coding: raw CSC, Exact blocks, or Q8 blocks
+        // (tiny block lengths force ragged tails and 1-posting blocks).
+        let compression = match g.usize_in(0, 2) {
+            0 => None,
+            1 => Some(
+                SparseCompression::exact()
+                    .with_block_len(g.usize_in(1, 9)),
+            ),
+            _ => Some(
+                SparseCompression::q8().with_block_len(g.usize_in(1, 9)),
+            ),
+        };
+        let icfg = IndexConfig {
+            sparse_compression: compression,
+            ..Default::default()
+        };
+
+        // Part 1 — raw sections: a sealed index with ragged rows (nnz=0
+        // rows give empty postings lists) must read back byte-for-byte
+        // identical through the pager as through owned buffers.
+        let n = g.usize_in(8, 80);
+        let sparse_rows: Vec<SparseVector> = (0..n)
+            .map(|_| {
+                let nnz = g.usize_in(0, sd.min(9));
+                let (dims, vals) = g.sparse(sd, nnz);
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        let dense_rows: Vec<Vec<f32>> =
+            (0..n).map(|_| g.vec_gauss(dd)).collect();
+        let data = HybridDataset::new(
+            CsrMatrix::from_rows(&sparse_rows, sd),
+            DenseMatrix::from_rows(&dense_rows),
+        );
+        let index = HybridIndex::build(&data, &icfg);
+        let dir = std::env::temp_dir().join("hybrid_ip_mapped_prop");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("case-{:x}.snap", g.case_seed));
+        index.save(&path).unwrap();
+        let resident = HybridIndex::load(&path).unwrap();
+        let mapped = HybridIndex::load_mapped(&path).unwrap();
+        assert!(mapped.mapped_bytes() > 0, "pager served no section");
+        assert_eq!(resident.mapped_bytes(), 0);
+        assert_eq!(
+            &resident.dense_codes.data[..],
+            &mapped.dense_codes.data[..],
+            "LUT16 code section diverged"
+        );
+        assert_eq!(
+            &resident.pq_index.codes[..],
+            &mapped.pq_index.codes[..],
+            "PQ code section diverged"
+        );
+        match (&resident.dense_residual, &mapped.dense_residual) {
+            (Some(a), Some(b)) => {
+                assert_eq!(&a.codes[..], &b.codes[..], "SQ codes diverged");
+                assert_eq!(a.lo, b.lo);
+                assert_eq!(a.step, b.step);
+            }
+            (None, None) => {}
+            _ => panic!("residual presence diverged"),
+        }
+        // Postings content: per-query sparse accumulations must agree
+        // bit-for-bit (covers rows, vals, and block arenas end to end).
+        let mut acc = Accumulator::new(n);
+        for _ in 0..4 {
+            let q = random_query(g, sd, dd);
+            let mut a: Vec<(u32, u32)> = resident
+                .sparse_index
+                .scores(&q.sparse, &mut acc)
+                .into_iter()
+                .map(|(r, s)| (r, s.to_bits()))
+                .collect();
+            let mut b: Vec<(u32, u32)> = mapped
+                .sparse_index
+                .scores(&q.sparse, &mut acc)
+                .into_iter()
+                .map(|(r, s)| (r, s.to_bits()))
+                .collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "mapped sparse scan diverged");
+            // End-to-end search: same ids, same score bits.
+            let params = SearchParams::new(g.usize_in(1, 10));
+            let ha = hybrid_ip::hybrid::search::search(&resident, &q, &params);
+            let hb = hybrid_ip::hybrid::search::search(&mapped, &q, &params);
+            assert_eq!(ha.len(), hb.len());
+            for (x, y) in ha.iter().zip(&hb) {
+                assert_eq!(x.id, y.id, "mapped search id diverged");
+                assert_eq!(
+                    x.score.to_bits(),
+                    y.score.to_bits(),
+                    "mapped search score bits diverged"
+                );
+            }
+        }
+
+        // Part 2 — tombstones + deltas: a mutable index with deletes in
+        // the sealed tier must serve identically when restored mapped,
+        // and keep doing so as resident deltas pile on top.
+        let mcfg = MutableConfig {
+            index: icfg,
+            delta_seal_rows: g.usize_in(4, 16),
+            ..Default::default()
+        };
+        let mut mutable = MutableHybridIndex::new(sd, dd, mcfg.clone());
+        for (i, s) in sparse_rows.iter().enumerate() {
+            mutable.upsert(i as u32, s.clone(), dense_rows[i].clone());
+        }
+        mutable.flush();
+        for _ in 0..g.usize_in(1, (n / 4).max(1)) {
+            mutable.delete(g.usize_in(0, n - 1) as u32);
+        }
+        let mpath = dir.join(format!("case-{:x}-mut.snap", g.case_seed));
+        mutable.save(&mpath).unwrap();
+        let res = MutableHybridIndex::load(&mpath, mcfg.clone()).unwrap();
+        let mut map = MutableHybridIndex::load(
+            &mpath,
+            MutableConfig { storage: StorageMode::Mapped, ..mcfg.clone() },
+        )
+        .unwrap();
+        assert!(map.mapped_bytes() > 0);
+        let params = SearchParams::new(8);
+        for _ in 0..3 {
+            let q = random_query(g, sd, dd);
+            let ha = res.search(&q, &params);
+            let hb = map.search(&q, &params);
+            assert_eq!(ha.len(), hb.len(), "mapped mutable diverged");
+            for (x, y) in ha.iter().zip(&hb) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+        // Fresh rows land in resident tiers over the mapped base.
+        let mut res = res;
+        for i in 0..3u32 {
+            let nnz = g.usize_in(0, sd.min(6));
+            let (dims, vals) = g.sparse(sd, nnz);
+            let dvec = g.vec_gauss(dd);
+            res.upsert(n as u32 + i, SparseVector::new(dims.clone(), vals.clone()), dvec.clone());
+            map.upsert(n as u32 + i, SparseVector::new(dims, vals), dvec);
+        }
+        res.flush();
+        map.flush();
+        let q = random_query(g, sd, dd);
+        let ha = res.search(&q, &params);
+        let hb = map.search(&q, &params);
+        assert_eq!(ha.len(), hb.len());
+        for (x, y) in ha.iter().zip(&hb) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&mpath).ok();
+    });
+}
