@@ -7,12 +7,25 @@
 //! gray-code order, plus the sort itself ("takes few seconds even with
 //! millions of datapoints").
 //!
+//! Also benchmarks the SIMD sparse-scan kernels (decode + scatter-add
+//! + drain) against the scalar oracle on the cache-sorted layout, per
+//! posting backend (raw CSC, Exact blocks, Q8 blocks), and writes
+//! machine-readable `target/BENCH_sparse_scan.json` with scalar vs SIMD
+//! GB/s and the speedup. Identity of the drained (row, score) pairs is
+//! asserted before any timing is trusted, and the ≥1.5x Q8 speedup bar
+//! is hard-asserted where AVX2 is available.
+//!
 //!     cargo bench --bench micro_cache_sort
+
+use std::collections::BTreeMap;
 
 use hybrid_ip::benchkit::{self, bench, BenchConfig, Table};
 use hybrid_ip::data::synthetic::QuerySimConfig;
 use hybrid_ip::sparse::cache_sort::{cache_sort, gray_code_sort};
+use hybrid_ip::sparse::compressed::{CompressedPostings, SparseCompression};
 use hybrid_ip::sparse::inverted_index::{Accumulator, InvertedIndex};
+use hybrid_ip::util::json::Json;
+use hybrid_ip::util::simd::{force_scalar, has_avx2, set_force_scalar};
 
 fn main() {
     let n: usize = std::env::var("BENCH_N")
@@ -131,4 +144,137 @@ fn main() {
          compare rows 2 and 3)"
     );
     assert!(cs <= cu, "sorting increased cache-line touches");
+
+    // ---- scalar vs SIMD sparse-scan kernels, per posting backend ----
+    // Consult the env-derived dispatch state *before* any programmatic
+    // override, so PALLAS_FORCE_SCALAR runs stay scalar-only and the
+    // speedup bar is waived there.
+    let env_forced = force_scalar();
+    let sorted_csr = data_sparse.permute_rows(&perm);
+    let sorted_csc = sorted_csr.transpose();
+    let backends: Vec<(&str, InvertedIndex)> = vec![
+        ("raw", InvertedIndex::build(&sorted_csr)),
+        (
+            "exact",
+            InvertedIndex::from_compressed(CompressedPostings::from_csc(
+                &sorted_csc,
+                SparseCompression::exact(),
+            )),
+        ),
+        (
+            "q8",
+            InvertedIndex::from_compressed(CompressedPostings::from_csc(
+                &sorted_csc,
+                SparseCompression::q8(),
+            )),
+        ),
+    ];
+
+    let mut t = Table::new(
+        "sparse scan: scalar vs SIMD kernels (64 queries/iter)",
+        &["backend", "scalar GB/s", "simd GB/s", "speedup"],
+    );
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut q8_speedup = 0.0f64;
+    for (name, idx) in &backends {
+        // Identity first: the drained (row, score-bits) pairs under SIMD
+        // dispatch must match the scalar oracle exactly, else the
+        // throughput comparison is meaningless.
+        for (qi, q) in queries.iter().take(8).enumerate() {
+            let mut pairs = |forced: bool| {
+                set_force_scalar(forced);
+                acc.reset();
+                idx.scan(&q.sparse, &mut acc);
+                let mut out = Vec::new();
+                acc.drain_scores_into(&mut out);
+                out.iter()
+                    .map(|&(r, s)| (r, s.to_bits()))
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(
+                pairs(true),
+                pairs(false),
+                "{name} q{qi}: SIMD scan diverged from scalar"
+            );
+        }
+
+        let bytes_per_posting =
+            idx.memory_bytes() as f64 / idx.nnz().max(1) as f64;
+        let total_postings: u64 = queries
+            .iter()
+            .flat_map(|q| q.sparse.dims.iter())
+            .map(|&j| idx.dim_nnz.get(j as usize).copied().unwrap_or(0))
+            .sum();
+        let gb = total_postings as f64 * bytes_per_posting / 1e9;
+
+        set_force_scalar(true);
+        let st_scalar = bench(&format!("scan_{name}_scalar"), cfg_b, || {
+            run_backend(idx, &queries, &mut acc)
+        });
+        println!("{}", st_scalar.line());
+        set_force_scalar(false);
+        let st_simd = bench(&format!("scan_{name}_simd"), cfg_b, || {
+            run_backend(idx, &queries, &mut acc)
+        });
+        println!("{}", st_simd.line());
+
+        let s_scalar = st_scalar.median.as_secs_f64();
+        let s_simd = st_simd.median.as_secs_f64();
+        let speedup = s_scalar / s_simd;
+        if *name == "q8" {
+            q8_speedup = speedup;
+        }
+        t.row(&[
+            (*name).into(),
+            format!("{:.2}", gb / s_scalar),
+            format!("{:.2}", gb / s_simd),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("backend".into(), Json::Str((*name).into()));
+        row.insert("scalar_gbps".into(), Json::Num(gb / s_scalar));
+        row.insert("simd_gbps".into(), Json::Num(gb / s_simd));
+        row.insert("speedup".into(), Json::Num(speedup));
+        rows_json.push(Json::Obj(row));
+    }
+    set_force_scalar(env_forced);
+    t.print();
+
+    // Acceptance bar: the SIMD pipeline must beat the scalar oracle by
+    // >= 1.5x on the Q8 compressed backend — the coding with the most
+    // per-posting decode work, so the most to gain from batching. Only
+    // enforceable where the AVX2 path can actually run.
+    if has_avx2() && !env_forced {
+        assert!(
+            q8_speedup >= 1.5,
+            "SIMD sparse-scan bar missed on Q8 backend: \
+             {q8_speedup:.2}x (need >= 1.5x)"
+        );
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("sparse_scan".into()));
+    doc.insert("n".into(), Json::Num(n as f64));
+    doc.insert("queries".into(), Json::Num(queries.len() as f64));
+    doc.insert("avx2".into(), Json::Bool(has_avx2()));
+    doc.insert("env_force_scalar".into(), Json::Bool(env_forced));
+    doc.insert("backends".into(), Json::Arr(rows_json));
+    std::fs::create_dir_all("target").ok();
+    let path = "target/BENCH_sparse_scan.json";
+    std::fs::write(path, Json::Obj(doc).to_string())
+        .expect("write BENCH_sparse_scan.json");
+    println!("[cache_sort] wrote {path}");
+}
+
+/// One timed iteration: scan every query into a reset accumulator.
+fn run_backend(
+    idx: &InvertedIndex,
+    queries: &[hybrid_ip::types::hybrid::HybridQuery],
+    acc: &mut Accumulator,
+) {
+    for q in queries {
+        acc.reset();
+        idx.scan(&q.sparse, acc);
+        std::hint::black_box(acc.lines_touched());
+    }
 }

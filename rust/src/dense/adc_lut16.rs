@@ -227,7 +227,7 @@ pub unsafe fn scan_blocks_avx2(
                 acc_raw = _mm256_add_epi16(acc_raw, val_even);
                 acc_hi = _mm256_add_epi16(
                     acc_hi,
-                    _mm256_srli_epi16(val_even, 8),
+                    _mm256_srli_epi16::<8>(val_even),
                 );
                 if 2 * p + 1 < k {
                     let t_odd =
@@ -236,14 +236,14 @@ pub unsafe fn scan_blocks_avx2(
                                 as *const __m128i,
                         ));
                     let idx_odd = _mm256_and_si256(
-                        _mm256_srli_epi16(strip, 4),
+                        _mm256_srli_epi16::<4>(strip),
                         low_mask,
                     );
                     let val_odd = _mm256_shuffle_epi8(t_odd, idx_odd);
                     acc_raw = _mm256_add_epi16(acc_raw, val_odd);
                     acc_hi = _mm256_add_epi16(
                         acc_hi,
-                        _mm256_srli_epi16(val_odd, 8),
+                        _mm256_srli_epi16::<8>(val_odd),
                     );
                 }
             }
@@ -251,7 +251,7 @@ pub unsafe fn scan_blocks_avx2(
             // (wrapping), odd points = hi.
             let even_sums = _mm256_sub_epi16(
                 acc_raw,
-                _mm256_slli_epi16(acc_hi, 8),
+                _mm256_slli_epi16::<8>(acc_hi),
             );
             let mut even_buf = [0u16; 16];
             let mut odd_buf = [0u16; 16];

@@ -371,11 +371,13 @@ impl BatchEngine {
                         // touch, never scanned here). The full emit-all
                         // drain would hand them to this worker's top-k
                         // as 0.0-score candidates, duplicating rows
-                        // across partials at the merge.
-                        acc.drain_scores_range(
+                        // across partials at the merge. The `_into`
+                        // variant emits full blocks through the SIMD
+                        // pair store, bit-identical to the closure form.
+                        acc.drain_scores_range_into(
                             row0 as u32,
                             row1 as u32,
-                            |r, s| overlay.push((r, s)),
+                            overlay,
                         );
                     }
                     let part = match (p.plan.run_dense, p.plan.run_sparse)

@@ -124,7 +124,9 @@ impl SearchStats {
 /// Reusable per-thread search scratch: accumulator, dense score buffer,
 /// sparse-score overlay and both per-query LUTs. Allocate once per
 /// shard/worker, reuse across queries — after the first query, stage 1
-/// runs without touching the allocator.
+/// runs without touching the allocator. The SIMD sparse-scan staging
+/// buffers (`sparse::simd_scan::ScanStage`) live inside `acc`, so they
+/// share this scratch's lifetime and reuse discipline.
 pub struct SearchScratch {
     pub acc: Accumulator,
     pub dense_scores: Vec<f32>,
@@ -221,10 +223,13 @@ pub fn stage1_sparse(
 /// blocks; the overlay is the masked view stage-1 selection consumes.
 /// Every row of a touched line is emitted — including exact-0.0 sums —
 /// so cancelled rows stay candidates (see `Accumulator::drain_scores`).
+/// Full touched blocks are emitted through the vectorized pair store
+/// (`Accumulator::drain_scores_into`), bit-identical to the closure
+/// drain feeding `select_alpha_sparse`.
 pub fn drain_overlay(scratch: &mut SearchScratch) {
     scratch.overlay.clear();
     let (acc, overlay) = (&mut scratch.acc, &mut scratch.overlay);
-    acc.drain_scores(|r, s| overlay.push((r, s)));
+    acc.drain_scores_into(overlay);
 }
 
 /// Stage-1 sparse executor with certified early termination

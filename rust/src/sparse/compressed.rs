@@ -265,6 +265,25 @@ impl CompressedPostings {
         &self.blocks[s..e]
     }
 
+    /// Bit-packed row-offset arena (SIMD kernel input; the slice view
+    /// is identical for resident and mapped sections).
+    #[inline]
+    pub(crate) fn packed_words(&self) -> &[u64] {
+        &self.packed
+    }
+
+    /// Exact-coded value arena (empty under Q8).
+    #[inline]
+    pub(crate) fn exact_vals(&self) -> &[f32] {
+        &self.vals_f32
+    }
+
+    /// Q8 code arena (empty under Exact).
+    #[inline]
+    pub(crate) fn q8_vals(&self) -> &[i8] {
+        &self.vals_q8
+    }
+
     /// Largest |value| in dimension j's list (0.0 if empty).
     pub fn list_max_abs(&self, j: usize) -> f32 {
         self.dim_metas(j).first().map_or(0.0, |b| b.max_abs)

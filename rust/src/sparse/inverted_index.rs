@@ -18,6 +18,7 @@
 //! with a certified per-row error bound.
 
 use crate::sparse::compressed::{BlockMeta, CompressedPostings, SparseCompression};
+use crate::sparse::simd_scan::{self, ScanStage};
 use crate::types::csr::{CscMatrix, CsrMatrix};
 use crate::types::sparse::SparseVector;
 use crate::util::simd::F32_PER_LINE;
@@ -76,6 +77,10 @@ pub struct Accumulator {
     touched_blocks: Vec<u32>,
     generation: Vec<u32>,
     current_gen: u32,
+    /// Staging buffers for the SIMD scan kernels (decoded rows +
+    /// query-scaled values); reused across queries, detached via
+    /// [`Accumulator::take_stage`] while a kernel mutates the scores.
+    stage: ScanStage,
 }
 
 impl Accumulator {
@@ -87,26 +92,48 @@ impl Accumulator {
             touched_blocks: Vec::new(),
             generation: vec![0; blocks],
             current_gen: 0,
+            stage: ScanStage::default(),
         }
     }
 
-    /// O(touched) reset via generation counters (no full memset).
+    /// O(touched) reset via generation counters (no full memset). The
+    /// dirty bitmap is also cleared O(touched): every set bit belongs to
+    /// a block recorded in `touched_blocks` (they are written together
+    /// in `touch_block`), so clearing each touched block's word — some
+    /// redundantly — erases exactly the bits this query set, instead of
+    /// memsetting the whole bitmap regardless of touch count.
     pub fn reset(&mut self) {
         self.current_gen = self.current_gen.wrapping_add(1);
         if self.current_gen == 0 {
             // Generation wrapped: hard reset once every 2^32 queries.
             self.generation.fill(0);
             self.scores.fill(0.0);
+            self.dirty.fill(0);
             self.current_gen = 1;
+            self.touched_blocks.clear();
+            return;
+        }
+        for &b in &self.touched_blocks {
+            self.dirty[b as usize / 64] = 0;
         }
         self.touched_blocks.clear();
-        for w in &mut self.dirty {
-            *w = 0;
-        }
+    }
+
+    /// Detach the staging buffers so a scan kernel can fill them while
+    /// mutating the accumulator (capacity is preserved; return them via
+    /// [`Accumulator::put_stage`]).
+    #[inline]
+    pub(crate) fn take_stage(&mut self) -> ScanStage {
+        std::mem::take(&mut self.stage)
     }
 
     #[inline]
-    fn touch_block(&mut self, block: usize) {
+    pub(crate) fn put_stage(&mut self, stage: ScanStage) {
+        self.stage = stage;
+    }
+
+    #[inline]
+    pub(crate) fn touch_block(&mut self, block: usize) {
         if self.generation[block] != self.current_gen {
             self.generation[block] = self.current_gen;
             // Lazily zero the block on first touch this query.
@@ -161,12 +188,56 @@ impl Accumulator {
     ) {
         let n = self.scores.len().min(row_end as usize);
         self.touched_blocks.sort_unstable();
-        for &b in &self.touched_blocks {
-            let start = (b as usize * F32_PER_LINE).max(row_start as usize);
-            let end = ((b as usize + 1) * F32_PER_LINE).min(n);
+        // Binary-search past the blocks entirely below the range instead
+        // of walking them (ByData workers with a high `row_start` used to
+        // iterate the whole sorted list), and stop at the first block at
+        // or past `row_end` — all later blocks are out of range too.
+        let first = self
+            .touched_blocks
+            .partition_point(|&b| (b as usize + 1) * F32_PER_LINE <= row_start as usize);
+        for &b in &self.touched_blocks[first..] {
+            let bstart = b as usize * F32_PER_LINE;
+            if bstart >= n {
+                break;
+            }
+            let start = bstart.max(row_start as usize);
+            let end = (bstart + F32_PER_LINE).min(n);
             for i in start..end {
                 f(i as u32, self.scores[i]);
             }
+        }
+    }
+
+    /// Vec-emitting [`Accumulator::drain_scores`]: identical output
+    /// (ascending rows, score bits copied), but full touched blocks are
+    /// emitted through the 8-wide SIMD pair store
+    /// ([`simd_scan::emit_pairs`]) instead of one closure call per row.
+    pub fn drain_scores_into(&mut self, out: &mut Vec<(u32, f32)>) {
+        let end = self.scores.len() as u32;
+        self.drain_scores_range_into(0, end, out);
+    }
+
+    /// Range-clamped [`Accumulator::drain_scores_into`]; same emission
+    /// contract as [`Accumulator::drain_scores_range`].
+    pub fn drain_scores_range_into(
+        &mut self,
+        row_start: u32,
+        row_end: u32,
+        out: &mut Vec<(u32, f32)>,
+    ) {
+        let n = self.scores.len().min(row_end as usize);
+        self.touched_blocks.sort_unstable();
+        let first = self
+            .touched_blocks
+            .partition_point(|&b| (b as usize + 1) * F32_PER_LINE <= row_start as usize);
+        for &b in &self.touched_blocks[first..] {
+            let bstart = b as usize * F32_PER_LINE;
+            if bstart >= n {
+                break;
+            }
+            let start = bstart.max(row_start as usize);
+            let end = (bstart + F32_PER_LINE).min(n);
+            simd_scan::emit_pairs(start as u32, &self.scores[start..end], out);
         }
     }
 }
@@ -302,7 +373,15 @@ impl InvertedIndex {
 
     /// Accumulate qˢ against all lists of q's nonzero dims (§2.2).
     /// `acc` must be sized for `n_rows()` and already `reset()`.
+    ///
+    /// Dispatch: with AVX2 available (and not pinned to scalar) each
+    /// list runs through the staged [`simd_scan`] kernels — vectorized
+    /// decode into the accumulator's staging buffer, then a scatter-add
+    /// in the identical posting order. The scalar loops below are the
+    /// bit-identity oracle; either path produces the same accumulator
+    /// state bit for bit.
     pub fn scan(&self, q: &SparseVector, acc: &mut Accumulator) {
+        let simd = simd_scan::enabled();
         for (dim, qv) in q.iter() {
             let j = dim as usize;
             if j >= self.n_dims() {
@@ -311,14 +390,22 @@ impl InvertedIndex {
             match &self.backend {
                 SparseBackend::Raw(csc) => {
                     let (rows, vals) = csc.col(j);
-                    // Hot loop: sequential streaming over the list;
-                    // accumulator access is what cache_sort optimizes.
-                    for (&r, &w) in rows.iter().zip(vals) {
-                        acc.add(r, qv * w);
+                    if simd {
+                        simd_scan::accumulate_scaled(acc, rows, vals, qv);
+                    } else {
+                        // Hot loop: sequential streaming over the list;
+                        // accumulator access is what cache_sort optimizes.
+                        for (&r, &w) in rows.iter().zip(vals) {
+                            acc.add(r, qv * w);
+                        }
                     }
                 }
                 SparseBackend::Compressed(c) => {
-                    c.for_each_in_dim(j, |r, w| acc.add(r, qv * w));
+                    if simd {
+                        simd_scan::accumulate_dim(c, j, qv, acc);
+                    } else {
+                        c.for_each_in_dim(j, |r, w| acc.add(r, qv * w));
+                    }
                 }
             }
         }
@@ -336,6 +423,7 @@ impl InvertedIndex {
         row_start: u32,
         row_end: u32,
     ) {
+        let simd = simd_scan::enabled();
         for (dim, qv) in q.iter() {
             let j = dim as usize;
             if j >= self.n_dims() {
@@ -345,19 +433,33 @@ impl InvertedIndex {
                 SparseBackend::Raw(csc) => {
                     let (rows, vals) = csc.col(j);
                     let lo = rows.partition_point(|&r| r < row_start);
-                    for (&r, &w) in rows[lo..].iter().zip(&vals[lo..]) {
-                        if r >= row_end {
-                            break;
+                    if simd {
+                        let hi = rows.partition_point(|&r| r < row_end);
+                        simd_scan::accumulate_scaled(
+                            acc,
+                            &rows[lo..hi],
+                            &vals[lo..hi],
+                            qv,
+                        );
+                    } else {
+                        for (&r, &w) in rows[lo..].iter().zip(&vals[lo..]) {
+                            if r >= row_end {
+                                break;
+                            }
+                            acc.add(r, qv * w);
                         }
-                        acc.add(r, qv * w);
                     }
                 }
                 SparseBackend::Compressed(c) => {
-                    c.for_each_in_dim(j, |r, w| {
-                        if r >= row_start && r < row_end {
-                            acc.add(r, qv * w);
-                        }
-                    });
+                    if simd {
+                        simd_scan::accumulate_dim_range(c, j, qv, acc, row_start, row_end);
+                    } else {
+                        c.for_each_in_dim(j, |r, w| {
+                            if r >= row_start && r < row_end {
+                                acc.add(r, qv * w);
+                            }
+                        });
+                    }
                 }
             }
         }
@@ -379,7 +481,7 @@ impl InvertedIndex {
                 continue;
             }
             if let Some(b) = c.dim_metas(j).first() {
-                c.for_each_in_block(b, |r, w| acc.add(r, qv * w));
+                simd_scan::accumulate_block(c, b, qv, acc);
             }
         }
     }
@@ -422,7 +524,7 @@ impl InvertedIndex {
                     stats.error_bound += bound;
                     break;
                 }
-                c.for_each_in_block(b, |r, w| acc.add(r, qv * w));
+                simd_scan::accumulate_block(c, b, qv, acc);
             }
         }
         stats
@@ -900,6 +1002,60 @@ mod tests {
             });
         }
         assert!(saw_skip, "threshold never triggered a skip");
+    }
+
+    #[test]
+    fn drain_into_matches_closure_drain() {
+        let n = 330;
+        let m = random_matrix(91, n, 25, 6);
+        let idx = InvertedIndex::build(&m);
+        let mut rng = Rng::new(911);
+        let mut acc = Accumulator::new(n);
+        for _ in 0..10 {
+            let q = random_query(&mut rng, 25, 6);
+            acc.reset();
+            idx.scan(&q, &mut acc);
+            let mut want = Vec::new();
+            acc.drain_scores(|r, s| want.push((r, s)));
+            let mut got = Vec::new();
+            acc.drain_scores_into(&mut got);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.0, w.0);
+                assert_eq!(g.1.to_bits(), w.1.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn drain_range_skips_blocks_below_start() {
+        // Regression for the linear walk over out-of-range blocks: the
+        // emission must be identical to filtering the full drain, for
+        // range bounds on and off block boundaries.
+        let n = 200;
+        let m = random_matrix(92, n, 18, 6);
+        let idx = InvertedIndex::build(&m);
+        let q = SparseVector::new(vec![0, 2, 5, 9], vec![1.0, -2.0, 0.5, 3.0]);
+        for (a, b) in [(0u32, 200u32), (48, 160), (33, 129), (199, 200), (64, 64)] {
+            let mut acc = Accumulator::new(n);
+            acc.reset();
+            idx.scan(&q, &mut acc);
+            let mut full = Vec::new();
+            acc.drain_scores(|r, s| full.push((r, s.to_bits())));
+            let want: Vec<(u32, u32)> = full
+                .iter()
+                .copied()
+                .filter(|&(r, _)| r >= a && r < b)
+                .collect();
+            let mut got = Vec::new();
+            acc.drain_scores_range(a, b, |r, s| got.push((r, s.to_bits())));
+            assert_eq!(got, want, "range [{a}, {b})");
+            let mut got_into = Vec::new();
+            acc.drain_scores_range_into(a, b, &mut got_into);
+            let got_into: Vec<(u32, u32)> =
+                got_into.into_iter().map(|(r, s)| (r, s.to_bits())).collect();
+            assert_eq!(got_into, want, "range [{a}, {b}) via _into");
+        }
     }
 
     #[test]

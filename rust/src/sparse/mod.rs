@@ -8,6 +8,7 @@ pub mod compressed;
 pub mod cost_model;
 pub mod inverted_index;
 pub mod pruning;
+pub mod simd_scan;
 
 pub use cache_sort::{cache_sort, gray_code_sort};
 pub use compressed::{CompressedPostings, SparseCompression, ValueCoding};

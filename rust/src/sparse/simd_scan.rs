@@ -1,0 +1,644 @@
+//! AVX2 sparse-scan kernels: vectorized posting decode, accumulation,
+//! and score drain for stage-1 sparse (§3.1).
+//!
+//! The inverted-list scan is memory-bandwidth-bound, but the scalar walk
+//! paid per-posting instruction overhead three times over: bit-unpacking
+//! row offsets one field at a time, dequantizing Q8 codes one code at a
+//! time, and re-checking `touch_block` bookkeeping once per posting.
+//! This module batches all three:
+//!
+//! - **Decode** ([`decode_block`]): frame-of-reference unpack of a whole
+//!   block's bit-packed row ids via unaligned 8-byte gathers + variable
+//!   shifts (4 postings per iteration), and 8-lane value dequantization
+//!   (`_mm256_cvtepi8_epi32` → `_mm256_cvtepi32_ps` with a broadcast
+//!   block scale for Q8), into a reusable per-scan staging buffer
+//!   ([`ScanStage`], owned by the `Accumulator` inside `SearchScratch`).
+//! - **Accumulate** ([`scatter_add`]): one staged pass that amortizes
+//!   `touch_block` to once per (block, run) and prefetches accumulator
+//!   lines ahead of the scatter-add. The adds themselves stay scalar
+//!   (AVX2 has no f32 scatter) and run in exactly the scalar path's
+//!   posting order, so per-row sums are bit-identical.
+//! - **Drain** ([`emit_pairs`]): 8-wide interleaved (row, score) block
+//!   emission feeding `select_alpha_sparse`.
+//!
+//! Every kernel dispatches through [`crate::util::simd::use_avx2`]
+//! (honoring `PALLAS_FORCE_SCALAR`); the scalar loops retained in
+//! [`crate::sparse::inverted_index`] and here are the bit-identity
+//! oracle. Bit-identity holds because each SIMD lane performs the same
+//! IEEE operations in the same order as the scalar code: Q8 dequantizes
+//! as `code as f32 * (max_abs / 127.0)` first and multiplies by the
+//! query value second (two rounding steps, never folded into one), and
+//! the per-row accumulation order is unchanged. `SectionBuf` slices are
+//! the kernel inputs, so mapped (out-of-core) postings take the same
+//! vectorized path as resident ones.
+
+use crate::sparse::compressed::{BlockMeta, CompressedPostings, ValueCoding};
+use crate::sparse::inverted_index::Accumulator;
+use crate::util::simd::{prefetch_read, F32_PER_LINE};
+
+/// Per-scan staging buffers: decoded row ids and their already
+/// query-scaled contributions (`qv * value`), parallel by index.
+/// Allocated once per `Accumulator` and reused across queries.
+#[derive(Clone, Debug, Default)]
+pub struct ScanStage {
+    pub rows: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl ScanStage {
+    #[inline]
+    pub fn clear(&mut self) {
+        self.rows.clear();
+        self.vals.clear();
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// True when the staged AVX2 scan path should run (AVX2 present and not
+/// pinned to scalar). Consulted once per scan entry point — the scalar
+/// fallbacks in `inverted_index.rs` run when this is false.
+#[inline]
+pub fn enabled() -> bool {
+    crate::util::simd::use_avx2()
+}
+
+/// Accumulator lines to prefetch ahead of the scatter-add cursor.
+const PREFETCH_AHEAD: usize = 16;
+
+/// Stage and accumulate one whole compressed list: decode every block of
+/// dim `j` into the staging buffer, then scatter-add in posting order.
+/// Bit-identical to `for_each_in_dim(j, |r, w| acc.add(r, qv * w))`.
+pub fn accumulate_dim(c: &CompressedPostings, j: usize, qv: f32, acc: &mut Accumulator) {
+    let mut stage = acc.take_stage();
+    stage.clear();
+    for b in c.dim_metas(j) {
+        decode_block(c, b, qv, &mut stage);
+    }
+    scatter_add(acc, &stage.rows, &stage.vals);
+    acc.put_stage(stage);
+}
+
+/// Range-filtered [`accumulate_dim`]: rows outside `[row_start,
+/// row_end)` are decoded (the walk is block-granular) but skipped before
+/// touching the accumulator, exactly like the scalar filter closure.
+pub fn accumulate_dim_range(
+    c: &CompressedPostings,
+    j: usize,
+    qv: f32,
+    acc: &mut Accumulator,
+    row_start: u32,
+    row_end: u32,
+) {
+    let mut stage = acc.take_stage();
+    stage.clear();
+    for b in c.dim_metas(j) {
+        decode_block(c, b, qv, &mut stage);
+    }
+    scatter_add_range(acc, &stage.rows, &stage.vals, row_start, row_end);
+    acc.put_stage(stage);
+}
+
+/// Stage and accumulate a single block (two-phase scan entry points).
+/// Falls back to the verbatim scalar closure walk when SIMD dispatch is
+/// off, so callers need no dispatch of their own.
+pub fn accumulate_block(c: &CompressedPostings, b: &BlockMeta, qv: f32, acc: &mut Accumulator) {
+    if !enabled() {
+        c.for_each_in_block(b, |r, w| acc.add(r, qv * w));
+        return;
+    }
+    let mut stage = acc.take_stage();
+    stage.clear();
+    decode_block(c, b, qv, &mut stage);
+    scatter_add(acc, &stage.rows, &stage.vals);
+    acc.put_stage(stage);
+}
+
+/// Raw-backend accumulate: rows stream straight from the CSC arena (no
+/// copy), values are staged as `qv * w` by an 8-wide multiply, then
+/// scatter-added in list order. Bit-identical to the per-posting
+/// `acc.add(r, qv * w)` loop.
+pub fn accumulate_scaled(acc: &mut Accumulator, rows: &[u32], vals: &[f32], qv: f32) {
+    let mut stage = acc.take_stage();
+    scale_into(qv, vals, &mut stage.vals);
+    scatter_add(acc, rows, &stage.vals);
+    acc.put_stage(stage);
+}
+
+/// Decode one compressed block, appending `(row, qv * value)` pairs to
+/// the staging buffer. Dispatches to the AVX2 kernel when available;
+/// the scalar path delegates to the `for_each_in_block` oracle.
+pub fn decode_block(c: &CompressedPostings, b: &BlockMeta, qv: f32, stage: &mut ScanStage) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::util::simd::use_avx2() {
+            // SAFETY: AVX2 presence is checked by `use_avx2`.
+            unsafe { decode_block_avx2(c, b, qv, stage) };
+            return;
+        }
+    }
+    decode_block_scalar(c, b, qv, stage);
+}
+
+/// Scalar staging oracle: the exact `for_each_in_block` decode feeding
+/// the staging buffer, one posting at a time.
+pub fn decode_block_scalar(
+    c: &CompressedPostings,
+    b: &BlockMeta,
+    qv: f32,
+    stage: &mut ScanStage,
+) {
+    stage.rows.reserve(b.len as usize);
+    stage.vals.reserve(b.len as usize);
+    c.for_each_in_block(b, |r, w| {
+        stage.rows.push(r);
+        stage.vals.push(qv * w);
+    });
+}
+
+/// AVX2 block decode. Row ids: the block's bit fields form a contiguous
+/// little-endian bitstream over its `u64` words, so field `k` (bit
+/// position `k * bits`, `bits <= 32`) is recovered by an unaligned
+/// 8-byte load at byte `bitpos / 8` shifted right by `bitpos % 8` —
+/// four fields per iteration via a 64-bit gather + variable shifts.
+/// Loads are clamped so the final 8-byte read stays inside the packed
+/// arena (later blocks' words are readable slack; the masked bits make
+/// their content irrelevant); the last few postings fall back to the
+/// oracle's word-pair extraction. Values: 8-lane dequantize + scale with
+/// the same two rounding steps as the scalar path.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn decode_block_avx2(
+    c: &CompressedPostings,
+    b: &BlockMeta,
+    qv: f32,
+    stage: &mut ScanStage,
+) {
+    use std::arch::x86_64::*;
+
+    let len = b.len as usize;
+    let bits = b.bits as usize;
+    let words = c.packed_words();
+    let w0 = b.word_start as usize;
+
+    // ---- row ids ----
+    let r0 = stage.rows.len();
+    stage.rows.resize(r0 + len, 0);
+    let rows_out = &mut stage.rows[r0..];
+    let pbase = words.as_ptr().add(w0) as *const u8;
+    let avail_bytes = (words.len() - w0) * 8;
+    // Largest posting count whose 8-byte loads all end inside the arena
+    // (posting k loads bytes [k*bits/8, k*bits/8 + 8)).
+    let safe = if avail_bytes >= 8 {
+        ((avail_bytes - 8) * 8 / bits + 1).min(len)
+    } else {
+        0
+    };
+    let simd_len = safe & !3;
+    let mask = _mm256_set1_epi64x(((1u64 << bits) - 1) as i64);
+    let basev = _mm_set1_epi32(b.base_row as i32);
+    let narrow = _mm256_setr_epi32(0, 2, 4, 6, 0, 0, 0, 0);
+    let seven = _mm256_set1_epi64x(7);
+    let step = _mm256_set1_epi64x((4 * bits) as i64);
+    let mut bitpos =
+        _mm256_setr_epi64x(0, bits as i64, (2 * bits) as i64, (3 * bits) as i64);
+    let mut k = 0usize;
+    while k < simd_len {
+        let byteoff = _mm256_srli_epi64::<3>(bitpos);
+        let sh = _mm256_and_si256(bitpos, seven);
+        let gathered = _mm256_i64gather_epi64::<1>(pbase as *const i64, byteoff);
+        let offs = _mm256_and_si256(_mm256_srlv_epi64(gathered, sh), mask);
+        let packed32 = _mm256_permutevar8x32_epi32(offs, narrow);
+        let rows4 = _mm_add_epi32(_mm256_castsi256_si128(packed32), basev);
+        _mm_storeu_si128(rows_out.as_mut_ptr().add(k) as *mut __m128i, rows4);
+        bitpos = _mm256_add_epi64(bitpos, step);
+        k += 4;
+    }
+    let mask_u = (1u64 << bits) - 1;
+    while k < len {
+        let bit = k * bits;
+        let w = w0 + (bit >> 6);
+        let sh = bit & 63;
+        let mut off = words[w] >> sh;
+        if sh + bits > 64 {
+            off |= words[w + 1] << (64 - sh);
+        }
+        rows_out[k] = b.base_row + (off & mask_u) as u32;
+        k += 1;
+    }
+
+    // ---- values ----
+    let v0 = stage.vals.len();
+    stage.vals.resize(v0 + len, 0.0);
+    let vals_out = &mut stage.vals[v0..];
+    let vstart = b.val_start as usize;
+    let qvv = _mm256_set1_ps(qv);
+    match c.spec().values {
+        ValueCoding::Exact => {
+            let src = &c.exact_vals()[vstart..vstart + len];
+            let mut k = 0usize;
+            while k + 8 <= len {
+                let v = _mm256_loadu_ps(src.as_ptr().add(k));
+                _mm256_storeu_ps(vals_out.as_mut_ptr().add(k), _mm256_mul_ps(qvv, v));
+                k += 8;
+            }
+            while k < len {
+                vals_out[k] = qv * src[k];
+                k += 1;
+            }
+        }
+        ValueCoding::Q8 => {
+            let q8_step = b.max_abs / 127.0;
+            let stepv = _mm256_set1_ps(q8_step);
+            let src = &c.q8_vals()[vstart..vstart + len];
+            let mut k = 0usize;
+            while k + 8 <= len {
+                let codes = _mm_loadl_epi64(src.as_ptr().add(k) as *const __m128i);
+                let dq = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(codes));
+                let v = _mm256_mul_ps(dq, stepv);
+                _mm256_storeu_ps(vals_out.as_mut_ptr().add(k), _mm256_mul_ps(qvv, v));
+                k += 8;
+            }
+            while k < len {
+                let v = src[k] as f32 * q8_step;
+                vals_out[k] = qv * v;
+                k += 1;
+            }
+        }
+    }
+}
+
+/// Scale a value slice by `qv` into `out` (8-wide multiply). The
+/// per-lane `qv * w` is the identical IEEE operation the scalar add
+/// loop performs.
+pub fn scale_into(qv: f32, vals: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(vals.len(), 0.0);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if crate::util::simd::use_avx2() {
+            // SAFETY: AVX2 presence is checked by `use_avx2`.
+            unsafe { scale_avx2(qv, vals, out) };
+            return;
+        }
+    }
+    for (o, &w) in out.iter_mut().zip(vals) {
+        *o = qv * w;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_avx2(qv: f32, vals: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+
+    let n = vals.len();
+    let qvv = _mm256_set1_ps(qv);
+    let mut k = 0usize;
+    while k + 8 <= n {
+        let v = _mm256_loadu_ps(vals.as_ptr().add(k));
+        _mm256_storeu_ps(out.as_mut_ptr().add(k), _mm256_mul_ps(qvv, v));
+        k += 8;
+    }
+    while k < n {
+        out[k] = qv * vals[k];
+        k += 1;
+    }
+}
+
+/// Scatter-add staged contributions into the accumulator, in staging
+/// order (== scalar posting order, so per-row sums are bit-identical).
+/// `touch_block` runs once per run of same-block rows instead of once
+/// per posting — it is idempotent within a query generation, so the
+/// resulting accumulator state (scores, dirty bits, touched list and
+/// its order) is identical to per-posting touching.
+pub fn scatter_add(acc: &mut Accumulator, rows: &[u32], vals: &[f32]) {
+    debug_assert_eq!(rows.len(), vals.len());
+    let n = rows.len();
+    let mut last_block = usize::MAX;
+    for k in 0..n {
+        if k + PREFETCH_AHEAD < n {
+            let ahead = rows[k + PREFETCH_AHEAD] as usize;
+            prefetch_read(acc.scores.as_ptr().wrapping_add(ahead));
+        }
+        let row = rows[k] as usize;
+        let block = row / F32_PER_LINE;
+        if block != last_block {
+            acc.touch_block(block);
+            last_block = block;
+        }
+        acc.scores[row] += vals[k];
+    }
+}
+
+/// Range-filtered [`scatter_add`]: rows outside `[row_start, row_end)`
+/// are skipped before any accumulator state is touched — the same
+/// filter the scalar range-scan closure applies.
+pub fn scatter_add_range(
+    acc: &mut Accumulator,
+    rows: &[u32],
+    vals: &[f32],
+    row_start: u32,
+    row_end: u32,
+) {
+    debug_assert_eq!(rows.len(), vals.len());
+    let n = rows.len();
+    let mut last_block = usize::MAX;
+    for k in 0..n {
+        if k + PREFETCH_AHEAD < n {
+            let ahead = rows[k + PREFETCH_AHEAD] as usize;
+            prefetch_read(acc.scores.as_ptr().wrapping_add(ahead));
+        }
+        let r = rows[k];
+        if r < row_start || r >= row_end {
+            continue;
+        }
+        let row = r as usize;
+        let block = row / F32_PER_LINE;
+        if block != last_block {
+            acc.touch_block(block);
+            last_block = block;
+        }
+        acc.scores[row] += vals[k];
+    }
+}
+
+/// Append `(base_row + k, scores[k])` pairs to `out`. Full 16-row
+/// blocks go through the 8-wide interleaved store when the tuple layout
+/// matches the packed (u32, f32) pair (checked once at runtime —
+/// `repr(Rust)` does not guarantee field order); everything else takes
+/// the scalar push loop. Output is identical either way: ascending rows,
+/// score bit patterns copied verbatim.
+pub fn emit_pairs(base_row: u32, scores: &[f32], out: &mut Vec<(u32, f32)>) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if scores.len() == F32_PER_LINE
+            && crate::util::simd::use_avx2()
+            && pair_layout_is_packed()
+        {
+            // SAFETY: AVX2 checked by `use_avx2`; the layout probe
+            // guarantees (u32, f32) is 8 packed bytes, row first.
+            unsafe { emit_pairs_avx2(base_row, scores, out) };
+            return;
+        }
+    }
+    for (k, &s) in scores.iter().enumerate() {
+        out.push((base_row + k as u32, s));
+    }
+}
+
+/// One-time probe: is `(u32, f32)` laid out as 8 bytes with the u32
+/// first? True on every current rustc/x86_64 combination, but
+/// `repr(Rust)` leaves it unspecified, so the vectorized drain verifies
+/// before writing raw pair images.
+#[cfg(target_arch = "x86_64")]
+fn pair_layout_is_packed() -> bool {
+    use std::sync::OnceLock;
+
+    static PACKED: OnceLock<bool> = OnceLock::new();
+    *PACKED.get_or_init(|| {
+        if std::mem::size_of::<(u32, f32)>() != 8 {
+            return false;
+        }
+        let probe: (u32, f32) = (0x1122_3344, f32::from_bits(0x5566_7788));
+        // SAFETY: size checked above; two 4-byte fields leave no padding.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(&probe as *const (u32, f32) as *const u8, 8)
+        };
+        bytes[..4] == 0x1122_3344u32.to_ne_bytes()
+            && bytes[4..] == 0x5566_7788u32.to_ne_bytes()
+    })
+}
+
+/// AVX2 pair emission for one full 16-row block: build row-id vectors,
+/// interleave them with the score lanes (`unpacklo/hi` + 128-bit lane
+/// permutes), and store four 32-byte pair images into the Vec's spare
+/// capacity.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn emit_pairs_avx2(base_row: u32, scores: &[f32], out: &mut Vec<(u32, f32)>) {
+    use std::arch::x86_64::*;
+
+    debug_assert_eq!(scores.len(), 16);
+    out.reserve(16);
+    let dst = out.as_mut_ptr().add(out.len()) as *mut __m256i;
+    let base = _mm256_set1_epi32(base_row as i32);
+    let r0 = _mm256_add_epi32(base, _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7));
+    let r1 = _mm256_add_epi32(base, _mm256_setr_epi32(8, 9, 10, 11, 12, 13, 14, 15));
+    let s0 = _mm256_castps_si256(_mm256_loadu_ps(scores.as_ptr()));
+    let s1 = _mm256_castps_si256(_mm256_loadu_ps(scores.as_ptr().add(8)));
+    let lo0 = _mm256_unpacklo_epi32(r0, s0);
+    let hi0 = _mm256_unpackhi_epi32(r0, s0);
+    _mm256_storeu_si256(dst, _mm256_permute2x128_si256::<0x20>(lo0, hi0));
+    _mm256_storeu_si256(dst.add(1), _mm256_permute2x128_si256::<0x31>(lo0, hi0));
+    let lo1 = _mm256_unpacklo_epi32(r1, s1);
+    let hi1 = _mm256_unpackhi_epi32(r1, s1);
+    _mm256_storeu_si256(dst.add(2), _mm256_permute2x128_si256::<0x20>(lo1, hi1));
+    _mm256_storeu_si256(dst.add(3), _mm256_permute2x128_si256::<0x31>(lo1, hi1));
+    out.set_len(out.len() + 16);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::compressed::SparseCompression;
+    use crate::types::csr::{CscMatrix, CsrMatrix};
+    use crate::types::sparse::SparseVector;
+    use crate::util::rng::Rng;
+    use crate::util::simd::{force_scalar, set_force_scalar};
+
+    fn random_csc(seed: u64, n: usize, d: usize, max_nnz: usize) -> CscMatrix {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<SparseVector> = (0..n)
+            .map(|_| {
+                let nnz = rng.below(max_nnz + 1);
+                let mut dims: Vec<u32> = rng
+                    .sample_indices(d, nnz)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                dims.sort_unstable();
+                let vals = (0..nnz).map(|_| rng.gauss_f32()).collect();
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        CsrMatrix::from_rows(&rows, d).transpose()
+    }
+
+    /// Run `body` under both dispatch states, restoring the prior one.
+    /// The assertions inside must hold under either state (that is the
+    /// bit-identity contract), so a concurrent test toggling the global
+    /// override cannot turn a real failure into a pass or vice versa.
+    fn under_both_dispatch_states(mut body: impl FnMut()) {
+        let was = force_scalar();
+        for forced in [true, false] {
+            set_force_scalar(forced);
+            body();
+        }
+        set_force_scalar(was);
+    }
+
+    #[test]
+    fn decode_block_matches_for_each_in_block_oracle() {
+        let csc = random_csc(301, 500, 13, 9);
+        for spec in [
+            SparseCompression::exact().with_block_len(1),
+            SparseCompression::exact().with_block_len(5),
+            SparseCompression::exact().with_block_len(64),
+            SparseCompression::q8().with_block_len(7),
+            SparseCompression::q8().with_block_len(128),
+        ] {
+            let c = CompressedPostings::from_csc(&csc, spec);
+            under_both_dispatch_states(|| {
+                for j in 0..c.n_dims() {
+                    for (bi, b) in c.dim_metas(j).iter().enumerate() {
+                        for qv in [1.0f32, -0.37, 2.5e-3] {
+                            let mut stage = ScanStage::default();
+                            decode_block(&c, b, qv, &mut stage);
+                            let mut want = ScanStage::default();
+                            c.for_each_in_block(b, |r, w| {
+                                want.rows.push(r);
+                                want.vals.push(qv * w);
+                            });
+                            assert_eq!(stage.rows, want.rows, "dim {j} block {bi}");
+                            let got: Vec<u32> =
+                                stage.vals.iter().map(|v| v.to_bits()).collect();
+                            let exp: Vec<u32> =
+                                want.vals.iter().map(|v| v.to_bits()).collect();
+                            assert_eq!(got, exp, "dim {j} block {bi} qv {qv}");
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn wide_offsets_and_word_straddles_decode_identically() {
+        // Rows far apart force bit widths up to 32 and fields straddling
+        // u64 word boundaries — the gather path's hardest case.
+        let csc = CscMatrix {
+            colptr: vec![0, 6].into(),
+            rows: vec![5, 77, 4096, 1_000_000, 500_000_000, u32::MAX - 1].into(),
+            vals: vec![0.25, -8.0, 2.0, 1.5, -0.125, 3.0].into(),
+            n_rows: u32::MAX as usize,
+        };
+        for block_len in [1, 2, 3, 6, 128] {
+            let c = CompressedPostings::from_csc(
+                &csc,
+                SparseCompression::exact().with_block_len(block_len),
+            );
+            under_both_dispatch_states(|| {
+                for b in c.dim_metas(0) {
+                    let mut stage = ScanStage::default();
+                    decode_block(&c, b, -1.75, &mut stage);
+                    let mut want_rows = Vec::new();
+                    let mut want_vals = Vec::new();
+                    c.for_each_in_block(b, |r, w| {
+                        want_rows.push(r);
+                        want_vals.push((-1.75f32 * w).to_bits());
+                    });
+                    assert_eq!(stage.rows, want_rows);
+                    let got: Vec<u32> = stage.vals.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(got, want_vals);
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn scatter_add_amortized_touch_matches_per_posting_add() {
+        let mut rng = Rng::new(77);
+        let n = 400;
+        // Unsorted rows with duplicates and block-run boundaries.
+        let rows: Vec<u32> = (0..600).map(|_| rng.below(n) as u32).collect();
+        let vals: Vec<f32> = (0..600).map(|_| rng.gauss_f32()).collect();
+        let mut a = Accumulator::new(n);
+        let mut b = Accumulator::new(n);
+        a.reset();
+        b.reset();
+        scatter_add(&mut a, &rows, &vals);
+        for (&r, &v) in rows.iter().zip(&vals) {
+            b.add(r, v);
+        }
+        assert_eq!(a.lines_touched(), b.lines_touched());
+        let mut got = Vec::new();
+        let mut want = Vec::new();
+        a.drain_scores(|r, s| got.push((r, s.to_bits())));
+        b.drain_scores(|r, s| want.push((r, s.to_bits())));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scatter_add_range_filters_like_scalar() {
+        let mut rng = Rng::new(78);
+        let n = 256;
+        let rows: Vec<u32> = (0..300).map(|_| rng.below(n) as u32).collect();
+        let vals: Vec<f32> = (0..300).map(|_| rng.gauss_f32()).collect();
+        let (lo, hi) = (48u32, 199u32);
+        let mut a = Accumulator::new(n);
+        let mut b = Accumulator::new(n);
+        a.reset();
+        b.reset();
+        scatter_add_range(&mut a, &rows, &vals, lo, hi);
+        for (&r, &v) in rows.iter().zip(&vals) {
+            if r >= lo && r < hi {
+                b.add(r, v);
+            }
+        }
+        assert_eq!(a.lines_touched(), b.lines_touched());
+        let mut got = Vec::new();
+        let mut want = Vec::new();
+        a.drain_scores(|r, s| got.push((r, s.to_bits())));
+        b.drain_scores(|r, s| want.push((r, s.to_bits())));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn emit_pairs_matches_scalar_push() {
+        let mut rng = Rng::new(79);
+        under_both_dispatch_states(|| {
+            for len in [16usize, 7, 1, 15] {
+                let scores: Vec<f32> = (0..len).map(|_| rng.gauss_f32()).collect();
+                for base in [0u32, 32, 12345] {
+                    let mut got: Vec<(u32, f32)> = vec![(9, 9.0)];
+                    emit_pairs(base, &scores, &mut got);
+                    let mut want: Vec<(u32, f32)> = vec![(9, 9.0)];
+                    for (k, &s) in scores.iter().enumerate() {
+                        want.push((base + k as u32, s));
+                    }
+                    assert_eq!(got.len(), want.len());
+                    for (g, w) in got.iter().zip(&want) {
+                        assert_eq!(g.0, w.0);
+                        assert_eq!(g.1.to_bits(), w.1.to_bits());
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn scale_into_matches_scalar_multiply() {
+        let mut rng = Rng::new(80);
+        under_both_dispatch_states(|| {
+            for len in [0usize, 1, 7, 8, 9, 31, 64] {
+                let vals: Vec<f32> = (0..len).map(|_| rng.gauss_f32()).collect();
+                let qv = -0.625f32;
+                let mut out = Vec::new();
+                scale_into(qv, &vals, &mut out);
+                assert_eq!(out.len(), len);
+                for (o, &w) in out.iter().zip(&vals) {
+                    assert_eq!(o.to_bits(), (qv * w).to_bits());
+                }
+            }
+        });
+    }
+}

@@ -91,6 +91,25 @@ pub fn use_fma() -> bool {
     has_fma() && !force_scalar()
 }
 
+/// Best-effort read prefetch of the cache line holding `p` (T0 hint).
+/// Purely a performance hint for the sparse scatter-add: prefetch never
+/// faults and never affects results, so any address — including one
+/// computed with `wrapping_add` past a slice end — is acceptable. No-op
+/// off x86_64 and under Miri (which has no prefetch model).
+#[inline(always)]
+pub fn prefetch_read<T>(p: *const T) {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    // SAFETY: PREFETCHT0 is architecturally non-faulting for any
+    // address and performs no read visible to the memory model.
+    unsafe {
+        std::arch::x86_64::_mm_prefetch::<{ std::arch::x86_64::_MM_HINT_T0 }>(p as *const i8);
+    }
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+    {
+        let _ = p;
+    }
+}
+
 /// One-line capability summary for logs/bench headers.
 pub fn capability_string() -> String {
     format!(

@@ -735,6 +735,95 @@ fn compressed_exact_backend_is_bit_identical_to_raw() {
     }
 }
 
+/// Invariant 1b (sparse SIMD == scalar): the AVX2 sparse-scan pipeline
+/// — bulk posting decode, staged scatter-add accumulation, and the
+/// vectorized score drain — is bit-identical to the scalar oracle path
+/// across the raw CSC backend and both compressed codings (Exact and
+/// the lossy Q8, which has no raw oracle and so *only* this identity
+/// protects it), sequential and both batch shard modes, under both
+/// `PALLAS_FORCE_SCALAR` dispatch states.
+#[test]
+fn sparse_simd_scan_is_bit_identical_to_scalar() {
+    use hybrid_ip::sparse::compressed::SparseCompression;
+    use hybrid_ip::util::simd::{force_scalar, set_force_scalar};
+
+    let cfg = tiny(300);
+    let data = cfg.generate(0x51AD);
+    let indexes = vec![
+        ("raw", HybridIndex::build(&data, &IndexConfig::default())),
+        (
+            "exact",
+            HybridIndex::build(
+                &data,
+                &IndexConfig::default().with_sparse_compression(
+                    SparseCompression::exact().with_block_len(8),
+                ),
+            ),
+        ),
+        (
+            "q8",
+            HybridIndex::build(
+                &data,
+                &IndexConfig::default().with_sparse_compression(
+                    SparseCompression::q8().with_block_len(8),
+                ),
+            ),
+        ),
+    ];
+    let mut rng = Rng::new(0x51AE);
+    let mut queries = cfg.related_queries(&data, 0x51AF, 6);
+    queries.push(dense_only_query(&mut rng, data.dense_dim()));
+    queries.push(sparse_only_query(
+        &mut rng,
+        data.sparse_dim(),
+        data.dense_dim(),
+    ));
+    let params = SearchParams::new(10).with_alpha(20.0);
+
+    let was = force_scalar();
+    for (name, idx) in &indexes {
+        let by_query = BatchEngine::with_config(
+            idx,
+            EngineConfig { threads: 3, mode: ShardMode::ByQuery },
+        );
+        let by_data = BatchEngine::with_config(
+            idx,
+            EngineConfig { threads: 3, mode: ShardMode::ByData },
+        );
+        let mut run = |forced: bool| {
+            set_force_scalar(forced);
+            let mut scratch = SearchScratch::new(idx);
+            let mut seq = Vec::new();
+            for q in &queries {
+                seq.push(search_with(idx, q, &params, &mut scratch).0);
+            }
+            let bq = by_query.search_batch(idx, &queries, &params);
+            let bd = by_data.search_batch(idx, &queries, &params);
+            (seq, bq.hits, bd.hits)
+        };
+        let (seq_s, bq_s, bd_s) = run(true);
+        let (seq_v, bq_v, bd_v) = run(false);
+        for qi in 0..queries.len() {
+            assert_hits_identical(
+                &seq_s[qi],
+                &seq_v[qi],
+                &format!("{name} q{qi}: SIMD vs scalar (sequential)"),
+            );
+            assert_hits_identical(
+                &bq_s[qi],
+                &bq_v[qi],
+                &format!("{name} q{qi}: SIMD vs scalar (ByQuery)"),
+            );
+            assert_hits_identical(
+                &bd_s[qi],
+                &bd_v[qi],
+                &format!("{name} q{qi}: SIMD vs scalar (ByData)"),
+            );
+        }
+    }
+    set_force_scalar(was);
+}
+
 /// Invariant 7a: `PlanMode::Fixed` on a graph-backed index is
 /// bit-identical to a flat-built index — sequential pipeline and both
 /// batch shard modes — because Fixed plans resolve to the same

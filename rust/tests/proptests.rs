@@ -699,6 +699,145 @@ fn prop_compressed_blocks_decode_bit_identically() {
     });
 }
 
+// ----------------------------------------------------- simd sparse scan
+
+/// Every sparse-scan entry point must produce bit-identical results
+/// under SIMD and scalar dispatch: per-row score bits, `lines_touched`,
+/// and `EarlyExitStats`, across Raw/Exact/Q8 backends (block lengths on
+/// and around the 64-bit packing word), Resident and Mapped sections,
+/// full scans, range scans, and the two-phase early-exit protocol.
+#[test]
+fn prop_sparse_scan_simd_bitwise_equals_scalar() {
+    use hybrid_ip::hybrid::store::MapSource;
+    use hybrid_ip::sparse::compressed::{
+        CompressedPostings, SparseCompression,
+    };
+    use hybrid_ip::sparse::inverted_index::EarlyExitStats;
+    use hybrid_ip::util::binio::{BinReader, BinWriter};
+    use hybrid_ip::util::simd::{force_scalar, set_force_scalar};
+
+    type Observation =
+        (Vec<(u32, u32)>, usize, Vec<(u32, u32)>, Vec<(u32, u32)>, EarlyExitStats);
+
+    fn run_once(
+        idx: &InvertedIndex,
+        q: &SparseVector,
+        n: usize,
+        lo: u32,
+        hi: u32,
+        theta: f32,
+    ) -> Observation {
+        let bits = |v: Vec<(u32, f32)>| -> Vec<(u32, u32)> {
+            v.into_iter().map(|(r, s)| (r, s.to_bits())).collect()
+        };
+        let mut acc = Accumulator::new(n);
+        acc.reset();
+        idx.scan(q, &mut acc);
+        let lines = acc.lines_touched();
+        let mut full = Vec::new();
+        acc.drain_scores_into(&mut full);
+        acc.reset();
+        idx.scan_range(q, &mut acc, lo, hi);
+        let mut ranged = Vec::new();
+        acc.drain_scores_range_into(lo, hi, &mut ranged);
+        acc.reset();
+        idx.scan_leading_blocks(q, &mut acc);
+        let stats = idx.scan_tail_blocks(q, &mut acc, |b| b < theta);
+        let mut phased = Vec::new();
+        acc.drain_scores_into(&mut phased);
+        (bits(full), lines, bits(ranged), bits(phased), stats)
+    }
+
+    forall(12, 0x51D5CA, |g| {
+        let n = g.usize_in(1, 150);
+        let d = g.usize_in(1, 30);
+        let m = random_csr(g, n, d);
+        // Block lengths on and around the 64-bit packing word exercise
+        // fields ending exactly on, just under, and just over word
+        // boundaries; small lengths force ragged 1-posting blocks.
+        let block_len = match g.usize_in(0, 3) {
+            0 => g.usize_in(1, 9),
+            1 => 63,
+            2 => 64,
+            _ => 65,
+        };
+        let mut indexes: Vec<(&str, InvertedIndex)> =
+            vec![("raw", InvertedIndex::build(&m))];
+        let mut exact = InvertedIndex::build(&m);
+        exact.compress(SparseCompression::exact().with_block_len(block_len));
+        indexes.push(("exact", exact));
+        let mut q8 = InvertedIndex::build(&m);
+        q8.compress(SparseCompression::q8().with_block_len(block_len));
+        indexes.push(("q8", q8));
+
+        // Mapped leg: round-trip the exact-coded postings through a
+        // snapshot file and serve the arenas as mapped section views, so
+        // `SectionBuf` slices feed the kernels directly.
+        let dir = std::env::temp_dir().join("hybrid_ip_simd_scan_prop");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("case-{:x}.postings", g.case_seed));
+        {
+            let c = indexes[1].1.compressed_postings().unwrap();
+            let file = std::fs::File::create(&path).unwrap();
+            let mut w = BinWriter::raw(file);
+            c.write_into(&mut w).unwrap();
+            w.finish().unwrap();
+        }
+        let src = MapSource::open(&path).unwrap();
+        let file = std::fs::File::open(&path).unwrap();
+        let mut r = BinReader::raw(file);
+        let mapped =
+            CompressedPostings::read_from_with(&mut r, Some(&src)).unwrap();
+        indexes.push(("exact-mapped", InvertedIndex::from_compressed(mapped)));
+
+        let queries: Vec<SparseVector> = (0..4)
+            .map(|_| {
+                let nnz = g.usize_in(0, d.min(8));
+                let (dims, vals) = g.sparse(d, nnz);
+                SparseVector::new(dims, vals)
+            })
+            .collect();
+        let theta = g.f32_in(0.0, 1.0);
+        let (lo, hi) = {
+            let a = g.usize_in(0, n) as u32;
+            let b = g.usize_in(0, n) as u32;
+            (a.min(b), a.max(b))
+        };
+
+        let was = force_scalar();
+        for (name, idx) in &indexes {
+            for (qi, q) in queries.iter().enumerate() {
+                set_force_scalar(true);
+                let scalar = run_once(idx, q, n, lo, hi, theta);
+                set_force_scalar(false);
+                let dispatched = run_once(idx, q, n, lo, hi, theta);
+                assert_eq!(
+                    scalar.0, dispatched.0,
+                    "{name} q{qi}: full-scan score bits diverged"
+                );
+                assert_eq!(
+                    scalar.1, dispatched.1,
+                    "{name} q{qi}: lines_touched diverged"
+                );
+                assert_eq!(
+                    scalar.2, dispatched.2,
+                    "{name} q{qi}: range-scan score bits diverged"
+                );
+                assert_eq!(
+                    scalar.3, dispatched.3,
+                    "{name} q{qi}: two-phase score bits diverged"
+                );
+                assert_eq!(
+                    scalar.4, dispatched.4,
+                    "{name} q{qi}: EarlyExitStats diverged"
+                );
+            }
+        }
+        set_force_scalar(was);
+        std::fs::remove_file(&path).ok();
+    });
+}
+
 // ------------------------------------------------------------ out-of-core
 
 #[test]
